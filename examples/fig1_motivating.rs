@@ -1,0 +1,29 @@
+//! Regenerate Figure 1 (motivating example): accuracy and memory for
+//! LoRA-fp16, LoftQ uniform 4-bit, and LoftQ* mixed 4/8-bit at 20 %
+//! pruning.
+//!
+//!   cargo run --release --example fig1_motivating -- [size] [smoke|paper]
+
+use anyhow::Result;
+use qpruner::experiments::{self, Scale};
+use qpruner::model::ModelConfig;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let size = args.first().map(|s| s.as_str()).unwrap_or("small");
+    let scale = match args.get(1).map(|s| s.as_str()) {
+        Some("paper") => Scale::paper(),
+        _ => Scale::smoke(),
+    };
+    let cfg = ModelConfig::preset(size)?;
+    let mut coord = experiments::open_coordinator(cfg.vocab, "llama")?;
+    let store = experiments::load_or_pretrain(
+        &mut coord, &cfg, Path::new("checkpoints"), "llama",
+        scale.pretrain_steps)?;
+    let t = experiments::fig1_motivating(&mut coord, &store, &scale)?;
+    t.save(Path::new("results"), "fig1")?;
+    println!("{}", t.to_markdown());
+    println!("saved to results/fig1.{{md,csv}}");
+    Ok(())
+}

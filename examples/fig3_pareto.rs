@@ -1,0 +1,50 @@
+//! Regenerate Figures 3/4: Bayesian-optimization Pareto-front scatter
+//! plots per task (memory vs accuracy; front points flagged).
+//!
+//!   cargo run --release --example fig3_pareto -- [size] [points] [init] [rate]
+//!
+//! Defaults: small 18 6 50 (the paper used 50 points = 10 init + 40 BO
+//! iterations at 50 % pruning; run `small 50 10 50` to match).
+
+use anyhow::Result;
+use qpruner::experiments::{self, Scale};
+use qpruner::model::ModelConfig;
+use qpruner::report::scatter_csv;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let size = args.first().map(|s| s.as_str()).unwrap_or("small");
+    let points: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(18);
+    let init: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(6);
+    let rate: u32 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(50);
+
+    let cfg = ModelConfig::preset(size)?;
+    let scale = Scale::smoke();
+    let mut coord = experiments::open_coordinator(cfg.vocab, "llama")?;
+    let store = experiments::load_or_pretrain(
+        &mut coord, &cfg, Path::new("checkpoints"), "llama",
+        Scale::paper().pretrain_steps)?;
+
+    let data = experiments::fig3_pareto(&mut coord, &store, rate, points,
+                                        init, &scale)?;
+    std::fs::create_dir_all("results")?;
+    for (task, rows) in &data.per_task {
+        let pts: Vec<(f64, f64, String)> = rows
+            .iter()
+            .map(|(m, p, c, front)| {
+                (*m, *p, format!("{c}{}", if *front { ":front" } else { "" }))
+            })
+            .collect();
+        let path = format!("results/fig3_{}.csv", task.to_lowercase());
+        std::fs::write(&path, scatter_csv(&pts))?;
+        let front: Vec<&(f64, f64, String, bool)> =
+            rows.iter().filter(|r| r.3).collect();
+        println!("{task}: {} points, Pareto front:", rows.len());
+        for (m, p, c, _) in front {
+            println!("    {:.2} GB  {:.1}%  bits={}", m, 100.0 * p, c);
+        }
+    }
+    println!("({} evaluations; scatter CSVs in results/)", data.n_evals);
+    Ok(())
+}

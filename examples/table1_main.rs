@@ -1,0 +1,43 @@
+//! Regenerate Table 1 (main results): two corpus dialects (LLaMA /
+//! Vicuna stand-ins) x pruning rates {20, 30, 50} x methods
+//! {LLM-Pruner, QPruner^1, QPruner^2, QPruner^3} on the 7-task suite,
+//! with paper-scale peak-memory accounting.
+//!
+//!   cargo run --release --example table1_main -- [size] [smoke|paper]
+//!
+//! Defaults: small smoke (minutes). The recorded EXPERIMENTS.md run
+//! used `small paper`.
+
+use anyhow::Result;
+use qpruner::experiments::{self, Scale};
+use qpruner::model::ModelConfig;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let size = args.first().map(|s| s.as_str()).unwrap_or("small");
+    let scale = match args.get(1).map(|s| s.as_str()) {
+        Some("paper") => Scale::paper(),
+        _ => Scale::smoke(),
+    };
+    let cfg = ModelConfig::preset(size)?;
+    let ckpt = Path::new("checkpoints");
+
+    let mut table = None;
+    for (label, style) in [("7B-sim", "llama"), ("7B-chat-sim", "vicuna")] {
+        let mut coord = experiments::open_coordinator(cfg.vocab, style)?;
+        let store = experiments::load_or_pretrain(
+            &mut coord, &cfg, ckpt, style, scale.pretrain_steps)?;
+        let t = experiments::table1(&mut coord, &[(label, &store)],
+                                    &[20, 30, 50], &scale)?;
+        match &mut table {
+            None => table = Some(t),
+            Some(acc) => acc.rows.extend(t.rows),
+        }
+    }
+    let table = table.unwrap();
+    table.save(Path::new("results"), "table1")?;
+    println!("{}", table.to_markdown());
+    println!("saved to results/table1.{{md,csv}}");
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Regenerate Table 2 (ablations at 20 % pruning): 4-bit data type
+//! (NF4/FP4), adapter initialization (LoftQ/Gaussian/PiSSA), LoftQ
+//! iteration count (1/2/4) and importance estimation order
+//! (element^1/element^2).
+//!
+//!   cargo run --release --example table2_ablation -- [size] [smoke|paper]
+
+use anyhow::Result;
+use qpruner::experiments::{self, Scale};
+use qpruner::model::ModelConfig;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let size = args.first().map(|s| s.as_str()).unwrap_or("small");
+    let scale = match args.get(1).map(|s| s.as_str()) {
+        Some("paper") => Scale::paper(),
+        _ => Scale::smoke(),
+    };
+    let cfg = ModelConfig::preset(size)?;
+    let mut coord = experiments::open_coordinator(cfg.vocab, "llama")?;
+    let store = experiments::load_or_pretrain(
+        &mut coord, &cfg, Path::new("checkpoints"), "llama",
+        scale.pretrain_steps)?;
+    let t = experiments::table2_ablation(&mut coord, &store, &scale)?;
+    t.save(Path::new("results"), "table2")?;
+    println!("{}", t.to_markdown());
+    println!("saved to results/table2.{{md,csv}}");
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Regenerate Table 3 (13B scale, 50 % pruning): LLM-Pruner vs
+//! QPruner^1 vs QPruner^3 with the 13B-architecture memory model.
+//!
+//!   cargo run --release --example table3_13b -- [size] [smoke|paper]
+
+use anyhow::Result;
+use qpruner::experiments::{self, Scale};
+use qpruner::model::ModelConfig;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let size = args.first().map(|s| s.as_str()).unwrap_or("small");
+    let scale = match args.get(1).map(|s| s.as_str()) {
+        Some("paper") => Scale::paper(),
+        _ => Scale::smoke(),
+    };
+    let cfg = ModelConfig::preset(size)?;
+    let mut coord = experiments::open_coordinator(cfg.vocab, "llama")?;
+    let store = experiments::load_or_pretrain(
+        &mut coord, &cfg, Path::new("checkpoints"), "llama",
+        scale.pretrain_steps)?;
+    let t = experiments::table3_13b(&mut coord, &store, &scale)?;
+    t.save(Path::new("results"), "table3")?;
+    println!("{}", t.to_markdown());
+    println!("saved to results/table3.{{md,csv}}");
+    Ok(())
+}

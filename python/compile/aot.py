@@ -1,0 +1,158 @@
+"""AOT compiler: lower every L2 entry point to HLO text artifacts.
+
+HLO *text*, not `.serialize()`: the image's xla_extension 0.5.1 rejects
+jax>=0.5 serialized protos (64-bit instruction ids); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact naming:  {kind}_{size}_r{rate}.hlo.txt
+  kinds: train, pretrain (r0 only), fwd (Pallas kernels inside),
+         qfwd (r0 only; NF4 fused dequant path), evalchoices, evalloss,
+         calib, grads
+Plus standalone kernel artifacts kernel_{name}.hlo.txt for rust-side
+kernel integration tests and benches.
+
+A manifest (artifacts/manifest.tsv) records name / #inputs / #outputs /
+input shapes so the rust runtime can sanity-check its marshaling.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import SIZES, RATES
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _flat_shapes(tree):
+    return [f"{x.dtype}{list(x.shape)}" for x in jax.tree_util.tree_leaves(tree)]
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, args, n_outputs):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        flat = _flat_shapes(args)
+        self.manifest.append(
+            f"{name}\t{len(flat)}\t{n_outputs}\t{';'.join(flat)}")
+        print(f"  {name}: {len(flat)} inputs, {len(text)} chars")
+
+    def write_manifest(self):
+        with open(os.path.join(self.out_dir, "manifest.tsv"), "w") as f:
+            f.write("\n".join(self.manifest) + "\n")
+
+
+def emit_model_artifacts(em, size_name, rates):
+    cfg = SIZES[size_name]
+    i32, f32 = jnp.int32, jnp.float32
+    S = jax.ShapeDtypeStruct
+
+    for rate in rates:
+        sh = M.Shapes(cfg, cfg.pruned(rate))
+        w = M.make_weight_shapes(sh)
+        lo = M.make_lora_shapes(sh)
+        scalar = S((), f32)
+        toks_train = S((cfg.scan_steps, cfg.batch, cfg.seq + 1), i32)
+        toks_fwd = S((cfg.batch, cfg.seq), i32)
+        toks_loss = S((cfg.batch, cfg.seq + 1), i32)
+        toks_ev = S((cfg.eval_rows, cfg.seq), i32)
+        mask_ev = S((cfg.eval_rows, cfg.seq), f32)
+        tag = f"{size_name}_r{rate}"
+
+        em.emit(f"train_{tag}", M.make_train(sh),
+                (w, lo, lo, lo, scalar, toks_train, scalar),
+                1 + 3 * len(lo) + 1)
+        em.emit(f"evalchoices_{tag}", M.make_eval_choices(sh),
+                (w, lo, toks_ev, mask_ev), 2)
+        em.emit(f"evalloss_{tag}", M.make_eval_loss(sh),
+                (w, lo, toks_loss), 1)
+        em.emit(f"calib_{tag}", M.make_calib(sh), (w, lo, toks_fwd), 2)
+        em.emit(f"grads_{tag}", M.make_grads(sh),
+                (w, lo, toks_loss), 1 + len(w))
+
+        if rate == 0:
+            em.emit(f"pretrain_{tag}", M.make_pretrain(sh),
+                    (w, w, w, scalar, toks_train, scalar),
+                    1 + 3 * len(w) + 1)
+            # fwd carries the Pallas lora_matmul + rmsnorm kernels
+            em.emit(f"fwd_{tag}", M.make_fwd(sh, use_kernels=True),
+                    (w, lo, toks_fwd), 1)
+            # qfwd carries the fused NF4 dequant-matmul kernel
+            qp = M.make_qproj_shapes(sh)
+            em.emit(
+                f"qfwd_{tag}", M.make_qfwd(sh),
+                (w[0], w[1], w[6], w[10], w[11], qp, lo, toks_fwd), 1)
+
+
+def emit_kernel_artifacts(em):
+    """Standalone kernel round-trip artifacts (rust integration tests)."""
+    from .kernels.qmatmul import qmatmul_nf4, qmatmul_int8
+    from .kernels.lora_matmul import lora_matmul
+    from .kernels.rmsnorm import rmsnorm
+
+    i8, u8, f32 = jnp.int8, jnp.uint8, jnp.float32
+    S = jax.ShapeDtypeStruct
+    m, n, k, r = 16, 128, 256, 8
+
+    em.emit("kernel_qmatmul_nf4",
+            lambda x, c, s: (qmatmul_nf4(x, c, s),),
+            (S((m, k), f32), S((n, k // 2), u8), S((n, k // 64), f32)), 1)
+    em.emit("kernel_qmatmul_int8",
+            lambda x, c, s: (qmatmul_int8(x, c, s),),
+            (S((m, k), f32), S((n, k), i8), S((n, k // 64), f32)), 1)
+    em.emit("kernel_lora_matmul",
+            lambda x, w, a, b: (lora_matmul(x, w, a, b, 2.0),),
+            (S((m, k), f32), S((n, k), f32), S((r, k), f32),
+             S((n, r), f32)), 1)
+    em.emit("kernel_rmsnorm",
+            lambda x, g: (rmsnorm(x, g),),
+            (S((m, k), f32), S((k,), f32)), 1)
+
+    from .kernels.attention import causal_attention
+    bh, s, hd = 8, 64, 48
+    em.emit("kernel_attention",
+            lambda q, kk, v: (causal_attention(q, kk, v),),
+            (S((bh, s, hd), f32), S((bh, s, hd), f32),
+             S((bh, s, hd), f32)), 1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="tiny,small,base")
+    ap.add_argument("--rates", default=",".join(str(r) for r in RATES))
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    em = Emitter(args.out_dir)
+    rates = [int(r) for r in args.rates.split(",") if r != ""]
+    for size in args.sizes.split(","):
+        print(f"[aot] {size}: rates {rates}")
+        emit_model_artifacts(em, size, rates)
+    if not args.skip_kernels:
+        print("[aot] kernel artifacts")
+        emit_kernel_artifacts(em)
+    em.write_manifest()
+    print(f"[aot] wrote {len(em.manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

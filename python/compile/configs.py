@@ -1,0 +1,101 @@
+"""Model size / pruning-rate grid shared by the AOT compiler and tests.
+
+These constants are mirrored in rust/src/model.rs (ModelConfig::preset).
+Any change here must be reflected there: the rust runtime marshals flat
+argument lists whose shapes are derived from the same arithmetic.
+"""
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq: int          # training / eval sequence length
+    batch: int        # per-step batch
+    scan_steps: int   # K optimizer steps fused into one train-artifact call
+    eval_rows: int    # rows per eval_choices call (items x choices, padded)
+    lora_rank: int = 8
+    lora_alpha: int = 16
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def pruned(self, rate_pct: int) -> "PrunedShapes":
+        return PrunedShapes.for_rate(self, rate_pct)
+
+
+# Pruning removes whole attention heads and MLP channel groups of this
+# width (mirrors LLM-Pruner's coupled-structure granularity).
+MLP_GROUP = 8
+
+
+@dataclass(frozen=True)
+class PrunedShapes:
+    """Per-layer shapes after uniform structured pruning at `rate_pct`%.
+
+    Uniform rate across layers (LLM-Pruner prunes its target layer range
+    at a single ratio); *which* heads/channels go is decided at runtime
+    by importance, which does not affect shapes.
+    """
+
+    heads_kept: int
+    d_ff_kept: int
+
+    @staticmethod
+    def for_rate(cfg: ModelConfig, rate_pct: int) -> "PrunedShapes":
+        keep = 1.0 - rate_pct / 100.0
+        heads = max(1, round(cfg.n_heads * keep))
+        dff = max(MLP_GROUP, int(cfg.d_ff * keep) // MLP_GROUP * MLP_GROUP)
+        return PrunedShapes(heads_kept=heads, d_ff_kept=dff)
+
+    def attn_dim(self, cfg: ModelConfig) -> int:
+        return self.heads_kept * cfg.head_dim
+
+
+SIZES = {
+    "tiny": ModelConfig("tiny", d_model=64, n_layers=2, n_heads=4, d_ff=192,
+                        vocab=256, seq=32, batch=4, scan_steps=4, eval_rows=16),
+    "small": ModelConfig("small", d_model=128, n_layers=4, n_heads=4, d_ff=384,
+                         vocab=512, seq=64, batch=4, scan_steps=8, eval_rows=32),
+    "base": ModelConfig("base", d_model=384, n_layers=8, n_heads=8, d_ff=1024,
+                        vocab=2048, seq=128, batch=4, scan_steps=8, eval_rows=32),
+    # `large` exists as a config for completeness (97M-param class); no
+    # artifacts are emitted for it by default — a few hundred steps on the
+    # single-core CPU PJRT of this testbed is wall-clock infeasible.
+    "large": ModelConfig("large", d_model=768, n_layers=12, n_heads=12, d_ff=2048,
+                         vocab=8192, seq=128, batch=4, scan_steps=4, eval_rows=32),
+}
+
+RATES = (0, 20, 30, 50)
+
+# Projection names, in the canonical stacking order used across the
+# artifact ABI and the rust ParamStore.
+PROJS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def proj_shape(cfg: ModelConfig, ps: PrunedShapes, proj: str) -> tuple:
+    """[out, in] shape of a projection after pruning."""
+    d, a, f = cfg.d_model, ps.attn_dim(cfg), ps.d_ff_kept
+    return {
+        "wq": (a, d), "wk": (a, d), "wv": (a, d), "wo": (d, a),
+        "w_gate": (f, d), "w_up": (f, d), "w_down": (d, f),
+    }[proj]
+
+
+def param_count(cfg: ModelConfig, rate_pct: int = 0) -> int:
+    ps = cfg.pruned(rate_pct)
+    n = 2 * cfg.vocab * cfg.d_model + cfg.d_model  # embed + head + final norm
+    per_layer = 2 * cfg.d_model  # two rmsnorm gains
+    for p in PROJS:
+        o, i = proj_shape(cfg, ps, p)
+        per_layer += o * i
+    return n + cfg.n_layers * per_layer

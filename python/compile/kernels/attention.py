@@ -1,0 +1,57 @@
+"""Causal self-attention Pallas kernel (one (batch, head) slab per
+grid step).
+
+TPU schedule (DESIGN.md §Hardware-Adaptation): at our sequence lengths
+(S <= 128) a whole head's Q/K/V tiles and the S x S score matrix fit in
+VMEM simultaneously (128x128 f32 = 64 KiB), so the right blocking is
+one head per grid step with a single MXU dot for QK^T and one for
+attn x V — no flash-style K/V streaming needed until S x hd outgrows
+VMEM, at which point the same kernel body becomes the inner loop of a
+K-blocked online-softmax schedule. Softmax is max-subtracted for
+stability. RoPE is applied by the caller (it is position-only and fuses
+into XLA elementwise ops).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    # refs: [1, S, hd] blocks
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = q.shape[0]
+    scores = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # [S, S]
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    attn = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jax.lax.dot_general(
+        attn, v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def causal_attention(q, k, v, *, interpret=True):
+    """q/k/v: [BH, S, hd] f32 -> [BH, S, hd] (causal, scaled)."""
+    bh, s, hd = q.shape
+    assert k.shape == (bh, s, hd) and v.shape == (bh, s, hd)
+    scale = 1.0 / float(hd) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,102 @@
+"""Quantization codebooks, identical to rust/src/quant.rs.
+
+NF4 is the exact QLoRA (Dettmers et al., 2023) 4-bit NormalFloat table:
+quantiles of N(0,1) renormalized to [-1, 1], code 7 pinned to exactly 0.
+FP4 is the bitsandbytes E2M1 value set (positives, sign bit mirrors).
+
+Block quantization is absmax-per-block along the last axis, block=64,
+matching bitsandbytes' storage model that the paper uses.
+"""
+
+import numpy as np
+
+NF4_CODEBOOK = np.array([
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+], dtype=np.float32)
+
+# bitsandbytes FP4: 3 value bits (E2M1) + sign; code 0 == +0, code 8 == -0.
+_FP4_POS = np.array([0.0, 0.0052083335, 0.16666667, 0.25,
+                     0.33333334, 0.5, 0.6666667, 1.0], dtype=np.float32)
+FP4_CODEBOOK = np.concatenate([_FP4_POS, -_FP4_POS]).astype(np.float32)
+
+BLOCK = 64
+
+
+def quantize_blockwise(w: np.ndarray, codebook: np.ndarray,
+                       block: int = BLOCK):
+    """Absmax blockwise quantization along the last axis.
+
+    Returns (codes uint8 [..., n], scales f32 [..., ceil(n/block)]).
+    Codes are *unpacked* (one per element); packing to nibbles is a
+    storage concern handled by pack_nibbles().
+    """
+    w = np.asarray(w, dtype=np.float32)
+    *lead, n = w.shape
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+    wp = np.pad(w, [(0, 0)] * len(lead) + [(0, pad)])
+    wb = wp.reshape(*lead, nblocks, block)
+    absmax = np.abs(wb).max(axis=-1)
+    scales = np.where(absmax > 0, absmax, 1.0).astype(np.float32)
+    normed = wb / scales[..., None]
+    # nearest codebook entry
+    dist = np.abs(normed[..., None] - codebook[None, :])
+    codes = dist.argmin(axis=-1).astype(np.uint8)
+    codes = codes.reshape(*lead, nblocks * block)[..., :n]
+    return codes, scales
+
+
+def dequantize_blockwise(codes: np.ndarray, scales: np.ndarray,
+                         codebook: np.ndarray, block: int = BLOCK):
+    *lead, n = codes.shape
+    nblocks = scales.shape[-1]
+    pad = nblocks * block - n
+    cp = np.pad(codes, [(0, 0)] * len(lead) + [(0, pad)])
+    vals = codebook[cp].reshape(*lead, nblocks, block)
+    out = (vals * scales[..., None]).reshape(*lead, nblocks * block)
+    return out[..., :n].astype(np.float32)
+
+
+def pack_nibbles(codes: np.ndarray) -> np.ndarray:
+    """[..., n] 4-bit codes -> [..., n/2] bytes; even idx = low nibble."""
+    assert codes.shape[-1] % 2 == 0
+    lo = codes[..., 0::2].astype(np.uint8)
+    hi = codes[..., 1::2].astype(np.uint8)
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def unpack_nibbles(packed: np.ndarray) -> np.ndarray:
+    lo = packed & 0x0F
+    hi = (packed >> 4) & 0x0F
+    out = np.empty(packed.shape[:-1] + (packed.shape[-1] * 2,), dtype=np.uint8)
+    out[..., 0::2] = lo
+    out[..., 1::2] = hi
+    return out
+
+
+def int8_quantize_blockwise(w: np.ndarray, block: int = BLOCK):
+    """Symmetric absmax INT8 per block; returns (codes int8, scales f32)."""
+    w = np.asarray(w, dtype=np.float32)
+    *lead, n = w.shape
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+    wp = np.pad(w, [(0, 0)] * len(lead) + [(0, pad)])
+    wb = wp.reshape(*lead, nblocks, block)
+    absmax = np.abs(wb).max(axis=-1)
+    scales = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+    codes = np.clip(np.round(wb / scales[..., None]), -127, 127).astype(np.int8)
+    return codes.reshape(*lead, nblocks * block)[..., :n], scales
+
+
+def int8_dequantize_blockwise(codes: np.ndarray, scales: np.ndarray,
+                              block: int = BLOCK):
+    *lead, n = codes.shape
+    nblocks = scales.shape[-1]
+    pad = nblocks * block - n
+    cp = np.pad(codes.astype(np.float32), [(0, 0)] * len(lead) + [(0, pad)])
+    out = (cp.reshape(*lead, nblocks, block) * scales[..., None])
+    return out.reshape(*lead, nblocks * block)[..., :n].astype(np.float32)

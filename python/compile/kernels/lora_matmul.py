@@ -1,0 +1,52 @@
+"""Fused frozen-weight + LoRA matmul Pallas kernel.
+
+Computes y = x @ W^T + ((x @ A^T) @ B^T) * s in one kernel. PEFT runs
+the adapter as a separate pair of GEMM launches; on TPU the A/B tiles
+(rank r <= 16) are tiny, so both products stay resident in VMEM and the
+low-rank update rides along with the main MXU dot for free HBM traffic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lora_mm_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, *, scaling):
+    # x: [M, K]; w: [TN, K]; a: [r, K]; b: [TN, r]; o: [M, TN]
+    x = x_ref[...]
+    base = jax.lax.dot_general(
+        x, w_ref[...], dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    xa = jax.lax.dot_general(
+        x, a_ref[...], dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [M, r]
+    low = jax.lax.dot_general(
+        xa, b_ref[...], dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [M, TN]
+    o_ref[...] = base + low * scaling
+
+
+def lora_matmul(x, w, a, b, scaling, *, tile_n=128, interpret=True):
+    """x: [M, K]; w: [N, K]; a: [r, K]; b: [N, r] -> [M, N]."""
+    m, k = x.shape
+    n = w.shape[0]
+    r = a.shape[0]
+    assert b.shape == (n, r)
+    tile_n = min(tile_n, n)
+    assert n % tile_n == 0
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        functools.partial(_lora_mm_kernel, scaling=float(scaling)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((r, k), lambda i: (0, 0)),
+            pl.BlockSpec((tile_n, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, tile_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, a, b)

@@ -1,0 +1,133 @@
+"""Fused block-dequant x matmul Pallas kernels (the paper's hot spot).
+
+The paper's deployment path stores weights as 4-bit codes + per-block
+absmax scales (bitsandbytes) and dequantizes on the fly in front of the
+GEMM. On GPU that is a CUDA dequant kernel + cuBLAS; the TPU rethink
+(DESIGN.md §Hardware-Adaptation):
+
+  * the (n-tile, K) code slab and its scale vector are staged into VMEM
+    by BlockSpec — VMEM plays the role of the CUDA shared-memory staging
+    buffer, but holds the whole contracted dimension so the MXU sees one
+    long dot;
+  * the 16-entry NF4 codebook lookup is a branchless vector select tree
+    (no gather — TPU VPU has no fast per-lane gather);
+  * tiles are sized so the contracted dim stays a multiple of 128 and
+    the f32 dot feeds the 128x128 systolic array without padding.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; on a real TPU the same code lowers to Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .codebooks import NF4_CODEBOOK, BLOCK
+
+
+def _codebook_select(codes, codebook):
+    """Branchless 16-way lookup: a chain of vector selects.
+
+    `codes` is any integer array; returns f32 array of codebook values.
+    On TPU this compiles to 16 vector selects on the VPU instead of a
+    per-lane gather.
+    """
+    out = jnp.full(codes.shape, codebook[0], dtype=jnp.float32)
+    for i in range(1, len(codebook)):
+        out = jnp.where(codes == i, jnp.float32(codebook[i]), out)
+    return out
+
+
+def _qmm_nf4_kernel(x_ref, codes_ref, scales_ref, o_ref, *, block, codebook):
+    # x:      [M, K]        f32   (whole activations tile in VMEM)
+    # codes:  [TN, K//2]    uint8 (packed nibbles for this n-tile)
+    # scales: [TN, K//block] f32
+    # o:      [M, TN]       f32
+    packed = codes_ref[...]
+    lo = (packed & 0x0F).astype(jnp.int32)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int32)
+    tn, kh = packed.shape
+    k = kh * 2
+    codes = jnp.stack([lo, hi], axis=-1).reshape(tn, k)
+    vals = _codebook_select(codes, codebook)
+    scales = scales_ref[...]
+    w = (vals.reshape(tn, k // block, block)
+         * scales[:, :, None]).reshape(tn, k)
+    # MXU dot: [M, K] x [K, TN]
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def qmatmul_nf4(x, codes_packed, scales, *, tile_n=128, block=BLOCK,
+                codebook=NF4_CODEBOOK, interpret=True):
+    """y = x @ dequant_nf4(codes, scales).T
+
+    x:            [M, K] f32
+    codes_packed: [N, K//2] uint8  (two 4-bit codes per byte, low = even)
+    scales:       [N, K//block] f32
+    -> [M, N] f32.  K must be a multiple of `block`.
+    """
+    m, k = x.shape
+    n = codes_packed.shape[0]
+    assert k % block == 0 and codes_packed.shape[1] == k // 2
+    tile_n = min(tile_n, n)
+    assert n % tile_n == 0
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        functools.partial(_qmm_nf4_kernel, block=block,
+                          codebook=np.asarray(codebook)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((tile_n, k // 2), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, k // block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, tile_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, codes_packed, scales)
+
+
+def _qmm_int8_kernel(x_ref, codes_ref, scales_ref, o_ref, *, block):
+    codes = codes_ref[...].astype(jnp.float32)
+    tn, k = codes.shape
+    scales = scales_ref[...]
+    w = (codes.reshape(tn, k // block, block)
+         * scales[:, :, None]).reshape(tn, k)
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def qmatmul_int8(x, codes, scales, *, tile_n=128, block=BLOCK,
+                 interpret=True):
+    """y = x @ (int8 codes * blockwise scales).T
+
+    x: [M, K] f32; codes: [N, K] int8; scales: [N, K//block] f32.
+    """
+    m, k = x.shape
+    n = codes.shape[0]
+    assert k % block == 0
+    tile_n = min(tile_n, n)
+    assert n % tile_n == 0
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        functools.partial(_qmm_int8_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, k // block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, tile_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scales)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness anchors).
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with
+hypothesis and asserts allclose between each kernel and its oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .codebooks import NF4_CODEBOOK, BLOCK
+
+
+def dequant_nf4_ref(codes_packed, scales, block=BLOCK,
+                    codebook=NF4_CODEBOOK):
+    """[N, K/2] packed nibbles + [N, K/block] scales -> [N, K] f32."""
+    packed = np.asarray(codes_packed)
+    lo = packed & 0x0F
+    hi = (packed >> 4) & 0x0F
+    n, kh = packed.shape
+    codes = np.stack([lo, hi], axis=-1).reshape(n, kh * 2)
+    vals = np.asarray(codebook)[codes]
+    k = kh * 2
+    w = vals.reshape(n, k // block, block) * np.asarray(scales)[:, :, None]
+    return jnp.asarray(w.reshape(n, k), dtype=jnp.float32)
+
+
+def qmatmul_nf4_ref(x, codes_packed, scales, block=BLOCK,
+                    codebook=NF4_CODEBOOK):
+    w = dequant_nf4_ref(codes_packed, scales, block, codebook)
+    return jnp.asarray(x, jnp.float32) @ w.T
+
+
+def qmatmul_int8_ref(x, codes, scales, block=BLOCK):
+    codes = np.asarray(codes, dtype=np.float32)
+    n, k = codes.shape
+    w = codes.reshape(n, k // block, block) * np.asarray(scales)[:, :, None]
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w.reshape(n, k)).T
+
+
+def lora_matmul_ref(x, w, a, b, scaling):
+    x = jnp.asarray(x, jnp.float32)
+    return x @ jnp.asarray(w).T + (x @ jnp.asarray(a).T) @ jnp.asarray(b).T * scaling
+
+
+def causal_attention_ref(q, k, v):
+    """q/k/v: [BH, S, hd] -> causal softmax(QK^T/sqrt(hd)) V."""
+    q = jnp.asarray(q, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    s = q.shape[1]
+    hd = q.shape[2]
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", attn, v)
+
+
+def rmsnorm_ref(x, g, eps=1e-6):
+    x = jnp.asarray(x, jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * jnp.asarray(g)

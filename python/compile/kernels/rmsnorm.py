@@ -1,0 +1,32 @@
+"""RMSNorm Pallas kernel (row-tiled)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * g_ref[...]
+
+
+def rmsnorm(x, g, *, eps=1e-6, tile_m=128, interpret=True):
+    """x: [M, d]; g: [d] -> [M, d]."""
+    m, d = x.shape
+    tile_m = min(tile_m, m)
+    assert m % tile_m == 0
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=interpret,
+    )(x, g)

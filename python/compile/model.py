@@ -1,0 +1,406 @@
+"""L2: LLaMA-style transformer in JAX — the paper's model substrate.
+
+Everything here is build-time: `aot.py` lowers the jitted entry points
+to HLO text once; the rust coordinator executes them via PJRT and never
+imports Python.
+
+ABI (mirrored by rust/src/runtime.rs + rust/src/model.rs — keep in sync!)
+------------------------------------------------------------------------
+Weights are *stacked by projection type* so the artifact argument list
+stays small and the rust side can marshal one Literal per stack:
+
+  weights (12 arrays):
+     0 embed      [V, d]
+     1 attn_norm  [L, d]
+     2 wq         [L, A, d]      A = heads_kept * head_dim
+     3 wk         [L, A, d]
+     4 wv         [L, A, d]
+     5 wo         [L, d, A]
+     6 mlp_norm   [L, d]
+     7 w_gate     [L, F, d]      F = d_ff_kept
+     8 w_up       [L, F, d]
+     9 w_down     [L, d, F]
+    10 final_norm [d]
+    11 lm_head    [V, d]
+
+  lora (14 arrays): for each proj in PROJS order, (A [L, r, in],
+    B [L, out, r]).  y = x W^T + (x A^T) B^T * (alpha / r).
+
+  adam state: one array per lora array, m-list then v-list (28), plus a
+    scalar f32 step count t.
+
+Projections compute y = x @ W^T (PyTorch Linear convention), so pruning
+a head removes *rows* of wq/wk/wv and *columns* of wo; pruning an MLP
+channel group removes rows of w_gate/w_up and columns of w_down.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, PrunedShapes, PROJS, proj_shape
+from .kernels.attention import causal_attention
+from .kernels.lora_matmul import lora_matmul
+from .kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+from .kernels.qmatmul import qmatmul_nf4
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def _pick_tile(n: int, cap: int = 128) -> int:
+    for t in (cap, 64, 32, 16, 8, 4, 2, 1):
+        if t <= cap and n % t == 0:
+            return t
+    return 1
+
+
+# --------------------------------------------------------------------- #
+# primitive layers                                                      #
+# --------------------------------------------------------------------- #
+
+def _rmsnorm(x, g, use_kernels):
+    if use_kernels:
+        b, s, d = x.shape
+        return rmsnorm_kernel(x.reshape(b * s, d), g,
+                              tile_m=_pick_tile(b * s)).reshape(b, s, d)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + 1e-6) * g
+
+
+def _linear(x, w, a, b, scaling, use_kernels):
+    """x [B,S,in] @ w [out,in]^T + LoRA low-rank update."""
+    bsz, s, k = x.shape
+    if use_kernels:
+        y = lora_matmul(x.reshape(bsz * s, k), w, a, b, scaling,
+                        tile_n=_pick_tile(w.shape[0]))
+        return y.reshape(bsz, s, w.shape[0])
+    return x @ w.T + ((x @ a.T) @ b.T) * scaling
+
+
+def _rope_tables(seq, head_dim, theta):
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    pos = jnp.arange(seq, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]          # [S, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rope(x, cos, sin):
+    # x: [B, H, S, hd]
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def _attention(q, k, v, n_heads, head_dim, use_kernels=False):
+    # q/k/v: [B, S, A]
+    b, s, _ = q.shape
+    q = q.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+    cos, sin = _rope_tables(s, head_dim, 10000.0)
+    q = _apply_rope(q, cos, sin)
+    k = _apply_rope(k, cos, sin)
+    if use_kernels:
+        ctx = causal_attention(
+            q.reshape(b * n_heads, s, head_dim),
+            k.reshape(b * n_heads, s, head_dim),
+            v.reshape(b * n_heads, s, head_dim),
+        ).reshape(b, n_heads, s, head_dim)
+    else:
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+            jnp.float32(head_dim))
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    return ctx.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+
+
+# --------------------------------------------------------------------- #
+# forward                                                               #
+# --------------------------------------------------------------------- #
+
+class Shapes(NamedTuple):
+    cfg: ModelConfig
+    ps: PrunedShapes
+
+
+def _layer(sh: Shapes, h, layer_w, layer_lora, use_kernels):
+    cfg, ps = sh
+    (an, wq, wk, wv, wo, mn, wg, wu, wd) = layer_w
+    (aq, bq, ak, bk, av, bv, ao, bo_, ag, bg, au, bu, ad, bd) = layer_lora
+    s = cfg.lora_alpha / cfg.lora_rank
+
+    hn = _rmsnorm(h, an, use_kernels)
+    q = _linear(hn, wq, aq, bq, s, use_kernels)
+    k = _linear(hn, wk, ak, bk, s, use_kernels)
+    v = _linear(hn, wv, av, bv, s, use_kernels)
+    ctx = _attention(q, k, v, ps.heads_kept, cfg.head_dim, use_kernels)
+    h = h + _linear(ctx, wo, ao, bo_, s, use_kernels)
+
+    hn2 = _rmsnorm(h, mn, use_kernels)
+    gate = jax.nn.silu(_linear(hn2, wg, ag, bg, s, use_kernels))
+    up = _linear(hn2, wu, au, bu, s, use_kernels)
+    h = h + _linear(gate * up, wd, ad, bd, s, use_kernels)
+    return h
+
+
+def forward(sh: Shapes, weights, lora, tokens, use_kernels=False,
+            collect_hidden=False):
+    """tokens [B, S] int32 -> logits [B, S, V] (opt. pooled hiddens)."""
+    (embed, attn_norm, wq, wk, wv, wo, mlp_norm, wg, wu, wd,
+     final_norm, head) = weights
+    h = embed[tokens]                                  # [B, S, d]
+
+    layer_xs = (attn_norm, wq, wk, wv, wo, mlp_norm, wg, wu, wd)
+    lora_xs = tuple(lora)                              # 14 stacked arrays
+
+    def body(h, xs):
+        lw, ll = xs
+        h = _layer(sh, h, lw, ll, use_kernels)
+        pooled = jnp.mean(h, axis=1) if collect_hidden else jnp.zeros(
+            (h.shape[0], 0), jnp.float32)
+        return h, pooled
+
+    h, pooled = jax.lax.scan(body, h, (layer_xs, lora_xs))
+    h = _rmsnorm(h, final_norm, use_kernels)
+    logits = h @ head.T
+    if collect_hidden:
+        return logits, pooled                          # pooled: [L, B, d]
+    return logits
+
+
+def lm_loss(sh, weights, lora, tokens, use_kernels=False):
+    """tokens [B, S+1] -> scalar mean next-token cross-entropy."""
+    logits = forward(sh, weights, lora, tokens[:, :-1], use_kernels)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------- #
+# AOT entry points                                                      #
+# --------------------------------------------------------------------- #
+
+def make_fwd(sh: Shapes, use_kernels=True):
+    def fwd(weights, lora, tokens):
+        return (forward(sh, weights, lora, tokens, use_kernels),)
+    return fwd
+
+
+def make_eval_loss(sh: Shapes):
+    def eval_loss(weights, lora, tokens):
+        return (lm_loss(sh, weights, lora, tokens),)
+    return eval_loss
+
+
+def make_eval_choices(sh: Shapes):
+    def eval_choices(weights, lora, tokens, mask):
+        """tokens [R, S] int32, mask [R, S] f32 (1 on choice tokens).
+
+        score[r] = sum_t mask[r, t] * log p(tokens[r, t] | tokens[r, :t]);
+        counts[r] = number of scored positions (length normalization is
+        done rust-side).
+        """
+        logits = forward(sh, weights, lora, tokens[:, :-1])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt = tokens[:, 1:]
+        m = mask[:, 1:]
+        tok_lp = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return (jnp.sum(tok_lp * m, axis=-1), jnp.sum(m, axis=-1))
+    return eval_choices
+
+
+def make_calib(sh: Shapes):
+    def calib(weights, lora, tokens):
+        """tokens [B, S] -> (pooled [L, B, d], last-position logits [B, V]).
+
+        Feeds the mutual-information bit allocator (paper Eq. 7): X_l is
+        the mean-pooled post-block hidden state, Y the final prediction.
+        """
+        logits, pooled = forward(sh, weights, lora, tokens,
+                                 collect_hidden=True)
+        return (pooled, logits[:, -1, :])
+    return calib
+
+
+def make_grads(sh: Shapes):
+    def grads(weights, lora, tokens):
+        """Loss + per-stack weight gradients (Taylor importance, Eq. 5/6)."""
+        loss, g = jax.value_and_grad(
+            lambda w: lm_loss(sh, w, lora, tokens))(tuple(weights))
+        return (loss,) + tuple(g)
+    return grads
+
+
+def _adamw(p, g, m, v, t, lr, wd=0.0):
+    m = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mhat = m / (1 - ADAM_B1 ** t)
+    vhat = v / (1 - ADAM_B2 ** t)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + wd * p)
+    return p, m, v
+
+
+def make_train(sh: Shapes, use_kernels=False):
+    """K fused LoRA-AdamW steps (base weights frozen)."""
+    def train(weights, lora, m, v, t, tokens, lr):
+        # tokens: [K, B, S+1]
+        def step(carry, toks):
+            lora, m, v, t = carry
+            t = t + 1.0
+            loss, g = jax.value_and_grad(
+                lambda l: lm_loss(sh, weights, l, toks, use_kernels))(
+                    tuple(lora))
+            new = [_adamw(p, gi, mi, vi, t, lr)
+                   for p, gi, mi, vi in zip(lora, g, m, v)]
+            lora = tuple(n[0] for n in new)
+            m = tuple(n[1] for n in new)
+            v = tuple(n[2] for n in new)
+            return (lora, m, v, t), loss
+
+        (lora, m, v, t), losses = jax.lax.scan(
+            step, (tuple(lora), tuple(m), tuple(v), t), tokens)
+        return (losses,) + lora + m + v + (t,)
+    return train
+
+
+def make_pretrain(sh: Shapes):
+    """K fused full-parameter AdamW steps (corpus pretraining)."""
+    zero_lora = make_zero_lora(sh)
+
+    def pretrain(weights, m, v, t, tokens, lr):
+        def step(carry, toks):
+            weights, m, v, t = carry
+            t = t + 1.0
+            loss, g = jax.value_and_grad(
+                lambda w: lm_loss(sh, w, zero_lora, toks))(tuple(weights))
+            new = [_adamw(p, gi, mi, vi, t, lr)
+                   for p, gi, mi, vi in zip(weights, g, m, v)]
+            weights = tuple(n[0] for n in new)
+            m = tuple(n[1] for n in new)
+            v = tuple(n[2] for n in new)
+            return (weights, m, v, t), loss
+
+        (weights, m, v, t), losses = jax.lax.scan(
+            step, (tuple(weights), tuple(m), tuple(v), t), tokens)
+        return (losses,) + weights + m + v + (t,)
+    return pretrain
+
+
+def make_qfwd(sh: Shapes):
+    """Forward with NF4-quantized projections through the fused Pallas
+    dequant-matmul kernel — the deployment inference path.
+
+    Projection stacks are replaced by (codes [L, out, in/2] u8,
+    scales [L, out, in/64] f32) pairs in PROJS order; requires
+    `in` % 64 == 0, i.e. the unpruned (rate 0) shapes.
+    """
+    cfg, ps = sh
+    sc = cfg.lora_alpha / cfg.lora_rank
+
+    def qlinear(x, codes, scales, a, b):
+        bsz, s, k = x.shape
+        y = qmatmul_nf4(x.reshape(bsz * s, k), codes, scales,
+                        tile_n=_pick_tile(codes.shape[0]))
+        y = y.reshape(bsz, s, codes.shape[0])
+        return y + ((x @ a.T) @ b.T) * sc
+
+    def qfwd(embed, attn_norm, mlp_norm, final_norm, head, qproj, lora,
+             tokens):
+        h = embed[tokens]
+        xs = (attn_norm, mlp_norm) + tuple(qproj) + tuple(lora)
+
+        def body(h, xs):
+            (an, mn, cq, sq, ck, sk, cv, sv, co, so, cg, sg, cu, su,
+             cd, sd, aq, bq, ak, bk, av, bv, ao, bo_, ag, bg, au, bu,
+             ad, bd) = xs
+            hn = _rmsnorm(h, an, False)
+            q = qlinear(hn, cq, sq, aq, bq)
+            k = qlinear(hn, ck, sk, ak, bk)
+            v = qlinear(hn, cv, sv, av, bv)
+            ctx = _attention(q, k, v, ps.heads_kept, cfg.head_dim)
+            h = h + qlinear(ctx, co, so, ao, bo_)
+            hn2 = _rmsnorm(h, mn, False)
+            gate = jax.nn.silu(qlinear(hn2, cg, sg, ag, bg))
+            up = qlinear(hn2, cu, su, au, bu)
+            h = h + qlinear(gate * up, cd, sd, ad, bd)
+            return h, None
+
+        h, _ = jax.lax.scan(body, h, xs)
+        h = _rmsnorm(h, final_norm, False)
+        return (h @ head.T,)
+
+    return qfwd
+
+
+# --------------------------------------------------------------------- #
+# shape builders (for lowering + tests)                                 #
+# --------------------------------------------------------------------- #
+
+def make_weight_shapes(sh: Shapes):
+    cfg, ps = sh
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    A, F = ps.attn_dim(cfg), ps.d_ff_kept
+    f32 = jnp.float32
+    S = jax.ShapeDtypeStruct
+    return (
+        S((V, d), f32), S((L, d), f32),
+        S((L, A, d), f32), S((L, A, d), f32), S((L, A, d), f32),
+        S((L, d, A), f32), S((L, d), f32),
+        S((L, F, d), f32), S((L, F, d), f32), S((L, d, F), f32),
+        S((d,), f32), S((V, d), f32),
+    )
+
+
+def make_lora_shapes(sh: Shapes):
+    cfg, ps = sh
+    r = cfg.lora_rank
+    out = []
+    S = jax.ShapeDtypeStruct
+    for p in PROJS:
+        o, i = proj_shape(cfg, ps, p)
+        out.append(S((cfg.n_layers, r, i), jnp.float32))
+        out.append(S((cfg.n_layers, o, r), jnp.float32))
+    return tuple(out)
+
+
+def make_zero_lora(sh: Shapes):
+    return tuple(jnp.zeros(s.shape, s.dtype) for s in make_lora_shapes(sh))
+
+
+def make_qproj_shapes(sh: Shapes):
+    cfg, ps = sh
+    out = []
+    S = jax.ShapeDtypeStruct
+    for p in PROJS:
+        o, i = proj_shape(cfg, ps, p)
+        assert i % 64 == 0, f"qfwd requires in%64==0, got {p}: {i}"
+        out.append(S((cfg.n_layers, o, i // 2), jnp.uint8))
+        out.append(S((cfg.n_layers, o, i // 64), jnp.float32))
+    return tuple(out)
+
+
+def init_weights(sh: Shapes, seed: int = 0):
+    """Random init matching the rust-side initializer (for tests only —
+    the real init lives in rust/src/model.rs)."""
+    cfg, _ = sh
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for spec in make_weight_shapes(sh):
+        key, k = jax.random.split(key)
+        if len(spec.shape) == 1 or spec.shape[-1:] == (cfg.d_model,) and len(spec.shape) == 2 and spec.shape[0] == cfg.n_layers:
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            fan_in = spec.shape[-1]
+            out.append(jax.random.normal(k, spec.shape, spec.dtype)
+                       * (fan_in ** -0.5))
+    # norms are gains: set to ones
+    out[1] = jnp.ones_like(out[1])
+    out[6] = jnp.ones_like(out[6])
+    out[10] = jnp.ones_like(out[10])
+    return tuple(out)

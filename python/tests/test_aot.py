@@ -1,0 +1,89 @@
+"""AOT artifact pipeline checks: manifest consistency and HLO-text
+emission (the interchange contract with the rust runtime)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.configs import SIZES, RATES
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_produces_parseable_module():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+    # return_tuple=True: the entry computation returns a 1-tuple
+    assert "->(f32[2,2]" in text
+
+
+def test_train_arg_count_matches_manifest_formula():
+    cfg = SIZES["tiny"]
+    sh = M.Shapes(cfg, cfg.pruned(0))
+    w = M.make_weight_shapes(sh)
+    lo = M.make_lora_shapes(sh)
+    # weights + lora + m + v + t + tokens + lr
+    expect = len(w) + 3 * len(lo) + 3
+    assert expect == 12 + 3 * 14 + 3 == 57
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.tsv")),
+                    reason="artifacts not built")
+def test_manifest_covers_expected_grid():
+    with open(os.path.join(ART_DIR, "manifest.tsv")) as f:
+        names = {line.split("\t")[0] for line in f if line.strip()}
+    for size in ("tiny", "small", "base"):
+        for rate in RATES:
+            for kind in ("train", "evalchoices", "evalloss", "calib",
+                         "grads"):
+                assert f"{kind}_{size}_r{rate}" in names
+        for kind in ("pretrain", "fwd", "qfwd"):
+            assert f"{kind}_{size}_r0" in names
+    for k in ("kernel_qmatmul_nf4", "kernel_qmatmul_int8",
+              "kernel_lora_matmul", "kernel_rmsnorm", "kernel_attention"):
+        assert k in names
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.tsv")),
+                    reason="artifacts not built")
+def test_manifest_arities_match_config_arithmetic():
+    rows = {}
+    with open(os.path.join(ART_DIR, "manifest.tsv")) as f:
+        for line in f:
+            parts = line.rstrip("\n").split("\t")
+            if len(parts) >= 3:
+                rows[parts[0]] = (int(parts[1]), int(parts[2]))
+    for size in ("tiny", "small", "base"):
+        n_in, n_out = rows[f"train_{size}_r20"]
+        assert n_in == 57
+        assert n_out == 1 + 3 * 14 + 1
+        n_in, n_out = rows[f"grads_{size}_r0"]
+        assert n_in == 27
+        assert n_out == 13
+        n_in, n_out = rows[f"pretrain_{size}_r0"]
+        assert n_in == 12 * 3 + 3
+        assert n_out == 38
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.tsv")),
+                    reason="artifacts not built")
+def test_artifact_files_exist_and_are_hlo_text():
+    with open(os.path.join(ART_DIR, "manifest.tsv")) as f:
+        names = [line.split("\t")[0] for line in f if line.strip()]
+    assert len(names) >= 60
+    for name in names[:5] + names[-5:]:
+        path = os.path.join(ART_DIR, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        with open(path) as fh:
+            head = fh.read(200)
+        assert "HloModule" in head, name

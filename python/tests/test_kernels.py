@@ -1,0 +1,261 @@
+"""Kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes and value distributions; every Pallas kernel
+(interpret mode) must match its ref.py oracle to tight f32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.codebooks import (
+    NF4_CODEBOOK, FP4_CODEBOOK, BLOCK,
+    quantize_blockwise, dequantize_blockwise, pack_nibbles, unpack_nibbles,
+    int8_quantize_blockwise, int8_dequantize_blockwise,
+)
+from compile.kernels.qmatmul import qmatmul_nf4, qmatmul_int8
+from compile.kernels.lora_matmul import lora_matmul
+from compile.kernels.rmsnorm import rmsnorm
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(*shape, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# --------------------------------------------------------------------- #
+# qmatmul_nf4                                                           #
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([1, 3, 16]),
+    n=st.sampled_from([8, 64, 128, 256]),
+    kb=st.sampled_from([1, 2, 4]),   # K in blocks of 64
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_nf4_matches_ref(m, n, kb, seed):
+    k = kb * BLOCK
+    w = _rand(n, k, seed=seed)
+    codes, scales = quantize_blockwise(w, NF4_CODEBOOK)
+    packed = pack_nibbles(codes)
+    x = _rand(m, k, seed=seed + 1)
+    got = np.asarray(qmatmul_nf4(x, packed, scales))
+    want = np.asarray(ref.qmatmul_nf4_ref(x, packed, scales))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul_nf4_tiling_invariance():
+    """Different tile_n choices give identical results."""
+    k, n, m = 128, 256, 8
+    w = _rand(n, k, seed=7)
+    codes, scales = quantize_blockwise(w, NF4_CODEBOOK)
+    packed = pack_nibbles(codes)
+    x = _rand(m, k, seed=8)
+    outs = [np.asarray(qmatmul_nf4(x, packed, scales, tile_n=t))
+            for t in (32, 64, 128, 256)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# qmatmul_int8                                                          #
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([1, 4, 16]),
+    n=st.sampled_from([16, 64, 128]),
+    kb=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_int8_matches_ref(m, n, kb, seed):
+    k = kb * BLOCK
+    w = _rand(n, k, seed=seed)
+    codes, scales = int8_quantize_blockwise(w)
+    x = _rand(m, k, seed=seed + 1)
+    got = np.asarray(qmatmul_int8(x, codes, scales))
+    want = np.asarray(ref.qmatmul_int8_ref(x, codes, scales))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# lora_matmul                                                           #
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([1, 5, 16]),
+    n=st.sampled_from([8, 64, 128]),
+    k=st.sampled_from([16, 64, 192]),
+    r=st.sampled_from([1, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lora_matmul_matches_ref(m, n, k, r, seed):
+    x, w = _rand(m, k, seed=seed), _rand(n, k, seed=seed + 1)
+    a, b = _rand(r, k, seed=seed + 2), _rand(n, r, seed=seed + 3)
+    got = np.asarray(lora_matmul(x, w, a, b, 2.0))
+    want = np.asarray(ref.lora_matmul_ref(x, w, a, b, 2.0))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_lora_matmul_zero_adapter_is_base_matmul():
+    x, w = _rand(4, 32, seed=1), _rand(16, 32, seed=2)
+    a, b = np.zeros((8, 32), np.float32), np.zeros((16, 8), np.float32)
+    got = np.asarray(lora_matmul(x, w, a, b, 2.0))
+    np.testing.assert_allclose(got, x @ w.T, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# causal attention                                                      #
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bh=st.sampled_from([1, 4, 8]),
+    s=st.sampled_from([4, 32, 64]),
+    hd=st.sampled_from([16, 48, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_causal_attention_matches_ref(bh, s, hd, seed):
+    from compile.kernels.attention import causal_attention
+    q = _rand(bh, s, hd, seed=seed)
+    k = _rand(bh, s, hd, seed=seed + 1)
+    v = _rand(bh, s, hd, seed=seed + 2)
+    got = np.asarray(causal_attention(q, k, v))
+    want = np.asarray(ref.causal_attention_ref(q, k, v))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_causal_attention_is_causal():
+    """Changing the last position's K/V must not change earlier rows."""
+    from compile.kernels.attention import causal_attention
+    q = _rand(2, 16, 32, seed=41)
+    k = _rand(2, 16, 32, seed=42)
+    v = _rand(2, 16, 32, seed=43)
+    out1 = np.asarray(causal_attention(q, k, v))
+    k2, v2 = k.copy(), v.copy()
+    k2[:, -1, :] += 5.0
+    v2[:, -1, :] -= 5.0
+    out2 = np.asarray(causal_attention(q, k2, v2))
+    np.testing.assert_allclose(out1[:, :-1], out2[:, :-1],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(out1[:, -1], out2[:, -1])
+
+
+def test_causal_attention_first_row_is_v0():
+    """Position 0 can only attend to itself -> output row 0 == v[0]."""
+    from compile.kernels.attention import causal_attention
+    q = _rand(1, 8, 16, seed=44)
+    k = _rand(1, 8, 16, seed=45)
+    v = _rand(1, 8, 16, seed=46)
+    out = np.asarray(causal_attention(q, k, v))
+    np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_causal_attention_softmax_stability():
+    """Large score magnitudes must not produce NaNs (max-subtract)."""
+    from compile.kernels.attention import causal_attention
+    q = _rand(1, 16, 32, seed=47, scale=100.0)
+    k = _rand(1, 16, 32, seed=48, scale=100.0)
+    v = _rand(1, 16, 32, seed=49)
+    out = np.asarray(causal_attention(q, k, v))
+    assert np.all(np.isfinite(out))
+
+
+# --------------------------------------------------------------------- #
+# rmsnorm                                                               #
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([1, 8, 128, 256]),
+    d=st.sampled_from([16, 64, 384]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matches_ref(m, d, seed):
+    x, g = _rand(m, d, seed=seed), _rand(d, seed=seed + 1)
+    got = np.asarray(rmsnorm(x, g))
+    want = np.asarray(ref.rmsnorm_ref(x, g))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_scale_invariant():
+    """RMSNorm output is invariant to positive rescaling of the input."""
+    x, g = _rand(4, 64, seed=3), _rand(64, seed=4)
+    y1 = np.asarray(rmsnorm(x, g))
+    y2 = np.asarray(rmsnorm(x * 1000.0, g))
+    np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# quantizer properties (host-side codebooks, mirrored in rust)          #
+# --------------------------------------------------------------------- #
+
+def test_nf4_codebook_is_sorted_and_symmetric_endpoints():
+    assert np.all(np.diff(NF4_CODEBOOK) > 0)
+    assert NF4_CODEBOOK[0] == -1.0 and NF4_CODEBOOK[-1] == 1.0
+    assert NF4_CODEBOOK[7] == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([1, 3]), k=st.sampled_from([64, 100, 129]),
+       seed=st.integers(0, 2**31 - 1),
+       cb=st.sampled_from(["nf4", "fp4"]))
+def test_blockwise_roundtrip_error_bounded(n, k, seed, cb):
+    """|w - dq(q(w))| <= absmax(block) * max_gap(codebook) / 2."""
+    codebook = NF4_CODEBOOK if cb == "nf4" else FP4_CODEBOOK
+    w = _rand(n, k, seed=seed)
+    codes, scales = quantize_blockwise(w, codebook)
+    back = dequantize_blockwise(codes, scales, codebook)
+    assert back.shape == w.shape
+    sorted_cb = np.sort(codebook)
+    max_gap = np.max(np.diff(sorted_cb))
+    nb = scales.shape[-1]
+    pad = nb * BLOCK - k
+    wp = np.pad(w, [(0, 0), (0, pad)]).reshape(n, nb, BLOCK)
+    bp = np.pad(back, [(0, 0), (0, pad)]).reshape(n, nb, BLOCK)
+    bound = scales[..., None] * (max_gap / 2 + 1e-6)
+    assert np.all(np.abs(wp - bp) <= bound + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([2, 5]), k=st.sampled_from([64, 128]),
+       seed=st.integers(0, 2**31 - 1))
+def test_quantization_idempotent(n, k, seed):
+    """Quantizing an already-quantized tensor is a fixed point."""
+    w = _rand(n, k, seed=seed)
+    codes, scales = quantize_blockwise(w, NF4_CODEBOOK)
+    back = dequantize_blockwise(codes, scales, NF4_CODEBOOK)
+    codes2, scales2 = quantize_blockwise(back, NF4_CODEBOOK)
+    back2 = dequantize_blockwise(codes2, scales2, NF4_CODEBOOK)
+    np.testing.assert_allclose(back, back2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([1, 4]), k=st.sampled_from([64, 256]),
+       seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(n, k, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 16, size=(n, k)).astype(np.uint8)
+    assert np.array_equal(unpack_nibbles(pack_nibbles(codes)), codes)
+
+
+def test_int8_roundtrip_relative_error():
+    w = _rand(8, 256, seed=11)
+    codes, scales = int8_quantize_blockwise(w)
+    back = int8_dequantize_blockwise(codes, scales)
+    # int8 absmax: error bounded by scale/2 per element
+    nb = scales.shape[-1]
+    bound = np.repeat(scales, BLOCK, axis=-1)[:, :256] / 2 + 1e-7
+    assert np.all(np.abs(w - back) <= bound)
+
+
+def test_zero_tensor_quantizes_to_zero():
+    w = np.zeros((2, 128), np.float32)
+    codes, scales = quantize_blockwise(w, NF4_CODEBOOK)
+    back = dequantize_blockwise(codes, scales, NF4_CODEBOOK)
+    np.testing.assert_array_equal(back, w)

@@ -1,0 +1,259 @@
+"""L2 model correctness: shapes, training dynamics, eval semantics,
+kernel-model equivalence, quantized-forward fidelity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import SIZES, PROJS, proj_shape, param_count
+from compile.kernels.codebooks import (
+    NF4_CODEBOOK, quantize_blockwise, pack_nibbles)
+
+CFG = SIZES["tiny"]
+SH = M.Shapes(CFG, CFG.pruned(0))
+SH20 = M.Shapes(CFG, CFG.pruned(20))
+
+
+def _weights(sh, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, spec in enumerate(M.make_weight_shapes(sh)):
+        if i in (1, 6, 10):
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            fan_in = spec.shape[-1]
+            out.append(jnp.asarray(
+                rng.standard_normal(spec.shape) * fan_in ** -0.5,
+                dtype=spec.dtype))
+    return tuple(out)
+
+
+def _lora(sh, seed=1, zero_b=True):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, spec in enumerate(M.make_lora_shapes(sh)):
+        if zero_b and i % 2 == 1:
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        else:
+            out.append(jnp.asarray(
+                rng.standard_normal(spec.shape) * 0.01, dtype=spec.dtype))
+    return tuple(out)
+
+
+def _tokens(shape, seed=2, vocab=None):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(0, vocab or CFG.vocab, size=shape), dtype=jnp.int32)
+
+
+# --------------------------------------------------------------------- #
+# forward                                                               #
+# --------------------------------------------------------------------- #
+
+def test_forward_shapes():
+    w, lo = _weights(SH), M.make_zero_lora(SH)
+    toks = _tokens((2, CFG.seq))
+    logits = M.forward(SH, w, lo, toks)
+    assert logits.shape == (2, CFG.seq, CFG.vocab)
+    assert np.all(np.isfinite(logits))
+
+
+def test_forward_pruned_shapes():
+    w, lo = _weights(SH20), M.make_zero_lora(SH20)
+    toks = _tokens((2, CFG.seq))
+    logits = M.forward(SH20, w, lo, toks)
+    assert logits.shape == (2, CFG.seq, CFG.vocab)
+
+
+def test_forward_is_causal():
+    """Changing a future token must not change past logits."""
+    w, lo = _weights(SH), M.make_zero_lora(SH)
+    toks = _tokens((1, CFG.seq))
+    l1 = M.forward(SH, w, lo, toks)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % CFG.vocab)
+    l2 = M.forward(SH, w, lo, toks2)
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[0, -1], l2[0, -1])
+
+
+def test_kernel_forward_matches_jnp_forward():
+    """use_kernels=True (Pallas path) == use_kernels=False (pure jnp)."""
+    w = _weights(SH)
+    lo = _lora(SH, zero_b=False)
+    toks = _tokens((2, CFG.seq))
+    l_jnp = M.forward(SH, w, lo, toks, use_kernels=False)
+    l_ker = M.forward(SH, w, lo, toks, use_kernels=True)
+    np.testing.assert_allclose(l_ker, l_jnp, rtol=1e-4, atol=1e-4)
+
+
+def test_lora_changes_output():
+    w = _weights(SH)
+    toks = _tokens((1, CFG.seq))
+    l0 = M.forward(SH, w, M.make_zero_lora(SH), toks)
+    l1 = M.forward(SH, w, _lora(SH, zero_b=False), toks)
+    assert not np.allclose(l0, l1)
+
+
+# --------------------------------------------------------------------- #
+# loss / training                                                       #
+# --------------------------------------------------------------------- #
+
+def test_loss_near_uniform_at_init():
+    """Random init -> CE ~= log(V)."""
+    w, lo = _weights(SH), M.make_zero_lora(SH)
+    toks = _tokens((4, CFG.seq + 1))
+    loss = float(M.lm_loss(SH, w, lo, toks))
+    assert abs(loss - np.log(CFG.vocab)) < 1.5
+
+
+def test_train_scan_reduces_loss_on_fixed_batch():
+    w = _weights(SH)
+    lo = _lora(SH)  # A random, B zero (standard LoRA init)
+    m = tuple(jnp.zeros_like(x) for x in lo)
+    v = tuple(jnp.zeros_like(x) for x in lo)
+    toks1 = _tokens((1, CFG.batch, CFG.seq + 1), seed=5)
+    toks = jnp.tile(toks1, (CFG.scan_steps, 1, 1))
+    train = M.make_train(SH)
+    out = train(w, lo, m, v, jnp.float32(0.0), toks, jnp.float32(1e-2))
+    losses = np.asarray(out[0])
+    assert losses.shape == (CFG.scan_steps,)
+    assert losses[-1] < losses[0], f"no descent: {losses}"
+
+
+def test_train_updates_only_lora_state_shapes():
+    w = _weights(SH)
+    lo = _lora(SH)
+    m = tuple(jnp.zeros_like(x) for x in lo)
+    v = tuple(jnp.zeros_like(x) for x in lo)
+    toks = _tokens((CFG.scan_steps, CFG.batch, CFG.seq + 1), seed=6)
+    out = M.make_train(SH)(w, lo, m, v, jnp.float32(0.0), toks,
+                           jnp.float32(1e-3))
+    n = len(lo)
+    new_lora = out[1:1 + n]
+    t = out[1 + 3 * n]
+    assert float(t) == CFG.scan_steps
+    for old, new in zip(lo, new_lora):
+        assert old.shape == new.shape
+    # at least one adapter actually moved
+    moved = any(not np.allclose(o, nw) for o, nw in zip(lo, new_lora))
+    assert moved
+
+
+def test_pretrain_reduces_loss():
+    w = _weights(SH, seed=9)
+    m = tuple(jnp.zeros_like(x) for x in w)
+    v = tuple(jnp.zeros_like(x) for x in w)
+    toks1 = _tokens((1, CFG.batch, CFG.seq + 1), seed=10)
+    toks = jnp.tile(toks1, (CFG.scan_steps, 1, 1))
+    out = M.make_pretrain(SH)(w, m, v, jnp.float32(0.0), toks,
+                              jnp.float32(1e-2))
+    losses = np.asarray(out[0])
+    assert losses[-1] < losses[0]
+
+
+# --------------------------------------------------------------------- #
+# eval_choices                                                          #
+# --------------------------------------------------------------------- #
+
+def test_eval_choices_matches_manual_logprob():
+    w, lo = _weights(SH), M.make_zero_lora(SH)
+    R = CFG.eval_rows
+    toks = _tokens((R, CFG.seq), seed=20)
+    mask = np.zeros((R, CFG.seq), np.float32)
+    mask[:, -4:] = 1.0  # last 4 tokens are "the choice"
+    scores, counts = M.make_eval_choices(SH)(w, lo, toks,
+                                             jnp.asarray(mask))
+    logits = M.forward(SH, w, lo, toks[:, :-1])
+    logp = np.asarray(jax.nn.log_softmax(logits, axis=-1))
+    tgt = np.asarray(toks[:, 1:])
+    want = np.zeros(R)
+    for r in range(R):
+        for t in range(CFG.seq - 1):
+            if mask[r, t + 1] > 0:
+                want[r] += logp[r, t, tgt[r, t]]
+    np.testing.assert_allclose(np.asarray(scores), want, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), mask[:, 1:].sum(1))
+
+
+# --------------------------------------------------------------------- #
+# calib / grads                                                         #
+# --------------------------------------------------------------------- #
+
+def test_calib_shapes_and_distinct_layers():
+    w, lo = _weights(SH), M.make_zero_lora(SH)
+    toks = _tokens((CFG.batch, CFG.seq), seed=30)
+    pooled, last_logits = M.make_calib(SH)(w, lo, toks)
+    assert pooled.shape == (CFG.n_layers, CFG.batch, CFG.d_model)
+    assert last_logits.shape == (CFG.batch, CFG.vocab)
+    assert not np.allclose(pooled[0], pooled[-1])
+
+
+def test_grads_match_jax_grad():
+    w, lo = _weights(SH), M.make_zero_lora(SH)
+    toks = _tokens((CFG.batch, CFG.seq + 1), seed=31)
+    out = M.make_grads(SH)(w, lo, toks)
+    loss, grads = out[0], out[1:]
+    direct = jax.grad(lambda ww: M.lm_loss(SH, ww, lo, toks))(w)
+    assert len(grads) == len(w)
+    for g, d in zip(grads, direct):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(d),
+                                   rtol=1e-4, atol=1e-5)
+    assert np.isfinite(float(loss))
+
+
+# --------------------------------------------------------------------- #
+# qfwd (fused NF4 path)                                                 #
+# --------------------------------------------------------------------- #
+
+def test_qfwd_matches_simulated_quant_forward():
+    """qfwd over NF4 codes == plain forward over dequantized weights."""
+    w = _weights(SH)
+    lo = _lora(SH, zero_b=False)
+    toks = _tokens((2, CFG.seq), seed=40)
+
+    # quantize the 7 projection stacks (per-matrix along `in` axis)
+    from compile.kernels.codebooks import dequantize_blockwise
+    qproj, deq_w = [], list(w)
+    idx = {"wq": 2, "wk": 3, "wv": 4, "wo": 5,
+           "w_gate": 7, "w_up": 8, "w_down": 9}
+    for p in PROJS:
+        stack = np.asarray(w[idx[p]])
+        codes, scales = quantize_blockwise(stack, NF4_CODEBOOK)
+        qproj.append(jnp.asarray(pack_nibbles(codes)))
+        qproj.append(jnp.asarray(scales))
+        deq_w[idx[p]] = jnp.asarray(
+            dequantize_blockwise(codes, scales, NF4_CODEBOOK))
+
+    got = M.make_qfwd(SH)(w[0], w[1], w[6], w[10], w[11], tuple(qproj),
+                          lo, toks)[0]
+    want = M.forward(SH, tuple(deq_w), lo, toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------- #
+# config arithmetic                                                     #
+# --------------------------------------------------------------------- #
+
+def test_param_count_matches_actual_arrays():
+    total = sum(int(np.prod(s.shape)) for s in M.make_weight_shapes(SH))
+    assert total == param_count(CFG, 0)
+
+
+@pytest.mark.parametrize("size", ["tiny", "small", "base", "large"])
+@pytest.mark.parametrize("rate", [0, 20, 30, 50])
+def test_pruned_shapes_consistent(size, rate):
+    cfg = SIZES[size]
+    ps = cfg.pruned(rate)
+    assert 1 <= ps.heads_kept <= cfg.n_heads
+    assert ps.d_ff_kept % 8 == 0
+    assert ps.d_ff_kept <= cfg.d_ff
+    for p in PROJS:
+        o, i = proj_shape(cfg, ps, p)
+        assert o > 0 and i > 0
+    if rate == 0:
+        assert ps.heads_kept == cfg.n_heads
+        assert ps.d_ff_kept == cfg.d_ff

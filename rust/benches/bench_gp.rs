@@ -1,0 +1,61 @@
+//! Bayesian-optimization surrogate benchmarks (paper Appendix D: the
+//! GP suggestion step took ~7 s and ~187 MB at 32 layers / 50 points;
+//! our rust GP should be orders of magnitude cheaper).
+
+#[path = "harness.rs"]
+mod harness;
+
+use qpruner::bo::{self, Acquisition, Gp, Observation};
+use qpruner::quant::{BitConfig, QuantFormat};
+use qpruner::rng::Rng;
+
+fn synth_observations(n: usize, n_layers: usize, rng: &mut Rng)
+                      -> Vec<Observation> {
+    let mut out: Vec<Observation> = Vec::new();
+    while out.len() < n {
+        let n8 = rng.below(n_layers / 2 + 1);
+        let mut c = BitConfig::uniform(n_layers, QuantFormat::Nf4);
+        for i in rng.choose_k(n_layers, n8) {
+            c.layers[i] = QuantFormat::Int8;
+        }
+        if out.iter().any(|o| o.config.short() == c.short()) {
+            continue;
+        }
+        let perf = 0.5
+            + 0.02 * c.features().iter().sum::<f64>()
+            + 0.01 * rng.normal();
+        let mem = 20.0 + c.mean_bits();
+        out.push(Observation { config: c, perf, memory_gb: mem });
+    }
+    out
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    // paper-scale: 32 layers, growing dataset sizes
+    for n in [10usize, 25, 50] {
+        let obs = synth_observations(n, 32, &mut rng);
+        let xs: Vec<Vec<f64>> =
+            obs.iter().map(|o| o.config.features()).collect();
+        let ys: Vec<f64> = obs.iter().map(|o| o.perf).collect();
+        harness::bench(&format!("gp_fit_n{n}_l32"), 2, 20, || {
+            std::hint::black_box(Gp::fit(&xs, &ys, 4.0, 1e-4).unwrap());
+        });
+        let gp = Gp::fit(&xs, &ys, 4.0, 1e-4).unwrap();
+        let probe = obs[0].config.features();
+        harness::bench(&format!("gp_predict_n{n}_l32"), 10, 100, || {
+            std::hint::black_box(gp.predict(&probe));
+        });
+        let mut r2 = Rng::new(n as u64);
+        harness::bench(&format!("bo_suggest_n{n}_l32"), 1, 10, || {
+            std::hint::black_box(
+                bo::suggest(&obs, Acquisition::Ei, QuantFormat::Nf4, 0.25,
+                            &mut r2)
+                    .unwrap(),
+            );
+        });
+        harness::bench(&format!("pareto_front_n{n}"), 5, 50, || {
+            std::hint::black_box(bo::pareto_front(&obs));
+        });
+    }
+}

@@ -1,0 +1,59 @@
+//! End-to-end pipeline stage benchmarks (tiny model, smoke fidelity):
+//! prune / MI-allocate / LoftQ-prepare / fine-tune / eval / full run
+//! per method. This is the App.-D-style cost accounting of Algorithm 1.
+
+#[path = "harness.rs"]
+mod harness;
+
+use qpruner::coordinator::{Coordinator, Method, PipelineOpts};
+use qpruner::data::Language;
+use qpruner::experiments::Scale;
+use qpruner::model::ModelConfig;
+use qpruner::runtime::Runtime;
+
+fn main() {
+    let Some(dir) = harness::artifacts_dir() else {
+        println!("SKIP bench_pipeline: artifacts not built");
+        return;
+    };
+    let mut coord =
+        Coordinator::new(Runtime::new(&dir).unwrap(), Language::new(256, 1));
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let (store, _) = coord.pretrain(&cfg, 48, 3e-3, 11).unwrap();
+
+    let mut opts = PipelineOpts::quick(20, Method::QPruner2);
+    Scale::smoke().apply(&mut opts);
+
+    harness::bench("stage_prune_taylor_compact", 1, 5, || {
+        std::hint::black_box(coord.prune(&store, &opts).unwrap());
+    });
+
+    let pruned = coord.prune(&store, &opts).unwrap();
+    harness::bench("stage_mi_allocate", 1, 5, || {
+        std::hint::black_box(
+            coord.allocate_bits_mi(&pruned, &opts).unwrap());
+    });
+
+    let bits = coord.allocate_bits_mi(&pruned, &opts).unwrap();
+    harness::bench("stage_bo_candidate_eval", 1, 5, || {
+        let mut rng = qpruner::rng::Rng::new(9);
+        std::hint::black_box(
+            coord.evaluate_candidate(&pruned, &bits, &opts, &mut rng)
+                .unwrap(),
+        );
+    });
+
+    for method in [Method::LlmPruner, Method::QPruner1, Method::QPruner2,
+                   Method::QPruner3] {
+        let mut o = PipelineOpts::quick(20, method);
+        Scale::smoke().apply(&mut o);
+        harness::bench(
+            &format!("pipeline_full_{}", method.label()
+                         .to_lowercase().replace(['^', '-'], "")),
+            0, 3,
+            || {
+                std::hint::black_box(coord.run(&store, &o).unwrap());
+            },
+        );
+    }
+}

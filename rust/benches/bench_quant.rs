@@ -1,0 +1,58 @@
+//! Quantizer hot-path benchmarks.
+//!
+//! NF4/FP4/INT8 blockwise quantize + dequantize throughput on
+//! base-model-sized projection stacks, plus LoftQ/PiSSA init cost —
+//! these run once per BO candidate, so they gate Algorithm 1's
+//! wall-clock (paper App. D reports ~25 min/candidate at 7B on GPU;
+//! our per-candidate budget at simulator scale is < 1 s host work).
+
+#[path = "harness.rs"]
+mod harness;
+
+use qpruner::lora::{init_loftq, InitMethod};
+use qpruner::model::{ModelConfig, ParamStore};
+use qpruner::quant::{dequantize, quantize, simulate, BitConfig, QuantFormat};
+use qpruner::rng::Rng;
+use qpruner::tensor::Tensor;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    // one base-model w_gate stack slab: [1024, 384]
+    let w = Tensor::randn(&[1024, 384], 0.05, &mut rng);
+    let bytes = w.len() * 4;
+
+    for fmt in [QuantFormat::Nf4, QuantFormat::Fp4, QuantFormat::Int8] {
+        harness::bench_throughput(
+            &format!("quantize_{}_1024x384", fmt.label()),
+            2, 10, bytes,
+            || {
+                std::hint::black_box(quantize(&w, fmt));
+            },
+        );
+        let q = quantize(&w, fmt);
+        harness::bench_throughput(
+            &format!("dequantize_{}_1024x384", fmt.label()),
+            2, 10, bytes,
+            || {
+                std::hint::black_box(dequantize(&q));
+            },
+        );
+        harness::bench(
+            &format!("simulate_roundtrip_{}_1024x384", fmt.label()),
+            1, 5,
+            || {
+                std::hint::black_box(simulate(&w, fmt));
+            },
+        );
+    }
+
+    // LoftQ init over a whole tiny model (56 projection matrices)
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 2);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    harness::bench("loftq_init_tiny_model", 1, 5, || {
+        let mut r = Rng::new(3);
+        std::hint::black_box(init_loftq(&store, &bits, 1, &mut r).unwrap());
+    });
+    let _ = InitMethod::Gaussian;
+}

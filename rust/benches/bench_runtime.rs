@@ -1,0 +1,112 @@
+//! PJRT runtime benchmarks: artifact compile latency, execute latency
+//! for the kernel and model artifacts, and host<->device marshaling
+//! overhead. These bound the L3 hot path: one `train_*` execute per
+//! scan window is the unit of fine-tuning work.
+
+#[path = "harness.rs"]
+mod harness;
+
+use qpruner::model::{ModelConfig, ParamStore};
+use qpruner::rng::Rng;
+use qpruner::runtime::{Arg, Runtime};
+use qpruner::tensor::Tensor;
+
+fn main() {
+    let Some(dir) = harness::artifacts_dir() else {
+        println!("SKIP bench_runtime: artifacts not built");
+        return;
+    };
+
+    // compile latency (fresh runtime each iteration)
+    harness::bench("compile_kernel_rmsnorm", 1, 5, || {
+        let mut rt = Runtime::new(&dir).unwrap();
+        rt.load("kernel_rmsnorm").unwrap();
+    });
+    harness::bench("compile_train_tiny_r20", 1, 3, || {
+        let mut rt = Runtime::new(&dir).unwrap();
+        rt.load("train_tiny_r20").unwrap();
+    });
+
+    // execute latency, cached executables
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(4);
+    let x = Tensor::randn(&[16, 256], 1.0, &mut rng);
+    let g = Tensor::randn(&[256], 1.0, &mut rng);
+    rt.exec_f32("kernel_rmsnorm", &[Arg::F32(&x), Arg::F32(&g)]).unwrap();
+    harness::bench("exec_kernel_rmsnorm", 3, 30, || {
+        std::hint::black_box(
+            rt.exec_f32("kernel_rmsnorm", &[Arg::F32(&x), Arg::F32(&g)])
+                .unwrap(),
+        );
+    });
+
+    // full tiny fwd (27 inputs: marshaling + execute)
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 5);
+    let lora: Vec<Tensor> = qpruner::lora::LoraState::shapes(&store)
+        .iter()
+        .map(|s| Tensor::zeros(s))
+        .collect();
+    let tokens: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|i| 3 + (i as i32) % 250)
+        .collect();
+    let shape = [cfg.batch, cfg.seq];
+    let run_fwd = |rt: &mut Runtime| {
+        let mut args: Vec<Arg> = Vec::new();
+        for w in &store.weights {
+            args.push(Arg::F32(w));
+        }
+        for t in &lora {
+            args.push(Arg::F32(t));
+        }
+        args.push(Arg::I32(&tokens, &shape));
+        rt.exec_f32("fwd_tiny_r0", &args).unwrap()
+    };
+    run_fwd(&mut rt);
+    harness::bench("exec_fwd_tiny_27_inputs", 2, 20, || {
+        std::hint::black_box(run_fwd(&mut rt));
+    });
+
+    // marshaling alone: build+drop the literals without executing
+    harness::bench("marshal_tiny_weights_to_literals", 3, 30, || {
+        for w in &store.weights {
+            std::hint::black_box(qpruner::runtime::lit_f32(w).unwrap());
+        }
+    });
+
+    // one scan-window train step (the fine-tuning unit of work)
+    let m: Vec<Tensor> =
+        lora.iter().map(|t| Tensor::zeros(t.shape())).collect();
+    let v = m.clone();
+    let k = cfg.scan_steps;
+    let train_tokens: Vec<i32> = (0..k * cfg.batch * (cfg.seq + 1))
+        .map(|i| 3 + (i as i32) % 250)
+        .collect();
+    let tshape = [k, cfg.batch, cfg.seq + 1];
+    let run_train = |rt: &mut Runtime| {
+        let mut args: Vec<Arg> = Vec::new();
+        for w in &store.weights {
+            args.push(Arg::F32(w));
+        }
+        for t in &lora {
+            args.push(Arg::F32(t));
+        }
+        for t in &m {
+            args.push(Arg::F32(t));
+        }
+        for t in &v {
+            args.push(Arg::F32(t));
+        }
+        args.push(Arg::Scalar(0.0));
+        args.push(Arg::I32(&train_tokens, &tshape));
+        args.push(Arg::Scalar(1e-3));
+        rt.exec("train_tiny_r0", &args).unwrap()
+    };
+    run_train(&mut rt);
+    harness::bench(
+        &format!("exec_train_tiny_scan{k}_per_call"), 2, 10,
+        || {
+            std::hint::black_box(run_train(&mut rt));
+        },
+    );
+}

@@ -1,0 +1,55 @@
+//! Table/figure regeneration benchmarks: one timing per paper artifact
+//! (tiny model, smoke fidelity). Ensures every table and figure in the
+//! evaluation section has a measured regeneration path.
+
+#[path = "harness.rs"]
+mod harness;
+
+use qpruner::coordinator::Coordinator;
+use qpruner::data::Language;
+use qpruner::experiments::{self, Scale};
+use qpruner::model::ModelConfig;
+use qpruner::runtime::Runtime;
+
+fn main() {
+    let Some(dir) = harness::artifacts_dir() else {
+        println!("SKIP bench_tables: artifacts not built");
+        return;
+    };
+    let mut coord =
+        Coordinator::new(Runtime::new(&dir).unwrap(), Language::new(256, 1));
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let (store, _) = coord.pretrain(&cfg, 48, 3e-3, 12).unwrap();
+    let scale = Scale::smoke();
+
+    harness::bench("fig1_motivating", 0, 2, || {
+        std::hint::black_box(
+            experiments::fig1_motivating(&mut coord, &store, &scale)
+                .unwrap(),
+        );
+    });
+    harness::bench("table1_one_rate", 0, 2, || {
+        std::hint::black_box(
+            experiments::table1(&mut coord, &[("tiny", &store)], &[20],
+                                &scale)
+                .unwrap(),
+        );
+    });
+    harness::bench("table2_ablations", 0, 1, || {
+        std::hint::black_box(
+            experiments::table2_ablation(&mut coord, &store, &scale)
+                .unwrap(),
+        );
+    });
+    harness::bench("table3_13b", 0, 1, || {
+        std::hint::black_box(
+            experiments::table3_13b(&mut coord, &store, &scale).unwrap(),
+        );
+    });
+    harness::bench("fig3_pareto_6pts", 0, 1, || {
+        std::hint::black_box(
+            experiments::fig3_pareto(&mut coord, &store, 50, 6, 3, &scale)
+                .unwrap(),
+        );
+    });
+}

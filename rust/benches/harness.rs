@@ -1,0 +1,69 @@
+//! Minimal bench harness (criterion is not vendored offline).
+//!
+//! Reports mean / p50 / p95 over timed iterations after warmup, in a
+//! stable machine-greppable format:
+//!
+//!   BENCH <name> iters=<n> mean=<ms> p50=<ms> p95=<ms> [thrpt=<...>]
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        p50_ms: p50,
+        p95_ms: p95,
+    };
+    println!(
+        "BENCH {name} iters={iters} mean={mean:.3}ms p50={p50:.3}ms p95={p95:.3}ms"
+    );
+    r
+}
+
+/// Like `bench` but also prints throughput given bytes processed per
+/// iteration.
+pub fn bench_throughput<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                                    bytes_per_iter: usize, f: F)
+                                    -> BenchResult {
+    let r = bench(name, warmup, iters, f);
+    let mbps = bytes_per_iter as f64 / (r.mean_ms / 1e3) / 1e6;
+    println!("BENCH {name} thrpt={mbps:.1}MB/s");
+    r
+}
+
+/// Artifact dir shared by runtime-dependent benches; None -> skip.
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("QPRUNER_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("artifacts")
+        });
+    dir.join("manifest.tsv").exists().then_some(dir)
+}

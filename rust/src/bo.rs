@@ -1,0 +1,500 @@
+//! Bayesian optimization of the bit-width configuration (paper §3.2,
+//! Eq. 8 and Algorithm 1).
+//!
+//! A Gaussian-Process surrogate (RBF kernel over the per-layer bit
+//! features, Cholesky posterior) models P(b); an acquisition function
+//! (EI by default, UCB available) proposes the next configuration from
+//! a constrained discrete candidate pool ({4,8}^L with the 8-bit
+//! fraction capped). Every evaluated (b, P(b), M(b)) lands in the
+//! dataset D; the non-dominated subset is the Pareto front of
+//! Figures 3/4.
+
+use crate::linalg;
+use crate::quant::{BitConfig, QuantFormat};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// One evaluated configuration (a row of the paper's dataset D).
+#[derive(Clone, Debug)]
+pub struct Observation {
+    pub config: BitConfig,
+    /// task performance P(b) — higher is better (mean accuracy here)
+    pub perf: f64,
+    /// memory usage M(b) in GB at paper scale
+    pub memory_gb: f64,
+}
+
+/// GP covariance kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// squared-exponential (smooth)
+    Rbf,
+    /// Matern 5/2 — the BO community default for rougher objectives
+    Matern52,
+}
+
+impl Kernel {
+    fn eval(self, a: &[f64], b: &[f64], ls: f64) -> f64 {
+        let d2: f64 =
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        match self {
+            Kernel::Rbf => (-0.5 * d2 / (ls * ls)).exp(),
+            Kernel::Matern52 => {
+                let r = d2.sqrt() / ls;
+                let s = 5.0f64.sqrt() * r;
+                (1.0 + s + 5.0 * d2 / (3.0 * ls * ls)) * (-s).exp()
+            }
+        }
+    }
+}
+
+/// Gaussian Process regression in f64 (RBF or Matern 5/2 kernel).
+pub struct Gp {
+    kernel: Kernel,
+    lengthscale: f64,
+    signal_var: f64,
+    noise_var: f64,
+    x: Vec<Vec<f64>>,
+    /// Cholesky factor of K + noise I
+    l: Vec<f64>,
+    /// alpha = K^{-1} (y - mean)
+    alpha: Vec<f64>,
+    y_mean: f64,
+}
+
+impl Gp {
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], lengthscale: f64,
+               noise_var: f64) -> Result<Gp> {
+        Self::fit_kernel(xs, ys, Kernel::Rbf, lengthscale, noise_var)
+    }
+
+    pub fn fit_kernel(xs: &[Vec<f64>], ys: &[f64], kernel: Kernel,
+                      lengthscale: f64, noise_var: f64) -> Result<Gp> {
+        assert_eq!(xs.len(), ys.len());
+        let n = xs.len();
+        let y_mean = ys.iter().sum::<f64>() / n as f64;
+        let yc: Vec<f64> = ys.iter().map(|y| y - y_mean).collect();
+        let signal_var = {
+            let v = yc.iter().map(|y| y * y).sum::<f64>() / n as f64;
+            v.max(1e-6)
+        };
+        let mut k = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] =
+                    signal_var * kernel.eval(&xs[i], &xs[j], lengthscale);
+                if i == j {
+                    k[i * n + j] += noise_var + 1e-9;
+                }
+            }
+        }
+        let l = linalg::cholesky(&k, n)?;
+        let alpha = linalg::solve_lower_t(&l, n, &linalg::solve_lower(&l, n, &yc));
+        Ok(Gp {
+            kernel,
+            lengthscale,
+            signal_var,
+            noise_var,
+            x: xs.to_vec(),
+            l,
+            alpha,
+            y_mean,
+        })
+    }
+
+    /// Fit with the lengthscale chosen by log-marginal-likelihood over
+    /// a geometric grid (Rasmussen & Williams Eq. 2.30) — the
+    /// rust-side equivalent of Optuna's hyperparameter adaptation.
+    pub fn fit_ml(xs: &[Vec<f64>], ys: &[f64], kernel: Kernel,
+                  noise_var: f64) -> Result<Gp> {
+        let d = xs.first().map(|x| x.len()).unwrap_or(1) as f64;
+        let base = d.sqrt();
+        let mut best: Option<(f64, Gp)> = None;
+        for mult in [0.25, 0.5, 0.75, 1.0, 1.5, 2.5] {
+            let gp = Self::fit_kernel(xs, ys, kernel, base * mult,
+                                      noise_var)?;
+            let nll = gp.log_marginal_likelihood(ys);
+            if best.as_ref().map(|(b, _)| nll > *b).unwrap_or(true) {
+                best = Some((nll, gp));
+            }
+        }
+        Ok(best.unwrap().1)
+    }
+
+    /// log p(y | X, theta) for the fitted hyperparameters.
+    pub fn log_marginal_likelihood(&self, ys: &[f64]) -> f64 {
+        let n = self.x.len();
+        let yc: Vec<f64> = ys.iter().map(|y| y - self.y_mean).collect();
+        let data_fit: f64 =
+            yc.iter().zip(&self.alpha).map(|(y, a)| y * a).sum::<f64>();
+        let log_det: f64 =
+            (0..n).map(|i| self.l[i * n + i].ln()).sum::<f64>() * 2.0;
+        -0.5 * data_fit - 0.5 * log_det
+            - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+    }
+
+    pub fn lengthscale(&self) -> f64 {
+        self.lengthscale
+    }
+
+    /// Posterior mean and variance at x*.
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let n = self.x.len();
+        let kstar: Vec<f64> = self
+            .x
+            .iter()
+            .map(|xi| {
+                self.signal_var * self.kernel.eval(xi, x, self.lengthscale)
+            })
+            .collect();
+        let mean = self.y_mean
+            + kstar.iter().zip(&self.alpha).map(|(k, a)| k * a).sum::<f64>();
+        let v = linalg::solve_lower(&self.l, n, &kstar);
+        let var = self.signal_var + self.noise_var
+            - v.iter().map(|x| x * x).sum::<f64>();
+        (mean, var.max(1e-12))
+    }
+}
+
+/// Acquisition functions (the alpha(b) of Eq. 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Acquisition {
+    /// Expected improvement over the incumbent best.
+    Ei,
+    /// Upper confidence bound, mean + kappa * std.
+    Ucb,
+}
+
+fn normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Abramowitz-Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let y = 1.0
+        - (((((1.061_405_429 * t - 1.453_152_027) * t) + 1.421_413_741)
+            * t
+            - 0.284_496_736)
+            * t
+            + 0.254_829_592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+pub fn acquisition_score(acq: Acquisition, mean: f64, var: f64,
+                         best: f64, kappa: f64) -> f64 {
+    let std = var.sqrt();
+    match acq {
+        Acquisition::Ei => {
+            if std < 1e-12 {
+                return 0.0;
+            }
+            let z = (mean - best) / std;
+            (mean - best) * normal_cdf(z) + std * normal_pdf(z)
+        }
+        Acquisition::Ucb => mean + kappa * std,
+    }
+}
+
+/// Candidate generator: all 1-flip neighbours of the evaluated configs
+/// plus random budget-respecting samples, deduplicated, constraint
+/// frac_8bit <= max_frac8, minus already-evaluated points.
+pub fn candidates(observed: &[Observation], n_layers: usize,
+                  four_bit: QuantFormat, max_frac8: f64, n_random: usize,
+                  rng: &mut Rng) -> Vec<BitConfig> {
+    use std::collections::HashSet;
+    let mut seen: HashSet<String> =
+        observed.iter().map(|o| o.config.short()).collect();
+    let mut out = Vec::new();
+    let push = |c: BitConfig, out: &mut Vec<BitConfig>,
+                    seen: &mut HashSet<String>| {
+        if c.frac_8bit() <= max_frac8 + 1e-9 && seen.insert(c.short()) {
+            out.push(c);
+        }
+    };
+    // 1-flip neighbourhood of every observed config
+    for o in observed {
+        for l in 0..n_layers {
+            let mut c = o.config.clone();
+            c.layers[l] = match c.layers[l] {
+                QuantFormat::Int8 => four_bit,
+                _ => QuantFormat::Int8,
+            };
+            push(c, &mut out, &mut seen);
+        }
+    }
+    // random samples under the budget
+    let max8 = ((n_layers as f64) * max_frac8).floor() as usize;
+    for _ in 0..n_random {
+        let n8 = rng.below(max8 + 1);
+        let mut c = BitConfig::uniform(n_layers, four_bit);
+        for i in rng.choose_k(n_layers, n8) {
+            c.layers[i] = QuantFormat::Int8;
+        }
+        push(c, &mut out, &mut seen);
+    }
+    out
+}
+
+/// One Algorithm-1 suggestion: fit the GP on D, maximize alpha over
+/// the candidate pool. Returns None when the pool is empty (search
+/// space exhausted).
+pub fn suggest(observed: &[Observation], acq: Acquisition,
+               four_bit: QuantFormat, max_frac8: f64, rng: &mut Rng)
+               -> Result<Option<BitConfig>> {
+    let n_layers = observed
+        .first()
+        .map(|o| o.config.n_layers())
+        .expect("suggest needs >= 1 observation");
+    let xs: Vec<Vec<f64>> =
+        observed.iter().map(|o| o.config.features()).collect();
+    let ys: Vec<f64> = observed.iter().map(|o| o.perf).collect();
+    let ls = (n_layers as f64).sqrt() * 0.75;
+    let gp = Gp::fit(&xs, &ys, ls, 1e-4)?;
+    let best = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let pool = candidates(observed, n_layers, four_bit, max_frac8, 64, rng);
+    let mut best_c: Option<(f64, BitConfig)> = None;
+    for c in pool {
+        let (m, v) = gp.predict(&c.features());
+        let score = acquisition_score(acq, m, v, best, 2.0);
+        if best_c.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+            best_c = Some((score, c));
+        }
+    }
+    Ok(best_c.map(|(_, c)| c))
+}
+
+/// Non-dominated (maximize perf, minimize memory) subset — the red
+/// points of Figures 3/4.
+pub fn pareto_front(observed: &[Observation]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, a) in observed.iter().enumerate() {
+        for (j, b) in observed.iter().enumerate() {
+            if i != j
+                && b.perf >= a.perf
+                && b.memory_gb <= a.memory_gb
+                && (b.perf > a.perf || b.memory_gb < a.memory_gb)
+            {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(short: &str, perf: f64, mem: f64) -> Observation {
+        let layers = short
+            .chars()
+            .map(|c| match c {
+                '8' => QuantFormat::Int8,
+                _ => QuantFormat::Nf4,
+            })
+            .collect();
+        Observation { config: BitConfig { layers }, perf, memory_gb: mem }
+    }
+
+    #[test]
+    fn gp_interpolates_training_points() {
+        let xs = vec![vec![0.0, 0.0], vec![1.0, 0.0], vec![0.0, 1.0]];
+        let ys = vec![1.0, 2.0, 3.0];
+        let gp = Gp::fit(&xs, &ys, 1.0, 1e-6).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let (m, v) = gp.predict(x);
+            assert!((m - y).abs() < 0.05, "mean {m} vs {y}");
+            assert!(v < 0.05, "var {v}");
+        }
+    }
+
+    #[test]
+    fn matern_interpolates_training_points() {
+        let xs = vec![vec![0.0, 0.0], vec![1.0, 0.0], vec![0.0, 1.0]];
+        let ys = vec![1.0, 2.0, 3.0];
+        let gp =
+            Gp::fit_kernel(&xs, &ys, Kernel::Matern52, 1.0, 1e-6).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let (m, _) = gp.predict(x);
+            assert!((m - y).abs() < 0.05, "matern mean {m} vs {y}");
+        }
+    }
+
+    #[test]
+    fn kernels_are_valid_covariances() {
+        for k in [Kernel::Rbf, Kernel::Matern52] {
+            // k(x,x)=1, symmetric, decaying
+            let a = vec![0.5, -0.25];
+            let b = vec![1.5, 0.75];
+            assert!((k.eval(&a, &a, 1.0) - 1.0).abs() < 1e-12);
+            assert!((k.eval(&a, &b, 1.0) - k.eval(&b, &a, 1.0)).abs()
+                    < 1e-12);
+            let near = k.eval(&a, &vec![0.6, -0.25], 1.0);
+            let far = k.eval(&a, &vec![3.0, 3.0], 1.0);
+            assert!(near > far && far > 0.0);
+        }
+    }
+
+    #[test]
+    fn ml_fit_picks_reasonable_lengthscale() {
+        // smooth function of 1 coordinate -> ML should not pick the
+        // tiniest lengthscale
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..12 {
+            let x = i as f64 / 3.0;
+            xs.push(vec![x, 0.0]);
+            ys.push((x * 0.8).sin());
+        }
+        let gp = Gp::fit_ml(&xs, &ys, Kernel::Rbf, 1e-6).unwrap();
+        assert!(gp.lengthscale() > 0.3, "ls {}", gp.lengthscale());
+        // and it must still interpolate
+        let (m, _) = gp.predict(&xs[5]);
+        assert!((m - ys[5]).abs() < 0.05);
+    }
+
+    #[test]
+    fn marginal_likelihood_prefers_true_model() {
+        // data generated with ls=1 should score >= heavily mismatched ls
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..10 {
+            let x = i as f64 / 2.0;
+            xs.push(vec![x]);
+            ys.push((x).sin());
+        }
+        let good = Gp::fit_kernel(&xs, &ys, Kernel::Rbf, 1.0, 1e-4).unwrap();
+        let bad = Gp::fit_kernel(&xs, &ys, Kernel::Rbf, 0.01, 1e-4).unwrap();
+        assert!(good.log_marginal_likelihood(&ys)
+                > bad.log_marginal_likelihood(&ys));
+    }
+
+    #[test]
+    fn gp_uncertainty_grows_away_from_data() {
+        let xs = vec![vec![0.0], vec![1.0]];
+        let ys = vec![0.0, 1.0];
+        let gp = Gp::fit(&xs, &ys, 0.5, 1e-6).unwrap();
+        let (_, v_near) = gp.predict(&[0.5]);
+        let (_, v_far) = gp.predict(&[5.0]);
+        assert!(v_far > v_near);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(1.0) - 0.842_700_79).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.842_700_79).abs() < 1e-6);
+        assert!((erf(3.0) - 0.999_977_9).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ei_zero_at_certainty_below_best() {
+        let s = acquisition_score(Acquisition::Ei, 0.5, 1e-14, 1.0, 2.0);
+        assert!(s.abs() < 1e-9);
+    }
+
+    #[test]
+    fn ei_positive_with_uncertainty() {
+        let s = acquisition_score(Acquisition::Ei, 0.5, 0.25, 1.0, 2.0);
+        assert!(s > 0.0);
+    }
+
+    #[test]
+    fn ucb_orders_by_optimism() {
+        let a = acquisition_score(Acquisition::Ucb, 1.0, 0.01, 0.0, 2.0);
+        let b = acquisition_score(Acquisition::Ucb, 1.0, 1.0, 0.0, 2.0);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn candidates_respect_budget_and_dedup() {
+        let mut rng = Rng::new(1);
+        let o = vec![obs("44444444", 0.5, 20.0)];
+        let pool = candidates(&o, 8, QuantFormat::Nf4, 0.25, 32, &mut rng);
+        assert!(!pool.is_empty());
+        let mut shorts: Vec<String> = pool.iter().map(|c| c.short()).collect();
+        let before = shorts.len();
+        shorts.sort();
+        shorts.dedup();
+        assert_eq!(shorts.len(), before, "duplicates in pool");
+        for c in &pool {
+            assert!(c.frac_8bit() <= 0.25 + 1e-9);
+            assert_ne!(c.short(), "44444444", "evaluated point re-proposed");
+        }
+    }
+
+    #[test]
+    fn suggest_returns_valid_config() {
+        let mut rng = Rng::new(2);
+        let o = vec![
+            obs("44444444", 0.50, 20.0),
+            obs("84444444", 0.55, 21.0),
+            obs("44448444", 0.52, 21.0),
+        ];
+        let c = suggest(&o, Acquisition::Ei, QuantFormat::Nf4, 0.25,
+                        &mut rng).unwrap().unwrap();
+        assert_eq!(c.n_layers(), 8);
+        assert!(c.frac_8bit() <= 0.25 + 1e-9);
+    }
+
+    #[test]
+    fn gp_learns_additive_bit_value() {
+        // synthetic truth: perf = 0.5 + 0.1 * (#8bit in first half)
+        let mut obs_v = Vec::new();
+        let pats = ["44444444", "84444444", "48444444", "88444444",
+                    "44444448", "44448888"];
+        for p in pats {
+            let n8_front = p[..4].chars().filter(|&c| c == '8').count();
+            obs_v.push(obs(p, 0.5 + 0.1 * n8_front as f64, 20.0));
+        }
+        let xs: Vec<Vec<f64>> =
+            obs_v.iter().map(|o| o.config.features()).collect();
+        let ys: Vec<f64> = obs_v.iter().map(|o| o.perf).collect();
+        let gp = Gp::fit(&xs, &ys, 2.0, 1e-5).unwrap();
+        // front-loaded config should predict higher than back-loaded
+        let hi = BitConfig {
+            layers: "88844444".chars().map(|c| if c == '8' {
+                QuantFormat::Int8 } else { QuantFormat::Nf4 }).collect(),
+        };
+        let lo = BitConfig {
+            layers: "44444888".chars().map(|c| if c == '8' {
+                QuantFormat::Int8 } else { QuantFormat::Nf4 }).collect(),
+        };
+        let (mh, _) = gp.predict(&hi.features());
+        let (ml, _) = gp.predict(&lo.features());
+        assert!(mh > ml, "GP failed to learn positional value: {mh} vs {ml}");
+    }
+
+    #[test]
+    fn pareto_front_correct() {
+        let o = vec![
+            obs("4444", 0.5, 20.0), // dominated by #2
+            obs("8444", 0.6, 19.0),
+            obs("4844", 0.4, 25.0), // dominated
+            obs("8844", 0.7, 22.0),
+            obs("4484", 0.6, 19.0), // tie with #1 -> both kept
+        ];
+        let f = pareto_front(&o);
+        assert!(f.contains(&1));
+        assert!(f.contains(&3));
+        assert!(f.contains(&4));
+        assert!(!f.contains(&0));
+        assert!(!f.contains(&2));
+    }
+
+    #[test]
+    fn pareto_single_point() {
+        let o = vec![obs("44", 0.1, 1.0)];
+        assert_eq!(pareto_front(&o), vec![0]);
+    }
+}

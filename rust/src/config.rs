@@ -1,0 +1,180 @@
+//! Experiment configuration + CLI parsing (serde/clap are not vendored
+//! offline; this is a deliberately small key=value system).
+//!
+//! Configs load from TOML-subset files (`key = value` lines, `#`
+//! comments, [section] headers flattened to `section.key`) and/or
+//! `--key value` CLI overrides, in that order.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Flat string-map configuration with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse a TOML-subset string.
+    pub fn from_str_content(content: &str) -> Result<Config> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in content.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected key = value, got {raw:?}",
+                      ln + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            map.insert(key, val);
+        }
+        Ok(Config { map })
+    }
+
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let content = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path:?}"))?;
+        Self::from_str_content(&content)
+    }
+
+    /// Apply `--key value` (or `--key=value`) CLI overrides. Returns
+    /// positional (non-flag) arguments.
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    self.map.insert(k.to_string(), v.to_string());
+                } else {
+                    if i + 1 >= args.len() {
+                        bail!("flag --{stripped} expects a value");
+                    }
+                    self.map.insert(stripped.to_string(),
+                                    args[i + 1].clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(positional)
+    }
+
+    pub fn set(&mut self, key: &str, val: &str) {
+        self.map.insert(key.to_string(), val.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("{key}={v}: expected bool"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_toml_subset() {
+        let c = Config::from_str_content(
+            "# comment\nsize = base\n[bo]\niters = 40 # inline\nfrac8 = 0.25\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("size"), Some("base"));
+        assert_eq!(c.usize_or("bo.iters", 0).unwrap(), 40);
+        assert!((c.f64_or("bo.frac8", 0.0).unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::from_str_content("just words\n").is_err());
+    }
+
+    #[test]
+    fn cli_overrides_and_positional() {
+        let mut c = Config::from_str_content("size = tiny\n").unwrap();
+        let pos = c
+            .apply_cli(&[
+                "run".into(),
+                "--size".into(),
+                "base".into(),
+                "--bo.iters=12".into(),
+            ])
+            .unwrap();
+        assert_eq!(pos, vec!["run"]);
+        assert_eq!(c.get("size"), Some("base"));
+        assert_eq!(c.usize_or("bo.iters", 0).unwrap(), 12);
+    }
+
+    #[test]
+    fn missing_flag_value_errors() {
+        let mut c = Config::new();
+        assert!(c.apply_cli(&["--oops".into()]).is_err());
+    }
+
+    #[test]
+    fn typed_getters_validate() {
+        let c = Config::from_str_content("n = abc\n").unwrap();
+        assert!(c.usize_or("n", 1).is_err());
+        assert_eq!(c.usize_or("missing", 7).unwrap(), 7);
+        let b = Config::from_str_content("flag = yes\n").unwrap();
+        assert!(b.bool_or("flag", false).unwrap());
+    }
+}

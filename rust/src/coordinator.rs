@@ -1,0 +1,537 @@
+//! The QPruner pipeline coordinator — the paper's system contribution.
+//!
+//! Orchestrates, entirely in rust over the AOT artifacts:
+//!
+//!   1. corpus **pretraining** (substrate: the in-repo stand-in for the
+//!      public LLaMA/Vicuna checkpoints);
+//!   2. **structured pruning** (§3.1): gradient pass -> Taylor group
+//!      importance -> per-layer head/channel selection -> weight
+//!      compaction to the pruned artifact shapes;
+//!   3. **mixed-precision quantization** (§3.2): calibration pass ->
+//!      mutual-information bit allocation (QPruner^2), optionally
+//!      refined by the GP/EI **Bayesian optimization** loop
+//!      (QPruner^3, Algorithm 1) where each candidate is LoftQ-prepared,
+//!      proxy-fine-tuned and evaluated;
+//!   4. **performance recovery** (§3.3): LoRA/LoftQ fine-tuning on the
+//!      frozen (simulated-quantized) base;
+//!   5. **zero-shot evaluation** over the 7-task suite + paper-scale
+//!      peak-memory accounting.
+
+use crate::bo::{self, Acquisition, Observation};
+use crate::data::{paper_suite, CorpusStream, Language, TaskSpec};
+use crate::eval::{eval_suite, mean_accuracy, TaskResult};
+use crate::finetune::{self, FinetuneOpts, FinetuneState};
+use crate::lora::{self, InitMethod, LoraState};
+use crate::memory;
+use crate::metrics::{LossCurve, Metrics};
+use crate::mi;
+use crate::model::{ModelConfig, ParamStore};
+use crate::pruning::{self, Aggregate, DependencyGraph, TaylorOrder};
+use crate::quant::{BitConfig, QuantFormat};
+use crate::rng::Rng;
+use crate::runtime::{tensor_f32, Arg, Runtime};
+use anyhow::{ensure, Context, Result};
+
+/// The four method presets of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// LLM-Pruner baseline: fp16 base + plain LoRA.
+    LlmPruner,
+    /// QPruner^1: uniform 4-bit + LoftQ.
+    QPruner1,
+    /// QPruner^2: MI-allocated mixed precision + LoftQ.
+    QPruner2,
+    /// QPruner^3: QPruner^2 refined by Bayesian optimization.
+    QPruner3,
+}
+
+impl Method {
+    pub fn label(self) -> &'static str {
+        match self {
+            Method::LlmPruner => "LLM-Pruner",
+            Method::QPruner1 => "QPruner^1",
+            Method::QPruner2 => "QPruner^2",
+            Method::QPruner3 => "QPruner^3",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "llm-pruner" | "llmpruner" | "baseline" => Some(Method::LlmPruner),
+            "qpruner1" | "q1" => Some(Method::QPruner1),
+            "qpruner2" | "q2" => Some(Method::QPruner2),
+            "qpruner3" | "q3" => Some(Method::QPruner3),
+            _ => None,
+        }
+    }
+}
+
+/// All knobs of one pipeline run.
+#[derive(Clone, Debug)]
+pub struct PipelineOpts {
+    pub rate_pct: u32,
+    pub method: Method,
+    /// 4-bit data type (Table 2 ablation: NF4 vs FP4)
+    pub four_bit: QuantFormat,
+    /// adapter init (Table 2: LoftQ / Gaussian / PiSSA, LoftQ iters)
+    pub init: InitMethod,
+    /// importance estimation (Table 2: element^1 / element^2)
+    pub taylor: TaylorOrder,
+    pub aggregate: Aggregate,
+    /// max fraction of 8-bit layers (paper: 0.25)
+    pub frac8: f64,
+    /// acquisition function for the BO loop (Eq. 8's alpha)
+    pub acquisition: Acquisition,
+    /// BO iterations after the MI warm start (QPruner^3)
+    pub bo_iters: usize,
+    /// random configs appended to the BO warm start (paper App. D: 10)
+    pub bo_init_random: usize,
+    pub finetune: FinetuneOpts,
+    /// steps of the cheap proxy fine-tune inside the BO loop
+    pub proxy_steps: usize,
+    /// items/task for the proxy evaluation inside the BO loop
+    pub proxy_items: usize,
+    /// items/task for the final evaluation
+    pub eval_items: usize,
+    pub seed: u64,
+    /// paper-scale architecture for the memory column ("7b" | "13b")
+    pub memory_arch: String,
+}
+
+impl PipelineOpts {
+    pub fn quick(rate_pct: u32, method: Method) -> PipelineOpts {
+        PipelineOpts {
+            rate_pct,
+            method,
+            four_bit: QuantFormat::Nf4,
+            init: InitMethod::LoftQ { iters: 1 },
+            taylor: TaylorOrder::First,
+            aggregate: Aggregate::Sum,
+            frac8: 0.25,
+            acquisition: Acquisition::Ei,
+            bo_iters: 6,
+            bo_init_random: 3,
+            finetune: FinetuneOpts::default(),
+            proxy_steps: 16,
+            proxy_items: 12,
+            eval_items: 50,
+            seed: 42,
+            memory_arch: "7b".into(),
+        }
+    }
+}
+
+/// Everything a table row needs.
+#[derive(Clone, Debug)]
+pub struct PipelineResult {
+    pub method: Method,
+    pub rate_pct: u32,
+    pub bits: BitConfig,
+    pub tasks: Vec<TaskResult>,
+    pub mean_accuracy: f64,
+    pub memory_gb: f64,
+    pub observations: Vec<Observation>,
+    pub curve: LossCurve,
+    pub trainable_params: usize,
+}
+
+/// The coordinator owns the runtime, the language and the metrics.
+pub struct Coordinator {
+    pub rt: Runtime,
+    pub lang: Language,
+    pub metrics: Metrics,
+}
+
+impl Coordinator {
+    pub fn new(rt: Runtime, lang: Language) -> Coordinator {
+        Coordinator { rt, lang, metrics: Metrics::new() }
+    }
+
+    fn memory_cfg(&self, opts: &PipelineOpts) -> ModelConfig {
+        if opts.memory_arch == "13b" {
+            ModelConfig::paper_13b()
+        } else {
+            ModelConfig::paper_7b()
+        }
+    }
+
+    /// Paper-scale memory for a bit config at this rate.
+    pub fn memory_gb(&self, opts: &PipelineOpts, bits_small: &BitConfig)
+                     -> f64 {
+        // map the small model's per-layer bits onto the paper arch by
+        // proportional stretching of the layer index
+        let arch = self.memory_cfg(opts);
+        let l_small = bits_small.n_layers();
+        let mut layers = Vec::with_capacity(arch.n_layers);
+        for l in 0..arch.n_layers {
+            let src = l * l_small / arch.n_layers;
+            layers.push(bits_small.layers[src]);
+        }
+        memory::peak_finetune_gb(&arch, opts.rate_pct,
+                                 &BitConfig { layers })
+    }
+
+    // ------------------------------------------------------------------
+    // stage 1: pretraining substrate
+    // ------------------------------------------------------------------
+
+    /// Full-parameter corpus pretraining via the `pretrain_{size}_r0`
+    /// artifact. Returns the trained store and the loss curve.
+    pub fn pretrain(&mut self, cfg: &ModelConfig, steps: usize, lr: f32,
+                    seed: u64) -> Result<(ParamStore, LossCurve)> {
+        let mut store = ParamStore::init(cfg, seed);
+        let name = format!("pretrain_{}_r0", cfg.name);
+        let k = cfg.scan_steps;
+        let mut stream = CorpusStream::new(&self.lang, seed ^ 0x5EED);
+        let mut m: Vec<_> =
+            store.weights.iter().map(|w| crate::tensor::Tensor::zeros(w.shape())).collect();
+        let mut v = m.clone();
+        let mut t = 0.0f32;
+        let mut curve = LossCurve::default();
+        let shape = [k, cfg.batch, cfg.seq + 1];
+        let calls = steps.div_ceil(k);
+        for call in 0..calls {
+            let tokens = stream.next_block(k, cfg.batch, cfg.seq + 1);
+            let warm = 20.0f32;
+            let lr_t = if (call * k) < warm as usize {
+                lr * ((call * k) as f32 + 1.0) / warm
+            } else {
+                lr
+            };
+            let mut args: Vec<Arg> = Vec::new();
+            for w in &store.weights {
+                args.push(Arg::F32(w));
+            }
+            for x in &m {
+                args.push(Arg::F32(x));
+            }
+            for x in &v {
+                args.push(Arg::F32(x));
+            }
+            args.push(Arg::Scalar(t));
+            args.push(Arg::I32(&tokens, &shape));
+            args.push(Arg::Scalar(lr_t));
+            let out = self.rt.exec(&name, &args)?;
+            ensure!(out.len() == 1 + 36 + 1, "pretrain output arity");
+            let losses = tensor_f32(&out[0])?;
+            for (i, &l) in losses.data().iter().enumerate() {
+                curve.push((call * k + i) as u64 + 1, l);
+            }
+            for i in 0..12 {
+                store.weights[i] = tensor_f32(&out[1 + i])?;
+                m[i] = tensor_f32(&out[13 + i])?;
+                v[i] = tensor_f32(&out[25 + i])?;
+            }
+            t = tensor_f32(&out[37])?.item();
+        }
+        Ok((store, curve))
+    }
+
+    // ------------------------------------------------------------------
+    // stage 2: structured pruning
+    // ------------------------------------------------------------------
+
+    /// Gradient pass + Taylor importance + compaction.
+    pub fn prune(&mut self, store: &ParamStore, opts: &PipelineOpts)
+                 -> Result<ParamStore> {
+        if opts.rate_pct == 0 {
+            return Ok(store.clone());
+        }
+        let cfg = store.cfg.clone();
+        let graph = DependencyGraph::build(&cfg);
+        let zero = LoraState::zeros(store);
+        let mut stream = CorpusStream::new(&self.lang, opts.seed ^ 0xA11CE);
+        // accumulate grads over a few calibration batches
+        let mut acc: Option<Vec<crate::tensor::Tensor>> = None;
+        let n_batches = 4;
+        for _ in 0..n_batches {
+            let tokens =
+                stream.next_block(1, cfg.batch, cfg.seq + 1);
+            let (_, grads) =
+                finetune::weight_grads(&mut self.rt, store, &zero, &tokens)?;
+            match &mut acc {
+                None => acc = Some(grads),
+                Some(a) => {
+                    for (x, g) in a.iter_mut().zip(&grads) {
+                        x.add_assign(g);
+                    }
+                }
+            }
+        }
+        let grads = acc.unwrap();
+        let imp = pruning::group_importance(
+            &cfg, &graph, store, &grads, opts.taylor, opts.aggregate,
+        )?;
+        let plan = pruning::PruningPlan::from_importance(
+            &cfg, &graph, &imp, opts.rate_pct,
+        );
+        pruning::apply_plan(store, &plan)
+    }
+
+    // ------------------------------------------------------------------
+    // stage 3: bit allocation
+    // ------------------------------------------------------------------
+
+    /// MI-based initial allocation b0 (QPruner^2).
+    pub fn allocate_bits_mi(&mut self, pruned: &ParamStore,
+                            opts: &PipelineOpts) -> Result<BitConfig> {
+        let cfg = &pruned.cfg;
+        let zero = LoraState::zeros(pruned);
+        let mut stream = CorpusStream::new(&self.lang, opts.seed ^ 0xCA11B);
+        // several calib batches -> more samples for the MI histogram
+        let n_batches = 8;
+        let mut pooled_all: Vec<f32> = Vec::new();
+        let mut preds: Vec<usize> = Vec::new();
+        let mut pooled_layers: Vec<Vec<f32>> =
+            vec![Vec::new(); cfg.n_layers];
+        for _ in 0..n_batches {
+            let block = stream.next_block(1, cfg.batch, cfg.seq + 1);
+            // calib takes [B, S]: drop the final column
+            let mut toks = Vec::with_capacity(cfg.batch * cfg.seq);
+            for b in 0..cfg.batch {
+                let row = &block[b * (cfg.seq + 1)..(b + 1) * (cfg.seq + 1)];
+                toks.extend_from_slice(&row[..cfg.seq]);
+            }
+            let (pooled, logits) =
+                finetune::calibrate(&mut self.rt, pruned, &zero, &toks)?;
+            // pooled: [L, B, d]
+            let d = cfg.d_model;
+            for l in 0..cfg.n_layers {
+                let (_, slab) = pooled.slab(l);
+                pooled_layers[l].extend_from_slice(slab);
+            }
+            // predictions: argmax of last-position logits
+            for b in 0..cfg.batch {
+                let row = logits.row(b);
+                let mut best = 0usize;
+                for (i, &x) in row.iter().enumerate() {
+                    if x > row[best] {
+                        best = i;
+                    }
+                }
+                preds.push(best);
+            }
+            let _ = d;
+        }
+        let batch_total = preds.len();
+        for l in 0..cfg.n_layers {
+            pooled_all.extend_from_slice(&pooled_layers[l]);
+        }
+        let scores = mi::layer_mi_scores(
+            &pooled_all, cfg.n_layers, batch_total, cfg.d_model, &preds,
+            opts.seed ^ 0x31,
+        );
+        Ok(mi::allocate_bits(&scores, opts.frac8, opts.four_bit))
+    }
+
+    // ------------------------------------------------------------------
+    // stage 3b: Bayesian optimization (Algorithm 1)
+    // ------------------------------------------------------------------
+
+    /// Evaluate one candidate: LoftQ-prepare, proxy fine-tune, reduced
+    /// eval. Returns (perf, paper-scale GB).
+    pub fn evaluate_candidate(&mut self, pruned: &ParamStore,
+                              bits: &BitConfig, opts: &PipelineOpts,
+                              rng: &mut Rng) -> Result<(f64, f64)> {
+        let prep = lora::prepare(pruned, bits, opts.init, rng)?;
+        let mut state = FinetuneState::new(prep.lora);
+        let mut stream =
+            CorpusStream::new(&self.lang, opts.seed ^ rng.next_u64());
+        let ft = FinetuneOpts {
+            steps: opts.proxy_steps,
+            lr: opts.finetune.lr,
+            warmup: 4,
+            seed: opts.seed,
+        };
+        finetune::finetune(&mut self.rt, &prep.base, &mut state, &mut stream,
+                           &ft)?;
+        let tasks: Vec<TaskSpec> = paper_suite();
+        let results = eval_suite(&mut self.rt, &prep.base, &state.lora,
+                                 &self.lang, &tasks, opts.proxy_items)?;
+        let perf = mean_accuracy(&results);
+        let mem = self.memory_gb(opts, bits);
+        Ok((perf, mem))
+    }
+
+    /// Like `evaluate_candidate` but returning the per-task breakdown
+    /// (used by the Figure 3/4 Pareto harness).
+    pub fn evaluate_candidate_detailed(
+        &mut self, pruned: &ParamStore, bits: &BitConfig,
+        opts: &PipelineOpts, rng: &mut Rng,
+    ) -> Result<(Vec<TaskResult>, f64)> {
+        let prep = lora::prepare(pruned, bits, opts.init, rng)?;
+        let mut state = FinetuneState::new(prep.lora);
+        let mut stream =
+            CorpusStream::new(&self.lang, opts.seed ^ rng.next_u64());
+        let ft = FinetuneOpts {
+            steps: opts.proxy_steps,
+            lr: opts.finetune.lr,
+            warmup: 4,
+            seed: opts.seed,
+        };
+        finetune::finetune(&mut self.rt, &prep.base, &mut state, &mut stream,
+                           &ft)?;
+        let tasks = paper_suite();
+        let results = eval_suite(&mut self.rt, &prep.base, &state.lora,
+                                 &self.lang, &tasks, opts.proxy_items)?;
+        let mem = self.memory_gb(opts, bits);
+        Ok((results, mem))
+    }
+
+    /// Algorithm 1: warm start (b0 + random configs), then GP + EI
+    /// suggestions. Returns the best config and the full dataset D.
+    pub fn bo_loop(&mut self, pruned: &ParamStore, b0: BitConfig,
+                   opts: &PipelineOpts)
+                   -> Result<(BitConfig, Vec<Observation>)> {
+        let n_layers = pruned.cfg.n_layers;
+        let mut rng = Rng::new(opts.seed ^ 0xB0);
+        let mut observed: Vec<Observation> = Vec::new();
+
+        // warm start: the MI config + random budget-respecting configs
+        let mut warm = vec![b0];
+        let max8 = ((n_layers as f64) * opts.frac8).floor() as usize;
+        for _ in 0..opts.bo_init_random {
+            let n8 = rng.below(max8 + 1);
+            let mut c = BitConfig::uniform(n_layers, opts.four_bit);
+            for i in rng.choose_k(n_layers, n8) {
+                c.layers[i] = QuantFormat::Int8;
+            }
+            if !warm.iter().any(|w: &BitConfig| w.short() == c.short()) {
+                warm.push(c);
+            }
+        }
+        for c in warm {
+            let (perf, mem) =
+                self.evaluate_candidate(pruned, &c, opts, &mut rng)?;
+            observed.push(Observation { config: c, perf, memory_gb: mem });
+        }
+
+        for _ in 0..opts.bo_iters {
+            let Some(cand) = bo::suggest(&observed, opts.acquisition,
+                                         opts.four_bit, opts.frac8,
+                                         &mut rng)?
+            else {
+                break; // search space exhausted
+            };
+            let (perf, mem) =
+                self.evaluate_candidate(pruned, &cand, opts, &mut rng)?;
+            observed.push(Observation { config: cand, perf, memory_gb: mem });
+        }
+
+        let best = observed
+            .iter()
+            .max_by(|a, b| a.perf.partial_cmp(&b.perf).unwrap())
+            .context("BO produced no observations")?
+            .config
+            .clone();
+        Ok((best, observed))
+    }
+
+    // ------------------------------------------------------------------
+    // the full pipeline
+    // ------------------------------------------------------------------
+
+    pub fn run(&mut self, store: &ParamStore, opts: &PipelineOpts)
+               -> Result<PipelineResult> {
+        let mut rng = Rng::new(opts.seed);
+
+        // 1. prune
+        let t0 = std::time::Instant::now();
+        let pruned = self.prune(store, opts)?;
+        self.metrics.add_time("pipeline.prune", t0.elapsed().as_secs_f64());
+
+        // 2. bit allocation per method
+        let (bits, observations) = match opts.method {
+            Method::LlmPruner => (
+                BitConfig::uniform(pruned.cfg.n_layers, QuantFormat::Fp16),
+                Vec::new(),
+            ),
+            Method::QPruner1 => (
+                BitConfig::uniform(pruned.cfg.n_layers, opts.four_bit),
+                Vec::new(),
+            ),
+            Method::QPruner2 => {
+                let b = self.allocate_bits_mi(&pruned, opts)?;
+                (b, Vec::new())
+            }
+            Method::QPruner3 => {
+                let b0 = self.allocate_bits_mi(&pruned, opts)?;
+                let (best, obs) = self.bo_loop(&pruned, b0, opts)?;
+                (best, obs)
+            }
+        };
+
+        // 3. prepare base + adapters (fp16 baseline uses Gaussian LoRA,
+        //    quantized methods the configured init — paper §4 protocol)
+        let init = if opts.method == Method::LlmPruner {
+            InitMethod::Gaussian
+        } else {
+            opts.init
+        };
+        let prep = lora::prepare(&pruned, &bits, init, &mut rng)?;
+        let trainable = prep.lora.trainable_params();
+
+        // 4. recovery fine-tune
+        let mut state = FinetuneState::new(prep.lora);
+        let mut stream = CorpusStream::new(&self.lang, opts.seed ^ 0xF17E);
+        let t1 = std::time::Instant::now();
+        finetune::finetune(&mut self.rt, &prep.base, &mut state, &mut stream,
+                           &opts.finetune)?;
+        self.metrics
+            .add_time("pipeline.finetune", t1.elapsed().as_secs_f64());
+
+        // 5. evaluate
+        let tasks = paper_suite();
+        let t2 = std::time::Instant::now();
+        let results = eval_suite(&mut self.rt, &prep.base, &state.lora,
+                                 &self.lang, &tasks, opts.eval_items)?;
+        self.metrics.add_time("pipeline.eval", t2.elapsed().as_secs_f64());
+        let mean = mean_accuracy(&results);
+        let mem = self.memory_gb(opts, &bits);
+
+        Ok(PipelineResult {
+            method: opts.method,
+            rate_pct: opts.rate_pct,
+            bits,
+            tasks: results,
+            mean_accuracy: mean,
+            memory_gb: mem,
+            observations,
+            curve: state.curve,
+            trainable_params: trainable,
+        })
+    }
+
+    /// Evaluate a store without any tuning ("w/o tuning" rows).
+    pub fn eval_untuned(&mut self, store: &ParamStore, n_items: usize)
+                        -> Result<Vec<TaskResult>> {
+        let zero = LoraState::zeros(store);
+        let tasks = paper_suite();
+        eval_suite(&mut self.rt, store, &zero, &self.lang, &tasks, n_items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_labels_parse() {
+        for m in [Method::LlmPruner, Method::QPruner1, Method::QPruner2,
+                  Method::QPruner3] {
+            assert_eq!(
+                Method::parse(&m.label().to_lowercase()
+                                  .replace("llm-pruner", "llm-pruner")
+                                  .replace('^', "")),
+                Some(m)
+            );
+        }
+    }
+
+    #[test]
+    fn quick_opts_sane() {
+        let o = PipelineOpts::quick(20, Method::QPruner2);
+        assert_eq!(o.rate_pct, 20);
+        assert!(o.frac8 <= 0.25);
+    }
+}

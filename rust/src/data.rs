@@ -1,0 +1,448 @@
+//! Synthetic data substrate.
+//!
+//! The paper fine-tunes on Alpaca-50k and evaluates zero-shot on seven
+//! commonsense multiple-choice suites. Neither is available offline, so
+//! we build the closest synthetic equivalents (DESIGN.md §3):
+//!
+//!  * **corpus** — a Zipf-Markov language over the model vocabulary:
+//!    each token has a few preferred successors (learnable structure)
+//!    plus a Zipfian background (noise floor). Pretraining/fine-tuning
+//!    streams are sampled from it.
+//!  * **tasks** — seven multiple-choice suites with distinct formats
+//!    (choice counts, context/choice lengths, distractor difficulty)
+//!    standing in for BoolQ/PIQA/HellaSwag/WinoGrande/ARC-e/ARC-c/OBQA.
+//!    The correct choice is the language's true continuation; the
+//!    distractors are perturbed or off-chain sequences. Scoring is
+//!    length-normalized choice log-likelihood, exactly the
+//!    lm-eval-harness contract the paper uses.
+
+use crate::rng::Rng;
+
+pub const TOK_PAD: i32 = 0;
+pub const TOK_BOS: i32 = 1;
+pub const TOK_SEP: i32 = 2;
+const RESERVED: usize = 3;
+
+/// Number of preferred successors per token.
+const FANOUT: usize = 4;
+/// Probability mass on the preferred successors (rest is Zipf noise).
+const CHAIN_MASS: f64 = 0.85;
+const SUCC_W: [f64; FANOUT] = [0.5, 0.25, 0.15, 0.10];
+
+/// A deterministic synthetic language over `vocab` tokens.
+///
+/// Transitions are **second-order**: the preferred-successor set is a
+/// deterministic hash of the (previous, current) token pair. A model
+/// must therefore learn pair-conditioned structure — a capacity-bound
+/// task at our model sizes, which is exactly what makes structured
+/// pruning and per-layer precision *matter* (a first-order chain was
+/// trivially saturated by every configuration; see DESIGN.md §3).
+#[derive(Clone)]
+pub struct Language {
+    pub vocab: usize,
+    /// hash salt for the pair -> successor-set map
+    salt: u64,
+    /// Zipf background cumulative weights
+    zipf_cum: Vec<f64>,
+    pub style_seed: u64,
+}
+
+impl Language {
+    /// `style_seed` selects a dialect: the base-corpus model and the
+    /// "chat" (Vicuna stand-in) model use different seeds.
+    pub fn new(vocab: usize, style_seed: u64) -> Language {
+        assert!(vocab > RESERVED + FANOUT);
+        // Zipf background over the non-reserved vocab
+        let mut cum = Vec::with_capacity(vocab - RESERVED);
+        let mut total = 0.0;
+        for i in 0..vocab - RESERVED {
+            total += 1.0 / (i + 1) as f64;
+            cum.push(total);
+        }
+        Language {
+            vocab,
+            salt: style_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ 0xC0FF_EE15_BADC_0DE5,
+            zipf_cum: cum,
+            style_seed,
+        }
+    }
+
+    fn zipf(&self, rng: &mut Rng) -> i32 {
+        let total = *self.zipf_cum.last().unwrap();
+        let u = rng.uniform() * total;
+        let idx = self.zipf_cum.partition_point(|&c| c < u);
+        (RESERVED + idx.min(self.zipf_cum.len() - 1)) as i32
+    }
+
+    /// Number of context clusters: the hidden state a model must carry
+    /// from the previous token. Small enough that the
+    /// (cluster, current) table is learnable at our model sizes, large
+    /// enough that ignoring `prev` costs real likelihood.
+    pub const N_CLUSTERS: usize = 8;
+
+    /// The i-th preferred successor of (cluster(prev), cur) — a
+    /// splitmix hash, so the table never materializes. Conditioning on
+    /// the *cluster* of `prev` (not `prev` itself) keeps the structure
+    /// compressible: C x V x FANOUT entries instead of V^2 x FANOUT,
+    /// which a 10^5-10^6-param model can learn but a capacity-starved
+    /// (heavily pruned / coarsely quantized) one cannot hold exactly.
+    #[inline]
+    fn pair_succ(&self, prev: i32, cur: i32, i: usize) -> i32 {
+        let cluster = (prev as u64) % Self::N_CLUSTERS as u64;
+        let mut z = self
+            .salt
+            .wrapping_add(cluster << 32)
+            .wrapping_add(cur as u64)
+            .wrapping_add((i as u64).wrapping_mul(0xA5A5_5A5A_1234_5678));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (RESERVED as u64 + z % (self.vocab - RESERVED) as u64) as i32
+    }
+
+    /// Next token given the (prev, cur) pair.
+    pub fn step(&self, prev: i32, cur: i32, rng: &mut Rng) -> i32 {
+        if rng.uniform() < CHAIN_MASS {
+            let i = rng.categorical(&SUCC_W);
+            self.pair_succ(prev, cur, i)
+        } else {
+            self.zipf(rng)
+        }
+    }
+
+    /// Sample a sequence of `len` tokens starting after BOS.
+    pub fn sample(&self, len: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let (mut prev, mut cur) = (TOK_BOS, TOK_BOS);
+        for _ in 0..len {
+            let next = self.step(prev, cur, rng);
+            prev = cur;
+            cur = next;
+            out.push(next);
+        }
+        out
+    }
+
+    /// Continue a sequence given its last two tokens.
+    pub fn continue_from(&self, prev: i32, last: i32, len: usize,
+                         rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let (mut p, mut c) = (prev, last);
+        for _ in 0..len {
+            let next = self.step(p, c, rng);
+            p = c;
+            c = next;
+            out.push(next);
+        }
+        out
+    }
+}
+
+/// Training batch stream: [k, b, s+1] token blocks for the scanned
+/// train/pretrain artifacts.
+pub struct CorpusStream {
+    lang: Language,
+    rng: Rng,
+}
+
+impl CorpusStream {
+    pub fn new(lang: &Language, seed: u64) -> CorpusStream {
+        CorpusStream { lang: lang.clone(), rng: Rng::new(seed) }
+    }
+
+    /// One [k, b, s+1] block, flattened row-major, starting with BOS.
+    pub fn next_block(&mut self, k: usize, b: usize, s1: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(k * b * s1);
+        for _ in 0..k * b {
+            out.push(TOK_BOS);
+            let seq = self.lang.sample(s1 - 1, &mut self.rng);
+            out.extend(seq);
+        }
+        out
+    }
+}
+
+/// One multiple-choice item: shared context + `n_choices` continuations.
+#[derive(Clone, Debug)]
+pub struct EvalItem {
+    pub context: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub correct: usize,
+}
+
+/// Task family — the knobs that differentiate the seven suites.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub n_choices: usize,
+    pub ctx_len: usize,
+    pub choice_len: usize,
+    /// fraction of correct-continuation tokens perturbed to build
+    /// distractors; lower = harder task
+    pub distractor_noise: f64,
+    /// fraction of distractors drawn off-chain instead of perturbed
+    pub offchain_frac: f64,
+    pub seed: u64,
+}
+
+/// The seven suites, shaped after the paper's benchmarks: binary
+/// yes/no-like tasks (BoolQ, WinoGrande), 4-way continuation tasks at
+/// graded difficulty (PIQA, HellaSwag, ARC-e, ARC-c, OBQA).
+/// `offchain_frac` = 1.0 means every distractor is a *plausible* chain
+/// continuation from a wrong context — only a model that learned the
+/// pair-conditioned transitions can reject it.
+pub fn paper_suite() -> Vec<TaskSpec> {
+    vec![
+        TaskSpec { name: "BoolQ", n_choices: 2, ctx_len: 18, choice_len: 4,
+                   distractor_noise: 0.6, offchain_frac: 0.5, seed: 101 },
+        TaskSpec { name: "PIQA", n_choices: 2, ctx_len: 12, choice_len: 8,
+                   distractor_noise: 0.4, offchain_frac: 0.75, seed: 102 },
+        TaskSpec { name: "HellaSwag", n_choices: 4, ctx_len: 14, choice_len: 8,
+                   distractor_noise: 0.3, offchain_frac: 1.0, seed: 103 },
+        TaskSpec { name: "WinoGrande", n_choices: 2, ctx_len: 10, choice_len: 3,
+                   distractor_noise: 0.25, offchain_frac: 1.0, seed: 104 },
+        TaskSpec { name: "ARC-e", n_choices: 4, ctx_len: 10, choice_len: 6,
+                   distractor_noise: 0.55, offchain_frac: 0.5, seed: 105 },
+        TaskSpec { name: "ARC-c", n_choices: 4, ctx_len: 10, choice_len: 6,
+                   distractor_noise: 0.2, offchain_frac: 1.0, seed: 106 },
+        TaskSpec { name: "OBQA", n_choices: 4, ctx_len: 8, choice_len: 5,
+                   distractor_noise: 0.35, offchain_frac: 0.75, seed: 107 },
+    ]
+}
+
+/// Generate `n_items` deterministic items for one task on a language.
+pub fn gen_items(lang: &Language, spec: &TaskSpec, n_items: usize)
+                 -> Vec<EvalItem> {
+    let mut rng = Rng::new(spec.seed ^ lang.style_seed.rotate_left(17));
+    let mut items = Vec::with_capacity(n_items);
+    for _ in 0..n_items {
+        let context = {
+            let mut c = vec![TOK_BOS];
+            c.extend(lang.sample(spec.ctx_len - 1, &mut rng));
+            c
+        };
+        let n = context.len();
+        let (prev, last) = (context[n - 2], context[n - 1]);
+        let correct_seq =
+            lang.continue_from(prev, last, spec.choice_len, &mut rng);
+        let correct = rng.below(spec.n_choices);
+        let mut choices = Vec::with_capacity(spec.n_choices);
+        for c in 0..spec.n_choices {
+            if c == correct {
+                choices.push(correct_seq.clone());
+            } else if rng.uniform() < spec.offchain_frac {
+                // plausible distractor: a true chain continuation from
+                // the SAME last token but a wrong hidden `prev` — every
+                // token locally follows its predecessor under *some*
+                // context, so only a model that learned the
+                // pair-conditioned (second-order) transitions can
+                // reject it. Capacity lost to pruning/quantization
+                // degrades exactly this discrimination.
+                let p = loop {
+                    let cand =
+                        (RESERVED + rng.below(lang.vocab - RESERVED)) as i32;
+                    if cand as usize % Language::N_CLUSTERS
+                        != prev as usize % Language::N_CLUSTERS
+                    {
+                        break cand;
+                    }
+                };
+                choices.push(lang.continue_from(p, last, spec.choice_len,
+                                                &mut rng));
+            } else {
+                // perturbed copy of the correct continuation
+                let mut d = correct_seq.clone();
+                let mut changed = false;
+                for t in d.iter_mut() {
+                    if rng.uniform() < spec.distractor_noise {
+                        *t = (RESERVED + rng.below(lang.vocab - RESERVED))
+                            as i32;
+                        changed = true;
+                    }
+                }
+                if !changed {
+                    let i = rng.below(d.len());
+                    d[i] = (RESERVED + rng.below(lang.vocab - RESERVED)) as i32;
+                }
+                choices.push(d);
+            }
+        }
+        items.push(EvalItem { context, choices, correct });
+    }
+    items
+}
+
+/// Flatten items into evalchoices rows: tokens [R, S] + mask [R, S].
+/// Each choice becomes one row: [context..., choice..., pad...].
+pub fn pack_rows(items: &[EvalItem], seq: usize)
+                 -> (Vec<i32>, Vec<f32>, usize) {
+    let n_rows: usize = items.iter().map(|i| i.choices.len()).sum();
+    let mut toks = vec![TOK_PAD; n_rows * seq];
+    let mut mask = vec![0.0f32; n_rows * seq];
+    let mut r = 0;
+    for item in items {
+        for ch in &item.choices {
+            let row_t = &mut toks[r * seq..(r + 1) * seq];
+            let row_m = &mut mask[r * seq..(r + 1) * seq];
+            let cl = item.context.len().min(seq);
+            row_t[..cl].copy_from_slice(&item.context[..cl]);
+            let cend = (cl + ch.len()).min(seq);
+            row_t[cl..cend].copy_from_slice(&ch[..cend - cl]);
+            for m in row_m.iter_mut().take(cend).skip(cl) {
+                *m = 1.0;
+            }
+            r += 1;
+        }
+    }
+    (toks, mask, n_rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn language_is_deterministic() {
+        let l1 = Language::new(256, 7);
+        let l2 = Language::new(256, 7);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        assert_eq!(l1.sample(50, &mut r1), l2.sample(50, &mut r2));
+    }
+
+    #[test]
+    fn styles_differ() {
+        let l1 = Language::new(256, 7);
+        let l2 = Language::new(256, 8);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        assert_ne!(l1.sample(50, &mut r1), l2.sample(50, &mut r2));
+    }
+
+    #[test]
+    fn samples_avoid_reserved_tokens() {
+        let lang = Language::new(256, 3);
+        let mut rng = Rng::new(2);
+        for t in lang.sample(500, &mut rng) {
+            assert!(t >= RESERVED as i32 && (t as usize) < 256);
+        }
+    }
+
+    #[test]
+    fn language_has_learnable_structure() {
+        // empirical successor distribution of a fixed PAIR must be
+        // concentrated (second-order chain)
+        let lang = Language::new(256, 5);
+        let mut rng = Rng::new(9);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..2000 {
+            *counts
+                .entry(lang.step(7, 10, &mut rng))
+                .or_insert(0usize) += 1;
+        }
+        let mut v: Vec<usize> = counts.values().cloned().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        let top4: usize = v.iter().take(4).sum();
+        assert!(top4 as f64 > 0.6 * 2000.0, "top4 mass {top4}/2000");
+    }
+
+    #[test]
+    fn language_is_second_order() {
+        // the successor set of (a, c) must differ from (b, c): the
+        // chain is conditioned on the pair, not just the last token
+        let lang = Language::new(256, 5);
+        let s1: Vec<i32> = (0..4).map(|i| lang.pair_succ(7, 10, i)).collect();
+        let s2: Vec<i32> = (0..4).map(|i| lang.pair_succ(8, 10, i)).collect();
+        assert_ne!(s1, s2);
+        // and deterministic
+        let s1b: Vec<i32> = (0..4).map(|i| lang.pair_succ(7, 10, i)).collect();
+        assert_eq!(s1, s1b);
+    }
+
+    #[test]
+    fn corpus_block_shape_and_bos() {
+        let lang = Language::new(256, 1);
+        let mut cs = CorpusStream::new(&lang, 4);
+        let (k, b, s1) = (2, 3, 17);
+        let block = cs.next_block(k, b, s1);
+        assert_eq!(block.len(), k * b * s1);
+        for row in 0..k * b {
+            assert_eq!(block[row * s1], TOK_BOS);
+        }
+    }
+
+    #[test]
+    fn corpus_blocks_advance() {
+        let lang = Language::new(256, 1);
+        let mut cs = CorpusStream::new(&lang, 4);
+        let a = cs.next_block(1, 1, 16);
+        let b = cs.next_block(1, 1, 16);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn paper_suite_has_seven_distinct_tasks() {
+        let suite = paper_suite();
+        assert_eq!(suite.len(), 7);
+        let mut names: Vec<&str> = suite.iter().map(|t| t.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 7);
+    }
+
+    #[test]
+    fn items_have_valid_structure() {
+        let lang = Language::new(256, 2);
+        for spec in paper_suite() {
+            let items = gen_items(&lang, &spec, 10);
+            assert_eq!(items.len(), 10);
+            for it in &items {
+                assert_eq!(it.choices.len(), spec.n_choices);
+                assert!(it.correct < spec.n_choices);
+                assert_eq!(it.context.len(), spec.ctx_len);
+                for c in &it.choices {
+                    assert_eq!(c.len(), spec.choice_len);
+                }
+                // distractors differ from the correct choice
+                let correct = &it.choices[it.correct];
+                for (i, c) in it.choices.iter().enumerate() {
+                    if i != it.correct {
+                        assert_ne!(c, correct, "identical distractor");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn items_deterministic_per_seed() {
+        let lang = Language::new(256, 2);
+        let spec = &paper_suite()[0];
+        let a = gen_items(&lang, spec, 5);
+        let b = gen_items(&lang, spec, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+
+    #[test]
+    fn pack_rows_layout() {
+        let lang = Language::new(256, 2);
+        let spec = &paper_suite()[3]; // WinoGrande-like, 2 choices
+        let items = gen_items(&lang, spec, 3);
+        let seq = 32;
+        let (toks, mask, rows) = pack_rows(&items, seq);
+        assert_eq!(rows, 6);
+        assert_eq!(toks.len(), rows * seq);
+        for r in 0..rows {
+            let row_m = &mask[r * seq..(r + 1) * seq];
+            let scored: f32 = row_m.iter().sum();
+            assert_eq!(scored as usize, spec.choice_len);
+            // mask must be contiguous after the context
+            let first = row_m.iter().position(|&m| m > 0.0).unwrap();
+            assert_eq!(first, spec.ctx_len);
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Zero-shot multiple-choice evaluation harness.
+//!
+//! Mirrors the lm-eval-harness contract the paper uses (Gao et al.,
+//! 2023): each choice is scored by the length-normalized sum of token
+//! log-probabilities given the shared context; the prediction is the
+//! argmax choice; the metric is accuracy.
+
+use crate::data::{gen_items, pack_rows, EvalItem, Language, TaskSpec};
+use crate::lora::LoraState;
+use crate::model::ParamStore;
+use crate::runtime::{Arg, Runtime};
+use anyhow::{ensure, Result};
+
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub name: String,
+    pub accuracy: f64,
+    pub n_items: usize,
+}
+
+/// Mean accuracy across task results (the P(b) objective for BO).
+pub fn mean_accuracy(results: &[TaskResult]) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().map(|r| r.accuracy).sum::<f64>() / results.len() as f64
+}
+
+/// Score all items of one task; returns (accuracy, n).
+pub fn eval_task(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &LoraState,
+    lang: &Language,
+    spec: &TaskSpec,
+    n_items: usize,
+) -> Result<TaskResult> {
+    let items = gen_items(lang, spec, n_items);
+    let scores = score_items(rt, base, lora, &items)?;
+    let mut correct = 0usize;
+    for (item, s) in items.iter().zip(&scores) {
+        let pred = argmax(s);
+        if pred == item.correct {
+            correct += 1;
+        }
+    }
+    Ok(TaskResult {
+        name: spec.name.to_string(),
+        accuracy: correct as f64 / items.len() as f64,
+        n_items: items.len(),
+    })
+}
+
+/// Length-normalized per-choice scores for a batch of items.
+pub fn score_items(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &LoraState,
+    items: &[EvalItem],
+) -> Result<Vec<Vec<f64>>> {
+    let cfg = &base.cfg;
+    let name = format!("evalchoices_{}_r{}", cfg.name, base.ps.rate_pct);
+    let r_cap = cfg.eval_rows;
+    let seq = cfg.seq;
+
+    // flatten all rows, then process in r_cap chunks (padding the tail)
+    let (toks, mask, n_rows) = pack_rows(items, seq);
+    let mut row_scores = vec![0.0f64; n_rows];
+    let mut row = 0usize;
+    while row < n_rows {
+        let take = (n_rows - row).min(r_cap);
+        let mut t_chunk = vec![0i32; r_cap * seq];
+        let mut m_chunk = vec![0.0f32; r_cap * seq];
+        t_chunk[..take * seq]
+            .copy_from_slice(&toks[row * seq..(row + take) * seq]);
+        m_chunk[..take * seq]
+            .copy_from_slice(&mask[row * seq..(row + take) * seq]);
+        // pad rows must still have a nonzero mask count downstream; we
+        // simply ignore their scores.
+        let m_t = crate::tensor::Tensor::new(&[r_cap, seq], m_chunk);
+        let t_shape = [r_cap, seq];
+        let mut args: Vec<Arg> = Vec::new();
+        for w in &base.weights {
+            args.push(Arg::F32(w));
+        }
+        for t in &lora.tensors {
+            args.push(Arg::F32(t));
+        }
+        args.push(Arg::I32(&t_chunk, &t_shape));
+        args.push(Arg::F32(&m_t));
+        let out = rt.exec_f32(&name, &args)?;
+        ensure!(out.len() == 2, "evalchoices output arity");
+        let sums = &out[0];
+        let counts = &out[1];
+        for i in 0..take {
+            let c = counts.data()[i].max(1.0);
+            row_scores[row + i] = (sums.data()[i] / c) as f64;
+        }
+        row += take;
+    }
+
+    // group rows back into per-item choice vectors
+    let mut out = Vec::with_capacity(items.len());
+    let mut r = 0usize;
+    for item in items {
+        let nc = item.choices.len();
+        out.push(row_scores[r..r + nc].to_vec());
+        r += nc;
+    }
+    Ok(out)
+}
+
+/// Bootstrap 95 % confidence interval on a per-item correctness vector
+/// (the paper reports point accuracies; CIs quantify the simulator's
+/// item-count noise in our tables).
+pub fn bootstrap_ci(correct: &[bool], resamples: usize, seed: u64)
+                    -> (f64, f64) {
+    if correct.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut rng = crate::rng::Rng::new(seed);
+    let n = correct.len();
+    let mut means: Vec<f64> = (0..resamples)
+        .map(|_| {
+            let hits = (0..n).filter(|_| correct[rng.below(n)]).count();
+            hits as f64 / n as f64
+        })
+        .collect();
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = means[(resamples as f64 * 0.025) as usize];
+    let hi = means[((resamples as f64 * 0.975) as usize).min(resamples - 1)];
+    (lo, hi)
+}
+
+/// Per-item correctness vector for one task (feeds bootstrap_ci).
+pub fn task_correctness(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &LoraState,
+    lang: &Language,
+    spec: &TaskSpec,
+    n_items: usize,
+) -> Result<Vec<bool>> {
+    let items = gen_items(lang, spec, n_items);
+    let scores = score_items(rt, base, lora, &items)?;
+    Ok(items
+        .iter()
+        .zip(&scores)
+        .map(|(item, s)| argmax(s) == item.correct)
+        .collect())
+}
+
+/// Perplexity on a held-out stream: exp(mean NLL) via the evalloss
+/// artifact over `n_batches` fresh batches.
+pub fn perplexity(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &LoraState,
+    lang: &Language,
+    seed: u64,
+    n_batches: usize,
+) -> Result<f64> {
+    let cfg = &base.cfg;
+    let mut stream = crate::data::CorpusStream::new(lang, seed);
+    let mut total = 0.0f64;
+    for _ in 0..n_batches {
+        let toks = stream.next_block(1, cfg.batch, cfg.seq + 1);
+        let loss =
+            crate::finetune::eval_loss(rt, base, lora, &toks)? as f64;
+        total += loss;
+    }
+    Ok((total / n_batches as f64).exp())
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Evaluate the full suite.
+pub fn eval_suite(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &LoraState,
+    lang: &Language,
+    tasks: &[TaskSpec],
+    n_items: usize,
+) -> Result<Vec<TaskResult>> {
+    tasks
+        .iter()
+        .map(|spec| eval_task(rt, base, lora, lang, spec, n_items))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[-5.0, -1.0]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_point_estimate() {
+        let correct: Vec<bool> = (0..100).map(|i| i % 3 != 0).collect();
+        let p = correct.iter().filter(|&&c| c).count() as f64 / 100.0;
+        let (lo, hi) = bootstrap_ci(&correct, 500, 7);
+        assert!(lo <= p && p <= hi, "[{lo}, {hi}] vs {p}");
+        assert!(hi - lo < 0.25, "CI too wide: [{lo}, {hi}]");
+        assert!(hi - lo > 0.0);
+    }
+
+    #[test]
+    fn bootstrap_ci_degenerate_cases() {
+        assert_eq!(bootstrap_ci(&[], 100, 1), (0.0, 0.0));
+        let all = vec![true; 50];
+        let (lo, hi) = bootstrap_ci(&all, 200, 2);
+        assert_eq!((lo, hi), (1.0, 1.0));
+    }
+
+    #[test]
+    fn mean_accuracy_averages() {
+        let rs = vec![
+            TaskResult { name: "a".into(), accuracy: 0.5, n_items: 10 },
+            TaskResult { name: "b".into(), accuracy: 0.7, n_items: 10 },
+        ];
+        assert!((mean_accuracy(&rs) - 0.6).abs() < 1e-12);
+        assert_eq!(mean_accuracy(&[]), 0.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Recovery fine-tuning driver (paper §3.3).
+//!
+//! Runs the AOT `train_{size}_r{rate}` artifact: K AdamW steps on the
+//! LoRA adapters are fused into one scanned XLA call (the frozen base
+//! weights cross the PJRT boundary once per call, the optimizer state
+//! round-trips as literals). The base stays frozen — and, when
+//! quantized, *stays quantized*: what crosses the boundary is the
+//! simulated-dequantized matrix, exactly the QLoRA compute model.
+
+use crate::data::CorpusStream;
+use crate::lora::LoraState;
+use crate::metrics::LossCurve;
+use crate::model::ParamStore;
+use crate::runtime::{tensor_f32, Arg, Runtime};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Optimizer + adapter state threaded through train calls.
+pub struct FinetuneState {
+    pub lora: LoraState,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub t: f32,
+    pub steps_done: u64,
+    pub curve: LossCurve,
+}
+
+impl FinetuneState {
+    pub fn new(lora: LoraState) -> FinetuneState {
+        let m = lora.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect();
+        let v = lora.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect();
+        FinetuneState { lora, m, v, t: 0.0, steps_done: 0, curve: LossCurve::default() }
+    }
+}
+
+/// Hyper-parameters of one recovery run.
+#[derive(Clone, Debug)]
+pub struct FinetuneOpts {
+    pub steps: usize,
+    pub lr: f32,
+    /// linear warmup steps (paper uses a short warmup)
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl Default for FinetuneOpts {
+    fn default() -> Self {
+        FinetuneOpts { steps: 64, lr: 3e-4, warmup: 8, seed: 1234 }
+    }
+}
+
+/// Artifact tag for a (size, rate) pair, e.g. "train_base_r20".
+pub fn train_artifact(size: &str, rate_pct: u32) -> String {
+    format!("train_{size}_r{rate_pct}")
+}
+
+/// Fine-tune `state` on `stream` for `opts.steps` steps (rounded up to
+/// whole scan calls). Returns per-step losses in `state.curve`.
+pub fn finetune(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    state: &mut FinetuneState,
+    stream: &mut CorpusStream,
+    opts: &FinetuneOpts,
+) -> Result<()> {
+    let cfg = &base.cfg;
+    let name = train_artifact(&cfg.name, base.ps.rate_pct);
+    let k = cfg.scan_steps;
+    let calls = opts.steps.div_ceil(k);
+    let token_shape = [k, cfg.batch, cfg.seq + 1];
+
+    // NOTE(§Perf): a device-resident-buffer prefix via execute_b was
+    // tried and reverted — the PJRT CPU client consumes input buffers
+    // on execute, so reuse across scan windows is unsound (see
+    // EXPERIMENTS.md §Perf entry 3). Literals are copied per call.
+    for _ in 0..calls {
+        let tokens = stream.next_block(k, cfg.batch, cfg.seq + 1);
+        // lr schedule: linear warmup then constant (evaluated at the
+        // first step of the scan window; fine at our K)
+        let step = state.steps_done as f32;
+        let lr = if (state.steps_done as usize) < opts.warmup {
+            opts.lr * (step + 1.0) / opts.warmup as f32
+        } else {
+            opts.lr
+        };
+
+        let mut args: Vec<Arg> = Vec::with_capacity(12 + 3 * 14 + 3);
+        for w in &base.weights {
+            args.push(Arg::F32(w));
+        }
+        for t in &state.lora.tensors {
+            args.push(Arg::F32(t));
+        }
+        for t in &state.m {
+            args.push(Arg::F32(t));
+        }
+        for t in &state.v {
+            args.push(Arg::F32(t));
+        }
+        args.push(Arg::Scalar(state.t));
+        args.push(Arg::I32(&tokens, &token_shape));
+        args.push(Arg::Scalar(lr));
+
+        let out = rt.exec(&name, &args)?;
+        ensure!(out.len() == 1 + 3 * 14 + 1, "train output arity {}", out.len());
+        let losses = tensor_f32(&out[0])?;
+        for (i, &l) in losses.data().iter().enumerate() {
+            state.curve.push(state.steps_done + i as u64 + 1, l);
+        }
+        for i in 0..14 {
+            state.lora.tensors[i] = tensor_f32(&out[1 + i])?;
+            state.m[i] = tensor_f32(&out[1 + 14 + i])?;
+            state.v[i] = tensor_f32(&out[1 + 28 + i])?;
+        }
+        state.t = tensor_f32(&out[1 + 42])?.item();
+        state.steps_done += k as u64;
+    }
+    Ok(())
+}
+
+/// Held-out LM loss via the evalloss artifact.
+pub fn eval_loss(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &LoraState,
+    tokens: &[i32],
+) -> Result<f32> {
+    let cfg = &base.cfg;
+    let name = format!("evalloss_{}_r{}", cfg.name, base.ps.rate_pct);
+    let shape = [cfg.batch, cfg.seq + 1];
+    ensure!(tokens.len() == shape[0] * shape[1], "evalloss token len");
+    let mut args: Vec<Arg> = Vec::new();
+    for w in &base.weights {
+        args.push(Arg::F32(w));
+    }
+    for t in &lora.tensors {
+        args.push(Arg::F32(t));
+    }
+    args.push(Arg::I32(tokens, &shape));
+    let out = rt.exec_f32(&name, &args)?;
+    Ok(out[0].item())
+}
+
+/// Loss + weight gradients for Taylor importance (grads artifact).
+pub fn weight_grads(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &LoraState,
+    tokens: &[i32],
+) -> Result<(f32, Vec<Tensor>)> {
+    let cfg = &base.cfg;
+    let name = format!("grads_{}_r{}", cfg.name, base.ps.rate_pct);
+    let shape = [cfg.batch, cfg.seq + 1];
+    ensure!(tokens.len() == shape[0] * shape[1], "grads token len");
+    let mut args: Vec<Arg> = Vec::new();
+    for w in &base.weights {
+        args.push(Arg::F32(w));
+    }
+    for t in &lora.tensors {
+        args.push(Arg::F32(t));
+    }
+    args.push(Arg::I32(tokens, &shape));
+    let out = rt.exec_f32(&name, &args)?;
+    ensure!(out.len() == 13, "grads output arity {}", out.len());
+    let loss = out[0].item();
+    Ok((loss, out[1..].to_vec()))
+}
+
+/// Calibration pass: per-layer pooled hiddens + last-position logits
+/// (feeds the MI allocator).
+pub fn calibrate(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &LoraState,
+    tokens: &[i32],
+) -> Result<(Tensor, Tensor)> {
+    let cfg = &base.cfg;
+    let name = format!("calib_{}_r{}", cfg.name, base.ps.rate_pct);
+    let shape = [cfg.batch, cfg.seq];
+    ensure!(tokens.len() == shape[0] * shape[1], "calib token len");
+    let mut args: Vec<Arg> = Vec::new();
+    for w in &base.weights {
+        args.push(Arg::F32(w));
+    }
+    for t in &lora.tensors {
+        args.push(Arg::F32(t));
+    }
+    args.push(Arg::I32(tokens, &shape));
+    let mut out = rt.exec_f32(&name, &args)?;
+    ensure!(out.len() == 2, "calib output arity {}", out.len());
+    let logits = out.pop().unwrap();
+    let pooled = out.pop().unwrap();
+    Ok((pooled, logits))
+}

@@ -1,0 +1,33 @@
+//! QPruner — probabilistic decision quantization for structured pruning in LLMs.
+//!
+//! Rust + JAX + Pallas reproduction of "QPruner: Probabilistic Decision
+//! Quantization for Structured Pruning in Large Language Models"
+//! (NAACL 2025 Findings).
+//!
+//! Layer 3 (this crate) owns the full pipeline: structured pruning,
+//! mixed-precision quantization, mutual-information bit allocation,
+//! Bayesian-optimization refinement, LoRA/LoftQ fine-tuning and
+//! zero-shot evaluation. Layers 2 (JAX model) and 1 (Pallas kernels)
+//! are compiled once to HLO-text artifacts by `python/compile/aot.py`
+//! and executed from Rust through PJRT (`runtime` module). Python is
+//! never on the runtime path.
+
+pub mod rng;
+pub mod tensor;
+pub mod linalg;
+pub mod quant;
+pub mod model;
+pub mod pruning;
+pub mod mi;
+pub mod bo;
+pub mod lora;
+pub mod data;
+pub mod memory;
+pub mod config;
+pub mod report;
+pub mod metrics;
+pub mod runtime;
+pub mod finetune;
+pub mod eval;
+pub mod coordinator;
+pub mod experiments;

@@ -1,0 +1,400 @@
+//! Small dense linear algebra for host-side math.
+//!
+//! Used by the GP surrogate (Cholesky posterior) and the LoftQ / PiSSA
+//! adapter initializers (truncated SVD). Sizes here are tiny (GP n <= a
+//! few hundred; SVD on per-layer weight matrices up to ~2k x 1k), so
+//! straightforward cache-friendly implementations suffice.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// C = A[m,k] @ B[k,n]
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dim mismatch");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    // ikj loop order: streams B rows, accumulates into C row.
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// y = A[m,n] @ x[n]
+pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(n, x.len());
+    let mut y = vec![0.0f32; m];
+    for i in 0..m {
+        let row = a.row(i);
+        let mut s = 0.0f32;
+        for j in 0..n {
+            s += row[j] * x[j];
+        }
+        y[i] = s;
+    }
+    y
+}
+
+/// In-place lower Cholesky of a symmetric positive-definite matrix
+/// (f64 for GP numerical stability). Returns L with A = L L^T.
+pub fn cholesky(a: &[f64], n: usize) -> Result<Vec<f64>> {
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("cholesky: matrix not positive definite (pivot {s} at {i})");
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b (lower triangular, forward substitution).
+pub fn solve_lower(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    y
+}
+
+/// Solve L^T x = y (backward substitution over a lower-triangular L).
+pub fn solve_lower_t(l: &[f64], n: usize, y: &[f64]) -> Vec<f64> {
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// Solve A x = b for SPD A via Cholesky.
+pub fn solve_spd(a: &[f64], n: usize, b: &[f64]) -> Result<Vec<f64>> {
+    let l = cholesky(a, n)?;
+    Ok(solve_lower_t(&l, n, &solve_lower(&l, n, b)))
+}
+
+/// Truncated SVD via one-sided Jacobi on A^T A eigen-structure.
+///
+/// Returns (U[m,r], S[r], V[n,r]) with A ~= U diag(S) V^T, singular
+/// values in descending order. Intended for r << min(m, n) (LoRA ranks).
+pub struct Svd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub v: Tensor,
+}
+
+pub fn svd_truncated(a: &Tensor, r: usize, sweeps: usize) -> Svd {
+    assert_eq!(a.ndim(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let r = r.min(m).min(n);
+
+    // One-sided Jacobi on columns of a working copy W (m x n): rotate
+    // column pairs until near-orthogonal; then column norms are the
+    // singular values and W/sigma the left vectors. V accumulates the
+    // rotations. O(sweeps * n^2 * m) — fine for the per-matrix sizes
+    // LoftQ touches; for the largest stacks we subsample sweeps.
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let col = |w: &Vec<f64>, j: usize, i: usize| w[i * n + j];
+
+    for _ in 0..sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                // 2x2 Gram block
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let wp = col(&w, p, i);
+                    let wq = col(&w, q, i);
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                off += apq * apq;
+                if apq.abs() < 1e-12 * (app * aqq).sqrt().max(1e-30) {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[i * n + p];
+                    let wq = w[i * n + q];
+                    w[i * n + p] = c * wp - s * wq;
+                    w[i * n + q] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-18 {
+            break;
+        }
+    }
+
+    // singular values = column norms, sorted desc
+    let mut sig: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let mut s = 0.0f64;
+            for i in 0..m {
+                s += w[i * n + j] * w[i * n + j];
+            }
+            (s.sqrt(), j)
+        })
+        .collect();
+    sig.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = vec![0.0f32; m * r];
+    let mut s_out = vec![0.0f32; r];
+    let mut v_out = vec![0.0f32; n * r];
+    for (k, &(sv, j)) in sig.iter().take(r).enumerate() {
+        s_out[k] = sv as f32;
+        let inv = if sv > 1e-12 { 1.0 / sv } else { 0.0 };
+        for i in 0..m {
+            u[i * r + k] = (w[i * n + j] * inv) as f32;
+        }
+        for i in 0..n {
+            v_out[i * r + k] = v[i * n + j] as f32;
+        }
+    }
+    Svd {
+        u: Tensor::new(&[m, r], u),
+        s: s_out,
+        v: Tensor::new(&[n, r], v_out),
+    }
+}
+
+/// Thin QR by modified Gram-Schmidt: A[m,k] -> Q[m,k] with
+/// orthonormal columns (R discarded). Rank-deficient columns are
+/// replaced by zeros.
+pub fn orthonormalize_cols(a: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let mut q: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    for j in 0..k {
+        for p in 0..j {
+            let mut dot = 0.0f64;
+            for i in 0..m {
+                dot += q[i * k + p] * q[i * k + j];
+            }
+            for i in 0..m {
+                q[i * k + j] -= dot * q[i * k + p];
+            }
+        }
+        let mut norm = 0.0f64;
+        for i in 0..m {
+            norm += q[i * k + j] * q[i * k + j];
+        }
+        let norm = norm.sqrt();
+        if norm > 1e-10 {
+            for i in 0..m {
+                q[i * k + j] /= norm;
+            }
+        } else {
+            for i in 0..m {
+                q[i * k + j] = 0.0;
+            }
+        }
+    }
+    Tensor::new(&[m, k], q.into_iter().map(|x| x as f32).collect())
+}
+
+/// Randomized truncated SVD (Halko et al.): much cheaper than Jacobi
+/// for rank r << n. Used by LoftQ/PiSSA inside the BO loop where a
+/// full SVD per candidate would dominate the wall-clock.
+pub fn randomized_svd(a: &Tensor, r: usize, oversample: usize,
+                      power_iters: usize,
+                      rng: &mut crate::rng::Rng) -> Svd {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let k = (r + oversample).min(m).min(n);
+    // range finder: Y = (A A^T)^q A Omega
+    let omega = Tensor::randn(&[n, k], 1.0, rng);
+    let mut y = matmul(a, &omega); // [m, k]
+    let at = a.transpose2();
+    for _ in 0..power_iters {
+        y = orthonormalize_cols(&y);
+        let z = matmul(&at, &y); // [n, k]
+        y = matmul(a, &orthonormalize_cols(&z));
+    }
+    let q = orthonormalize_cols(&y); // [m, k]
+    // small projected problem: B = Q^T A  (k x n)
+    let b = matmul(&q.transpose2(), a);
+    // exact Jacobi SVD on the small B^T (n x k -> only k columns)
+    let svd_small = svd_truncated(&b.transpose2(), r, 40);
+    // B^T = Ub S Vb^T  =>  A ~ Q B = Q (Vb S Ub^T)^T = (Q Vb) S Ub^T... careful:
+    // svd_small: B^T [n,k] = U_s [n,r] S V_s [k,r]
+    // => B = V_s S U_s^T  => A ~ Q V_s S U_s^T
+    // so U = Q V_s [m,r], V = U_s [n,r]
+    let u = matmul(&q, &svd_small.v);
+    Svd { u, s: svd_small.s, v: svd_small.u }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![5., 6., 7., 8.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Tensor::new(&[2, 3], vec![1., 0., 2., 0., 1., 0.]);
+        assert_eq!(matvec(&a, &[1., 2., 3.]), vec![7., 2.]);
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        // A = L0 L0^T with L0 = [[2,0],[1,3]]
+        let a = [4.0, 2.0, 2.0, 10.0];
+        let l = cholesky(&a, 2).unwrap();
+        assert!((l[0] - 2.0).abs() < 1e-12);
+        assert!((l[2] - 1.0).abs() < 1e-12);
+        assert!((l[3] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_err());
+    }
+
+    #[test]
+    fn spd_solve() {
+        let a = [4.0, 2.0, 2.0, 10.0];
+        let x = solve_spd(&a, 2, &[8.0, 26.0]).unwrap();
+        // A x = b -> x = [1, 2.4]? check: 4*1+2*2.4=8.8 no. solve exactly:
+        // [4 2; 2 10] x = [8; 26] => x = [(8*10-2*26)/(40-4), ...] = [28/36*... ]
+        let r0 = 4.0 * x[0] + 2.0 * x[1];
+        let r1 = 2.0 * x[0] + 10.0 * x[1];
+        assert!((r0 - 8.0).abs() < 1e-10 && (r1 - 26.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn svd_reconstructs_low_rank() {
+        // Build an exactly rank-2 matrix and check recovery.
+        let mut rng = Rng::new(1);
+        let u = Tensor::randn(&[20, 2], 1.0, &mut rng);
+        let vt = Tensor::randn(&[2, 15], 1.0, &mut rng);
+        let a = matmul(&u, &vt);
+        let svd = svd_truncated(&a, 2, 30);
+        // reconstruct
+        let mut us = svd.u.clone();
+        for i in 0..20 {
+            for k in 0..2 {
+                let v = us.at2(i, k) * svd.s[k];
+                us.data_mut()[i * 2 + k] = v;
+            }
+        }
+        let rec = matmul(&us, &svd.v.transpose2());
+        let err = rec.sub(&a).frobenius_norm() / a.frobenius_norm();
+        assert!(err < 1e-4, "relative err {err}");
+    }
+
+    #[test]
+    fn svd_singular_values_descending() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[30, 10], 1.0, &mut rng);
+        let svd = svd_truncated(&a, 5, 30);
+        for k in 1..5 {
+            assert!(svd.s[k] <= svd.s[k - 1] + 1e-5);
+        }
+        assert!(svd.s[0] > 0.0);
+    }
+
+    #[test]
+    fn orthonormalize_gives_orthonormal_cols() {
+        let mut rng = Rng::new(8);
+        let a = Tensor::randn(&[30, 6], 1.0, &mut rng);
+        let q = orthonormalize_cols(&a);
+        let g = matmul(&q.transpose2(), &q);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at2(i, j) - want).abs() < 1e-4,
+                        "G[{i},{j}] = {}", g.at2(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_svd_matches_jacobi_on_low_rank() {
+        let mut rng = Rng::new(9);
+        let u = Tensor::randn(&[40, 3], 1.0, &mut rng);
+        let vt = Tensor::randn(&[3, 25], 1.0, &mut rng);
+        let a = matmul(&u, &vt);
+        let svd = randomized_svd(&a, 3, 8, 2, &mut rng);
+        let mut us = svd.u.clone();
+        for i in 0..40 {
+            for k in 0..3 {
+                let v = us.at2(i, k) * svd.s[k];
+                us.data_mut()[i * 3 + k] = v;
+            }
+        }
+        let rec = matmul(&us, &svd.v.transpose2());
+        let err = rec.sub(&a).frobenius_norm() / a.frobenius_norm();
+        assert!(err < 1e-3, "relative err {err}");
+    }
+
+    #[test]
+    fn svd_best_rank_r_beats_random_projection() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[25, 25], 1.0, &mut rng);
+        let svd = svd_truncated(&a, 4, 40);
+        let mut us = svd.u.clone();
+        for i in 0..25 {
+            for k in 0..4 {
+                let v = us.at2(i, k) * svd.s[k];
+                us.data_mut()[i * 4 + k] = v;
+            }
+        }
+        let rec = matmul(&us, &svd.v.transpose2());
+        let err = rec.sub(&a).frobenius_norm();
+        assert!(err < a.frobenius_norm(), "rank-4 approx must reduce norm");
+    }
+}

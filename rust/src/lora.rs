@@ -1,0 +1,393 @@
+//! LoRA adapters + initialization strategies (paper §3.3, Table 2).
+//!
+//! Adapter convention (matches the L2 model ABI):
+//!   y = x W^T + (x A^T) B^T * (alpha / r),  A [r, in], B [out, r]
+//! i.e. the effective weight is  W_eff = W + s * (B @ A).
+//!
+//! Init strategies:
+//!  * Gaussian — A ~ N(0, 0.02^2), B = 0 (classic LoRA);
+//!  * LoftQ    — alternate  Q = quant(W - s BA)  /  (B, A) = SVD_r(W - Q)/s
+//!    so the *quantized* base plus adapter approximates the original
+//!    full-precision W (Eq. 10); `iters` controls the alternation count
+//!    (Table 2 ablates 1/2/4);
+//!  * PiSSA    — principal singular directions of W go into the adapter,
+//!    the base keeps the residual (Meng, 2024).
+
+use crate::linalg;
+use crate::model::{ParamStore, PROJS};
+use crate::quant::{simulate, BitConfig, QuantFormat};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitMethod {
+    Gaussian,
+    LoftQ { iters: usize },
+    Pissa,
+}
+
+impl InitMethod {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "gaussian" => Some(InitMethod::Gaussian),
+            "pissa" => Some(InitMethod::Pissa),
+            _ => s.strip_prefix("loftq").map(|suffix| InitMethod::LoftQ {
+                iters: suffix.parse().unwrap_or(1),
+            }),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            InitMethod::Gaussian => "gaussian".into(),
+            InitMethod::LoftQ { iters } => format!("loftq{iters}"),
+            InitMethod::Pissa => "pissa".into(),
+        }
+    }
+}
+
+/// Stacked adapters for the whole model: 14 tensors in ABI order
+/// (A_wq, B_wq, A_wk, B_wk, ... matching configs.PROJS).
+#[derive(Clone, Debug)]
+pub struct LoraState {
+    pub tensors: Vec<Tensor>,
+    pub rank: usize,
+    pub alpha: usize,
+}
+
+impl LoraState {
+    pub fn scaling(&self) -> f32 {
+        self.alpha as f32 / self.rank as f32
+    }
+
+    pub fn shapes(store: &ParamStore) -> Vec<Vec<usize>> {
+        let cfg = &store.cfg;
+        let r = cfg.lora_rank;
+        let mut out = Vec::new();
+        for p in PROJS {
+            let (o, i) = cfg.proj_shape(&store.ps, p);
+            out.push(vec![cfg.n_layers, r, i]);
+            out.push(vec![cfg.n_layers, o, r]);
+        }
+        out
+    }
+
+    pub fn zeros(store: &ParamStore) -> LoraState {
+        let tensors =
+            Self::shapes(store).iter().map(|s| Tensor::zeros(s)).collect();
+        LoraState {
+            tensors,
+            rank: store.cfg.lora_rank,
+            alpha: store.cfg.lora_alpha,
+        }
+    }
+
+    pub fn trainable_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// (A, B) slabs for one layer/projection as fresh tensors.
+    pub fn layer_ab(&self, proj_idx: usize, layer: usize) -> (Tensor, Tensor) {
+        let a_stack = &self.tensors[2 * proj_idx];
+        let b_stack = &self.tensors[2 * proj_idx + 1];
+        let (ash, ad) = a_stack.slab(layer);
+        let (bsh, bd) = b_stack.slab(layer);
+        (Tensor::new(ash, ad.to_vec()), Tensor::new(bsh, bd.to_vec()))
+    }
+
+    fn set_layer_ab(&mut self, proj_idx: usize, layer: usize, a: &Tensor,
+                    b: &Tensor) {
+        self.tensors[2 * proj_idx].slab_mut(layer).copy_from_slice(a.data());
+        self.tensors[2 * proj_idx + 1]
+            .slab_mut(layer)
+            .copy_from_slice(b.data());
+    }
+}
+
+/// Result of preparing a (possibly quantized) fine-tuning base.
+pub struct PreparedModel {
+    /// frozen base weights (dequantized-simulated where quantized)
+    pub base: ParamStore,
+    /// adapter initialization
+    pub lora: LoraState,
+}
+
+/// Gaussian LoRA init over an fp16 or simulated-quantized base.
+pub fn init_gaussian(store: &ParamStore, bits: &BitConfig, rng: &mut Rng)
+                     -> PreparedModel {
+    let base = quantize_base(store, bits);
+    let mut lora = LoraState::zeros(store);
+    // A ~ N(0, 0.02), B = 0
+    for (i, t) in lora.tensors.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            rng.fill_normal(t.data_mut(), 0.02);
+        }
+    }
+    PreparedModel { base, lora }
+}
+
+/// Simulated-quantize every projection of `store` per the per-layer
+/// bit config (norms/embeddings stay fp32 as in QLoRA).
+pub fn quantize_base(store: &ParamStore, bits: &BitConfig) -> ParamStore {
+    assert_eq!(bits.n_layers(), store.cfg.n_layers);
+    let mut base = store.clone();
+    for (pi, proj) in PROJS.iter().enumerate() {
+        let _ = pi;
+        for l in 0..store.cfg.n_layers {
+            let fmt = bits.layers[l];
+            if fmt == QuantFormat::Fp16 {
+                continue;
+            }
+            let w = store.layer_proj(l, proj);
+            base.set_layer_proj(l, proj, &simulate(&w, fmt));
+        }
+    }
+    base
+}
+
+/// LoftQ: alternately quantize the residual and refit the low-rank
+/// correction so that  quant(W - sBA) + sBA ~ W  (Eq. 10).
+pub fn init_loftq(store: &ParamStore, bits: &BitConfig, iters: usize,
+                  rng: &mut Rng) -> Result<PreparedModel> {
+    let cfg = &store.cfg;
+    let s = cfg.lora_alpha as f32 / cfg.lora_rank as f32;
+    let r = cfg.lora_rank;
+    let mut base = store.clone();
+    let mut lora = LoraState::zeros(store);
+
+    for (pi, proj) in PROJS.iter().enumerate() {
+        for l in 0..cfg.n_layers {
+            let fmt = bits.layers[l];
+            let w = store.layer_proj(l, proj);
+            if fmt == QuantFormat::Fp16 {
+                // nothing to correct; plain zero-init adapter
+                base.set_layer_proj(l, proj, &w);
+                continue;
+            }
+            let mut a = Tensor::zeros(&[r, w.shape()[1]]);
+            let mut b = Tensor::zeros(&[w.shape()[0], r]);
+            let mut q = simulate(&w, fmt);
+            for _ in 0..iters {
+                // residual the adapter must absorb
+                let resid = w.sub(&q);
+                let svd = linalg::randomized_svd(&resid, r, 8, 1, rng);
+                // B = U * S / s ; A = V^T  (any split works; keep A orthonormal)
+                let mut us = svd.u.clone();
+                for i in 0..us.shape()[0] {
+                    for kk in 0..r {
+                        let v = us.at2(i, kk) * svd.s[kk] / s;
+                        us.data_mut()[i * r + kk] = v;
+                    }
+                }
+                b = us;
+                a = svd.v.transpose2();
+                // re-quantize what the adapter does not cover
+                let ba = linalg::matmul(&b, &a).scale(s);
+                q = simulate(&w.sub(&ba), fmt);
+            }
+            base.set_layer_proj(l, proj, &q);
+            lora.set_layer_ab(pi, l, &a, &b);
+        }
+    }
+    Ok(PreparedModel { base, lora })
+}
+
+/// PiSSA: adapter = principal rank-r part of W, base = residual (then
+/// simulated-quantized per the bit config).
+pub fn init_pissa(store: &ParamStore, bits: &BitConfig, rng: &mut Rng)
+                  -> Result<PreparedModel> {
+    let cfg = &store.cfg;
+    let s = cfg.lora_alpha as f32 / cfg.lora_rank as f32;
+    let r = cfg.lora_rank;
+    let mut base = store.clone();
+    let mut lora = LoraState::zeros(store);
+
+    for (pi, proj) in PROJS.iter().enumerate() {
+        for l in 0..cfg.n_layers {
+            let fmt = bits.layers[l];
+            let w = store.layer_proj(l, proj);
+            let svd = linalg::randomized_svd(&w, r, 8, 1, rng);
+            let mut us = svd.u.clone();
+            for i in 0..us.shape()[0] {
+                for kk in 0..r {
+                    let v = us.at2(i, kk) * svd.s[kk] / s;
+                    us.data_mut()[i * r + kk] = v;
+                }
+            }
+            let b = us;
+            let a = svd.v.transpose2();
+            let ba = linalg::matmul(&b, &a).scale(s);
+            let resid = w.sub(&ba);
+            let q = if fmt == QuantFormat::Fp16 {
+                resid
+            } else {
+                simulate(&resid, fmt)
+            };
+            base.set_layer_proj(l, proj, &q);
+            lora.set_layer_ab(pi, l, &a, &b);
+        }
+    }
+    Ok(PreparedModel { base, lora })
+}
+
+/// Dispatch on the init method.
+pub fn prepare(store: &ParamStore, bits: &BitConfig, method: InitMethod,
+               rng: &mut Rng) -> Result<PreparedModel> {
+    match method {
+        InitMethod::Gaussian => Ok(init_gaussian(store, bits, rng)),
+        InitMethod::LoftQ { iters } => init_loftq(store, bits, iters, rng),
+        InitMethod::Pissa => init_pissa(store, bits, rng),
+    }
+}
+
+/// || W - (Q + s BA) ||_F summed over all projections — the LoftQ
+/// objective value (diagnostic + tests).
+pub fn reconstruction_error(orig: &ParamStore, prep: &PreparedModel) -> f64 {
+    let s = prep.lora.scaling();
+    let mut total = 0.0f64;
+    for (pi, proj) in PROJS.iter().enumerate() {
+        for l in 0..orig.cfg.n_layers {
+            let w = orig.layer_proj(l, proj);
+            let q = prep.base.layer_proj(l, proj);
+            let (a, b) = prep.lora.layer_ab(pi, l);
+            let ba = linalg::matmul(&b, &a).scale(s);
+            let mut qba = q.clone();
+            qba.add_assign(&ba);
+            total += w.sub(&qba).frobenius_norm() as f64;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn setup() -> (ParamStore, BitConfig) {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 5);
+        let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+        (store, bits)
+    }
+
+    #[test]
+    fn gaussian_init_b_zero_a_nonzero() {
+        let (store, bits) = setup();
+        let mut rng = Rng::new(1);
+        let p = init_gaussian(&store, &bits, &mut rng);
+        for (i, t) in p.lora.tensors.iter().enumerate() {
+            if i % 2 == 0 {
+                assert!(t.max_abs() > 0.0, "A stack {i} all zero");
+            } else {
+                assert_eq!(t.max_abs(), 0.0, "B stack {i} not zero");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_base_changes_projections_not_norms() {
+        let (store, bits) = setup();
+        let base = quantize_base(&store, &bits);
+        assert_ne!(
+            base.weights[crate::model::proj_index("wq")].data(),
+            store.weights[crate::model::proj_index("wq")].data()
+        );
+        assert_eq!(base.weights[1].data(), store.weights[1].data());
+        assert_eq!(base.weights[0].data(), store.weights[0].data());
+    }
+
+    #[test]
+    fn loftq_reduces_reconstruction_error_vs_plain_quant() {
+        let (store, bits) = setup();
+        let mut rng = Rng::new(2);
+        let plain = PreparedModel {
+            base: quantize_base(&store, &bits),
+            lora: LoraState::zeros(&store),
+        };
+        let e_plain = reconstruction_error(&store, &plain);
+        let loftq = init_loftq(&store, &bits, 1, &mut rng).unwrap();
+        let e_loftq = reconstruction_error(&store, &loftq);
+        assert!(
+            e_loftq < e_plain * 0.95,
+            "loftq {e_loftq} !< plain {e_plain}"
+        );
+    }
+
+    #[test]
+    fn loftq_more_iters_not_worse() {
+        let (store, bits) = setup();
+        let mut rng = Rng::new(3);
+        let e1 = reconstruction_error(
+            &store, &init_loftq(&store, &bits, 1, &mut rng).unwrap());
+        let mut rng = Rng::new(3);
+        let e4 = reconstruction_error(
+            &store, &init_loftq(&store, &bits, 4, &mut rng).unwrap());
+        assert!(e4 <= e1 * 1.05, "iters=4 {e4} much worse than iters=1 {e1}");
+    }
+
+    #[test]
+    fn loftq_fp16_layers_passthrough() {
+        let (store, mut bits) = setup();
+        bits.layers[0] = QuantFormat::Fp16;
+        let mut rng = Rng::new(4);
+        let p = init_loftq(&store, &bits, 1, &mut rng).unwrap();
+        assert_eq!(
+            p.base.layer_proj(0, "wq").data(),
+            store.layer_proj(0, "wq").data()
+        );
+        let (a, _b) = p.lora.layer_ab(0, 0);
+        assert_eq!(a.max_abs(), 0.0);
+    }
+
+    #[test]
+    fn pissa_adapter_captures_principal_energy() {
+        let (store, bits) = setup();
+        let mut rng = Rng::new(5);
+        let p = init_pissa(&store, &bits, &mut rng).unwrap();
+        // adapter should be distinctly non-zero on both A and B
+        let (a, b) = p.lora.layer_ab(0, 0);
+        assert!(a.max_abs() > 0.0 && b.max_abs() > 0.0);
+        // reconstruction with adapter should beat plain quantization
+        let plain = PreparedModel {
+            base: quantize_base(&store, &bits),
+            lora: LoraState::zeros(&store),
+        };
+        let e_pissa = reconstruction_error(&store, &p);
+        let e_plain = reconstruction_error(&store, &plain);
+        assert!(e_pissa < e_plain * 1.5);
+    }
+
+    #[test]
+    fn trainable_params_much_smaller_than_model() {
+        let (store, _) = setup();
+        let lora = LoraState::zeros(&store);
+        assert!(lora.trainable_params() * 5 < store.total_params());
+    }
+
+    #[test]
+    fn mixed_bits_apply_per_layer() {
+        let (store, mut bits) = setup();
+        bits.layers[1] = QuantFormat::Int8;
+        let base = quantize_base(&store, &bits);
+        // layer 1 int8 should be closer to original than layer 0 nf4
+        let e0 = store
+            .layer_proj(0, "w_up")
+            .sub(&base.layer_proj(0, "w_up"))
+            .frobenius_norm();
+        let e1 = store
+            .layer_proj(1, "w_up")
+            .sub(&base.layer_proj(1, "w_up"))
+            .frobenius_norm();
+        assert!(e1 < e0, "int8 err {e1} !< nf4 err {e0}");
+    }
+
+    #[test]
+    fn parse_labels_roundtrip() {
+        for m in [InitMethod::Gaussian, InitMethod::LoftQ { iters: 2 },
+                  InitMethod::Pissa] {
+            assert_eq!(InitMethod::parse(&m.label()), Some(m));
+        }
+    }
+}

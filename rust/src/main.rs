@@ -1,0 +1,290 @@
+//! qpruner CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   pretrain   pretrain a corpus checkpoint (the LLaMA/Vicuna stand-in)
+//!   run        one QPruner pipeline run (prune -> quantize -> BO ->
+//!              fine-tune -> eval) with a table-style summary
+//!   table1 | table2 | table3 | fig1 | fig3
+//!              regenerate a paper table/figure (writes results/)
+//!   info       artifact + runtime environment report
+
+use anyhow::{bail, Context, Result};
+use qpruner::config::Config;
+use qpruner::coordinator::{Method, PipelineOpts};
+use qpruner::experiments::{self, Scale};
+use qpruner::lora::InitMethod;
+use qpruner::model::ModelConfig;
+use qpruner::pruning::TaylorOrder;
+use qpruner::quant::QuantFormat;
+use qpruner::report::scatter_csv;
+use std::path::PathBuf;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: qpruner <cmd> [--key value ...]\n\
+         cmds: pretrain | run | table1 | table2 | table3 | fig1 | fig3 | info\n\
+         common flags:\n\
+           --size tiny|small|base       model preset   (default small)\n\
+           --style llama|vicuna         corpus dialect (default llama)\n\
+           --ckpt-dir DIR               checkpoints    (default checkpoints)\n\
+           --out-dir DIR                results        (default results)\n\
+           --scale smoke|paper          harness fidelity (default paper)\n\
+         run flags:\n\
+           --rate 20 --method q3 --four-bit nf4|fp4 --init loftq1|gaussian|pissa\n\
+           --taylor first|second --steps N --bo-iters N --seed N"
+    );
+    std::process::exit(2);
+}
+
+fn scale_of(cfg: &Config) -> Scale {
+    match cfg.str_or("scale", "paper").as_str() {
+        "smoke" => Scale::smoke(),
+        _ => Scale::paper(),
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let mut cfg = Config::new();
+    if let Some(path) = args.iter().position(|a| a == "--config") {
+        let p = args.get(path + 1).context("--config expects a path")?;
+        cfg = Config::from_file(std::path::Path::new(p))?;
+    }
+    let positional = cfg.apply_cli(&args)?;
+    let cmd = positional.first().map(|s| s.as_str()).unwrap_or("");
+
+    let size = cfg.str_or("size", "small");
+    let style = cfg.str_or("style", "llama");
+    let ckpt_dir = PathBuf::from(cfg.str_or("ckpt-dir", "checkpoints"));
+    let out_dir = PathBuf::from(cfg.str_or("out-dir", "results"));
+    let model_cfg = ModelConfig::preset(&size)?;
+    let scale = scale_of(&cfg);
+
+    match cmd {
+        "info" => {
+            let coord = experiments::open_coordinator(model_cfg.vocab, &style)?;
+            println!("platform : {}", coord.rt.platform());
+            println!("artifacts: {:?}", qpruner::runtime::Runtime::default_dir());
+            println!("model    : {} ({} params)", model_cfg.name,
+                     model_cfg.param_count(&model_cfg.pruned(0)));
+            for rate in [0u32, 20, 30, 50] {
+                let name = format!("train_{}_r{rate}", model_cfg.name);
+                println!("  {} -> {}", name,
+                         if coord.rt.has_artifact(&name) { "ok" }
+                         else { "MISSING" });
+            }
+        }
+        "pretrain" => {
+            let steps = cfg.usize_or("steps", scale.pretrain_steps)?;
+            let mut coord =
+                experiments::open_coordinator(model_cfg.vocab, &style)?;
+            let store = experiments::load_or_pretrain(
+                &mut coord, &model_cfg, &ckpt_dir, &style, steps)?;
+            println!(
+                "checkpoint ready: {:?} ({} params)",
+                experiments::checkpoint_path(&ckpt_dir, &size, &style),
+                store.total_params()
+            );
+        }
+        "run" => {
+            let mut coord =
+                experiments::open_coordinator(model_cfg.vocab, &style)?;
+            let store = experiments::load_or_pretrain(
+                &mut coord, &model_cfg, &ckpt_dir, &style,
+                cfg.usize_or("pretrain-steps", scale.pretrain_steps)?)?;
+            let method = Method::parse(&cfg.str_or("method", "q3"))
+                .context("bad --method")?;
+            let mut opts =
+                PipelineOpts::quick(cfg.usize_or("rate", 20)? as u32, method);
+            scale.apply(&mut opts);
+            if let Some(fb) = cfg.get("four-bit") {
+                opts.four_bit =
+                    QuantFormat::parse(fb).context("bad --four-bit")?;
+            }
+            if let Some(init) = cfg.get("init") {
+                opts.init = InitMethod::parse(init).context("bad --init")?;
+            }
+            if let Some(t) = cfg.get("taylor") {
+                opts.taylor = TaylorOrder::parse(t).context("bad --taylor")?;
+            }
+            opts.finetune.steps = cfg.usize_or("steps", opts.finetune.steps)?;
+            opts.bo_iters = cfg.usize_or("bo-iters", opts.bo_iters)?;
+            opts.seed = cfg.u64_or("seed", opts.seed)?;
+            let res = coord.run(&store, &opts)?;
+            println!("method      : {}", res.method.label());
+            println!("rate        : {}%", res.rate_pct);
+            println!("bits        : {}", res.bits.short());
+            println!("trainable   : {}", res.trainable_params);
+            for t in &res.tasks {
+                println!("  {:<12} {:.2}%", t.name, 100.0 * t.accuracy);
+            }
+            println!("mean acc    : {:.2}%", 100.0 * res.mean_accuracy);
+            println!("memory (GB) : {:.2}", res.memory_gb);
+            println!("final loss  : {:.4}", res.curve.tail_mean(8));
+            println!("-- stage timings --\n{}", coord.metrics.report());
+        }
+        "table1" => {
+            let mut coord =
+                experiments::open_coordinator(model_cfg.vocab, "llama")?;
+            let llama = experiments::load_or_pretrain(
+                &mut coord, &model_cfg, &ckpt_dir, "llama",
+                scale.pretrain_steps)?;
+            // the Vicuna stand-in shares the architecture but is trained
+            // on the chat-dialect corpus
+            let mut coord_v =
+                experiments::open_coordinator(model_cfg.vocab, "vicuna")?;
+            let vicuna = experiments::load_or_pretrain(
+                &mut coord_v, &model_cfg, &ckpt_dir, "vicuna",
+                scale.pretrain_steps)?;
+            let t = experiments::table1(
+                &mut coord, &[("7B-sim", &llama)], &[20, 30, 50], &scale)?;
+            let tv = experiments::table1(
+                &mut coord_v, &[("7B-chat-sim", &vicuna)], &[20, 30, 50],
+                &scale)?;
+            let mut combined = t;
+            combined.rows.extend(tv.rows);
+            combined.save(&out_dir, "table1")?;
+            println!("{}", combined.to_markdown());
+        }
+        "table2" => {
+            let mut coord =
+                experiments::open_coordinator(model_cfg.vocab, &style)?;
+            let store = experiments::load_or_pretrain(
+                &mut coord, &model_cfg, &ckpt_dir, &style,
+                scale.pretrain_steps)?;
+            let t = experiments::table2_ablation(&mut coord, &store, &scale)?;
+            t.save(&out_dir, "table2")?;
+            println!("{}", t.to_markdown());
+        }
+        "table3" => {
+            let mut coord =
+                experiments::open_coordinator(model_cfg.vocab, &style)?;
+            let store = experiments::load_or_pretrain(
+                &mut coord, &model_cfg, &ckpt_dir, &style,
+                scale.pretrain_steps)?;
+            let t = experiments::table3_13b(&mut coord, &store, &scale)?;
+            t.save(&out_dir, "table3")?;
+            println!("{}", t.to_markdown());
+        }
+        "fig1" => {
+            let mut coord =
+                experiments::open_coordinator(model_cfg.vocab, &style)?;
+            let store = experiments::load_or_pretrain(
+                &mut coord, &model_cfg, &ckpt_dir, &style,
+                scale.pretrain_steps)?;
+            let t = experiments::fig1_motivating(&mut coord, &store, &scale)?;
+            t.save(&out_dir, "fig1")?;
+            println!("{}", t.to_markdown());
+        }
+        "fig3" => {
+            let mut coord =
+                experiments::open_coordinator(model_cfg.vocab, &style)?;
+            let store = experiments::load_or_pretrain(
+                &mut coord, &model_cfg, &ckpt_dir, &style,
+                scale.pretrain_steps)?;
+            let n_points = cfg.usize_or("points", 50)?;
+            let n_init = cfg.usize_or("init-points", 10)?;
+            let rate = cfg.usize_or("rate", 50)? as u32;
+            let data = experiments::fig3_pareto(
+                &mut coord, &store, rate, n_points, n_init, &scale)?;
+            std::fs::create_dir_all(&out_dir)?;
+            for (task, rows) in &data.per_task {
+                let pts: Vec<(f64, f64, String)> = rows
+                    .iter()
+                    .map(|(m, p, c, front)| {
+                        (*m, *p,
+                         format!("{c}{}", if *front { ":front" } else { "" }))
+                    })
+                    .collect();
+                std::fs::write(
+                    out_dir.join(format!("fig3_{}.csv",
+                                         task.to_lowercase())),
+                    scatter_csv(&pts),
+                )?;
+                let front_n = rows.iter().filter(|r| r.3).count();
+                println!("{task}: {} points, {front_n} on the Pareto front",
+                         rows.len());
+            }
+            println!("wrote scatter CSVs to {out_dir:?} ({} evals)",
+                     data.n_evals);
+        }
+        "quantize" => {
+            // per-format round-trip error analysis on a checkpoint:
+            // the quantitative backdrop for the paper's {4,8}-bit
+            // search space (2/3-bit error explodes; NF4 beats uniform
+            // INT4; INT8 is near-lossless).
+            use qpruner::model::{proj_index, ParamStore, PROJS};
+            use qpruner::quant::{self, QuantFormat};
+            use qpruner::report::Table;
+            let path = experiments::checkpoint_path(&ckpt_dir, &size, &style);
+            let store = if path.exists() {
+                ParamStore::load(&path)?
+            } else {
+                eprintln!("no checkpoint at {path:?}; analyzing random init");
+                ParamStore::init(&model_cfg, 0)
+            };
+            let mut t = Table::new(
+                "Quantization error analysis (all projection stacks)",
+                &["Format", "bits/param", "RMS err", "Max err",
+                  "RMS vs fp16 weight RMS"],
+            );
+            let mut weight_sq = 0.0f64;
+            let mut weight_n = 0usize;
+            for p in PROJS {
+                let s = &store.weights[proj_index(p)];
+                weight_sq +=
+                    s.data().iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+                weight_n += s.len();
+            }
+            let w_rms = (weight_sq / weight_n as f64).sqrt();
+            let mut eval_fmt = |label: String, bits: f64,
+                                f: &dyn Fn(&qpruner::tensor::Tensor)
+                                    -> qpruner::tensor::Tensor,
+                                t: &mut Table| {
+                let (mut sq, mut mx, mut n) = (0.0f64, 0.0f64, 0usize);
+                for p in PROJS {
+                    for l in 0..store.cfg.n_layers {
+                        let w = store.layer_proj(l, p);
+                        let back = f(&w);
+                        let (rms, m) = quant::error_stats(&w, &back);
+                        sq += rms * rms * w.len() as f64;
+                        mx = mx.max(m);
+                        n += w.len();
+                    }
+                }
+                let rms = (sq / n as f64).sqrt();
+                t.push_row(vec![
+                    label,
+                    format!("{bits:.2}"),
+                    format!("{rms:.5}"),
+                    format!("{mx:.5}"),
+                    format!("{:.3}", rms / w_rms),
+                ]);
+            };
+            for fmt in [QuantFormat::Int8, QuantFormat::Nf4,
+                        QuantFormat::Fp4] {
+                eval_fmt(fmt.label().to_string(), fmt.bits_per_param(),
+                         &|w| quant::simulate(w, fmt), &mut t);
+            }
+            for k in [4u32, 3, 2] {
+                eval_fmt(
+                    format!("uniform-int{k}"),
+                    k as f64 + 32.0 / 64.0,
+                    &move |w| {
+                        quant::dequantize_uniform_k(
+                            &quant::quantize_uniform_k(w, k))
+                    },
+                    &mut t,
+                );
+            }
+            println!("{}", t.to_markdown());
+        }
+        _ => {
+            bail!("unknown command {cmd:?} — run with no args for usage");
+        }
+    }
+    Ok(())
+}

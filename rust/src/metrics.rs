@@ -1,0 +1,131 @@
+//! Timing + counter metrics and loss-curve logging.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Aggregated stage timings / counters for one pipeline run.
+#[derive(Default, Debug)]
+pub struct Metrics {
+    timers: BTreeMap<String, f64>,
+    counters: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Time a closure, accumulating under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        *self.timers.entry(name.to_string()).or_insert(0.0) +=
+            t0.elapsed().as_secs_f64();
+        out
+    }
+
+    pub fn add_time(&mut self, name: &str, secs: f64) {
+        *self.timers.entry(name.to_string()).or_insert(0.0) += secs;
+    }
+
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn timer(&self, name: &str) -> f64 {
+        self.timers.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.timers {
+            out.push_str(&format!("  {k:<32} {v:>9.3}s\n"));
+        }
+        for (k, v) in &self.counters {
+            out.push_str(&format!("  {k:<32} {v:>9}\n"));
+        }
+        out
+    }
+}
+
+/// Append-friendly loss curve that can be dumped as CSV.
+#[derive(Default, Debug, Clone)]
+pub struct LossCurve {
+    pub steps: Vec<u64>,
+    pub losses: Vec<f32>,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, step: u64, loss: f32) {
+        self.steps.push(step);
+        self.losses.push(loss);
+    }
+
+    pub fn last(&self) -> Option<f32> {
+        self.losses.last().copied()
+    }
+
+    /// Mean of the final `k` points (smoothed terminal loss).
+    pub fn tail_mean(&self, k: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let n = self.losses.len();
+        let k = k.min(n);
+        self.losses[n - k..].iter().sum::<f32>() / k as f32
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss\n");
+        for (st, l) in self.steps.iter().zip(&self.losses) {
+            s.push_str(&format!("{st},{l}\n"));
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate() {
+        let mut m = Metrics::new();
+        m.time("x", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        m.time("x", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(m.timer("x") >= 0.009);
+        assert_eq!(m.timer("missing"), 0.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.incr("n", 2);
+        m.incr("n", 3);
+        assert_eq!(m.counter("n"), 5);
+    }
+
+    #[test]
+    fn loss_curve_csv_and_tail() {
+        let mut c = LossCurve::default();
+        for i in 0..10u64 {
+            c.push(i, 10.0 - i as f32);
+        }
+        assert_eq!(c.last(), Some(1.0));
+        assert!((c.tail_mean(2) - 1.5).abs() < 1e-6);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("step,loss\n"));
+        assert_eq!(csv.lines().count(), 11);
+    }
+}

@@ -1,0 +1,210 @@
+//! Mutual-information bit allocation (paper §3.2, Eq. 7).
+//!
+//! For each layer l the calibration artifact returns the mean-pooled
+//! post-block hidden state X_l and the model's final-position logits.
+//! The prediction Y = argmax(logits). I(X_l; Y) is estimated by
+//! discretizing a fixed random 1-D projection of X_l into quantile
+//! bins and the predicted token into frequency-ranked classes, then
+//! summing the plug-in estimator over the joint histogram.
+//!
+//! Layers with higher I(X_l; Y) get the 8-bit slots, subject to the
+//! paper's budget (<= 25 % of layers at 8-bit).
+
+use crate::quant::{BitConfig, QuantFormat};
+use crate::rng::Rng;
+
+/// Histogram-based plug-in MI estimate between a scalar-projected
+/// continuous variable and a discrete label.
+pub fn mutual_information(x: &[f64], y: &[usize], x_bins: usize,
+                          y_classes: usize) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n == 0 {
+        return 0.0;
+    }
+    // quantile binning of x
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap());
+    let mut xb = vec![0usize; n];
+    for (rank, &i) in order.iter().enumerate() {
+        xb[i] = (rank * x_bins / n).min(x_bins - 1);
+    }
+    // joint histogram
+    let mut joint = vec![0.0f64; x_bins * y_classes];
+    let mut px = vec![0.0f64; x_bins];
+    let mut py = vec![0.0f64; y_classes];
+    for i in 0..n {
+        let yi = y[i].min(y_classes - 1);
+        joint[xb[i] * y_classes + yi] += 1.0;
+        px[xb[i]] += 1.0;
+        py[yi] += 1.0;
+    }
+    let nf = n as f64;
+    let mut mi = 0.0;
+    for b in 0..x_bins {
+        for c in 0..y_classes {
+            let pxy = joint[b * y_classes + c] / nf;
+            if pxy > 0.0 {
+                mi += pxy * (pxy / (px[b] / nf * py[c] / nf)).ln();
+            }
+        }
+    }
+    mi.max(0.0)
+}
+
+/// Map raw predicted token ids to frequency-ranked class labels
+/// (top `classes-1` tokens get their own class, the rest share one).
+pub fn rank_classes(pred: &[usize], classes: usize) -> Vec<usize> {
+    use std::collections::HashMap;
+    let mut freq: HashMap<usize, usize> = HashMap::new();
+    for &p in pred {
+        *freq.entry(p).or_default() += 1;
+    }
+    let mut by_freq: Vec<(usize, usize)> = freq.into_iter().collect();
+    by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let mut label: HashMap<usize, usize> = HashMap::new();
+    for (rank, (tok, _)) in by_freq.into_iter().enumerate() {
+        label.insert(tok, rank.min(classes - 1));
+    }
+    pred.iter().map(|p| label[p]).collect()
+}
+
+/// Per-layer MI scores from pooled hiddens [L, B, d] + predictions [B].
+///
+/// `pooled` is row-major; a fixed random projection (seeded) reduces
+/// each layer's [B, d] block to B scalars.
+pub fn layer_mi_scores(pooled: &[f32], n_layers: usize, batch: usize,
+                       d_model: usize, pred: &[usize], seed: u64) -> Vec<f64> {
+    assert_eq!(pooled.len(), n_layers * batch * d_model);
+    assert_eq!(pred.len(), batch);
+    let mut rng = Rng::new(seed);
+    let proj: Vec<f64> = (0..d_model).map(|_| rng.normal()).collect();
+    let x_bins = (batch / 8).clamp(4, 16);
+    let y_classes = (batch / 8).clamp(4, 16);
+    let y = rank_classes(pred, y_classes);
+    (0..n_layers)
+        .map(|l| {
+            let x: Vec<f64> = (0..batch)
+                .map(|b| {
+                    let off = (l * batch + b) * d_model;
+                    pooled[off..off + d_model]
+                        .iter()
+                        .zip(&proj)
+                        .map(|(&h, &p)| h as f64 * p)
+                        .sum()
+                })
+                .collect();
+            mutual_information(&x, &y, x_bins, y_classes)
+        })
+        .collect()
+}
+
+/// Initial bit-width configuration b0 (Algorithm 1 line 2): rank layers
+/// by MI, give the top `floor(frac8 * L)` layers 8-bit, the rest the
+/// 4-bit format.
+pub fn allocate_bits(mi: &[f64], frac8: f64, four_bit: QuantFormat)
+                     -> BitConfig {
+    let l = mi.len();
+    let n8 = ((l as f64) * frac8).floor() as usize;
+    let mut order: Vec<usize> = (0..l).collect();
+    order.sort_by(|&a, &b| mi[b].partial_cmp(&mi[a]).unwrap());
+    let mut layers = vec![four_bit; l];
+    for &i in order.iter().take(n8) {
+        layers[i] = QuantFormat::Int8;
+    }
+    BitConfig { layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mi_zero_for_independent() {
+        let mut rng = Rng::new(1);
+        let n = 4000;
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let mi = mutual_information(&x, &y, 8, 4);
+        assert!(mi < 0.02, "independent MI {mi}");
+    }
+
+    #[test]
+    fn mi_high_for_dependent() {
+        let mut rng = Rng::new(2);
+        let n = 4000;
+        let y: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let x: Vec<f64> =
+            y.iter().map(|&c| c as f64 + 0.05 * rng.normal()).collect();
+        let mi = mutual_information(&x, &y, 8, 4);
+        assert!(mi > 1.0, "dependent MI {mi}"); // H(Y) = ln 4 ~ 1.386
+    }
+
+    #[test]
+    fn mi_monotone_in_noise() {
+        let mut rng = Rng::new(3);
+        let n = 4000;
+        let y: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let mut last = f64::INFINITY;
+        for noise in [0.05, 0.5, 3.0] {
+            let x: Vec<f64> = y
+                .iter()
+                .map(|&c| c as f64 + noise * rng.normal())
+                .collect();
+            let mi = mutual_information(&x, &y, 8, 4);
+            assert!(mi < last + 0.05, "noise {noise}: {mi} !< {last}");
+            last = mi;
+        }
+    }
+
+    #[test]
+    fn mi_nonnegative_always() {
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let n = 50 + rng.below(200);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<usize> = (0..n).map(|_| rng.below(6)).collect();
+            assert!(mutual_information(&x, &y, 6, 6) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn rank_classes_compacts_labels() {
+        let pred = vec![100, 100, 100, 7, 7, 3];
+        let y = rank_classes(&pred, 3);
+        assert_eq!(y[0], 0); // most frequent -> class 0
+        assert_eq!(y[3], 1);
+        assert_eq!(y[5], 2);
+    }
+
+    #[test]
+    fn allocate_respects_budget_and_ranking() {
+        let mi = vec![0.1, 0.9, 0.5, 0.2, 0.8, 0.3, 0.05, 0.4];
+        let cfg = allocate_bits(&mi, 0.25, QuantFormat::Nf4);
+        assert_eq!(cfg.layers.len(), 8);
+        assert!(cfg.frac_8bit() <= 0.25 + 1e-9);
+        // the two highest-MI layers (1 and 4) get 8-bit
+        assert_eq!(cfg.layers[1], QuantFormat::Int8);
+        assert_eq!(cfg.layers[4], QuantFormat::Int8);
+        assert_eq!(cfg.layers[6], QuantFormat::Nf4);
+    }
+
+    #[test]
+    fn allocate_zero_budget_is_uniform() {
+        let mi = vec![0.5; 6];
+        let cfg = allocate_bits(&mi, 0.0, QuantFormat::Fp4);
+        assert!(cfg.layers.iter().all(|&f| f == QuantFormat::Fp4));
+    }
+
+    #[test]
+    fn layer_scores_shapes() {
+        let (l, b, d) = (3, 64, 8);
+        let mut rng = Rng::new(5);
+        let pooled: Vec<f32> =
+            (0..l * b * d).map(|_| rng.normal_f32(1.0)).collect();
+        let pred: Vec<usize> = (0..b).map(|_| rng.below(10)).collect();
+        let s = layer_mi_scores(&pooled, l, b, d, &pred, 7);
+        assert_eq!(s.len(), l);
+        assert!(s.iter().all(|&x| x.is_finite() && x >= 0.0));
+    }
+}

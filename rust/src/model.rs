@@ -1,0 +1,420 @@
+//! Model architecture description + parameter store + checkpoint I/O.
+//!
+//! Mirrors python/compile/configs.py exactly: the AOT artifact argument
+//! shapes are derived from the same arithmetic on both sides.
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Canonical projection order (must match configs.PROJS).
+pub const PROJS: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+/// Width of one MLP pruning group (configs.MLP_GROUP).
+pub const MLP_GROUP: usize = 8;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub scan_steps: usize,
+    pub eval_rows: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: usize,
+}
+
+impl ModelConfig {
+    pub fn preset(name: &str) -> Result<ModelConfig> {
+        let (d, l, h, f, v, s, b, k, er) = match name {
+            "tiny" => (64, 2, 4, 192, 256, 32, 4, 4, 16),
+            "small" => (128, 4, 4, 384, 512, 64, 4, 8, 32),
+            "base" => (384, 8, 8, 1024, 2048, 128, 4, 8, 32),
+            "large" => (768, 12, 12, 2048, 8192, 128, 4, 4, 32),
+            _ => bail!("unknown model size {name}"),
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            d_ff: f,
+            vocab: v,
+            seq: s,
+            batch: b,
+            scan_steps: k,
+            eval_rows: er,
+            lora_rank: 8,
+            lora_alpha: 16,
+        })
+    }
+
+    /// Paper-scale architectures, used only by the analytic memory
+    /// model (`memory` module) to reproduce the GB columns of
+    /// Tables 1/3.
+    pub fn paper_7b() -> ModelConfig {
+        ModelConfig {
+            name: "llama-7b".into(),
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            d_ff: 11008,
+            vocab: 32000,
+            seq: 256,
+            batch: 8,
+            scan_steps: 1,
+            eval_rows: 32,
+            lora_rank: 8,
+            lora_alpha: 16,
+        }
+    }
+
+    pub fn paper_13b() -> ModelConfig {
+        ModelConfig {
+            name: "llama-13b".into(),
+            d_model: 5120,
+            n_layers: 40,
+            n_heads: 40,
+            d_ff: 13824,
+            vocab: 32000,
+            seq: 256,
+            batch: 8,
+            scan_steps: 1,
+            eval_rows: 32,
+            lora_rank: 8,
+            lora_alpha: 16,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn pruned(&self, rate_pct: u32) -> PrunedShapes {
+        let keep = 1.0 - rate_pct as f64 / 100.0;
+        let heads = ((self.n_heads as f64 * keep).round() as usize).max(1);
+        let dff = ((self.d_ff as f64 * keep) as usize / MLP_GROUP * MLP_GROUP)
+            .max(MLP_GROUP);
+        PrunedShapes { rate_pct, heads_kept: heads, d_ff_kept: dff }
+    }
+
+    /// [out, in] of a projection under pruned shapes.
+    pub fn proj_shape(&self, ps: &PrunedShapes, proj: &str) -> (usize, usize) {
+        let d = self.d_model;
+        let a = ps.attn_dim(self);
+        let f = ps.d_ff_kept;
+        match proj {
+            "wq" | "wk" | "wv" => (a, d),
+            "wo" => (d, a),
+            "w_gate" | "w_up" => (f, d),
+            "w_down" => (d, f),
+            _ => panic!("unknown proj {proj}"),
+        }
+    }
+
+    pub fn param_count(&self, ps: &PrunedShapes) -> usize {
+        let mut n = 2 * self.vocab * self.d_model + self.d_model;
+        let mut per_layer = 2 * self.d_model;
+        for p in PROJS {
+            let (o, i) = self.proj_shape(ps, p);
+            per_layer += o * i;
+        }
+        n += self.n_layers * per_layer;
+        n
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrunedShapes {
+    pub rate_pct: u32,
+    pub heads_kept: usize,
+    pub d_ff_kept: usize,
+}
+
+impl PrunedShapes {
+    pub fn attn_dim(&self, cfg: &ModelConfig) -> usize {
+        self.heads_kept * cfg.head_dim()
+    }
+}
+
+/// The 12 weight stacks, in artifact ABI order.
+pub const WEIGHT_NAMES: [&str; 12] = [
+    "embed", "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate",
+    "w_up", "w_down", "final_norm", "lm_head",
+];
+
+/// Index of each projection stack inside WEIGHT_NAMES.
+pub fn proj_index(proj: &str) -> usize {
+    match proj {
+        "wq" => 2,
+        "wk" => 3,
+        "wv" => 4,
+        "wo" => 5,
+        "w_gate" => 7,
+        "w_up" => 8,
+        "w_down" => 9,
+        _ => panic!("unknown proj {proj}"),
+    }
+}
+
+/// Full parameter set of one model: 12 stacked tensors.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub cfg: ModelConfig,
+    pub ps: PrunedShapes,
+    pub weights: Vec<Tensor>, // 12, ABI order
+}
+
+impl ParamStore {
+    pub fn shapes(cfg: &ModelConfig, ps: &PrunedShapes) -> Vec<Vec<usize>> {
+        let (d, l, v) = (cfg.d_model, cfg.n_layers, cfg.vocab);
+        let a = ps.attn_dim(cfg);
+        let f = ps.d_ff_kept;
+        vec![
+            vec![v, d],
+            vec![l, d],
+            vec![l, a, d],
+            vec![l, a, d],
+            vec![l, a, d],
+            vec![l, d, a],
+            vec![l, d],
+            vec![l, f, d],
+            vec![l, f, d],
+            vec![l, d, f],
+            vec![d],
+            vec![v, d],
+        ]
+    }
+
+    /// Random init: N(0, 1/fan_in) matrices, unit norm gains.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> ParamStore {
+        let ps = cfg.pruned(0);
+        let mut rng = Rng::new(seed);
+        let mut weights = Vec::new();
+        for (i, sh) in Self::shapes(cfg, &ps).iter().enumerate() {
+            if matches!(i, 1 | 6 | 10) {
+                weights.push(Tensor::ones(sh));
+            } else {
+                let fan_in = *sh.last().unwrap() as f32;
+                weights.push(Tensor::randn(sh, fan_in.powf(-0.5), &mut rng));
+            }
+        }
+        ParamStore { cfg: cfg.clone(), ps, weights }
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        let i = WEIGHT_NAMES.iter().position(|n| *n == name).unwrap();
+        &self.weights[i]
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        let i = WEIGHT_NAMES.iter().position(|n| *n == name).unwrap();
+        &mut self.weights[i]
+    }
+
+    /// Projection matrix of one layer as a fresh `[out, in]` tensor.
+    pub fn layer_proj(&self, layer: usize, proj: &str) -> Tensor {
+        let stack = &self.weights[proj_index(proj)];
+        let (sh, data) = stack.slab(layer);
+        Tensor::new(sh, data.to_vec())
+    }
+
+    pub fn set_layer_proj(&mut self, layer: usize, proj: &str, t: &Tensor) {
+        let (o, i) = self.cfg.proj_shape(&self.ps, proj);
+        assert_eq!(t.shape(), &[o, i]);
+        let stack = &mut self.weights[proj_index(proj)];
+        stack.slab_mut(layer).copy_from_slice(t.data());
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.weights.iter().map(|w| w.len()).sum()
+    }
+
+    // ---------------- checkpoint I/O (own binary format) -------------
+
+    const MAGIC: &'static [u8; 8] = b"QPCKPT01";
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(Self::MAGIC)?;
+        let meta = format!(
+            "{}\t{}\t{}\t{}",
+            self.cfg.name, self.ps.rate_pct, self.ps.heads_kept,
+            self.ps.d_ff_kept
+        );
+        f.write_all(&(meta.len() as u32).to_le_bytes())?;
+        f.write_all(meta.as_bytes())?;
+        f.write_all(&(self.weights.len() as u32).to_le_bytes())?;
+        for w in &self.weights {
+            f.write_all(&(w.ndim() as u32).to_le_bytes())?;
+            for &d in w.shape() {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in w.data() {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("open checkpoint {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("bad checkpoint magic in {path:?}");
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let mlen = u32::from_le_bytes(len4) as usize;
+        let mut meta = vec![0u8; mlen];
+        f.read_exact(&mut meta)?;
+        let meta = String::from_utf8(meta)?;
+        let parts: Vec<&str> = meta.split('\t').collect();
+        if parts.len() != 4 {
+            bail!("bad checkpoint meta {meta}");
+        }
+        let cfg = ModelConfig::preset(parts[0])?;
+        let ps = PrunedShapes {
+            rate_pct: parts[1].parse()?,
+            heads_kept: parts[2].parse()?,
+            d_ff_kept: parts[3].parse()?,
+        };
+        f.read_exact(&mut len4)?;
+        let n = u32::from_le_bytes(len4) as usize;
+        let mut weights = Vec::with_capacity(n);
+        for _ in 0..n {
+            f.read_exact(&mut len4)?;
+            let nd = u32::from_le_bytes(len4) as usize;
+            let mut shape = Vec::with_capacity(nd);
+            let mut d8 = [0u8; 8];
+            for _ in 0..nd {
+                f.read_exact(&mut d8)?;
+                shape.push(u64::from_le_bytes(d8) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut raw = vec![0u8; count * 4];
+            f.read_exact(&mut raw)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            weights.push(Tensor::new(&shape, data));
+        }
+        let expect = Self::shapes(&cfg, &ps);
+        for (w, e) in weights.iter().zip(&expect) {
+            if w.shape() != e.as_slice() {
+                bail!("checkpoint shape {:?} != expected {:?}", w.shape(), e);
+            }
+        }
+        Ok(ParamStore { cfg, ps, weights })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_python_configs() {
+        let t = ModelConfig::preset("tiny").unwrap();
+        assert_eq!((t.d_model, t.n_layers, t.d_ff, t.vocab), (64, 2, 192, 256));
+        let b = ModelConfig::preset("base").unwrap();
+        assert_eq!((b.d_model, b.n_layers, b.n_heads), (384, 8, 8));
+        assert!(ModelConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn pruned_shapes_match_python() {
+        // mirrors PrunedShapes.for_rate arithmetic
+        let b = ModelConfig::preset("base").unwrap();
+        let p20 = b.pruned(20);
+        assert_eq!(p20.heads_kept, 6); // round(8*0.8) = 6
+        assert_eq!(p20.d_ff_kept, 1024 * 8 / 10 / 8 * 8); // 816
+        let p50 = b.pruned(50);
+        assert_eq!(p50.heads_kept, 4);
+        assert_eq!(p50.d_ff_kept, 512);
+        let p0 = b.pruned(0);
+        assert_eq!(p0.heads_kept, 8);
+        assert_eq!(p0.d_ff_kept, 1024);
+    }
+
+    #[test]
+    fn param_count_consistent_with_store() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 0);
+        assert_eq!(store.total_params(), cfg.param_count(&cfg.pruned(0)));
+    }
+
+    #[test]
+    fn base_param_count_magnitude() {
+        let cfg = ModelConfig::preset("base").unwrap();
+        let n = cfg.param_count(&cfg.pruned(0));
+        assert!(n > 10_000_000 && n < 25_000_000, "base params {n}");
+        let large = ModelConfig::preset("large").unwrap();
+        let nl = large.param_count(&large.pruned(0));
+        assert!(nl > 80_000_000, "large params {nl}");
+    }
+
+    #[test]
+    fn layer_proj_roundtrip() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let mut store = ParamStore::init(&cfg, 1);
+        let w = store.layer_proj(1, "w_gate");
+        assert_eq!(w.shape(), &[192, 64]);
+        let w2 = w.scale(2.0);
+        store.set_layer_proj(1, "w_gate", &w2);
+        let back = store.layer_proj(1, "w_gate");
+        assert_eq!(back.data(), w2.data());
+        // layer 0 untouched
+        let l0 = store.layer_proj(0, "w_gate");
+        assert_ne!(l0.data(), back.data());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 7);
+        let dir = std::env::temp_dir().join("qpruner_test_ckpt");
+        let path = dir.join("t.qckpt");
+        store.save(&path).unwrap();
+        let back = ParamStore::load(&path).unwrap();
+        assert_eq!(back.cfg, store.cfg);
+        for (a, b) in back.weights.iter().zip(&store.weights) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("qpruner_test_ckpt2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.qckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(ParamStore::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn paper_7b_param_count() {
+        let cfg = ModelConfig::paper_7b();
+        let n = cfg.param_count(&cfg.pruned(0));
+        // LLaMA-7B is ~6.7B params
+        assert!(n > 6_000_000_000 && n < 7_500_000_000, "{n}");
+    }
+}

@@ -1,0 +1,687 @@
+//! Structured pruning engine (paper §3.1, following LLM-Pruner).
+//!
+//! Dependency analysis on the LLaMA block yields two families of
+//! coupled structures:
+//!
+//!  * **attention heads** — head h of layer l couples rows
+//!    [h*hd, (h+1)*hd) of wq/wk/wv with the same column range of wo
+//!    (Deg analysis of Eq. in §3.1: the o-projection consumes exactly
+//!    the activations those rows produce);
+//!  * **MLP channel groups** — `MLP_GROUP` consecutive channels couple
+//!    rows of w_gate/w_up with the matching columns of w_down.
+//!
+//! Group importance is the Taylor expansion of the task loss (Eq. 4-6):
+//! first-order `|g . w|` (element^1) or with the Fisher-diagonal
+//! second-order correction `|g.w - 0.5 w^2 g^2|` (element^2, H_kk ~ g^2).
+//! Element scores are aggregated to group level by sum/max/prod/last
+//! (paper §3.1 last paragraph).
+
+use crate::model::{ModelConfig, ParamStore, MLP_GROUP};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GroupKind {
+    AttnHead,
+    MlpChannels,
+}
+
+/// One coupled structure (prunable unit).
+#[derive(Clone, Debug)]
+pub struct Group {
+    pub kind: GroupKind,
+    pub layer: usize,
+    /// head index or MLP group index
+    pub index: usize,
+}
+
+/// The dependency graph: all coupled structures of the architecture.
+#[derive(Clone, Debug)]
+pub struct DependencyGraph {
+    pub groups: Vec<Group>,
+    pub heads_per_layer: usize,
+    pub mlp_groups_per_layer: usize,
+}
+
+impl DependencyGraph {
+    pub fn build(cfg: &ModelConfig) -> Self {
+        let mut groups = Vec::new();
+        let mg = cfg.d_ff / MLP_GROUP;
+        for l in 0..cfg.n_layers {
+            for h in 0..cfg.n_heads {
+                groups.push(Group { kind: GroupKind::AttnHead, layer: l, index: h });
+            }
+            for g in 0..mg {
+                groups.push(Group { kind: GroupKind::MlpChannels, layer: l, index: g });
+            }
+        }
+        DependencyGraph {
+            groups,
+            heads_per_layer: cfg.n_heads,
+            mlp_groups_per_layer: mg,
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+/// Taylor order for element importance (Table 2 "Importance Estimation").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaylorOrder {
+    /// element^1: |g * w|
+    First,
+    /// element^2: |g*w - 0.5 * w^2 * g^2| (Fisher diagonal Hessian)
+    Second,
+}
+
+impl TaylorOrder {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "first" | "element1" | "1" => Some(TaylorOrder::First),
+            "second" | "element2" | "2" => Some(TaylorOrder::Second),
+            _ => None,
+        }
+    }
+}
+
+/// Aggregation of element scores into a group score.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Aggregate {
+    Sum,
+    Max,
+    /// product via mean of log scores (LLM-Pruner "prod")
+    Prod,
+    /// only the last projection in the group (wo / w_down)
+    Last,
+}
+
+fn elem_score(w: f32, g: f32, order: TaylorOrder) -> f64 {
+    match order {
+        TaylorOrder::First => (g as f64 * w as f64).abs(),
+        TaylorOrder::Second => {
+            let gw = g as f64 * w as f64;
+            (gw - 0.5 * (w as f64).powi(2) * (g as f64).powi(2)).abs()
+        }
+    }
+}
+
+/// Accumulate the importance of a row-range x full-width slab of a
+/// stacked [L, out, in] tensor pair (weights, grads).
+fn slab_scores(
+    w: &Tensor,
+    g: &Tensor,
+    layer: usize,
+    rows: std::ops::Range<usize>,
+    transpose: bool, // true: interpret range as columns
+    order: TaylorOrder,
+    acc: &mut GroupAccum,
+) {
+    let (sh, wd) = w.slab(layer);
+    let (_, gd) = g.slab(layer);
+    let (out, inp) = (sh[0], sh[1]);
+    if !transpose {
+        for r in rows {
+            for c in 0..inp {
+                acc.push(elem_score(wd[r * inp + c], gd[r * inp + c], order));
+            }
+        }
+    } else {
+        for r in 0..out {
+            for c in rows.clone() {
+                acc.push(elem_score(wd[r * inp + c], gd[r * inp + c], order));
+            }
+        }
+    }
+}
+
+struct GroupAccum {
+    agg: Aggregate,
+    sum: f64,
+    max: f64,
+    log_sum: f64,
+    n: usize,
+    last_start: Option<usize>,
+}
+
+impl GroupAccum {
+    fn new(agg: Aggregate) -> Self {
+        GroupAccum { agg, sum: 0.0, max: 0.0, log_sum: 0.0, n: 0, last_start: None }
+    }
+
+    fn mark_last(&mut self) {
+        self.last_start = Some(self.n);
+    }
+
+    fn push(&mut self, s: f64) {
+        self.sum += s;
+        self.max = self.max.max(s);
+        self.log_sum += (s + 1e-12).ln();
+        self.n += 1;
+    }
+
+    fn finish(self, last_sum: f64) -> f64 {
+        match self.agg {
+            Aggregate::Sum => self.sum,
+            Aggregate::Max => self.max,
+            Aggregate::Prod => (self.log_sum / self.n.max(1) as f64).exp(),
+            Aggregate::Last => last_sum,
+        }
+    }
+}
+
+/// Importance of every group given weights and gradients (stacked,
+/// unpruned shapes).
+pub fn group_importance(
+    cfg: &ModelConfig,
+    graph: &DependencyGraph,
+    store: &ParamStore,
+    grads: &[Tensor],
+    order: TaylorOrder,
+    agg: Aggregate,
+) -> Result<Vec<f64>> {
+    ensure!(grads.len() == 12, "expected 12 grad stacks, got {}", grads.len());
+    for (w, g) in store.weights.iter().zip(grads) {
+        ensure!(w.shape() == g.shape(), "grad shape mismatch");
+    }
+    let hd = cfg.head_dim();
+    let mut out = Vec::with_capacity(graph.n_groups());
+    for grp in &graph.groups {
+        let mut acc = GroupAccum::new(agg);
+        let last_sum: f64;
+        match grp.kind {
+            GroupKind::AttnHead => {
+                let rows = grp.index * hd..(grp.index + 1) * hd;
+                for name in ["wq", "wk", "wv"] {
+                    let i = crate::model::proj_index(name);
+                    slab_scores(
+                        &store.weights[i], &grads[i], grp.layer,
+                        rows.clone(), false, order, &mut acc,
+                    );
+                }
+                // last member: wo columns
+                acc.mark_last();
+                let before = acc.sum;
+                let i = crate::model::proj_index("wo");
+                slab_scores(
+                    &store.weights[i], &grads[i], grp.layer, rows, true,
+                    order, &mut acc,
+                );
+                last_sum = acc.sum - before;
+            }
+            GroupKind::MlpChannels => {
+                let rows = grp.index * MLP_GROUP..(grp.index + 1) * MLP_GROUP;
+                for name in ["w_gate", "w_up"] {
+                    let i = crate::model::proj_index(name);
+                    slab_scores(
+                        &store.weights[i], &grads[i], grp.layer,
+                        rows.clone(), false, order, &mut acc,
+                    );
+                }
+                acc.mark_last();
+                let before = acc.sum;
+                let i = crate::model::proj_index("w_down");
+                slab_scores(
+                    &store.weights[i], &grads[i], grp.layer, rows, true,
+                    order, &mut acc,
+                );
+                last_sum = acc.sum - before;
+            }
+        }
+        out.push(acc.finish(last_sum));
+    }
+    Ok(out)
+}
+
+/// A pruning plan: which heads / MLP groups each layer keeps
+/// (sorted ascending, preserving original order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PruningPlan {
+    pub rate_pct: u32,
+    pub kept_heads: Vec<Vec<usize>>,
+    pub kept_mlp_groups: Vec<Vec<usize>>,
+}
+
+impl PruningPlan {
+    /// Importance-driven plan: per layer, keep the top-k most important
+    /// heads and MLP groups where k matches the uniform pruned shapes
+    /// (which heads go is importance-driven; how many is rate-driven,
+    /// as in LLM-Pruner's fixed-ratio layer pruning).
+    pub fn from_importance(
+        cfg: &ModelConfig,
+        graph: &DependencyGraph,
+        importance: &[f64],
+        rate_pct: u32,
+    ) -> Self {
+        let ps = cfg.pruned(rate_pct);
+        let keep_heads = ps.heads_kept;
+        let keep_mlp = ps.d_ff_kept / MLP_GROUP;
+        let mut kept_heads = Vec::new();
+        let mut kept_mlp_groups = Vec::new();
+        for l in 0..cfg.n_layers {
+            let mut heads: Vec<(usize, f64)> = graph
+                .groups
+                .iter()
+                .zip(importance)
+                .filter(|(g, _)| g.layer == l && g.kind == GroupKind::AttnHead)
+                .map(|(g, &s)| (g.index, s))
+                .collect();
+            heads.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut hk: Vec<usize> =
+                heads.into_iter().take(keep_heads).map(|(i, _)| i).collect();
+            hk.sort_unstable();
+            kept_heads.push(hk);
+
+            let mut mlps: Vec<(usize, f64)> = graph
+                .groups
+                .iter()
+                .zip(importance)
+                .filter(|(g, _)| g.layer == l && g.kind == GroupKind::MlpChannels)
+                .map(|(g, &s)| (g.index, s))
+                .collect();
+            mlps.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut mk: Vec<usize> =
+                mlps.into_iter().take(keep_mlp).map(|(i, _)| i).collect();
+            mk.sort_unstable();
+            kept_mlp_groups.push(mk);
+        }
+        PruningPlan { rate_pct, kept_heads, kept_mlp_groups }
+    }
+
+    /// Baseline plan keeping the lowest-indexed structures (ablation /
+    /// no-importance control).
+    pub fn first_k(cfg: &ModelConfig, rate_pct: u32) -> Self {
+        let ps = cfg.pruned(rate_pct);
+        let kept_heads = vec![(0..ps.heads_kept).collect(); cfg.n_layers];
+        let kept_mlp_groups =
+            vec![(0..ps.d_ff_kept / MLP_GROUP).collect(); cfg.n_layers];
+        PruningPlan { rate_pct, kept_heads, kept_mlp_groups }
+    }
+
+    /// Random plan (another ablation control: importance vs chance).
+    pub fn random(cfg: &ModelConfig, rate_pct: u32,
+                  rng: &mut crate::rng::Rng) -> Self {
+        let ps = cfg.pruned(rate_pct);
+        let mut kept_heads = Vec::new();
+        let mut kept_mlp_groups = Vec::new();
+        for _ in 0..cfg.n_layers {
+            let mut h = rng.choose_k(cfg.n_heads, ps.heads_kept);
+            h.sort_unstable();
+            kept_heads.push(h);
+            let mut m =
+                rng.choose_k(cfg.d_ff / MLP_GROUP, ps.d_ff_kept / MLP_GROUP);
+            m.sort_unstable();
+            kept_mlp_groups.push(m);
+        }
+        PruningPlan { rate_pct, kept_heads, kept_mlp_groups }
+    }
+
+    /// Fraction of (layer, structure) selections shared with `other`.
+    pub fn overlap(&self, other: &PruningPlan) -> f64 {
+        let mut shared = 0usize;
+        let mut total = 0usize;
+        for (a, b) in self.kept_heads.iter().zip(&other.kept_heads) {
+            total += a.len();
+            shared += a.iter().filter(|x| b.contains(x)).count();
+        }
+        for (a, b) in self.kept_mlp_groups.iter().zip(&other.kept_mlp_groups)
+        {
+            total += a.len();
+            shared += a.iter().filter(|x| b.contains(x)).count();
+        }
+        shared as f64 / total.max(1) as f64
+    }
+}
+
+/// Layer-protection policy: LLM-Pruner leaves the first and last
+/// blocks untouched and prunes the middle range *deeper* so the global
+/// parameter budget still matches the nominal rate. Our artifact
+/// shapes are uniform per layer, so protection is expressed through
+/// the *selection* weights: protected layers get +inf importance on
+/// all their groups, which `from_importance` then keeps... however
+/// uniform shapes force the same per-layer keep count, so instead we
+/// expose protection as an importance transform used by the global
+/// diagnostics and the `layer_pruning_profile` report below.
+#[derive(Clone, Copy, Debug)]
+pub struct Protection {
+    pub first: usize,
+    pub last: usize,
+    pub boost: f64,
+}
+
+impl Default for Protection {
+    fn default() -> Self {
+        // LLM-Pruner's LLaMA recipe protects the first 4 / last 2
+        Protection { first: 4, last: 2, boost: 1e6 }
+    }
+}
+
+impl Protection {
+    /// Scale group importances so protected layers rank above all
+    /// prunable ones.
+    pub fn apply(&self, cfg: &ModelConfig, graph: &DependencyGraph,
+                 importance: &[f64]) -> Vec<f64> {
+        graph
+            .groups
+            .iter()
+            .zip(importance)
+            .map(|(g, &s)| {
+                if g.layer < self.first.min(cfg.n_layers)
+                    || g.layer >= cfg.n_layers.saturating_sub(self.last)
+                {
+                    s + self.boost
+                } else {
+                    s
+                }
+            })
+            .collect()
+    }
+}
+
+/// Global-ranking diagnostic: if structures were pruned by one global
+/// importance ordering at `rate_pct` (LLM-Pruner's other mode), how
+/// many would each layer lose? Exposes the *uneven layer importance*
+/// that motivates the paper's mixed-precision allocation (§1).
+pub fn layer_pruning_profile(
+    cfg: &ModelConfig,
+    graph: &DependencyGraph,
+    importance: &[f64],
+    rate_pct: u32,
+) -> Vec<usize> {
+    let n_prune =
+        (graph.n_groups() as f64 * rate_pct as f64 / 100.0).round() as usize;
+    let mut order: Vec<usize> = (0..graph.n_groups()).collect();
+    order.sort_by(|&a, &b| importance[a].partial_cmp(&importance[b]).unwrap());
+    let mut lost = vec![0usize; cfg.n_layers];
+    for &gi in order.iter().take(n_prune) {
+        lost[graph.groups[gi].layer] += 1;
+    }
+    lost
+}
+
+/// Apply a pruning plan by *compacting* the weight stacks: kept head
+/// rows / MLP channel rows are gathered, the coupled wo / w_down
+/// columns gathered to match. Returns a ParamStore with the pruned
+/// shapes expected by the `_r{rate}` artifacts.
+pub fn apply_plan(store: &ParamStore, plan: &PruningPlan) -> Result<ParamStore> {
+    let cfg = &store.cfg;
+    ensure!(
+        store.ps.rate_pct == 0,
+        "apply_plan expects an unpruned store (rate 0), got rate {}",
+        store.ps.rate_pct
+    );
+    let ps = cfg.pruned(plan.rate_pct);
+    let hd = cfg.head_dim();
+    for l in 0..cfg.n_layers {
+        ensure!(plan.kept_heads[l].len() == ps.heads_kept, "head count");
+        ensure!(
+            plan.kept_mlp_groups[l].len() == ps.d_ff_kept / MLP_GROUP,
+            "mlp group count"
+        );
+    }
+
+    let mut new = Vec::with_capacity(12);
+    let shapes = ParamStore::shapes(cfg, &ps);
+    for (i, name) in crate::model::WEIGHT_NAMES.iter().enumerate() {
+        let w = &store.weights[i];
+        let t = match *name {
+            "embed" | "attn_norm" | "mlp_norm" | "final_norm" | "lm_head" => {
+                w.clone()
+            }
+            "wq" | "wk" | "wv" | "wo" | "w_gate" | "w_up" | "w_down" => {
+                let mut slabs = Vec::new();
+                for l in 0..cfg.n_layers {
+                    let (sh, data) = w.slab(l);
+                    let mat = Tensor::new(sh, data.to_vec());
+                    let idx: Vec<usize> = match *name {
+                        "wq" | "wk" | "wv" | "wo" => plan.kept_heads[l]
+                            .iter()
+                            .flat_map(|&h| h * hd..(h + 1) * hd)
+                            .collect(),
+                        _ => plan.kept_mlp_groups[l]
+                            .iter()
+                            .flat_map(|&g| {
+                                g * MLP_GROUP..(g + 1) * MLP_GROUP
+                            })
+                            .collect(),
+                    };
+                    let pruned = match *name {
+                        "wq" | "wk" | "wv" | "w_gate" | "w_up" => {
+                            mat.gather_rows(&idx)
+                        }
+                        "wo" | "w_down" => mat.gather_cols(&idx),
+                        _ => unreachable!(),
+                    };
+                    slabs.push(pruned);
+                }
+                stack(&slabs)
+            }
+            _ => unreachable!(),
+        };
+        ensure!(
+            t.shape() == shapes[i].as_slice(),
+            "{name}: pruned shape {:?} != expected {:?}",
+            t.shape(),
+            shapes[i]
+        );
+        new.push(t);
+    }
+    Ok(ParamStore { cfg: cfg.clone(), ps, weights: new })
+}
+
+/// Stack equal-shape matrices into [L, ...].
+fn stack(mats: &[Tensor]) -> Tensor {
+    let inner = mats[0].shape().to_vec();
+    let mut shape = vec![mats.len()];
+    shape.extend_from_slice(&inner);
+    let mut data = Vec::with_capacity(mats.len() * mats[0].len());
+    for m in mats {
+        assert_eq!(m.shape(), inner.as_slice());
+        data.extend_from_slice(m.data());
+    }
+    Tensor::new(&shape, data)
+}
+
+/// Per-layer total importance (used to characterize the "uneven layer
+/// importance" the paper's mixed-precision motivation rests on).
+pub fn layer_importance(
+    cfg: &ModelConfig,
+    graph: &DependencyGraph,
+    importance: &[f64],
+) -> Vec<f64> {
+    let mut per_layer = vec![0.0; cfg.n_layers];
+    for (g, &s) in graph.groups.iter().zip(importance) {
+        per_layer[g.layer] += s;
+    }
+    per_layer
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn setup() -> (ModelConfig, ParamStore, Vec<Tensor>) {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 3);
+        let mut rng = Rng::new(4);
+        let grads: Vec<Tensor> = store
+            .weights
+            .iter()
+            .map(|w| Tensor::randn(w.shape(), 0.01, &mut rng))
+            .collect();
+        (cfg, store, grads)
+    }
+
+    #[test]
+    fn graph_enumerates_all_groups() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let g = DependencyGraph::build(&cfg);
+        // 2 layers * (4 heads + 192/8=24 mlp groups)
+        assert_eq!(g.n_groups(), 2 * (4 + 24));
+        assert_eq!(g.heads_per_layer, 4);
+        assert_eq!(g.mlp_groups_per_layer, 24);
+    }
+
+    #[test]
+    fn importance_nonnegative_and_finite() {
+        let (cfg, store, grads) = setup();
+        let graph = DependencyGraph::build(&cfg);
+        for order in [TaylorOrder::First, TaylorOrder::Second] {
+            for agg in [Aggregate::Sum, Aggregate::Max, Aggregate::Prod,
+                        Aggregate::Last] {
+                let imp = group_importance(&cfg, &graph, &store, &grads,
+                                           order, agg).unwrap();
+                assert_eq!(imp.len(), graph.n_groups());
+                assert!(imp.iter().all(|&s| s.is_finite() && s >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_grad_means_zero_first_order_importance() {
+        let (cfg, store, _) = setup();
+        let graph = DependencyGraph::build(&cfg);
+        let zeros: Vec<Tensor> =
+            store.weights.iter().map(|w| Tensor::zeros(w.shape())).collect();
+        let imp = group_importance(&cfg, &graph, &store, &zeros,
+                                   TaylorOrder::First, Aggregate::Sum)
+            .unwrap();
+        assert!(imp.iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn plan_keeps_most_important_heads() {
+        let (cfg, store, mut grads) = setup();
+        let graph = DependencyGraph::build(&cfg);
+        // inflate grads of head 2 in layer 0 so it must be kept
+        let hd = cfg.head_dim();
+        let wq = crate::model::proj_index("wq");
+        {
+            let g = &mut grads[wq];
+            let inp = cfg.d_model;
+            let slab = g.slab_mut(0);
+            for r in 2 * hd..3 * hd {
+                for c in 0..inp {
+                    slab[r * inp + c] = 10.0;
+                }
+            }
+        }
+        let imp = group_importance(&cfg, &graph, &store, &grads,
+                                   TaylorOrder::First, Aggregate::Sum)
+            .unwrap();
+        let plan = PruningPlan::from_importance(&cfg, &graph, &imp, 50);
+        assert!(plan.kept_heads[0].contains(&2));
+        assert_eq!(plan.kept_heads[0].len(), cfg.pruned(50).heads_kept);
+    }
+
+    #[test]
+    fn apply_plan_produces_expected_shapes_and_values() {
+        let (cfg, store, grads) = setup();
+        let graph = DependencyGraph::build(&cfg);
+        let imp = group_importance(&cfg, &graph, &store, &grads,
+                                   TaylorOrder::First, Aggregate::Sum)
+            .unwrap();
+        let plan = PruningPlan::from_importance(&cfg, &graph, &imp, 20);
+        let pruned = apply_plan(&store, &plan).unwrap();
+        let ps = cfg.pruned(20);
+        assert_eq!(pruned.ps, ps);
+        assert_eq!(
+            pruned.weights[crate::model::proj_index("wq")].shape(),
+            &[cfg.n_layers, ps.attn_dim(&cfg), cfg.d_model]
+        );
+        // spot-check value propagation: first kept head of layer 0
+        let h0 = plan.kept_heads[0][0];
+        let hd = cfg.head_dim();
+        let orig = store.layer_proj(0, "wq");
+        let got = pruned.layer_proj(0, "wq");
+        for r in 0..hd {
+            assert_eq!(got.row(r), orig.row(h0 * hd + r));
+        }
+    }
+
+    #[test]
+    fn apply_plan_rejects_pruned_store() {
+        let (cfg, store, _) = setup();
+        let plan = PruningPlan::first_k(&cfg, 20);
+        let pruned = apply_plan(&store, &plan).unwrap();
+        let plan2 = PruningPlan::first_k(&cfg, 50);
+        assert!(apply_plan(&pruned, &plan2).is_err());
+    }
+
+    #[test]
+    fn first_k_plan_is_prefix() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let plan = PruningPlan::first_k(&cfg, 50);
+        assert_eq!(plan.kept_heads[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn random_plan_valid_and_differs_from_first_k() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let mut rng = crate::rng::Rng::new(21);
+        let r = PruningPlan::random(&cfg, 50, &mut rng);
+        let f = PruningPlan::first_k(&cfg, 50);
+        let ps = cfg.pruned(50);
+        for l in 0..cfg.n_layers {
+            assert_eq!(r.kept_heads[l].len(), ps.heads_kept);
+            assert!(r.kept_heads[l].windows(2).all(|w| w[0] < w[1]));
+        }
+        assert!(r.overlap(&f) < 1.0);
+        assert_eq!(f.overlap(&f), 1.0);
+    }
+
+    #[test]
+    fn protection_ranks_protected_layers_first() {
+        let cfg = ModelConfig::preset("small").unwrap(); // 4 layers
+        let graph = DependencyGraph::build(&cfg);
+        let imp = vec![1.0; graph.n_groups()];
+        let prot = Protection { first: 1, last: 1, boost: 100.0 };
+        let boosted = prot.apply(&cfg, &graph, &imp);
+        for (g, &s) in graph.groups.iter().zip(&boosted) {
+            if g.layer == 0 || g.layer == cfg.n_layers - 1 {
+                assert!(s > 50.0);
+            } else {
+                assert_eq!(s, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn global_profile_is_uneven_for_uneven_importance() {
+        let (cfg, store, mut grads) = setup();
+        let graph = DependencyGraph::build(&cfg);
+        // make layer 1 uniformly more important
+        for i in [2usize, 3, 4, 5, 7, 8, 9] {
+            let g = &mut grads[i];
+            let inner: usize = g.shape()[1..].iter().product();
+            let _ = inner;
+            for x in g.slab_mut(1).iter_mut() {
+                *x *= 10.0;
+            }
+        }
+        let imp = group_importance(&cfg, &graph, &store, &grads,
+                                   TaylorOrder::First, Aggregate::Sum)
+            .unwrap();
+        let lost = layer_pruning_profile(&cfg, &graph, &imp, 50);
+        assert_eq!(lost.len(), cfg.n_layers);
+        let total: usize = lost.iter().sum();
+        assert!(total > 0);
+        // layer 0 must lose more than the boosted layer 1
+        assert!(lost[0] > lost[1], "profile {lost:?}");
+    }
+
+    #[test]
+    fn layer_importance_sums_groups() {
+        let (cfg, store, grads) = setup();
+        let graph = DependencyGraph::build(&cfg);
+        let imp = group_importance(&cfg, &graph, &store, &grads,
+                                   TaylorOrder::First, Aggregate::Sum)
+            .unwrap();
+        let li = layer_importance(&cfg, &graph, &imp);
+        assert_eq!(li.len(), cfg.n_layers);
+        let total: f64 = imp.iter().sum();
+        assert!((li.iter().sum::<f64>() - total).abs() < 1e-9 * total.abs());
+    }
+}

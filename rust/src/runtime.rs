@@ -1,0 +1,256 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute
+//! from the rust hot path. Python never runs here.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5
+//! serialized protos; the text parser reassigns instruction ids).
+//! Every artifact was lowered with `return_tuple=True`, so execution
+//! returns a single tuple literal that we decompose positionally.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Typed host-side value crossing the PJRT boundary.
+pub enum Arg<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32], &'a [usize]),
+    U8(&'a [u8], &'a [usize]),
+    I8(&'a [i8], &'a [usize]),
+    Scalar(f32),
+}
+
+impl Arg<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Arg::F32(t) => lit_f32(t)?,
+            Arg::I32(data, shape) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8,
+                        std::mem::size_of_val(*data),
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )?
+            }
+            Arg::U8(data, shape) => {
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::U8,
+                    shape,
+                    data,
+                )?
+            }
+            Arg::I8(data, shape) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8,
+                        data.len(),
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S8,
+                    shape,
+                    bytes,
+                )?
+            }
+            Arg::Scalar(v) => xla::Literal::scalar(*v),
+        })
+    }
+}
+
+/// f32 Tensor -> Literal.
+pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(
+            t.data().as_ptr() as *const u8,
+            t.data().len() * 4,
+        )
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        t.shape(),
+        bytes,
+    )?)
+}
+
+/// Literal -> f32 Tensor (copies out).
+pub fn tensor_f32(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::new(&dims, data))
+}
+
+/// Manifest entry (written by aot.py).
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}
+
+/// The runtime: PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: HashMap<String, ManifestEntry>,
+    /// executions per artifact (metrics)
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default: ./artifacts).
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut manifest = HashMap::new();
+        let mpath = dir.join("manifest.tsv");
+        if mpath.exists() {
+            for line in std::fs::read_to_string(&mpath)?.lines() {
+                let parts: Vec<&str> = line.split('\t').collect();
+                if parts.len() >= 3 {
+                    manifest.insert(
+                        parts[0].to_string(),
+                        ManifestEntry {
+                            name: parts[0].to_string(),
+                            n_inputs: parts[1].parse().unwrap_or(0),
+                            n_outputs: parts[2].parse().unwrap_or(0),
+                        },
+                    );
+                }
+            }
+        }
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            cache: HashMap::new(),
+            manifest,
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    /// Default artifact location relative to the repo root, overridable
+    /// via QPRUNER_ARTIFACTS.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("QPRUNER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::new(&Self::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    pub fn manifest_entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact by logical name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "artifact {name} not found at {path:?} — run `make artifacts`"
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with typed args; returns all outputs as
+    /// decomposed literals.
+    pub fn exec(&mut self, name: &str, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        if let Some(me) = self.manifest.get(name) {
+            if me.n_inputs != args.len() {
+                bail!(
+                    "{name}: manifest expects {} inputs, got {}",
+                    me.n_inputs,
+                    args.len()
+                );
+            }
+        }
+        self.load(name)?;
+        let lits: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        let mut root = result[0][0].to_literal_sync()?;
+        Ok(root.decompose_tuple()?)
+    }
+
+    /// Execute and return all outputs converted to f32 tensors.
+    pub fn exec_f32(&mut self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        self.exec(name, args)?.iter().map(tensor_f32).collect()
+    }
+
+    // NOTE(§Perf): a resident-buffer execute_b path (upload frozen
+    // weights once, reuse PjRtBuffers across calls) was implemented and
+    // reverted: the tfrt CPU PJRT client consumes/donates input buffers
+    // on execute, so cross-call reuse aborts (`literal.size_bytes() ==
+    // b->size()` checks / segfaults). Literal-per-call is the sound
+    // fast path on this client; see EXPERIMENTS.md §Perf entry 3.
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = lit_f32(&t).unwrap();
+        let back = tensor_f32(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn arg_i32_builds_literal() {
+        let data = [1i32, 2, 3, 4];
+        let lit = Arg::I32(&data, &[2, 2]).to_literal().unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn arg_u8_builds_literal() {
+        let data = [7u8, 8, 9, 10];
+        let lit = Arg::U8(&data, &[4]).to_literal().unwrap();
+        assert_eq!(lit.to_vec::<u8>().unwrap(), vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let dir = std::env::temp_dir().join("qpruner_rt_empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        assert!(rt.exec("nope", &[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

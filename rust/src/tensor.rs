@@ -1,0 +1,248 @@
+//! Minimal dense f32 tensor: contiguous row-major storage + shape.
+//!
+//! This is deliberately small — heavy compute runs inside the AOT XLA
+//! executables; the host side only needs marshaling, compaction
+//! (structured pruning), quantization staging, and small linear algebra
+//! (GP posterior, LoftQ SVD).
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::rng::Rng) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar");
+        self.data[0]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("reshape {:?} -> {:?} mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    /// `[i, j]` of a 2-D tensor.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Slab `t[i]` of the leading axis (any rank >= 1), as (shape, slice).
+    pub fn slab(&self, i: usize) -> (&[usize], &[f32]) {
+        assert!(self.ndim() >= 1);
+        let inner: usize = self.shape[1..].iter().product();
+        (&self.shape[1..], &self.data[i * inner..(i + 1) * inner])
+    }
+
+    pub fn slab_mut(&mut self, i: usize) -> &mut [f32] {
+        let inner: usize = self.shape[1..].iter().product();
+        &mut self.data[i * inner..(i + 1) * inner]
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(&[c, r], out)
+    }
+
+    /// Keep only `rows` (2-D), in the given order.
+    pub fn gather_rows(&self, rows: &[usize]) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        let mut out = Vec::with_capacity(rows.len() * c);
+        for &r in rows {
+            out.extend_from_slice(self.row(r));
+        }
+        Tensor::new(&[rows.len(), c], out)
+    }
+
+    /// Keep only `cols` (2-D), in the given order.
+    pub fn gather_cols(&self, cols: &[usize]) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Vec::with_capacity(r * cols.len());
+        for i in 0..r {
+            for &j in cols {
+                debug_assert!(j < c);
+                out.push(self.data[i * c + j]);
+            }
+        }
+        Tensor::new(&[r, cols.len()], out)
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Tensor::new(&self.shape, data)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor::new(&self.shape, self.data.iter().map(|x| x * s).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose2().transpose2();
+        assert_eq!(t, tt);
+    }
+
+    #[test]
+    fn gather_rows_cols() {
+        let t = Tensor::new(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.gather_rows(&[2, 0]);
+        assert_eq!(r.data(), &[5., 6., 1., 2.]);
+        let c = t.gather_cols(&[1]);
+        assert_eq!(c.data(), &[2., 4., 6.]);
+        assert_eq!(c.shape(), &[3, 1]);
+    }
+
+    #[test]
+    fn slab_of_stack() {
+        let t = Tensor::new(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        let (sh, s) = t.slab(1);
+        assert_eq!(sh, &[2, 2]);
+        assert_eq!(s, &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn reshape_checks_len() {
+        let t = Tensor::zeros(&[4]);
+        assert!(t.clone().reshape(&[2, 2]).is_ok());
+        assert!(t.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Tensor::new(&[2], vec![1., 2.]);
+        let b = Tensor::new(&[2], vec![3., 5.]);
+        assert_eq!(b.sub(&a).data(), &[2., 3.]);
+        assert_eq!(a.scale(2.0).data(), &[2., 4.]);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        assert_eq!(c.data(), &[4., 7.]);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::new(&[2], vec![3., -4.]);
+        assert!((t.frobenius_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(t.max_abs(), 4.0);
+    }
+}

@@ -1,0 +1,305 @@
+//! Runtime <-> artifact integration: the rust side must agree with the
+//! Python-side numerics through the AOT kernel artifacts.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so plain
+//! `cargo test` without artifacts still passes the pure-rust suite).
+
+use qpruner::model::{ModelConfig, ParamStore};
+use qpruner::quant::{dequantize, quantize, QuantFormat};
+use qpruner::rng::Rng;
+use qpruner::runtime::{Arg, Runtime};
+use qpruner::tensor::Tensor;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("QPRUNER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+fn host_matmul_wt(x: &Tensor, w: &Tensor) -> Tensor {
+    // x [m,k] @ w [n,k]^T
+    qpruner::linalg::matmul(x, &w.transpose2())
+}
+
+#[test]
+fn kernel_qmatmul_nf4_matches_host_quant() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(11);
+    let (m, n, k) = (16, 128, 256);
+    let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+    let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let q = quantize(&w, QuantFormat::Nf4);
+    let scales = Tensor::new(&[n, k / 64], q.scales.clone());
+    let out = rt
+        .exec_f32(
+            "kernel_qmatmul_nf4",
+            &[
+                Arg::F32(&x),
+                Arg::U8(&q.codes, &[n, k / 2]),
+                Arg::F32(&scales),
+            ],
+        )
+        .unwrap();
+    // host reference: dequantize rust-side, multiply
+    let want = host_matmul_wt(&x, &dequantize(&q));
+    let got = &out[0];
+    assert_eq!(got.shape(), &[m, n]);
+    let err = got.sub(&want).max_abs();
+    assert!(err < 1e-3, "nf4 kernel vs host dequant: max err {err}");
+}
+
+#[test]
+fn kernel_qmatmul_int8_matches_host_quant() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(12);
+    let (m, n, k) = (16, 128, 256);
+    let w = Tensor::randn(&[n, k], 0.5, &mut rng);
+    let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let q = quantize(&w, QuantFormat::Int8);
+    let codes_i8: Vec<i8> = q.codes.iter().map(|&b| b as i8).collect();
+    let scales = Tensor::new(&[n, k / 64], q.scales.clone());
+    let out = rt
+        .exec_f32(
+            "kernel_qmatmul_int8",
+            &[
+                Arg::F32(&x),
+                Arg::I8(&codes_i8, &[n, k]),
+                Arg::F32(&scales),
+            ],
+        )
+        .unwrap();
+    let want = host_matmul_wt(&x, &dequantize(&q));
+    let err = out[0].sub(&want).max_abs();
+    assert!(err < 1e-3, "int8 kernel vs host dequant: max err {err}");
+}
+
+#[test]
+fn kernel_lora_matmul_matches_host() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(13);
+    let (m, n, k, r) = (16, 128, 256, 8);
+    let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+    let a = Tensor::randn(&[r, k], 0.1, &mut rng);
+    let b = Tensor::randn(&[n, r], 0.1, &mut rng);
+    let out = rt
+        .exec_f32(
+            "kernel_lora_matmul",
+            &[Arg::F32(&x), Arg::F32(&w), Arg::F32(&a), Arg::F32(&b)],
+        )
+        .unwrap();
+    // scaling fixed to 2.0 in the artifact
+    let low = qpruner::linalg::matmul(
+        &qpruner::linalg::matmul(&x, &a.transpose2()),
+        &b.transpose2(),
+    );
+    let mut want = host_matmul_wt(&x, &w);
+    want.add_assign(&low.scale(2.0));
+    let err = out[0].sub(&want).max_abs();
+    assert!(err < 2e-3, "lora kernel vs host: max err {err}");
+}
+
+#[test]
+fn kernel_rmsnorm_matches_host() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(14);
+    let (m, d) = (16, 256);
+    let x = Tensor::randn(&[m, d], 2.0, &mut rng);
+    let g = Tensor::randn(&[d], 1.0, &mut rng);
+    let out = rt
+        .exec_f32("kernel_rmsnorm", &[Arg::F32(&x), Arg::F32(&g)])
+        .unwrap();
+    for i in 0..m {
+        let row = x.row(i);
+        let ms: f32 =
+            row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        for j in 0..d {
+            let want = row[j] * inv * g.data()[j];
+            let got = out[0].at2(i, j);
+            assert!((want - got).abs() < 1e-4, "[{i},{j}] {want} vs {got}");
+        }
+    }
+}
+
+#[test]
+fn kernel_attention_is_causal_and_normalized() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    if !rt.has_artifact("kernel_attention") {
+        eprintln!("skipping: kernel_attention not built");
+        return;
+    }
+    let (bh, s, hd) = (8, 64, 48);
+    let mut rng = Rng::new(17);
+    let q = Tensor::randn(&[bh, s, hd], 1.0, &mut rng);
+    let k = Tensor::randn(&[bh, s, hd], 1.0, &mut rng);
+    let v = Tensor::randn(&[bh, s, hd], 1.0, &mut rng);
+    let out = rt
+        .exec_f32("kernel_attention",
+                  &[Arg::F32(&q), Arg::F32(&k), Arg::F32(&v)])
+        .unwrap();
+    assert_eq!(out[0].shape(), &[bh, s, hd]);
+    // row 0 attends only to itself -> equals v row 0
+    for b in 0..bh {
+        for d in 0..hd {
+            let got = out[0].data()[b * s * hd + d];
+            let want = v.data()[b * s * hd + d];
+            assert!((got - want).abs() < 1e-4, "[{b},0,{d}]");
+        }
+    }
+    // outputs are convex combinations of v rows -> bounded by max |v|
+    let vmax = v.max_abs();
+    assert!(out[0].max_abs() <= vmax + 1e-4);
+}
+
+#[test]
+fn fwd_artifact_runs_with_pallas_kernels_inside() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 3);
+    let lora_shapes = qpruner::lora::LoraState::shapes(&store);
+    let lora: Vec<Tensor> =
+        lora_shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    let tokens: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|i| 3 + (i as i32 * 7) % (cfg.vocab as i32 - 3))
+        .collect();
+    let mut args: Vec<Arg> = Vec::new();
+    for w in &store.weights {
+        args.push(Arg::F32(w));
+    }
+    for t in &lora {
+        args.push(Arg::F32(t));
+    }
+    let shape = [cfg.batch, cfg.seq];
+    args.push(Arg::I32(&tokens, &shape));
+    let out = rt.exec_f32("fwd_tiny_r0", &args).unwrap();
+    assert_eq!(out[0].shape(), &[cfg.batch, cfg.seq, cfg.vocab]);
+    assert!(out[0].data().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn qfwd_matches_simulated_quant_fwd() {
+    // The fused NF4 deployment path must agree with the simulated-
+    // quantization path end-to-end at the logits level.
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 4);
+    let lora_shapes = qpruner::lora::LoraState::shapes(&store);
+    let lora: Vec<Tensor> =
+        lora_shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    let tokens: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|i| 3 + (i as i32 * 11) % (cfg.vocab as i32 - 3))
+        .collect();
+    let shape = [cfg.batch, cfg.seq];
+
+    // quantize all projection stacks rust-side
+    use qpruner::model::{proj_index, PROJS};
+    let mut deq = store.clone();
+    let mut qcodes: Vec<Vec<u8>> = Vec::new();
+    let mut qscales: Vec<Tensor> = Vec::new();
+    let mut qshapes: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
+    for p in PROJS {
+        let stack = &store.weights[proj_index(p)];
+        let (o, i) = cfg.proj_shape(&store.ps, p);
+        let l = cfg.n_layers;
+        let mut codes = Vec::with_capacity(l * o * i / 2);
+        let mut scales = Vec::with_capacity(l * o * i / 64);
+        for layer in 0..l {
+            let (sh, data) = stack.slab(layer);
+            let mat = Tensor::new(sh, data.to_vec());
+            let q = quantize(&mat, QuantFormat::Nf4);
+            codes.extend_from_slice(&q.codes);
+            scales.extend_from_slice(&q.scales);
+            deq.set_layer_proj(layer, p, &dequantize(&q));
+        }
+        qcodes.push(codes);
+        qscales.push(Tensor::new(&[l, o, i / 64], scales));
+        qshapes.push((vec![l, o, i / 2], vec![l, o, i / 64]));
+    }
+
+    // fused qfwd call
+    let mut args: Vec<Arg> = vec![
+        Arg::F32(&store.weights[0]),
+        Arg::F32(&store.weights[1]),
+        Arg::F32(&store.weights[6]),
+        Arg::F32(&store.weights[10]),
+        Arg::F32(&store.weights[11]),
+    ];
+    for pi in 0..PROJS.len() {
+        args.push(Arg::U8(&qcodes[pi], &qshapes[pi].0));
+        args.push(Arg::F32(&qscales[pi]));
+    }
+    for t in &lora {
+        args.push(Arg::F32(t));
+    }
+    args.push(Arg::I32(&tokens, &shape));
+    let qfwd = rt.exec_f32("qfwd_tiny_r0", &args).unwrap();
+
+    // simulated-quant fwd call
+    let mut args2: Vec<Arg> = Vec::new();
+    for w in &deq.weights {
+        args2.push(Arg::F32(w));
+    }
+    for t in &lora {
+        args2.push(Arg::F32(t));
+    }
+    args2.push(Arg::I32(&tokens, &shape));
+    let fwd = rt.exec_f32("fwd_tiny_r0", &args2).unwrap();
+
+    let err = qfwd[0].sub(&fwd[0]).max_abs();
+    let scale = fwd[0].max_abs().max(1.0);
+    assert!(
+        err / scale < 5e-3,
+        "fused NF4 vs simulated quant: rel err {}",
+        err / scale
+    );
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(15);
+    let x = Tensor::randn(&[16, 256], 1.0, &mut rng);
+    let g = Tensor::randn(&[256], 1.0, &mut rng);
+    for _ in 0..3 {
+        rt.exec_f32("kernel_rmsnorm", &[Arg::F32(&x), Arg::F32(&g)])
+            .unwrap();
+    }
+    assert_eq!(rt.loaded_count(), 1);
+    assert_eq!(rt.exec_counts["kernel_rmsnorm"], 3);
+}
+
+#[test]
+fn manifest_guards_arity() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(16);
+    let x = Tensor::randn(&[16, 256], 1.0, &mut rng);
+    // rmsnorm wants 2 args; pass 1 -> manifest must reject
+    let err = rt.exec_f32("kernel_rmsnorm", &[Arg::F32(&x)]);
+    assert!(err.is_err());
+}

@@ -1,0 +1,141 @@
+//! Table/figure harness integration (smoke fidelity, tiny model).
+
+use qpruner::coordinator::Coordinator;
+use qpruner::data::Language;
+use qpruner::experiments::{self, Scale};
+use qpruner::model::ModelConfig;
+use qpruner::runtime::Runtime;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("QPRUNER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+fn tiny_store() -> &'static qpruner::model::ParamStore {
+    static STORE: OnceLock<qpruner::model::ParamStore> = OnceLock::new();
+    STORE.get_or_init(|| {
+        let dir = artifacts_dir().expect("artifacts required");
+        let rt = Runtime::new(&dir).unwrap();
+        let mut coord = Coordinator::new(rt, Language::new(256, 1));
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        coord.pretrain(&cfg, 48, 3e-3, 78).unwrap().0
+    })
+}
+
+fn coord() -> Coordinator {
+    let dir = artifacts_dir().unwrap();
+    Coordinator::new(Runtime::new(&dir).unwrap(), Language::new(256, 1))
+}
+
+#[test]
+fn table1_generates_all_rows() {
+    let _ = require_artifacts!();
+    let store = tiny_store();
+    let mut c = coord();
+    let t = experiments::table1(&mut c, &[("tiny-sim", store)], &[20, 50],
+                                &Scale::smoke())
+        .unwrap();
+    // 1 untuned row + 2 rates x 4 methods
+    assert_eq!(t.rows.len(), 1 + 2 * 4);
+    let md = t.to_markdown();
+    assert!(md.contains("LLM-Pruner"));
+    assert!(md.contains("QPruner^3"));
+    // memory column: every quantized row below the fp16 row per rate
+    let mem_col = t.headers.iter().position(|h| h == "Mem(GB)").unwrap();
+    let fp16: f64 = t.rows[1][mem_col].parse().unwrap();
+    let q1: f64 = t.rows[2][mem_col].parse().unwrap();
+    assert!(q1 < fp16);
+}
+
+#[test]
+fn table2_covers_all_ablations() {
+    let _ = require_artifacts!();
+    let store = tiny_store();
+    let mut c = coord();
+    let t = experiments::table2_ablation(&mut c, store, &Scale::smoke())
+        .unwrap();
+    // 2 dtypes + 3 inits + 3 iter counts + 2 importance orders
+    assert_eq!(t.rows.len(), 10);
+    let md = t.to_markdown();
+    for needle in ["nf4", "fp4", "gaussian", "pissa", "iter=4",
+                   "element^1", "element^2"] {
+        assert!(md.contains(needle), "missing {needle} in table 2");
+    }
+}
+
+#[test]
+fn table3_uses_13b_memory_arch() {
+    let _ = require_artifacts!();
+    let store = tiny_store();
+    let mut c = coord();
+    let t = experiments::table3_13b(&mut c, store, &Scale::smoke()).unwrap();
+    assert_eq!(t.rows.len(), 1 + 3);
+    let mem_col = t.headers.iter().position(|h| h == "Mem(GB)").unwrap();
+    let fp16: f64 = t.rows[1][mem_col].parse().unwrap();
+    // 13B fp16 @50% must be well above the 7B-scale numbers
+    assert!(fp16 > 25.0, "13B fp16 memory {fp16}");
+}
+
+#[test]
+fn fig1_shows_quantized_memory_savings() {
+    let _ = require_artifacts!();
+    let store = tiny_store();
+    let mut c = coord();
+    let t = experiments::fig1_motivating(&mut c, store, &Scale::smoke())
+        .unwrap();
+    assert_eq!(t.rows.len(), 3);
+    let mem_col = t.headers.len() - 1;
+    let lora: f64 = t.rows[0][mem_col].parse().unwrap();
+    let loftq: f64 = t.rows[1][mem_col].parse().unwrap();
+    let loftq_star: f64 = t.rows[2][mem_col].parse().unwrap();
+    assert!(loftq < lora, "Figure 1: LoftQ must use less memory than LoRA");
+    assert!(loftq_star < lora);
+}
+
+#[test]
+fn fig3_produces_pareto_fronts() {
+    let _ = require_artifacts!();
+    let store = tiny_store();
+    let mut c = coord();
+    let data = experiments::fig3_pareto(&mut c, store, 50, 6, 3,
+                                        &Scale::smoke())
+        .unwrap();
+    assert_eq!(data.per_task.len(), 7);
+    assert!(data.n_evals >= 3);
+    for (task, rows) in &data.per_task {
+        assert_eq!(rows.len(), data.n_evals, "{task}");
+        let front_n = rows.iter().filter(|r| r.3).count();
+        assert!(front_n >= 1, "{task}: empty Pareto front");
+        // non-dominated check on the flagged points
+        for (i, a) in rows.iter().enumerate() {
+            if a.3 {
+                for (j, b) in rows.iter().enumerate() {
+                    if i != j {
+                        assert!(
+                            !(b.1 > a.1 && b.0 < a.0),
+                            "{task}: flagged point {i} strictly dominated by {j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
