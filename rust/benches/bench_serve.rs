@@ -1,0 +1,73 @@
+//! Serving-path benchmarks: closed-loop throughput/latency of the
+//! continuous-batching scheduler + native KV decode engine, plus the
+//! per-token decode hot path in isolation.
+//!
+//! Like the other benches this needs no artifacts — the engine falls
+//! back to the native backend. Output format:
+//!   BENCH <name> iters=<n> mean=<ms> p50=<ms> p95=<ms>
+//!   SERVE <name> tokens_per_sec=<..> p50=<..>ms p99=<..>ms occ=<..>
+
+#[path = "harness.rs"]
+mod harness;
+
+use qpruner::data::Language;
+use qpruner::metrics::Metrics;
+use qpruner::model::{ModelConfig, ParamStore};
+use qpruner::quant::{BitConfig, QuantFormat};
+use qpruner::runtime::Runtime;
+use qpruner::serve::engine::Engine;
+use qpruner::serve::kv_cache::KvCachePool;
+use qpruner::serve::{run_workload, ServeOpts};
+
+fn runtime() -> Runtime {
+    let dir = std::env::temp_dir().join("qpruner_serve_bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    Runtime::new(&dir).unwrap()
+}
+
+fn main() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 1);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let mut rt = runtime();
+
+    // 1. isolated decode hot path: one token through the KV engine
+    let max_seq = 28;
+    let engine = Engine::new(&mut rt, &store, &bits, max_seq).unwrap();
+    let mut pool = KvCachePool::with_slots(&cfg, engine.attn_dim(), 1,
+                                           max_seq, 1.0, 1.0);
+    let slot = pool.alloc().unwrap();
+    let prompt: Vec<i32> = (0..8).map(|i| 3 + i).collect();
+    harness::bench("serve_prefill8_tiny", 3, 50, || {
+        let s = pool.slot_mut(slot);
+        s.advance_to(0);
+        let logits = engine.prefill(&mut rt, s, &prompt).unwrap();
+        std::hint::black_box(logits);
+    });
+
+    // 2. closed-loop workloads at increasing concurrency
+    for (name, clients, max_batch) in
+        [("c1_b1", 1usize, 1usize), ("c4_b4", 4, 4), ("c8_b8", 8, 8)]
+    {
+        let mut opts = ServeOpts::smoke();
+        opts.clients = clients;
+        opts.max_batch = max_batch;
+        opts.requests = 64;
+        opts.seed = 7;
+        let lang = Language::new(cfg.vocab, 1);
+        let mut metrics = Metrics::new();
+        let report = run_workload(&mut rt, &store, &bits, &lang, &opts,
+                                  &mut metrics)
+            .unwrap();
+        println!(
+            "SERVE {name} tokens_per_sec={:.1} p50={:.3}ms p99={:.3}ms \
+             occ={:.2} completed={}",
+            report.tokens_per_sec(),
+            report.latency.percentile_ms(50.0),
+            report.latency.percentile_ms(99.0),
+            report.mean_occupancy,
+            report.completed
+        );
+        assert_eq!(report.completed, 64);
+    }
+}

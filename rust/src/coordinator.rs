@@ -161,14 +161,8 @@ impl Coordinator {
         // map the small model's per-layer bits onto the paper arch by
         // proportional stretching of the layer index
         let arch = self.memory_cfg(opts);
-        let l_small = bits_small.n_layers();
-        let mut layers = Vec::with_capacity(arch.n_layers);
-        for l in 0..arch.n_layers {
-            let src = l * l_small / arch.n_layers;
-            layers.push(bits_small.layers[src]);
-        }
-        memory::peak_finetune_gb(&arch, opts.rate_pct,
-                                 &BitConfig { layers })
+        let stretched = memory::stretch_bits(bits_small, arch.n_layers);
+        memory::peak_finetune_gb(&arch, opts.rate_pct, &stretched)
     }
 
     // ------------------------------------------------------------------

@@ -12,6 +12,10 @@
 //! and executed from Rust through PJRT (`runtime` module). Python is
 //! never on the runtime path.
 
+// Host-side stand-in for the PJRT `xla` crate (not vendored offline);
+// see xla_stub.rs and runtime.rs for the swap instructions.
+mod xla_stub;
+
 pub mod rng;
 pub mod tensor;
 pub mod linalg;
@@ -31,3 +35,4 @@ pub mod finetune;
 pub mod eval;
 pub mod coordinator;
 pub mod experiments;
+pub mod serve;

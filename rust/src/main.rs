@@ -6,6 +6,12 @@
 //!              fine-tune -> eval) with a table-style summary
 //!   table1 | table2 | table3 | fig1 | fig3
 //!              regenerate a paper table/figure (writes results/)
+//!   serve      synthetic multi-client serving run over a pruned +
+//!              quantized checkpoint (continuous batching, KV pool)
+//!   bench-serve
+//!              closed-loop load generator: p50/p95/p99 latency,
+//!              tokens/sec, batch occupancy, rejection rate
+//!   quantize   per-format round-trip error analysis on a checkpoint
 //!   info       artifact + runtime environment report
 
 use anyhow::{bail, Context, Result};
@@ -22,7 +28,8 @@ use std::path::PathBuf;
 fn usage() -> ! {
     eprintln!(
         "usage: qpruner <cmd> [--key value ...]\n\
-         cmds: pretrain | run | table1 | table2 | table3 | fig1 | fig3 | info\n\
+         cmds: pretrain | run | table1 | table2 | table3 | fig1 | fig3 |\n\
+               serve | bench-serve | quantize | info\n\
          common flags:\n\
            --size tiny|small|base       model preset   (default small)\n\
            --style llama|vicuna         corpus dialect (default llama)\n\
@@ -31,9 +38,37 @@ fn usage() -> ! {
            --scale smoke|paper          harness fidelity (default paper)\n\
          run flags:\n\
            --rate 20 --method q3 --four-bit nf4|fp4 --init loftq1|gaussian|pissa\n\
-           --taylor first|second --steps N --bo-iters N --seed N"
+           --taylor first|second --steps N --bo-iters N --seed N\n\
+         serve / bench-serve flags:\n\
+           --clients N                  concurrent closed-loop clients\n\
+           --requests N                 total requests to issue\n\
+           --max-batch N                continuous-batching cap per step\n\
+           --kv-budget-gb G             modeled KV-cache budget (default:\n\
+                                        device headroom after weights)\n\
+           --seed N                     workload + sampling seed\n\
+           --quant fp16|nf4|fp4|int8    uniform deployment precision\n\
+           --bits STR                   per-layer precision, e.g. 8444\n\
+           --device-gb G --max-seq N --max-queue N --ttl-steps N\n\
+           --prompt-len LO:HI --max-new LO:HI (request length ranges)\n\
+           --stall-prob P --temperature T --memory-arch 7b|13b"
     );
     std::process::exit(2);
+}
+
+/// Parse "LO:HI" (or a single "N" meaning N..=N) into an inclusive
+/// range pair for the serve workload length flags.
+fn parse_range(s: &str) -> Result<(usize, usize)> {
+    let (lo, hi) = match s.split_once(':') {
+        Some((a, b)) => (a.trim().parse()?, b.trim().parse()?),
+        None => {
+            let v: usize = s.trim().parse()?;
+            (v, v)
+        }
+    };
+    if lo == 0 || lo > hi {
+        bail!("bad range {s:?} (expected LO:HI with 1 <= LO <= HI)");
+    }
+    Ok((lo, hi))
 }
 
 fn scale_of(cfg: &Config) -> Scale {
@@ -210,6 +245,117 @@ fn main() -> Result<()> {
             }
             println!("wrote scatter CSVs to {out_dir:?} ({} evals)",
                      data.n_evals);
+        }
+        "serve" | "bench-serve" => {
+            use qpruner::data::Language;
+            use qpruner::metrics::Metrics;
+            use qpruner::model::ParamStore;
+            use qpruner::quant::BitConfig;
+            use qpruner::serve::{self, ServeOpts};
+
+            let mut sopts = match cfg.str_or("scale", "paper").as_str() {
+                "smoke" => ServeOpts::smoke(),
+                _ => ServeOpts::paper(),
+            };
+            sopts.clients = cfg.usize_or("clients", sopts.clients)?;
+            sopts.requests = cfg.usize_or("requests", sopts.requests)?;
+            sopts.max_batch =
+                cfg.usize_or("max-batch", sopts.max_batch)?;
+            if let Some(v) = cfg.get("kv-budget-gb") {
+                sopts.kv_budget_gb = Some(
+                    v.parse().context("bad --kv-budget-gb")?,
+                );
+            }
+            sopts.device_gb = cfg.f64_or("device-gb", sopts.device_gb)?;
+            sopts.memory_arch =
+                cfg.str_or("memory-arch", &sopts.memory_arch);
+            serve::check_memory_arch(&sopts.memory_arch)
+                .context("bad --memory-arch")?;
+            sopts.max_seq = cfg.usize_or("max-seq", sopts.max_seq)?;
+            if let Some(v) = cfg.get("prompt-len") {
+                sopts.prompt_len =
+                    parse_range(v).context("bad --prompt-len")?;
+            }
+            if let Some(v) = cfg.get("max-new") {
+                sopts.max_new =
+                    parse_range(v).context("bad --max-new")?;
+            }
+            sopts.max_queue =
+                cfg.usize_or("max-queue", sopts.max_queue)?;
+            sopts.ttl_steps = cfg.u64_or("ttl-steps", sopts.ttl_steps)?;
+            sopts.stall_prob =
+                cfg.f64_or("stall-prob", sopts.stall_prob)?;
+            sopts.temperature =
+                cfg.f64_or("temperature", sopts.temperature as f64)?
+                    as f32;
+            sopts.seed = cfg.u64_or("seed", sopts.seed)?;
+
+            let path =
+                experiments::checkpoint_path(&ckpt_dir, &size, &style);
+            let store = if path.exists() {
+                ParamStore::load(&path)?
+            } else {
+                eprintln!(
+                    "no checkpoint at {path:?}; serving a random init \
+                     (run `qpruner pretrain` first for a trained model)"
+                );
+                ParamStore::init(&model_cfg, sopts.seed)
+            };
+            let n_layers = store.cfg.n_layers;
+            let bits = if let Some(s) = cfg.get("bits") {
+                let b = BitConfig::parse_short(s)
+                    .context("bad --bits (expected e.g. 8444)")?;
+                if b.n_layers() != n_layers {
+                    bail!("--bits has {} layers, model has {n_layers}",
+                          b.n_layers());
+                }
+                b
+            } else {
+                let fmt = QuantFormat::parse(&cfg.str_or("quant", "nf4"))
+                    .context("bad --quant")?;
+                BitConfig::uniform(n_layers, fmt)
+            };
+            let lang = Language::new(store.cfg.vocab,
+                                     experiments::style_seed(&style));
+            let mut rt = qpruner::runtime::Runtime::open_default()?;
+            let mut metrics = Metrics::new();
+            let budget =
+                serve::resolve_kv_budget_gb(&sopts, store.ps.rate_pct,
+                                            &bits);
+            println!(
+                "serving {} (rate {}%, bits {}) — kv budget {:.2} GB \
+                 on a {:.0} GB {} device",
+                store.cfg.name, store.ps.rate_pct, bits.short(), budget,
+                sopts.device_gb, sopts.memory_arch
+            );
+            let report = serve::run_workload(&mut rt, &store, &bits,
+                                             &lang, &sopts,
+                                             &mut metrics)?;
+            let title = format!(
+                "{} ({}, {} requests, {} clients, max-batch {})",
+                cmd, store.cfg.name, sopts.requests, sopts.clients,
+                sopts.max_batch
+            );
+            let t = report.to_table(&title);
+            println!("{}", t.to_markdown());
+            if cmd == "bench-serve" {
+                t.save(&out_dir, "bench_serve")?;
+                let lat =
+                    report.latency.percentiles_ms(&[50.0, 95.0, 99.0]);
+                println!(
+                    "BENCH serve tokens_per_sec={:.1} p50={:.3}ms \
+                     p95={:.3}ms p99={:.3}ms occupancy={:.2} \
+                     reject_rate={:.4}",
+                    report.tokens_per_sec(),
+                    lat[0],
+                    lat[1],
+                    lat[2],
+                    report.mean_occupancy,
+                    report.rejection_rate()
+                );
+                println!("wrote {:?}", out_dir.join("bench_serve.md"));
+            }
+            println!("-- stage timings --\n{}", metrics.report());
         }
         "quantize" => {
             // per-format round-trip error analysis on a checkpoint:

@@ -95,6 +95,37 @@ pub fn inference_gb(cfg: &ModelConfig, rate_pct: u32, bits: &BitConfig)
     (w + a) / 1e9 + OVERHEAD_GB * 0.5
 }
 
+/// Map a small-model per-layer bit assignment onto another layer count
+/// by proportional stretching of the layer index (used to project
+/// simulator-scale configs onto the paper architectures).
+pub fn stretch_bits(bits: &BitConfig, to_layers: usize) -> BitConfig {
+    let from = bits.n_layers();
+    assert!(from > 0);
+    let layers = (0..to_layers)
+        .map(|l| bits.layers[l * from / to_layers])
+        .collect();
+    BitConfig { layers }
+}
+
+/// fp16 KV-cache bytes one serving session pins at deployment scale:
+/// per layer, K and V of `[max_seq, attn_dim]` at 2 bytes/element,
+/// where attn_dim shrinks with the pruning rate.
+pub fn kv_bytes_per_session(cfg: &ModelConfig, rate_pct: u32,
+                            max_seq: usize) -> f64 {
+    let ps = cfg.pruned(rate_pct);
+    let attn_dim = ps.attn_dim(cfg);
+    (cfg.n_layers * 2 * max_seq * attn_dim) as f64 * 2.0
+}
+
+/// KV-cache budget available to the serving layer: the device headroom
+/// left after the resident inference footprint (weights + activations)
+/// of the active precision config. Never negative; the serving
+/// admission controller sizes its slab pool from this.
+pub fn serve_kv_budget_gb(cfg: &ModelConfig, rate_pct: u32,
+                          bits: &BitConfig, device_gb: f64) -> f64 {
+    (device_gb - inference_gb(cfg, rate_pct, bits)).max(0.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +219,97 @@ mod tests {
         let cfg = ModelConfig::paper_7b();
         let b = nf4(&cfg);
         assert!(inference_gb(&cfg, 20, &b) < peak_finetune_gb(&cfg, 20, &b));
+    }
+
+    #[test]
+    fn component_bytes_monotone_in_rate() {
+        // every accounting component must shrink as pruning deepens
+        let cfg = ModelConfig::paper_7b();
+        let b = nf4(&cfg);
+        for (r_lo, r_hi) in [(0u32, 20u32), (20, 30), (30, 50)] {
+            assert!(weight_bytes(&cfg, r_lo, &b)
+                    > weight_bytes(&cfg, r_hi, &b));
+            assert!(lora_bytes(&cfg, r_lo) > lora_bytes(&cfg, r_hi));
+            assert!(activation_bytes(&cfg, r_lo)
+                    > activation_bytes(&cfg, r_hi));
+            assert!(inference_gb(&cfg, r_lo, &b)
+                    > inference_gb(&cfg, r_hi, &b));
+        }
+    }
+
+    #[test]
+    fn component_bytes_monotone_in_bits() {
+        // nf4 < (nf4 + some int8) < fp16, for weights and inference
+        let cfg = ModelConfig::paper_7b();
+        let mut mixed = nf4(&cfg);
+        for i in 0..8 {
+            mixed.layers[i] = QuantFormat::Int8;
+        }
+        for rate in [20u32, 50] {
+            let w4 = weight_bytes(&cfg, rate, &nf4(&cfg));
+            let wm = weight_bytes(&cfg, rate, &mixed);
+            let wf = weight_bytes(&cfg, rate, &fp16(&cfg));
+            assert!(w4 < wm && wm < wf, "rate {rate}");
+            let i4 = inference_gb(&cfg, rate, &nf4(&cfg));
+            let im = inference_gb(&cfg, rate, &mixed);
+            let ifp = inference_gb(&cfg, rate, &fp16(&cfg));
+            assert!(i4 < im && im < ifp, "rate {rate}");
+        }
+    }
+
+    #[test]
+    fn stretch_bits_preserves_prefix_structure() {
+        let mut small = BitConfig::uniform(4, QuantFormat::Nf4);
+        small.layers[0] = QuantFormat::Int8;
+        let big = stretch_bits(&small, 32);
+        assert_eq!(big.n_layers(), 32);
+        // first quarter maps to the int8 layer, rest to nf4
+        assert!(big.layers[..8]
+            .iter()
+            .all(|f| *f == QuantFormat::Int8));
+        assert!(big.layers[8..]
+            .iter()
+            .all(|f| *f == QuantFormat::Nf4));
+        // identity when layer counts match
+        assert_eq!(stretch_bits(&small, 4), small);
+    }
+
+    #[test]
+    fn serve_kv_budget_never_exceeds_inference_headroom() {
+        let cfg = ModelConfig::paper_7b();
+        let device_gb = 24.0; // L20-class card
+        for rate in [0u32, 20, 30, 50] {
+            for bits in [fp16(&cfg), nf4(&cfg)] {
+                let budget =
+                    serve_kv_budget_gb(&cfg, rate, &bits, device_gb);
+                let inf = inference_gb(&cfg, rate, &bits);
+                assert!(budget >= 0.0);
+                assert!(
+                    budget + inf <= device_gb + 1e-9,
+                    "rate {rate} bits {}: {budget} + {inf} > {device_gb}",
+                    bits.short()
+                );
+            }
+        }
+        // no headroom -> zero budget, never negative
+        let tiny_device = 1.0;
+        let b = serve_kv_budget_gb(&cfg, 20, &fp16(&cfg), tiny_device);
+        assert_eq!(b, 0.0);
+        // quantizing frees headroom for the KV pool
+        assert!(serve_kv_budget_gb(&cfg, 20, &nf4(&cfg), device_gb)
+                > serve_kv_budget_gb(&cfg, 20, &fp16(&cfg), device_gb));
+    }
+
+    #[test]
+    fn kv_bytes_shrink_with_pruning_and_grow_with_seq() {
+        let cfg = ModelConfig::paper_7b();
+        assert!(kv_bytes_per_session(&cfg, 0, 256)
+                > kv_bytes_per_session(&cfg, 50, 256));
+        assert!(kv_bytes_per_session(&cfg, 0, 512)
+                > kv_bytes_per_session(&cfg, 0, 256));
+        // 7B @ max_seq 256: 32 layers * 2 * 256 * 4096 * 2B = 128 MiB
+        let b = kv_bytes_per_session(&cfg, 0, 256);
+        assert!((b - 32.0 * 2.0 * 256.0 * 4096.0 * 2.0).abs() < 1.0);
     }
 
     #[test]

@@ -52,6 +52,75 @@ impl Metrics {
     }
 }
 
+/// Latency sample recorder with nearest-rank percentiles — the serving
+/// subsystem's p50/p95/p99 source of truth.
+#[derive(Default, Debug, Clone)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> LatencyStats {
+        LatencyStats::default()
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ms.is_empty()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    /// Nearest-rank percentiles for several `q`s in (0, 100] at once,
+    /// sorting the samples a single time. NaN entries when empty.
+    pub fn percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
+        if self.samples_ms.is_empty() {
+            return vec![f64::NAN; qs.len()];
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        qs.iter()
+            .map(|q| {
+                let rank = ((q / 100.0) * n as f64).ceil() as usize;
+                s[rank.clamp(1, n) - 1]
+            })
+            .collect()
+    }
+
+    /// Nearest-rank percentile, `q` in (0, 100]. NaN when empty. For
+    /// several percentiles of the same snapshot use `percentiles_ms`,
+    /// which sorts once.
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        self.percentiles_ms(&[q])[0]
+    }
+
+    /// "p50=..ms p95=..ms p99=..ms mean=..ms n=.." summary line.
+    pub fn summary(&self) -> String {
+        let p = self.percentiles_ms(&[50.0, 95.0, 99.0]);
+        format!(
+            "p50={:.3}ms p95={:.3}ms p99={:.3}ms mean={:.3}ms n={}",
+            p[0],
+            p[1],
+            p[2],
+            self.mean_ms(),
+            self.len()
+        )
+    }
+}
+
 /// Append-friendly loss curve that can be dumped as CSV.
 #[derive(Default, Debug, Clone)]
 pub struct LossCurve {
@@ -114,6 +183,34 @@ mod tests {
         m.incr("n", 2);
         m.incr("n", 3);
         assert_eq!(m.counter("n"), 5);
+    }
+
+    #[test]
+    fn latency_percentiles_nearest_rank() {
+        let mut l = LatencyStats::new();
+        for i in 1..=100 {
+            l.record_ms(i as f64);
+        }
+        assert_eq!(l.percentile_ms(50.0), 50.0);
+        assert_eq!(l.percentile_ms(95.0), 95.0);
+        assert_eq!(l.percentile_ms(99.0), 99.0);
+        assert_eq!(l.percentile_ms(100.0), 100.0);
+        assert!((l.mean_ms() - 50.5).abs() < 1e-9);
+        // ordered: p50 <= p95 <= p99
+        assert!(l.percentile_ms(50.0) <= l.percentile_ms(95.0));
+        assert!(l.percentile_ms(95.0) <= l.percentile_ms(99.0));
+    }
+
+    #[test]
+    fn latency_empty_and_single() {
+        let l = LatencyStats::new();
+        assert!(l.is_empty());
+        assert!(l.percentile_ms(50.0).is_nan());
+        let mut one = LatencyStats::new();
+        one.record_ms(7.5);
+        assert_eq!(one.percentile_ms(50.0), 7.5);
+        assert_eq!(one.percentile_ms(99.0), 7.5);
+        assert!(one.summary().contains("n=1"));
     }
 
     #[test]

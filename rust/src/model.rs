@@ -220,6 +220,19 @@ impl ParamStore {
         &mut self.weights[i]
     }
 
+    /// Embedding row for a token id, clamped into the vocabulary so the
+    /// serving path tolerates arbitrary client-supplied token ids
+    /// (reserved/OOB ids map to the PAD row rather than panicking).
+    pub fn embed_row(&self, token: i32) -> &[f32] {
+        let v = self.cfg.vocab;
+        let idx = if token < 0 || token as usize >= v {
+            0
+        } else {
+            token as usize
+        };
+        self.weights[0].row(idx)
+    }
+
     /// Projection matrix of one layer as a fresh `[out, in]` tensor.
     pub fn layer_proj(&self, layer: usize, proj: &str) -> Tensor {
         let stack = &self.weights[proj_index(proj)];
@@ -383,6 +396,17 @@ mod tests {
         // layer 0 untouched
         let l0 = store.layer_proj(0, "w_gate");
         assert_ne!(l0.data(), back.data());
+    }
+
+    #[test]
+    fn embed_row_clamps_out_of_range_tokens() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 5);
+        assert_eq!(store.embed_row(7), store.weights[0].row(7));
+        // OOB / negative ids fall back to the PAD row (row 0)
+        assert_eq!(store.embed_row(-3), store.weights[0].row(0));
+        assert_eq!(store.embed_row(cfg.vocab as i32),
+                   store.weights[0].row(0));
     }
 
     #[test]

@@ -146,6 +146,26 @@ impl BitConfig {
             .collect()
     }
 
+    /// Inverse of [`BitConfig::short`]: parse a per-layer string like
+    /// "84448444" ('4' = NF4, 'f' = FP4, '8' = INT8, 'F' = fp16). Used
+    /// by the `serve` CLI to pin a mixed-precision deployment config.
+    pub fn parse_short(s: &str) -> Option<BitConfig> {
+        let layers = s
+            .chars()
+            .map(|c| match c {
+                'F' => Some(QuantFormat::Fp16),
+                '4' => Some(QuantFormat::Nf4),
+                'f' => Some(QuantFormat::Fp4),
+                '8' => Some(QuantFormat::Int8),
+                _ => None,
+            })
+            .collect::<Option<Vec<_>>>()?;
+        if layers.is_empty() {
+            return None;
+        }
+        Some(BitConfig { layers })
+    }
+
     /// Feature encoding for the GP: one value per layer, 0.0 for 4-bit,
     /// 1.0 for 8-bit (fp16 = 2.0; never appears inside BO search).
     pub fn features(&self) -> Vec<f64> {
@@ -598,6 +618,18 @@ mod tests {
         assert_eq!(c.short(), "84448444");
         assert_eq!(c.features()[0], 1.0);
         assert_eq!(c.features()[1], 0.0);
+    }
+
+    #[test]
+    fn short_parse_roundtrip() {
+        let mut c = BitConfig::uniform(6, QuantFormat::Nf4);
+        c.layers[1] = QuantFormat::Int8;
+        c.layers[3] = QuantFormat::Fp16;
+        c.layers[5] = QuantFormat::Fp4;
+        let s = c.short();
+        assert_eq!(BitConfig::parse_short(&s), Some(c));
+        assert!(BitConfig::parse_short("").is_none());
+        assert!(BitConfig::parse_short("44x4").is_none());
     }
 
     #[test]

@@ -5,11 +5,38 @@
 //! serialized protos; the text parser reassigns instruction ids).
 //! Every artifact was lowered with `return_tuple=True`, so execution
 //! returns a single tuple literal that we decompose positionally.
+//!
+//! The `xla` PJRT bindings are not vendored in this offline build, so
+//! this module links against `crate::xla_stub` — a drop-in API subset
+//! whose Literal marshaling is fully functional and whose
+//! compile/execute paths report a clear "backend not linked" error.
+//! Callers either skip when `has_artifact` is false (tests, benches) or
+//! fall back to a native path (the `serve` engine). Swapping the `use`
+//! below for the real crate restores AOT execution unchanged.
 
 use crate::tensor::Tensor;
+use crate::xla_stub as xla;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+
+/// Reinterpret a slice of plain scalar values as its little-endian byte
+/// representation for literal marshaling.
+///
+/// SAFETY invariant (callers must uphold): `T` is a plain-old-data
+/// scalar with no padding and no invalid bit patterns (`f32`, `i32`,
+/// `i8`, `u8` here). The returned slice covers exactly
+/// `size_of_val(data)` bytes of the same allocation, `u8` has alignment
+/// 1 so any source alignment is valid, and the borrow ties the slice's
+/// lifetime to `data`, so the pointer cannot dangle.
+fn pod_bytes<T: Copy>(data: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            std::mem::size_of_val(data),
+        )
+    }
+}
 
 /// Typed host-side value crossing the PJRT boundary.
 pub enum Arg<'a> {
@@ -22,58 +49,31 @@ pub enum Arg<'a> {
 
 impl Arg<'_> {
     fn to_literal(&self) -> Result<xla::Literal> {
-        Ok(match self {
-            Arg::F32(t) => lit_f32(t)?,
+        let (ty, shape, bytes): (_, &[usize], &[u8]) = match self {
+            Arg::F32(t) => return lit_f32(t),
+            Arg::Scalar(v) => return Ok(xla::Literal::scalar(*v)),
             Arg::I32(data, shape) => {
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(
-                        data.as_ptr() as *const u8,
-                        std::mem::size_of_val(*data),
-                    )
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::S32,
-                    shape,
-                    bytes,
-                )?
+                (xla::ElementType::S32, *shape, pod_bytes(*data))
             }
             Arg::U8(data, shape) => {
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::U8,
-                    shape,
-                    data,
-                )?
+                (xla::ElementType::U8, *shape, pod_bytes(*data))
             }
             Arg::I8(data, shape) => {
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(
-                        data.as_ptr() as *const u8,
-                        data.len(),
-                    )
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::S8,
-                    shape,
-                    bytes,
-                )?
+                (xla::ElementType::S8, *shape, pod_bytes(*data))
             }
-            Arg::Scalar(v) => xla::Literal::scalar(*v),
-        })
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty, shape, bytes,
+        )?)
     }
 }
 
 /// f32 Tensor -> Literal.
 pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(
-            t.data().as_ptr() as *const u8,
-            t.data().len() * 4,
-        )
-    };
     Ok(xla::Literal::create_from_shape_and_untyped_data(
         xla::ElementType::F32,
         t.shape(),
-        bytes,
+        pod_bytes(t.data()),
     )?)
 }
 

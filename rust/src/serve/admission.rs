@@ -1,0 +1,115 @@
+//! Admission control: decide at submit time whether a request may wait
+//! for KV-cache capacity, must be rejected outright, or can never be
+//! served.
+//!
+//! Capacity itself is the KV slab pool (`kv_cache.rs`); admission only
+//! bounds the *wait queue* and screens requests whose token footprint
+//! could never fit a slot — so an overloaded server sheds load at the
+//! door with a cheap O(1) check instead of timing out deep in the
+//! pipeline.
+
+/// Why a request was turned away.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// wait queue at capacity — the memory budget has been exhausted
+    /// long enough for backlog to accumulate
+    QueueFull,
+    /// prompt + generation budget exceeds a KV slot (`max_seq`)
+    TooLong,
+    /// degenerate request (empty prompt or zero generation budget)
+    Malformed,
+}
+
+impl RejectReason {
+    pub fn label(self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue-full",
+            RejectReason::TooLong => "too-long",
+            RejectReason::Malformed => "malformed",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Admit,
+    Reject(RejectReason),
+}
+
+/// Static admission policy for one serving process.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    /// max requests waiting for a KV slot before load shedding
+    pub max_queue: usize,
+    /// KV slot capacity in tokens (prompt + generated)
+    pub max_seq: usize,
+}
+
+impl AdmissionPolicy {
+    pub fn new(max_queue: usize, max_seq: usize) -> AdmissionPolicy {
+        AdmissionPolicy { max_queue, max_seq }
+    }
+
+    pub fn decide(&self, prompt_len: usize, max_new: usize,
+                  queue_len: usize) -> Decision {
+        if prompt_len == 0 || max_new == 0 {
+            return Decision::Reject(RejectReason::Malformed);
+        }
+        // the final sampled token is returned but never fed back, so a
+        // session touches prompt_len + max_new - 1 cache positions
+        if prompt_len + max_new - 1 > self.max_seq {
+            return Decision::Reject(RejectReason::TooLong);
+        }
+        if queue_len >= self.max_queue {
+            return Decision::Reject(RejectReason::QueueFull);
+        }
+        Decision::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_within_limits() {
+        let p = AdmissionPolicy::new(4, 32);
+        assert_eq!(p.decide(8, 8, 0), Decision::Admit);
+        assert_eq!(p.decide(8, 8, 3), Decision::Admit);
+    }
+
+    #[test]
+    fn sheds_load_when_queue_full() {
+        let p = AdmissionPolicy::new(4, 32);
+        assert_eq!(p.decide(8, 8, 4),
+                   Decision::Reject(RejectReason::QueueFull));
+        assert_eq!(p.decide(8, 8, 9),
+                   Decision::Reject(RejectReason::QueueFull));
+    }
+
+    #[test]
+    fn screens_oversized_requests() {
+        let p = AdmissionPolicy::new(4, 32);
+        // 20 + 14 - 1 = 33 > 32
+        assert_eq!(p.decide(20, 14, 0),
+                   Decision::Reject(RejectReason::TooLong));
+        // exactly at capacity is fine: 20 + 13 - 1 = 32
+        assert_eq!(p.decide(20, 13, 0), Decision::Admit);
+    }
+
+    #[test]
+    fn screens_malformed() {
+        let p = AdmissionPolicy::new(4, 32);
+        assert_eq!(p.decide(0, 8, 0),
+                   Decision::Reject(RejectReason::Malformed));
+        assert_eq!(p.decide(8, 0, 0),
+                   Decision::Reject(RejectReason::Malformed));
+    }
+
+    #[test]
+    fn reject_labels_stable() {
+        assert_eq!(RejectReason::QueueFull.label(), "queue-full");
+        assert_eq!(RejectReason::TooLong.label(), "too-long");
+        assert_eq!(RejectReason::Malformed.label(), "malformed");
+    }
+}

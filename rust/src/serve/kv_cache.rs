@@ -1,0 +1,328 @@
+//! Slab-allocated KV-cache pool for the serving subsystem.
+//!
+//! All session KV storage is preallocated up front as fixed-size slots
+//! (one per concurrently-resident session), so the decode path never
+//! allocates or frees *KV storage* and cannot exceed its memory budget
+//! by construction (the engine's per-token activation scratch is a
+//! separate concern — see the ROADMAP item on fused batched decode).
+//! Capacity derives from the precision-aware accounting in
+//! `memory.rs`: the number of slots is what the modeled deployment
+//! device could pin inside `serve_kv_budget_gb` (device headroom left
+//! after the active `BitConfig`'s inference footprint), capped by
+//! what the scheduler can actually keep resident (its batch cap plus
+//! a stall allowance) and a hard host-side slab limit.
+
+use crate::memory;
+use crate::model::ModelConfig;
+use anyhow::{bail, Result};
+
+/// Per-session KV storage: K and V stacks laid out `[L, max_seq, A]`
+/// contiguously (f32 host precision; the *modeled* deployment precision
+/// is fp16 — see `memory::kv_bytes_per_session`).
+#[derive(Debug)]
+pub struct KvSlot {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// tokens currently cached (positions `0..len` are valid)
+    pub len: usize,
+    n_layers: usize,
+    max_seq: usize,
+    attn_dim: usize,
+}
+
+impl KvSlot {
+    fn new(n_layers: usize, max_seq: usize, attn_dim: usize) -> KvSlot {
+        KvSlot {
+            k: vec![0.0; n_layers * max_seq * attn_dim],
+            v: vec![0.0; n_layers * max_seq * attn_dim],
+            len: 0,
+            n_layers,
+            max_seq,
+            attn_dim,
+        }
+    }
+
+    #[inline]
+    fn off(&self, layer: usize, t: usize) -> usize {
+        debug_assert!(layer < self.n_layers && t < self.max_seq);
+        (layer * self.max_seq + t) * self.attn_dim
+    }
+
+    /// Write the K/V rows for position `t` of `layer`. The caller
+    /// advances `len` once per token via [`KvSlot::advance_to`].
+    pub fn write(&mut self, layer: usize, t: usize, k_row: &[f32],
+                 v_row: &[f32]) {
+        assert!(t < self.max_seq, "kv overflow: pos {t} >= {}", self.max_seq);
+        assert_eq!(k_row.len(), self.attn_dim);
+        let o = self.off(layer, t);
+        self.k[o..o + self.attn_dim].copy_from_slice(k_row);
+        self.v[o..o + self.attn_dim].copy_from_slice(v_row);
+    }
+
+    pub fn advance_to(&mut self, len: usize) {
+        debug_assert!(len <= self.max_seq);
+        self.len = len;
+    }
+
+    #[inline]
+    pub fn k_at(&self, layer: usize, t: usize) -> &[f32] {
+        let o = self.off(layer, t);
+        &self.k[o..o + self.attn_dim]
+    }
+
+    #[inline]
+    pub fn v_at(&self, layer: usize, t: usize) -> &[f32] {
+        let o = self.off(layer, t);
+        &self.v[o..o + self.attn_dim]
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn reset(&mut self) {
+        self.len = 0; // stale K/V rows are overwritten before reads
+    }
+
+    /// Host bytes of this slot's backing storage.
+    pub fn host_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Fixed-capacity pool of [`KvSlot`]s with a free list.
+pub struct KvCachePool {
+    slots: Vec<KvSlot>,
+    free: Vec<usize>,
+    /// modeled deployment bytes one session pins (fp16, paper arch)
+    modeled_bytes_per_session: f64,
+    /// modeled deployment budget in bytes
+    modeled_budget_bytes: f64,
+    peak_in_use: usize,
+}
+
+/// Hard host-side cap on preallocated slots, independent of how large
+/// the modeled device headroom is (keeps the simulator's RSS bounded).
+pub const MAX_HOST_SLOTS: usize = 1024;
+
+impl KvCachePool {
+    /// Size the pool from the modeled deployment: `budget_gb` of KV
+    /// headroom on the target device (see `memory::serve_kv_budget_gb`)
+    /// divided by the per-session KV bytes of the paper-scale
+    /// architecture at this pruning rate. Host slots are shaped by the
+    /// *served* (simulator) model config and capped at
+    /// `host_slot_cap` — the scheduler's reachable concurrency — so a
+    /// huge modeled headroom doesn't preallocate megabytes of slab no
+    /// session can ever touch.
+    pub fn for_budget(
+        host_cfg: &ModelConfig,
+        host_attn_dim: usize,
+        paper_cfg: &ModelConfig,
+        rate_pct: u32,
+        max_seq: usize,
+        budget_gb: f64,
+        host_slot_cap: usize,
+    ) -> Result<KvCachePool> {
+        let per_session =
+            memory::kv_bytes_per_session(paper_cfg, rate_pct, max_seq);
+        let budget_bytes = budget_gb * 1e9;
+        let n = (budget_bytes / per_session).floor() as usize;
+        if n == 0 {
+            bail!(
+                "KV budget {budget_gb:.3} GB holds zero sessions \
+                 ({:.1} MB each at max_seq {max_seq}) — raise \
+                 --kv-budget-gb or lower --max-seq",
+                per_session / 1e6
+            );
+        }
+        Ok(Self::with_slots(
+            host_cfg,
+            host_attn_dim,
+            n.min(MAX_HOST_SLOTS).min(host_slot_cap.max(1)),
+            max_seq,
+            per_session,
+            budget_bytes,
+        ))
+    }
+
+    /// Direct construction with an explicit slot count (tests).
+    pub fn with_slots(
+        host_cfg: &ModelConfig,
+        host_attn_dim: usize,
+        n_slots: usize,
+        max_seq: usize,
+        modeled_bytes_per_session: f64,
+        modeled_budget_bytes: f64,
+    ) -> KvCachePool {
+        assert!(n_slots > 0);
+        let slots = (0..n_slots)
+            .map(|_| KvSlot::new(host_cfg.n_layers, max_seq, host_attn_dim))
+            .collect();
+        KvCachePool {
+            slots,
+            free: (0..n_slots).rev().collect(),
+            modeled_bytes_per_session,
+            modeled_budget_bytes,
+            peak_in_use: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn peak_in_use(&self) -> usize {
+        self.peak_in_use
+    }
+
+    /// Modeled deployment bytes currently pinned / at peak.
+    pub fn modeled_peak_bytes(&self) -> f64 {
+        self.peak_in_use as f64 * self.modeled_bytes_per_session
+    }
+
+    pub fn modeled_budget_bytes(&self) -> f64 {
+        self.modeled_budget_bytes
+    }
+
+    /// Host bytes of the whole preallocated slab.
+    pub fn host_slab_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.host_bytes()).sum()
+    }
+
+    /// Claim a free slot; `None` when the budget is exhausted (callers
+    /// queue or reject — see `admission.rs`).
+    pub fn alloc(&mut self) -> Option<usize> {
+        let id = self.free.pop()?;
+        self.slots[id].reset();
+        self.peak_in_use = self.peak_in_use.max(self.in_use());
+        Some(id)
+    }
+
+    /// Return a slot to the free list.
+    pub fn release(&mut self, id: usize) {
+        debug_assert!(!self.free.contains(&id), "double release of {id}");
+        self.slots[id].reset();
+        self.free.push(id);
+    }
+
+    pub fn slot(&self, id: usize) -> &KvSlot {
+        &self.slots[id]
+    }
+
+    pub fn slot_mut(&mut self, id: usize) -> &mut KvSlot {
+        &mut self.slots[id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{BitConfig, QuantFormat};
+
+    fn pool(n: usize) -> KvCachePool {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let a = cfg.pruned(0).attn_dim(&cfg);
+        KvCachePool::with_slots(&cfg, a, n, 16, 1e6, n as f64 * 1e6)
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut p = pool(2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.in_use(), 2);
+        assert!(p.alloc().is_none(), "over-allocation must fail");
+        p.release(a);
+        assert_eq!(p.in_use(), 1);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "free list reuses the released slot");
+        assert_eq!(p.peak_in_use(), 2);
+    }
+
+    #[test]
+    fn released_slot_is_reset() {
+        let mut p = pool(1);
+        let id = p.alloc().unwrap();
+        let a = p.slot(id).attn_dim;
+        let (k, v) = (vec![1.0; a], vec![2.0; a]);
+        p.slot_mut(id).write(0, 0, &k, &v);
+        p.slot_mut(id).advance_to(1);
+        assert_eq!(p.slot(id).len, 1);
+        p.release(id);
+        let id2 = p.alloc().unwrap();
+        assert_eq!(p.slot(id2).len, 0);
+    }
+
+    #[test]
+    fn slot_rows_roundtrip() {
+        let mut p = pool(1);
+        let id = p.alloc().unwrap();
+        let a = p.slot(id).attn_dim;
+        let k: Vec<f32> = (0..a).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..a).map(|i| -(i as f32)).collect();
+        p.slot_mut(id).write(1, 3, &k, &v);
+        assert_eq!(p.slot(id).k_at(1, 3), &k[..]);
+        assert_eq!(p.slot(id).v_at(1, 3), &v[..]);
+        // other positions untouched
+        assert!(p.slot(id).k_at(1, 2).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn budget_sizing_matches_memory_accounting() {
+        let host = ModelConfig::preset("tiny").unwrap();
+        let a = host.pruned(0).attn_dim(&host);
+        let paper = ModelConfig::paper_7b();
+        let per = memory::kv_bytes_per_session(&paper, 20, 64);
+        // budget for exactly 3 sessions
+        let gb = 3.0 * per / 1e9 + 1e-12;
+        let p =
+            KvCachePool::for_budget(&host, a, &paper, 20, 64, gb, 64)
+                .unwrap();
+        assert_eq!(p.capacity(), 3);
+        // capacity * per-session never exceeds the budget
+        assert!(p.capacity() as f64 * per <= p.modeled_budget_bytes());
+        // the scheduler-reachable cap wins when it is tighter
+        let capped =
+            KvCachePool::for_budget(&host, a, &paper, 20, 64, gb, 2)
+                .unwrap();
+        assert_eq!(capped.capacity(), 2);
+        // zero-session budgets are a hard error
+        assert!(KvCachePool::for_budget(&host, a, &paper, 20, 64,
+                                        per / 1e9 * 0.5, 64)
+            .is_err());
+    }
+
+    #[test]
+    fn budget_grows_with_quantization_headroom() {
+        // nf4 leaves more device headroom than fp16 -> more sessions
+        let host = ModelConfig::preset("tiny").unwrap();
+        let a = host.pruned(0).attn_dim(&host);
+        let paper = ModelConfig::paper_7b();
+        let dev = 8.0;
+        let b4 = memory::serve_kv_budget_gb(
+            &paper, 20,
+            &BitConfig::uniform(paper.n_layers, QuantFormat::Nf4), dev);
+        let bf = memory::serve_kv_budget_gb(
+            &paper, 20,
+            &BitConfig::uniform(paper.n_layers, QuantFormat::Fp16), dev);
+        assert!(b4 > 0.0);
+        let p4 =
+            KvCachePool::for_budget(&host, a, &paper, 20, 256, b4,
+                                    MAX_HOST_SLOTS)
+                .unwrap();
+        if bf > 0.0 {
+            let pf =
+                KvCachePool::for_budget(&host, a, &paper, 20, 256, bf,
+                                        MAX_HOST_SLOTS)
+                    .unwrap();
+            assert!(p4.capacity() >= pf.capacity());
+        } else {
+            assert!(p4.capacity() >= 1);
+        }
+    }
+}

@@ -1,0 +1,497 @@
+//! Batched inference serving over pruned + quantized artifacts — the
+//! deployment layer the paper's memory wins pay for.
+//!
+//! A `ParamStore` (pruned shapes) plus a `BitConfig` (per-layer
+//! precision) becomes a serving process: continuous-batching scheduler
+//! (`scheduler.rs`), slab-allocated KV-cache pool sized from the
+//! precision-aware accounting in `memory.rs` (`kv_cache.rs`),
+//! per-session state with TTL eviction (`session.rs`), admission
+//! control (`admission.rs`), and a forward engine that prefers the
+//! PJRT AOT artifacts and falls back to a native incremental decode
+//! (`engine.rs`).
+//!
+//! This module adds the closed-loop synthetic workload driver used by
+//! the `serve` / `bench-serve` subcommands, the benches, and the
+//! integration tests: `clients` logical clients each keep at most one
+//! request in flight until `requests` total have been issued, and the
+//! run reports p50/p95/p99 latency, TTFT, tokens/sec, batch occupancy,
+//! and rejection rate.
+
+pub mod admission;
+pub mod engine;
+pub mod kv_cache;
+pub mod scheduler;
+pub mod session;
+
+use crate::data::Language;
+use crate::memory;
+use crate::metrics::{LatencyStats, Metrics};
+use crate::model::{ModelConfig, ParamStore};
+use crate::quant::BitConfig;
+use crate::report::Table;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use admission::AdmissionPolicy;
+use anyhow::{bail, ensure, Result};
+use engine::Engine;
+use kv_cache::KvCachePool;
+use scheduler::Scheduler;
+use std::time::Instant;
+
+/// Workload + server knobs for one serving run.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// concurrent logical clients (each <= 1 request in flight)
+    pub clients: usize,
+    /// total requests issued across all clients
+    pub requests: usize,
+    /// continuous-batching cap per decode step
+    pub max_batch: usize,
+    /// modeled deployment KV budget in GB; `None` derives it from the
+    /// device headroom left by the active BitConfig (memory.rs)
+    pub kv_budget_gb: Option<f64>,
+    /// modeled deployment device memory (used when kv_budget_gb is
+    /// derived), L20-class by default
+    pub device_gb: f64,
+    /// paper-scale architecture the memory accounting maps onto
+    pub memory_arch: String,
+    /// KV slot capacity in tokens (prompt + generated)
+    pub max_seq: usize,
+    /// sampled prompt length range [lo, hi]
+    pub prompt_len: (usize, usize),
+    /// sampled generation budget range [lo, hi]
+    pub max_new: (usize, usize),
+    pub temperature: f32,
+    pub seed: u64,
+    /// wait-queue bound before load shedding
+    pub max_queue: usize,
+    /// scheduler steps a stalled session may hold its slot
+    pub ttl_steps: u64,
+    /// per-step probability an active session stalls (client
+    /// disconnect injection; 0 disables)
+    pub stall_prob: f64,
+}
+
+impl ServeOpts {
+    /// Seconds-scale defaults (integration tests, --scale smoke).
+    pub fn smoke() -> ServeOpts {
+        ServeOpts {
+            clients: 8,
+            requests: 240,
+            max_batch: 4,
+            kv_budget_gb: None,
+            device_gb: 24.0,
+            memory_arch: "7b".into(),
+            max_seq: 28,
+            prompt_len: (4, 10),
+            max_new: (3, 12),
+            temperature: 0.8,
+            seed: 42,
+            max_queue: 64,
+            ttl_steps: 16,
+            stall_prob: 0.0,
+        }
+    }
+
+    /// Recorded-run fidelity (--scale paper).
+    pub fn paper() -> ServeOpts {
+        ServeOpts {
+            clients: 32,
+            requests: 2000,
+            max_batch: 16,
+            ..ServeOpts::smoke()
+        }
+    }
+}
+
+/// Everything a serving run reports — a deliberately *flattened*
+/// snapshot merging `SchedStats`, pool accounting, and latency
+/// recorders, assembled in exactly one place (the tail of
+/// `run_workload`) so consumers never hold live scheduler state.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub backend: &'static str,
+    pub bits_short: String,
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    /// rejection breakdown: (queue-full, too-long, malformed)
+    pub rejected_by: (usize, usize, usize),
+    pub evicted: usize,
+    /// total scheduler steps, including idle ones (e.g. waiting out a
+    /// stalled session's TTL)
+    pub steps: u64,
+    /// steps that decoded at least one token — the denominator of
+    /// `mean_occupancy`
+    pub busy_steps: u64,
+    pub prefill_tokens: u64,
+    pub generated_tokens: u64,
+    pub wall_secs: f64,
+    pub latency: LatencyStats,
+    pub ttft: LatencyStats,
+    pub mean_occupancy: f64,
+    pub max_occupancy: usize,
+    pub kv_capacity_sessions: usize,
+    pub kv_peak_sessions: usize,
+    /// modeled deployment bytes at peak / budget (paper arch, fp16 KV)
+    pub kv_modeled_peak_bytes: f64,
+    pub kv_modeled_budget_bytes: f64,
+    /// host bytes actually pinned by the slab
+    pub kv_host_slab_bytes: usize,
+}
+
+impl ServeReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.wall_secs
+    }
+
+    pub fn rejection_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.submitted as f64
+    }
+
+    /// Render as a paper-style metric table (report.rs).
+    pub fn to_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["metric", "value"]);
+        let mut push = |k: &str, v: String| {
+            t.push_row(vec![k.to_string(), v]);
+        };
+        push("backend", self.backend.to_string());
+        push("bits", self.bits_short.clone());
+        push("requests submitted", format!("{}", self.submitted));
+        push("requests completed", format!("{}", self.completed));
+        push("requests rejected", format!("{}", self.rejected));
+        push(
+            "rejected by reason",
+            format!(
+                "{}={} {}={} {}={}",
+                admission::RejectReason::QueueFull.label(),
+                self.rejected_by.0,
+                admission::RejectReason::TooLong.label(),
+                self.rejected_by.1,
+                admission::RejectReason::Malformed.label(),
+                self.rejected_by.2,
+            ),
+        );
+        push("sessions evicted (TTL)", format!("{}", self.evicted));
+        push("rejection rate",
+             format!("{:.2}%", 100.0 * self.rejection_rate()));
+        push("scheduler steps", format!("{}", self.steps));
+        push("decode steps (busy)", format!("{}", self.busy_steps));
+        push("prefill tokens", format!("{}", self.prefill_tokens));
+        push("generated tokens", format!("{}", self.generated_tokens));
+        push("tokens/sec", format!("{:.1}", self.tokens_per_sec()));
+        let lat = self.latency.percentiles_ms(&[50.0, 95.0, 99.0]);
+        push("latency p50", format!("{:.3} ms", lat[0]));
+        push("latency p95", format!("{:.3} ms", lat[1]));
+        push("latency p99", format!("{:.3} ms", lat[2]));
+        push("ttft p50", format!("{:.3} ms",
+                                 self.ttft.percentile_ms(50.0)));
+        push("mean batch occupancy",
+             format!("{:.2}", self.mean_occupancy));
+        push("max batch occupancy", format!("{}", self.max_occupancy));
+        push("kv sessions (peak/capacity)",
+             format!("{}/{}", self.kv_peak_sessions,
+                     self.kv_capacity_sessions));
+        push("kv modeled peak",
+             format!("{:.3} GB", self.kv_modeled_peak_bytes / 1e9));
+        push("kv modeled budget",
+             format!("{:.3} GB", self.kv_modeled_budget_bytes / 1e9));
+        push("kv host slab",
+             format!("{:.2} MB", self.kv_host_slab_bytes as f64 / 1e6));
+        t
+    }
+}
+
+fn paper_arch(name: &str) -> ModelConfig {
+    // callers validate via `check_memory_arch`; default keeps the pure
+    // accounting helpers infallible
+    if name == "13b" {
+        ModelConfig::paper_13b()
+    } else {
+        ModelConfig::paper_7b()
+    }
+}
+
+/// Reject unknown `--memory-arch` values instead of silently
+/// accounting against the wrong architecture.
+pub fn check_memory_arch(name: &str) -> Result<()> {
+    ensure!(
+        name == "7b" || name == "13b",
+        "bad memory arch {name:?} (expected 7b|13b)"
+    );
+    Ok(())
+}
+
+/// (inference footprint GB, KV headroom GB) on the modeled device for
+/// this precision config — the single source of the headroom rule used
+/// by both the budget resolver and `run_workload`'s diagnostics.
+pub fn modeled_memory_gb(opts: &ServeOpts, rate_pct: u32,
+                         bits: &BitConfig) -> (f64, f64) {
+    let arch = paper_arch(&opts.memory_arch);
+    let stretched = memory::stretch_bits(bits, arch.n_layers);
+    let inference = memory::inference_gb(&arch, rate_pct, &stretched);
+    let headroom = memory::serve_kv_budget_gb(&arch, rate_pct,
+                                              &stretched,
+                                              opts.device_gb);
+    (inference, headroom)
+}
+
+/// Resolve the modeled KV budget: explicit flag, clamped to the device
+/// headroom the precision config leaves; or the full headroom.
+pub fn resolve_kv_budget_gb(opts: &ServeOpts, rate_pct: u32,
+                            bits: &BitConfig) -> f64 {
+    let (_, headroom) = modeled_memory_gb(opts, rate_pct, bits);
+    match opts.kv_budget_gb {
+        Some(gb) => gb.min(headroom),
+        None => headroom,
+    }
+}
+
+/// Run a closed-loop synthetic multi-client workload to completion.
+pub fn run_workload(rt: &mut Runtime, store: &ParamStore,
+                    bits: &BitConfig, lang: &Language,
+                    opts: &ServeOpts, metrics: &mut Metrics)
+                    -> Result<ServeReport> {
+    ensure!(opts.clients > 0 && opts.requests > 0, "empty workload");
+    ensure!(opts.prompt_len.0 >= 1
+            && opts.prompt_len.0 <= opts.prompt_len.1,
+            "bad prompt_len range");
+    ensure!(opts.max_new.0 >= 1 && opts.max_new.0 <= opts.max_new.1,
+            "bad max_new range");
+    // only bail when *every* request would be oversized; workloads
+    // whose larger length combinations exceed max_seq are legitimate —
+    // those requests exercise the RejectReason::TooLong shedding path
+    ensure!(
+        opts.prompt_len.0 + opts.max_new.0 - 1 <= opts.max_seq,
+        "even the smallest request (prompt {} + new {} tokens) exceeds \
+         max_seq {} — every request would be rejected",
+        opts.prompt_len.0,
+        opts.max_new.0,
+        opts.max_seq
+    );
+
+    let t_build = Instant::now();
+    let engine = Engine::new(rt, store, bits, opts.max_seq)?;
+    metrics.add_time("serve.build_engine",
+                     t_build.elapsed().as_secs_f64());
+
+    let rate = store.ps.rate_pct;
+    check_memory_arch(&opts.memory_arch)?;
+    let arch = paper_arch(&opts.memory_arch);
+    // diagnose the no-headroom case before budget resolution clamps an
+    // explicit --kv-budget-gb to zero with a misleading error
+    let (inference, headroom) = modeled_memory_gb(opts, rate, bits);
+    if headroom <= 0.0 {
+        bail!(
+            "no KV headroom: inference footprint {inference:.2} GB \
+             (bits {}, rate {rate}%) does not fit the {:.0} GB {} \
+             device — raise --device-gb, prune deeper, or quantize \
+             more layers",
+            bits.short(),
+            opts.device_gb,
+            opts.memory_arch
+        );
+    }
+    let budget_gb = resolve_kv_budget_gb(opts, rate, bits);
+    // the scheduler can keep at most max_batch sessions decoding plus
+    // the stalled ones TTL has not yet reclaimed — host slots beyond
+    // that are unreachable slab
+    let stall_allowance = if opts.stall_prob > 0.0 {
+        opts.max_batch
+            .saturating_mul(opts.ttl_steps as usize + 2)
+    } else {
+        0
+    };
+    let pool = KvCachePool::for_budget(
+        &store.cfg,
+        engine.attn_dim(),
+        &arch,
+        rate,
+        opts.max_seq,
+        budget_gb,
+        opts.max_batch + stall_allowance,
+    )?;
+    let admission = AdmissionPolicy::new(opts.max_queue, opts.max_seq);
+    let mut sched =
+        Scheduler::new(pool, admission, opts.max_batch, opts.ttl_steps);
+
+    // closed-loop clients: one outstanding request each
+    struct Client {
+        remaining: usize,
+        outstanding: Option<u64>,
+        rng: Rng,
+    }
+    let base = opts.requests / opts.clients;
+    let extra = opts.requests % opts.clients;
+    let mut clients: Vec<Client> = (0..opts.clients)
+        .map(|i| Client {
+            remaining: base + usize::from(i < extra),
+            outstanding: None,
+            rng: Rng::new(opts.seed ^ (0xC11E_47 + i as u64 * 7919)),
+        })
+        .collect();
+    let mut workload_rng = Rng::new(opts.seed ^ 0x5E47E);
+
+    let t0 = Instant::now();
+    let max_steps: u64 = 50_000 + 200 * opts.requests as u64;
+    loop {
+        // submissions
+        for (ci, c) in clients.iter_mut().enumerate() {
+            if c.remaining == 0 || c.outstanding.is_some() {
+                continue;
+            }
+            let plen = opts.prompt_len.0
+                + c.rng.below(opts.prompt_len.1 - opts.prompt_len.0 + 1);
+            let mnew = opts.max_new.0
+                + c.rng.below(opts.max_new.1 - opts.max_new.0 + 1);
+            let prompt = lang.sample(plen, &mut c.rng);
+            c.remaining -= 1;
+            c.outstanding = sched.submit(ci, prompt, mnew,
+                                         opts.seed, opts.temperature);
+            // a rejected request is spent (the client moves on)
+        }
+
+        if sched.idle()
+            && clients.iter().all(|c| c.remaining == 0
+                                  && c.outstanding.is_none())
+        {
+            break;
+        }
+
+        sched.step(&engine, rt, &mut workload_rng, opts.stall_prob)?;
+
+        // reap terminal sessions so clients can issue their next
+        // request, and drop them from the table so a long run's memory
+        // stays bounded by the live session count
+        for c in clients.iter_mut() {
+            if let Some(id) = c.outstanding {
+                if sched.table.get(id).is_terminal() {
+                    sched.table.remove(id);
+                    c.outstanding = None;
+                }
+            }
+        }
+
+        if sched.step_no() > max_steps {
+            bail!("workload failed to drain in {max_steps} steps \
+                   (completed {}, queue {}, active {})",
+                  sched.stats.completed, sched.queue_len(),
+                  sched.active_len());
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    metrics.add_time("serve.workload", wall);
+    metrics.incr("serve.requests", sched.stats.submitted as u64);
+    metrics.incr("serve.tokens", sched.stats.generated_tokens);
+
+    let st = &sched.stats;
+    Ok(ServeReport {
+        backend: engine.backend_label(),
+        bits_short: bits.short(),
+        submitted: st.submitted,
+        completed: st.completed,
+        rejected: st.rejected,
+        rejected_by: (st.rejected_queue_full, st.rejected_too_long,
+                      st.rejected_malformed),
+        evicted: st.evicted,
+        steps: sched.step_no(),
+        busy_steps: st.busy_steps,
+        prefill_tokens: st.prefill_tokens,
+        generated_tokens: st.generated_tokens,
+        wall_secs: wall,
+        latency: sched.latency.clone(),
+        ttft: sched.ttft.clone(),
+        mean_occupancy: st.mean_occupancy(),
+        max_occupancy: st.max_occupancy,
+        kv_capacity_sessions: sched.pool.capacity(),
+        kv_peak_sessions: sched.pool.peak_in_use(),
+        kv_modeled_peak_bytes: sched.pool.modeled_peak_bytes(),
+        kv_modeled_budget_bytes: sched.pool.modeled_budget_bytes(),
+        kv_host_slab_bytes: sched.pool.host_slab_bytes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::quant::QuantFormat;
+
+    #[test]
+    fn smoke_paper_opts_are_sane() {
+        let s = ServeOpts::smoke();
+        assert!(s.prompt_len.1 + s.max_new.1 - 1 <= s.max_seq);
+        let p = ServeOpts::paper();
+        assert!(p.requests > s.requests);
+        assert!(p.max_batch >= s.max_batch);
+    }
+
+    #[test]
+    fn kv_budget_clamps_to_headroom() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+        let opts = ServeOpts { kv_budget_gb: Some(1e9),
+                               ..ServeOpts::smoke() };
+        let b = resolve_kv_budget_gb(&opts, 0, &bits);
+        let arch = ModelConfig::paper_7b();
+        let stretched = memory::stretch_bits(&bits, arch.n_layers);
+        let headroom = memory::serve_kv_budget_gb(
+            &arch, 0, &stretched, opts.device_gb);
+        assert!(b <= headroom + 1e-9, "budget {b} > headroom {headroom}");
+        // derived budget equals the headroom exactly
+        let derived = ServeOpts { kv_budget_gb: None,
+                                  ..ServeOpts::smoke() };
+        assert!((resolve_kv_budget_gb(&derived, 0, &bits) - headroom)
+            .abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_arch_is_validated() {
+        assert!(check_memory_arch("7b").is_ok());
+        assert!(check_memory_arch("13b").is_ok());
+        assert!(check_memory_arch("13B").is_err());
+        assert!(check_memory_arch("70b").is_err());
+        assert!(check_memory_arch("").is_err());
+    }
+
+    #[test]
+    fn report_table_renders() {
+        let r = ServeReport {
+            backend: "native-kv",
+            bits_short: "44".into(),
+            submitted: 10,
+            completed: 8,
+            rejected: 2,
+            rejected_by: (2, 0, 0),
+            evicted: 0,
+            steps: 40,
+            busy_steps: 28,
+            prefill_tokens: 60,
+            generated_tokens: 70,
+            wall_secs: 0.5,
+            latency: LatencyStats::new(),
+            ttft: LatencyStats::new(),
+            mean_occupancy: 2.5,
+            max_occupancy: 4,
+            kv_capacity_sessions: 4,
+            kv_peak_sessions: 4,
+            kv_modeled_peak_bytes: 2e8,
+            kv_modeled_budget_bytes: 4e8,
+            kv_host_slab_bytes: 1_000_000,
+        };
+        assert!((r.tokens_per_sec() - 140.0).abs() < 1e-9);
+        assert!((r.rejection_rate() - 0.2).abs() < 1e-12);
+        let md = r.to_table("serve smoke").to_markdown();
+        assert!(md.contains("rejection rate"));
+        assert!(md.contains("20.00%"));
+        assert!(md.contains("tokens/sec"));
+        assert!(md.contains("queue-full=2"));
+        assert!(md.contains("decode steps (busy)"));
+    }
+}

@@ -1,0 +1,449 @@
+//! Continuous batching: requests join and leave the active decode
+//! batch at *step* granularity, not request granularity.
+//!
+//! Each `step()`:
+//!   1. admits queued sessions into free KV slots up to `max_batch`
+//!      (prefill + first sampled token happen at admission, so TTFT is
+//!      measured through the same path a real server would take);
+//!   2. optionally stalls sessions (client-disconnect injection for the
+//!      synthetic workload);
+//!   3. runs one decode step for every active session — the batch
+//!      shrinks the moment a session finishes and grows the moment a
+//!      queued one is admitted;
+//!   4. retires finished sessions (slot freed immediately — the next
+//!      step can hand it to a queued request);
+//!   5. TTL-evicts stalled sessions whose slots have been idle too
+//!      long.
+
+use crate::metrics::LatencyStats;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::serve::admission::{AdmissionPolicy, Decision, RejectReason};
+use crate::serve::engine::{sample_token, Engine};
+use crate::serve::kv_cache::KvCachePool;
+use crate::serve::session::{SessionState, SessionTable};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Aggregate counters the serve report is built from.
+#[derive(Default, Debug, Clone)]
+pub struct SchedStats {
+    pub submitted: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    /// rejection breakdown by `RejectReason`
+    pub rejected_queue_full: usize,
+    pub rejected_too_long: usize,
+    pub rejected_malformed: usize,
+    pub completed: usize,
+    pub evicted: usize,
+    /// decode steps that had at least one active session (total steps
+    /// live on `Scheduler::step_no()` — not duplicated here)
+    pub busy_steps: u64,
+    pub occupancy_sum: u64,
+    pub max_occupancy: usize,
+    pub prefill_tokens: u64,
+    pub generated_tokens: u64,
+}
+
+impl SchedStats {
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.busy_steps == 0 {
+            return 0.0;
+        }
+        self.occupancy_sum as f64 / self.busy_steps as f64
+    }
+
+    pub fn rejection_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.submitted as f64
+    }
+}
+
+pub struct Scheduler {
+    pub pool: KvCachePool,
+    pub admission: AdmissionPolicy,
+    pub table: SessionTable,
+    queue: VecDeque<u64>,
+    active: Vec<u64>,
+    stalled: Vec<u64>,
+    pub max_batch: usize,
+    pub ttl_steps: u64,
+    step_no: u64,
+    pub stats: SchedStats,
+    pub latency: LatencyStats,
+    pub ttft: LatencyStats,
+}
+
+impl Scheduler {
+    pub fn new(pool: KvCachePool, admission: AdmissionPolicy,
+               max_batch: usize, ttl_steps: u64) -> Scheduler {
+        assert!(max_batch > 0);
+        Scheduler {
+            pool,
+            admission,
+            table: SessionTable::new(),
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            stalled: Vec::new(),
+            max_batch,
+            ttl_steps,
+            step_no: 0,
+            stats: SchedStats::default(),
+            latency: LatencyStats::new(),
+            ttft: LatencyStats::new(),
+        }
+    }
+
+    /// Submit one request. Returns the session id when admitted to the
+    /// queue, `None` when admission rejected it (counted in stats).
+    pub fn submit(&mut self, client: usize, prompt: Vec<i32>,
+                  max_new: usize, seed: u64, temperature: f32)
+                  -> Option<u64> {
+        self.stats.submitted += 1;
+        match self.admission.decide(prompt.len(), max_new,
+                                    self.queue.len()) {
+            Decision::Reject(reason) => {
+                self.stats.rejected += 1;
+                match reason {
+                    RejectReason::QueueFull => {
+                        self.stats.rejected_queue_full += 1;
+                    }
+                    RejectReason::TooLong => {
+                        self.stats.rejected_too_long += 1;
+                    }
+                    RejectReason::Malformed => {
+                        self.stats.rejected_malformed += 1;
+                    }
+                }
+                None
+            }
+            Decision::Admit => {
+                self.stats.admitted += 1;
+                let id = self.table.create(
+                    client,
+                    prompt,
+                    max_new,
+                    SessionState::Queued,
+                    self.step_no,
+                    seed,
+                    temperature,
+                );
+                self.queue.push_back(id);
+                Some(id)
+            }
+        }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn step_no(&self) -> u64 {
+        self.step_no
+    }
+
+    /// No queued, active, or stalled work left.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+            && self.stalled.is_empty()
+    }
+
+    /// One decode step of the whole server. `stall_prob` injects
+    /// client-stall events (0.0 disables).
+    pub fn step(&mut self, engine: &Engine, rt: &mut Runtime,
+                workload_rng: &mut Rng, stall_prob: f64) -> Result<()> {
+        self.step_no += 1;
+
+        // 1. admit: fill free slots, up to the batch cap
+        while self.active.len() < self.max_batch {
+            let Some(&front) = self.queue.front() else { break };
+            let Some(slot) = self.pool.alloc() else { break };
+            self.queue.pop_front();
+            let (prompt, temperature) = {
+                let s = self.table.get_mut(front);
+                s.state = SessionState::Active;
+                s.slot = Some(slot);
+                (s.prompt.clone(), s.temperature)
+            };
+            let logits = match engine.prefill(
+                rt,
+                self.pool.slot_mut(slot),
+                &prompt,
+            ) {
+                Ok(l) => l,
+                Err(e) => {
+                    // don't leak the slot or strand the session on an
+                    // engine failure: evict, then surface the error
+                    self.fail_session(front);
+                    return Err(e);
+                }
+            };
+            let t_first = Instant::now();
+            let s = self.table.get_mut(front);
+            let tok = sample_token(&logits, temperature, &mut s.rng);
+            s.generated.push(tok);
+            s.first_token_at = Some(t_first);
+            s.last_active_step = self.step_no;
+            let ttft_ms =
+                t_first.duration_since(s.submitted_at).as_secs_f64() * 1e3;
+            self.ttft.record_ms(ttft_ms);
+            self.stats.prefill_tokens += prompt.len() as u64;
+            self.stats.generated_tokens += 1;
+            if s.is_finished() {
+                self.finish(front);
+            } else {
+                self.active.push(front);
+            }
+        }
+
+        // 2. stall injection (synthetic client disconnects)
+        if stall_prob > 0.0 {
+            let mut i = 0;
+            while i < self.active.len() {
+                if workload_rng.uniform() < stall_prob {
+                    let id = self.active.swap_remove(i);
+                    self.table.get_mut(id).state = SessionState::Stalled;
+                    self.stalled.push(id);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        // 3. decode one token for every active session
+        let batch: Vec<u64> = self.active.clone();
+        if !batch.is_empty() {
+            self.stats.busy_steps += 1;
+            self.stats.occupancy_sum += batch.len() as u64;
+            self.stats.max_occupancy =
+                self.stats.max_occupancy.max(batch.len());
+        }
+        for id in batch {
+            let s = self.table.get(id);
+            let slot = s.slot.expect("active session without slot");
+            let temperature = s.temperature;
+            let logits = match engine.decode(
+                rt,
+                self.pool.slot_mut(slot),
+                &s.prompt,
+                &s.generated,
+            ) {
+                Ok(l) => l,
+                Err(e) => {
+                    self.active.retain(|&x| x != id);
+                    self.fail_session(id);
+                    return Err(e);
+                }
+            };
+            let s = self.table.get_mut(id);
+            let tok = sample_token(&logits, temperature, &mut s.rng);
+            s.generated.push(tok);
+            s.last_active_step = self.step_no;
+            self.stats.generated_tokens += 1;
+        }
+
+        // 4. retire finished sessions
+        let done: Vec<u64> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|&id| self.table.get(id).is_finished())
+            .collect();
+        for id in done {
+            self.active.retain(|&x| x != id);
+            self.finish(id);
+        }
+
+        // 5. TTL eviction — only sessions in `stalled` can expire, so
+        // scan that list, not the whole table
+        let mut i = 0;
+        while i < self.stalled.len() {
+            let id = self.stalled[i];
+            let expired = self
+                .step_no
+                .saturating_sub(self.table.get(id).last_active_step)
+                > self.ttl_steps;
+            if !expired {
+                i += 1;
+                continue;
+            }
+            self.stalled.swap_remove(i);
+            let s = self.table.get_mut(id);
+            s.state = SessionState::Evicted;
+            s.finished_at = Some(Instant::now());
+            if let Some(slot) = s.slot.take() {
+                self.pool.release(slot);
+            }
+            self.stats.evicted += 1;
+        }
+        Ok(())
+    }
+
+    /// Terminal exit for a session whose engine step failed: release
+    /// its slot and mark it Evicted so waiting clients unblock and the
+    /// pool's capacity survives recoverable errors.
+    fn fail_session(&mut self, id: u64) {
+        let s = self.table.get_mut(id);
+        s.state = SessionState::Evicted;
+        s.finished_at = Some(Instant::now());
+        if let Some(slot) = s.slot.take() {
+            self.pool.release(slot);
+        }
+        self.stats.evicted += 1;
+    }
+
+    fn finish(&mut self, id: u64) {
+        let now = Instant::now();
+        let s = self.table.get_mut(id);
+        s.state = SessionState::Done;
+        s.finished_at = Some(now);
+        if let Some(slot) = s.slot.take() {
+            self.pool.release(slot);
+        }
+        self.latency.record_ms(
+            now.duration_since(s.submitted_at).as_secs_f64() * 1e3,
+        );
+        self.stats.completed += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, ParamStore};
+    use crate::quant::{BitConfig, QuantFormat};
+
+    fn setup(n_slots: usize, max_batch: usize, max_queue: usize)
+             -> (Runtime, Engine, Scheduler) {
+        let dir = std::env::temp_dir().join("qpruner_serve_sched_t");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 21);
+        let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+        let max_seq = 24;
+        let engine =
+            Engine::new(&mut rt, &store, &bits, max_seq).unwrap();
+        let pool = KvCachePool::with_slots(
+            &cfg,
+            engine.attn_dim(),
+            n_slots,
+            max_seq,
+            1e6,
+            n_slots as f64 * 1e6,
+        );
+        let sched = Scheduler::new(
+            pool,
+            AdmissionPolicy::new(max_queue, max_seq),
+            max_batch,
+            4,
+        );
+        (rt, engine, sched)
+    }
+
+    fn drain(rt: &mut Runtime, engine: &Engine, sched: &mut Scheduler,
+             max_steps: u64) {
+        let mut rng = Rng::new(99);
+        let mut guard = 0;
+        while !sched.idle() {
+            sched.step(engine, rt, &mut rng, 0.0).unwrap();
+            guard += 1;
+            assert!(guard < max_steps, "scheduler failed to drain");
+        }
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let (mut rt, engine, mut sched) = setup(2, 2, 8);
+        let id = sched
+            .submit(0, vec![3, 4, 5], 4, 7, 0.8)
+            .expect("admitted");
+        drain(&mut rt, &engine, &mut sched, 100);
+        let s = sched.table.get(id);
+        assert_eq!(s.state, SessionState::Done);
+        assert_eq!(s.generated.len(), 4);
+        assert_eq!(sched.stats.completed, 1);
+        assert_eq!(sched.pool.in_use(), 0, "slot leaked");
+        assert_eq!(sched.latency.len(), 1);
+        assert_eq!(sched.ttft.len(), 1);
+    }
+
+    #[test]
+    fn batch_grows_and_shrinks_continuously() {
+        let (mut rt, engine, mut sched) = setup(4, 4, 16);
+        // short and long requests interleaved: the long ones must keep
+        // decoding while short ones finish and new ones join
+        for i in 0..6 {
+            let max_new = if i % 2 == 0 { 2 } else { 10 };
+            sched.submit(i, vec![3, 4, 5], max_new, 7, 0.8).unwrap();
+        }
+        drain(&mut rt, &engine, &mut sched, 500);
+        assert_eq!(sched.stats.completed, 6);
+        assert!(sched.stats.max_occupancy > 1, "no batching happened");
+        assert!(sched.stats.mean_occupancy() > 1.0);
+        assert_eq!(sched.pool.in_use(), 0);
+        // pool stayed inside its slab
+        assert!(sched.pool.peak_in_use() <= sched.pool.capacity());
+    }
+
+    #[test]
+    fn queue_waits_for_slots() {
+        let (mut rt, engine, mut sched) = setup(1, 4, 16);
+        for i in 0..3 {
+            sched.submit(i, vec![3, 4], 3, 7, 0.0).unwrap();
+        }
+        // only one slot -> occupancy can never exceed 1
+        drain(&mut rt, &engine, &mut sched, 500);
+        assert_eq!(sched.stats.completed, 3);
+        assert_eq!(sched.stats.max_occupancy, 1);
+        assert_eq!(sched.pool.peak_in_use(), 1);
+    }
+
+    #[test]
+    fn stalled_sessions_are_ttl_evicted_and_slots_reclaimed() {
+        let (mut rt, engine, mut sched) = setup(1, 1, 16);
+        sched.submit(0, vec![3, 4], 8, 7, 0.0).unwrap();
+        sched.submit(1, vec![5, 6], 3, 7, 0.0).unwrap();
+        let mut rng = Rng::new(1);
+        // force-stall whoever is active after the first step
+        sched.step(&engine, &mut rt, &mut rng, 1.0).unwrap();
+        assert_eq!(sched.stalled.len(), 1);
+        let stalled_id = sched.stalled[0];
+        // ttl is 4: run enough steps for eviction + second session
+        let mut guard = 0;
+        while !sched.idle() {
+            sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+            guard += 1;
+            assert!(guard < 100);
+        }
+        assert_eq!(sched.table.get(stalled_id).state,
+                   SessionState::Evicted);
+        assert_eq!(sched.stats.evicted, 1);
+        assert_eq!(sched.stats.completed, 1);
+        assert_eq!(sched.pool.in_use(), 0, "evicted slot leaked");
+    }
+
+    #[test]
+    fn rejection_counted_when_queue_full() {
+        let (_rt, _engine, mut sched) = setup(1, 1, 2);
+        assert!(sched.submit(0, vec![3], 2, 7, 0.0).is_some());
+        assert!(sched.submit(1, vec![3], 2, 7, 0.0).is_some());
+        assert!(sched.submit(2, vec![3], 2, 7, 0.0).is_none());
+        assert_eq!(sched.stats.rejected, 1);
+        assert_eq!(sched.stats.rejected_queue_full, 1);
+        assert_eq!(sched.stats.submitted, 3);
+        assert!((sched.stats.rejection_rate() - 1.0 / 3.0).abs() < 1e-9);
+        // an oversized request lands in the too-long bucket
+        assert!(sched.submit(3, vec![3; 30], 30, 7, 0.0).is_none());
+        assert_eq!(sched.stats.rejected_too_long, 1);
+        assert_eq!(sched.stats.rejected, 2);
+    }
+}

@@ -1,0 +1,195 @@
+//! Per-session serving state and the session table with TTL eviction.
+//!
+//! A session is one client request: a prompt, a generation budget, and
+//! (once admitted) a KV-cache slot. Sessions move
+//! `Queued -> Active -> Done`, with one failure exit: `Evicted` (TTL —
+//! the client stalled or disconnected mid-stream and its slot was
+//! reclaimed). Requests rejected by admission control never become
+//! sessions; they are counted at the door (`scheduler::SchedStats`).
+
+use crate::rng::Rng;
+use std::collections::HashMap;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionState {
+    /// admitted to the wait queue, no KV slot yet
+    Queued,
+    /// holds a KV slot and participates in the decode batch
+    Active,
+    /// holds a KV slot but is not decoding (client stalled); TTL
+    /// eviction reclaims it
+    Stalled,
+    Done,
+    Evicted,
+}
+
+#[derive(Debug)]
+pub struct Session {
+    pub id: u64,
+    pub client: usize,
+    pub prompt: Vec<i32>,
+    pub generated: Vec<i32>,
+    pub max_new: usize,
+    pub slot: Option<usize>,
+    pub state: SessionState,
+    pub submitted_at: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+    /// scheduler step of the last decode progress (drives TTL)
+    pub last_active_step: u64,
+    /// per-session sampling stream (deterministic given the workload
+    /// seed and session id)
+    pub rng: Rng,
+    pub temperature: f32,
+}
+
+impl Session {
+    // The feed-back invariant (the newest element of `generated` is
+    // the one token not yet in the KV cache) is owned by
+    // `engine::Engine::decode`, which takes the prompt/generated
+    // slices directly — no concatenated history is materialized.
+
+    pub fn is_finished(&self) -> bool {
+        self.generated.len() >= self.max_new
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.state, SessionState::Done | SessionState::Evicted)
+    }
+}
+
+/// Owning table of all sessions, live and terminal.
+#[derive(Default)]
+pub struct SessionTable {
+    map: HashMap<u64, Session>,
+    next_id: u64,
+}
+
+impl SessionTable {
+    pub fn new() -> SessionTable {
+        SessionTable::default()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn create(
+        &mut self,
+        client: usize,
+        prompt: Vec<i32>,
+        max_new: usize,
+        state: SessionState,
+        step: u64,
+        seed: u64,
+        temperature: f32,
+    ) -> u64 {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_new > 0, "zero generation budget");
+        let id = self.next_id;
+        self.next_id += 1;
+        self.map.insert(
+            id,
+            Session {
+                id,
+                client,
+                prompt,
+                generated: Vec::with_capacity(max_new),
+                max_new,
+                slot: None,
+                state,
+                submitted_at: Instant::now(),
+                first_token_at: None,
+                finished_at: None,
+                last_active_step: step,
+                rng: Rng::new(seed ^ id.wrapping_mul(0x9E37_79B9)),
+                temperature,
+            },
+        );
+        id
+    }
+
+    pub fn get(&self, id: u64) -> &Session {
+        &self.map[&id]
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> &mut Session {
+        self.map.get_mut(&id).expect("unknown session id")
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn count_state(&self, s: SessionState) -> usize {
+        self.map.values().filter(|x| x.state == s).count()
+    }
+
+    /// Drop a terminal session. Long-running servers must reap
+    /// terminal sessions (the workload driver does, once the client
+    /// has observed the outcome) or the table grows without bound.
+    pub fn remove(&mut self, id: u64) -> Option<Session> {
+        debug_assert!(
+            self.map.get(&id).map(|s| s.is_terminal()).unwrap_or(true),
+            "removing a live session"
+        );
+        self.map.remove(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table_with_one(state: SessionState, step: u64)
+                      -> (SessionTable, u64) {
+        let mut t = SessionTable::new();
+        let id = t.create(0, vec![3, 4, 5], 4, state, step, 42, 0.0);
+        (t, id)
+    }
+
+    #[test]
+    fn lifecycle_positions() {
+        let (mut t, id) = table_with_one(SessionState::Queued, 0);
+        assert!(!t.get(id).is_finished());
+        let s = t.get_mut(id);
+        s.generated.push(9);
+        assert!(!s.is_finished());
+        s.generated.extend_from_slice(&[9, 9, 9]);
+        assert!(s.is_finished());
+    }
+
+    #[test]
+    fn ids_are_unique_and_rngs_distinct() {
+        let mut t = SessionTable::new();
+        let a = t.create(0, vec![3], 2, SessionState::Queued, 0, 7, 0.8);
+        let b = t.create(1, vec![3], 2, SessionState::Queued, 0, 7, 0.8);
+        assert_ne!(a, b);
+        let ra = t.get_mut(a).rng.next_u64();
+        let rb = t.get_mut(b).rng.next_u64();
+        assert_ne!(ra, rb, "per-session sampling streams must differ");
+    }
+
+    #[test]
+    fn remove_reaps_terminal_sessions() {
+        let mut t = SessionTable::new();
+        let id = t.create(0, vec![3], 2, SessionState::Queued, 0, 1, 0.0);
+        t.get_mut(id).state = SessionState::Done;
+        assert_eq!(t.len(), 1);
+        let s = t.remove(id).expect("session existed");
+        assert_eq!(s.id, id);
+        assert_eq!(t.len(), 0);
+        assert!(t.remove(id).is_none(), "double remove is a no-op");
+    }
+
+    #[test]
+    fn terminal_states() {
+        let (mut t, id) = table_with_one(SessionState::Queued, 0);
+        assert!(!t.get(id).is_terminal());
+        t.get_mut(id).state = SessionState::Evicted;
+        assert!(t.get(id).is_terminal());
+        assert_eq!(t.count_state(SessionState::Evicted), 1);
+    }
+}

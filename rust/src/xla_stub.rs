@@ -1,0 +1,308 @@
+//! Host-side stand-in for the `xla` crate (PJRT bindings), which is not
+//! vendored in this offline environment.
+//!
+//! The API mirrors the exact subset `runtime.rs` consumes so that the
+//! module can be swapped for the real crate by changing one `use` line
+//! (`use crate::xla_stub as xla;` -> `use xla;`). Behavior:
+//!
+//! * **Literal marshaling is fully functional** — typed host buffers
+//!   round-trip through `Literal` exactly as with the real bindings, so
+//!   every pure-host code path (and its tests) behaves identically.
+//! * **Compilation/execution of HLO artifacts returns a clear error** —
+//!   there is no XLA compiler here. Callers that probe
+//!   `Runtime::has_artifact` / handle `exec` errors degrade gracefully;
+//!   the serving engine falls back to its native decode path.
+
+use std::fmt;
+
+/// Error type; implements `std::error::Error` so `?` lifts it into
+/// `anyhow::Result`.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+const NO_BACKEND: &str = "PJRT/XLA backend is not linked in this build \
+     (the `xla` crate is not vendored offline); HLO artifacts cannot be \
+     compiled. Host paths and the native serving engine are unaffected. \
+     To enable artifact execution, swap `crate::xla_stub` for the real \
+     `xla` crate in runtime.rs";
+
+/// Element dtypes crossing the boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U8,
+    S8,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::U8 | ElementType::S8 => 1,
+        }
+    }
+}
+
+/// Host scalar types storable in a `Literal`.
+pub trait NativeType: Sized + Copy {
+    const TY: ElementType;
+    fn from_le_bytes(b: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        b[0]
+    }
+}
+
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        b[0] as i8
+    }
+}
+
+/// Array shape of a non-tuple literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Typed host value: dense array or tuple of literals.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Array {
+        ty: ElementType,
+        dims: Vec<i64>,
+        bytes: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let count: usize = dims.iter().product();
+        if count * ty.byte_size() != data.len() {
+            return Err(XlaError(format!(
+                "literal shape {dims:?} x {ty:?} wants {} bytes, got {}",
+                count * ty.byte_size(),
+                data.len()
+            )));
+        }
+        Ok(Literal::Array {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    pub fn scalar(v: f32) -> Literal {
+        Literal::Array {
+            ty: ElementType::F32,
+            dims: Vec::new(),
+            bytes: v.to_le_bytes().to_vec(),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, .. } => {
+                Ok(ArrayShape { dims: dims.clone() })
+            }
+            Literal::Tuple(_) => {
+                Err(XlaError("array_shape on tuple literal".into()))
+            }
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::Array { ty, bytes, .. } => bytes.len() / ty.byte_size(),
+            Literal::Tuple(xs) => xs.len(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { ty, bytes, .. } => {
+                if *ty != T::TY {
+                    return Err(XlaError(format!(
+                        "to_vec dtype mismatch: literal {ty:?}, requested \
+                         {:?}",
+                        T::TY
+                    )));
+                }
+                Ok(bytes
+                    .chunks_exact(ty.byte_size())
+                    .map(T::from_le_bytes)
+                    .collect())
+            }
+            Literal::Tuple(_) => {
+                Err(XlaError("to_vec on tuple literal".into()))
+            }
+        }
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(xs) => Ok(std::mem::take(xs)),
+            Literal::Array { .. } => {
+                Err(XlaError("decompose_tuple on array literal".into()))
+            }
+        }
+    }
+}
+
+/// Parsed HLO module (opaque; parsing requires the real backend).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(XlaError(NO_BACKEND.into()))
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError(NO_BACKEND.into()))
+    }
+}
+
+/// PJRT client handle. Creation succeeds (so environment probing like
+/// the `info` subcommand works); compilation reports the missing
+/// backend.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-stub (PJRT not linked)".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(XlaError(NO_BACKEND.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_typed_roundtrip() {
+        let data = [1i32, -2, 3, 4];
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[2, 2],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, -2, 3, 4]);
+        assert!(lit.to_vec::<f32>().is_err());
+        let dims: Vec<i64> = lit.array_shape().unwrap().dims().to_vec();
+        assert_eq!(dims, vec![2, 2]);
+    }
+
+    #[test]
+    fn literal_rejects_byte_mismatch() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &[0u8; 8],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes_once() {
+        let mut t = Literal::Tuple(vec![Literal::scalar(1.0),
+                                        Literal::scalar(2.0)]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn compile_reports_missing_backend() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto_err = HloModuleProto::from_text_file("x.hlo.txt");
+        assert!(proto_err.is_err());
+        let comp = XlaComputation { _priv: () };
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err}").contains("PJRT"));
+    }
+}

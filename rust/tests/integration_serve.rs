@@ -1,0 +1,221 @@
+//! End-to-end serving integration: the `bench-serve --scale smoke`
+//! acceptance path, memory-budget enforcement, load shedding, TTL
+//! eviction, and determinism. Runs entirely on the native decode
+//! backend — no AOT artifacts required.
+
+use qpruner::data::Language;
+use qpruner::memory;
+use qpruner::metrics::Metrics;
+use qpruner::model::{ModelConfig, ParamStore};
+use qpruner::quant::{BitConfig, QuantFormat};
+use qpruner::runtime::Runtime;
+use qpruner::serve::{run_workload, ServeOpts, ServeReport};
+
+fn runtime() -> Runtime {
+    let dir = std::env::temp_dir().join("qpruner_serve_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    Runtime::new(&dir).unwrap()
+}
+
+fn tiny_store(seed: u64) -> ParamStore {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    ParamStore::init(&cfg, seed)
+}
+
+fn nf4(store: &ParamStore) -> BitConfig {
+    BitConfig::uniform(store.cfg.n_layers, QuantFormat::Nf4)
+}
+
+fn run(store: &ParamStore, bits: &BitConfig, opts: &ServeOpts)
+       -> ServeReport {
+    let mut rt = runtime();
+    let lang = Language::new(store.cfg.vocab, 1);
+    let mut metrics = Metrics::new();
+    run_workload(&mut rt, store, bits, &lang, opts, &mut metrics)
+        .expect("workload must drain")
+}
+
+/// All requests are accounted for exactly once.
+fn assert_accounted(r: &ServeReport, requests: usize) {
+    assert_eq!(r.submitted, requests, "submitted != issued");
+    assert_eq!(
+        r.completed + r.rejected + r.evicted,
+        requests,
+        "requests lost or double-counted: completed {} rejected {} \
+         evicted {}",
+        r.completed,
+        r.rejected,
+        r.evicted
+    );
+}
+
+/// The modeled KV memory at peak may never exceed the configured
+/// budget (the acceptance criterion).
+fn assert_within_budget(r: &ServeReport) {
+    assert!(
+        r.kv_modeled_peak_bytes <= r.kv_modeled_budget_bytes + 1e-6,
+        "KV peak {:.3e} B exceeded budget {:.3e} B",
+        r.kv_modeled_peak_bytes,
+        r.kv_modeled_budget_bytes
+    );
+    assert!(r.kv_peak_sessions <= r.kv_capacity_sessions);
+}
+
+#[test]
+fn smoke_workload_completes_with_continuous_batching() {
+    // the bench-serve --scale smoke acceptance path: >= 200 requests
+    let store = tiny_store(3);
+    let bits = nf4(&store);
+    let opts = ServeOpts::smoke();
+    assert!(opts.requests >= 200);
+    let r = run(&store, &bits, &opts);
+
+    assert_accounted(&r, opts.requests);
+    assert_eq!(r.rejected, 0, "smoke defaults should never shed load");
+    assert_eq!(r.completed, opts.requests);
+
+    // continuous batching actually batched
+    assert!(
+        r.mean_occupancy > 1.0,
+        "batch occupancy {} never exceeded 1",
+        r.mean_occupancy
+    );
+    assert!(r.max_occupancy > 1 && r.max_occupancy <= opts.max_batch);
+
+    // the closed loop generated real tokens at a finite rate
+    assert!(r.generated_tokens >= opts.requests as u64 * 3);
+    assert!(r.tokens_per_sec() > 0.0);
+    assert!(r.wall_secs > 0.0);
+
+    // latency percentiles are present and ordered
+    assert_eq!(r.latency.len(), opts.requests);
+    let (p50, p95, p99) = (
+        r.latency.percentile_ms(50.0),
+        r.latency.percentile_ms(95.0),
+        r.latency.percentile_ms(99.0),
+    );
+    assert!(p50.is_finite() && p50 >= 0.0);
+    assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+    assert_eq!(r.ttft.len(), opts.requests);
+
+    assert_within_budget(&r);
+}
+
+#[test]
+fn kv_budget_is_enforced_under_pressure() {
+    // budget for exactly 2 concurrent sessions, 6 clients hammering
+    let store = tiny_store(4);
+    let bits = nf4(&store);
+    let arch = ModelConfig::paper_7b();
+    let mut opts = ServeOpts::smoke();
+    opts.clients = 6;
+    opts.requests = 60;
+    opts.max_batch = 6;
+    let per = memory::kv_bytes_per_session(&arch, 0, opts.max_seq);
+    opts.kv_budget_gb = Some(2.0 * per / 1e9 + 1e-12);
+    opts.max_queue = 64; // queue, don't shed
+    let r = run(&store, &bits, &opts);
+
+    assert_accounted(&r, 60);
+    assert_eq!(r.completed, 60);
+    assert_eq!(r.kv_capacity_sessions, 2, "budget sized the pool");
+    assert!(r.max_occupancy <= 2, "occupancy broke the memory budget");
+    assert_within_budget(&r);
+}
+
+#[test]
+fn overload_sheds_load_at_admission() {
+    let store = tiny_store(5);
+    let bits = nf4(&store);
+    let arch = ModelConfig::paper_7b();
+    let mut opts = ServeOpts::smoke();
+    opts.clients = 12;
+    opts.requests = 96;
+    opts.max_batch = 2;
+    let per = memory::kv_bytes_per_session(&arch, 0, opts.max_seq);
+    opts.kv_budget_gb = Some(1.0 * per / 1e9 + 1e-12);
+    opts.max_queue = 2; // tiny queue -> rejections under burst
+    let r = run(&store, &bits, &opts);
+
+    assert_accounted(&r, 96);
+    assert!(r.rejected > 0, "overload never shed load");
+    assert!(r.completed > 0, "server starved completely");
+    assert!(r.rejection_rate() > 0.0 && r.rejection_rate() < 1.0);
+    // all shedding here is queue pressure, not oversized requests
+    assert_eq!(r.rejected_by, (r.rejected, 0, 0));
+    assert!(r.busy_steps <= r.steps);
+    assert_within_budget(&r);
+}
+
+#[test]
+fn oversized_requests_are_shed_as_too_long() {
+    // max_seq tight enough that the larger sampled length combinations
+    // exceed a KV slot while the smallest still fit
+    let store = tiny_store(9);
+    let bits = nf4(&store);
+    let mut opts = ServeOpts::smoke();
+    opts.clients = 4;
+    opts.requests = 40;
+    opts.max_seq = 12; // prompt 4..10 + new 3..12 straddles this
+    let r = run(&store, &bits, &opts);
+
+    assert_accounted(&r, 40);
+    assert!(r.rejected_by.1 > 0, "no too-long rejections observed");
+    assert_eq!(r.rejected, r.rejected_by.0 + r.rejected_by.1);
+    assert!(r.completed > 0);
+    assert_within_budget(&r);
+}
+
+#[test]
+fn stalled_clients_are_ttl_evicted() {
+    let store = tiny_store(6);
+    let bits = nf4(&store);
+    let mut opts = ServeOpts::smoke();
+    opts.clients = 4;
+    opts.requests = 48;
+    opts.stall_prob = 0.05;
+    opts.ttl_steps = 4;
+    let r = run(&store, &bits, &opts);
+
+    assert_accounted(&r, 48);
+    assert!(r.evicted > 0, "stall injection produced no evictions");
+    // eviction reclaimed slots: later requests still completed
+    assert!(r.completed > r.evicted);
+    assert_within_budget(&r);
+}
+
+#[test]
+fn workload_is_deterministic_given_seed() {
+    let store = tiny_store(7);
+    let bits = nf4(&store);
+    let mut opts = ServeOpts::smoke();
+    opts.requests = 40;
+    opts.clients = 4;
+    opts.stall_prob = 0.02;
+    let a = run(&store, &bits, &opts);
+    let b = run(&store, &bits, &opts);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.rejected, b.rejected);
+    assert_eq!(a.evicted, b.evicted);
+    assert_eq!(a.generated_tokens, b.generated_tokens);
+    assert_eq!(a.steps, b.steps);
+}
+
+#[test]
+fn mixed_precision_configs_serve() {
+    let store = tiny_store(8);
+    let mut bits = nf4(&store);
+    bits.layers[0] = QuantFormat::Int8;
+    let mut opts = ServeOpts::smoke();
+    opts.requests = 24;
+    opts.clients = 4;
+    let r = run(&store, &bits, &opts);
+    assert_eq!(r.completed, 24);
+    assert_eq!(r.bits_short, bits.short());
+    // int8 layers shrink the inference footprint less than nf4, so the
+    // mixed config's derived budget sits between uniform nf4 and fp16
+    let b_mixed = qpruner::serve::resolve_kv_budget_gb(&opts, 0, &bits);
+    let b_nf4 =
+        qpruner::serve::resolve_kv_budget_gb(&opts, 0, &nf4(&store));
+    assert!(b_mixed <= b_nf4 + 1e-12);
+}
