@@ -1,28 +1,95 @@
 //! Serving-path benchmarks: closed-loop throughput/latency of the
-//! continuous-batching scheduler + native KV decode engine, plus the
-//! per-token decode hot path in isolation.
+//! continuous-batching scheduler + native KV decode engine, the decode
+//! hot path in isolation (batched GEMM vs. the per-session matvec
+//! baseline), and the KV-cache footprint at 32- vs 8-bit storage.
 //!
 //! Like the other benches this needs no artifacts — the engine falls
 //! back to the native backend. Output format:
 //!   BENCH <name> iters=<n> mean=<ms> p50=<ms> p95=<ms>
 //!   SERVE <name> tokens_per_sec=<..> p50=<..>ms p99=<..>ms occ=<..>
+//!   SERVE decode_b<B> gemm_tokens_per_sec=<..> baseline_...=<..>
+//!   SERVE kv_bits=<32|8> sessions=<..> host_slab_bytes=<..>
 
 #[path = "harness.rs"]
 mod harness;
 
 use qpruner::data::Language;
+use qpruner::memory;
 use qpruner::metrics::Metrics;
 use qpruner::model::{ModelConfig, ParamStore};
 use qpruner::quant::{BitConfig, QuantFormat};
 use qpruner::runtime::Runtime;
-use qpruner::serve::engine::Engine;
-use qpruner::serve::kv_cache::KvCachePool;
+use qpruner::serve::engine::{BatchReq, Engine};
+use qpruner::serve::kv_cache::{KvCachePool, KvPrecision};
 use qpruner::serve::{run_workload, ServeOpts};
+use std::time::Instant;
 
 fn runtime() -> Runtime {
     let dir = std::env::temp_dir().join("qpruner_serve_bench");
     std::fs::create_dir_all(&dir).unwrap();
     Runtime::new(&dir).unwrap()
+}
+
+/// Best-of-`rounds` decode throughput over `steps` tokens per session:
+/// each round re-prefills every slot, then times one decode window on
+/// either the batched GEMM path or the per-session matvec baseline.
+fn decode_tokens_per_sec(
+    engine: &Engine,
+    rt: &mut Runtime,
+    pool: &mut KvCachePool,
+    ids: &[usize],
+    prompt: &[i32],
+    steps: usize,
+    rounds: usize,
+    batched: bool,
+) -> f64 {
+    let mut best = 0.0f64;
+    for _ in 0..rounds {
+        for &id in ids {
+            pool.slot_mut(id).advance_to(0);
+            if batched {
+                engine.prefill(rt, pool.slot_mut(id), prompt).unwrap();
+            } else {
+                engine
+                    .prefill_reference(pool.slot_mut(id), prompt)
+                    .unwrap();
+            }
+        }
+        let t0 = Instant::now();
+        for step in 0..steps {
+            if batched {
+                let reqs: Vec<BatchReq> = ids
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &id)| BatchReq {
+                        slot: id,
+                        pos: prompt.len() + step,
+                        token: ((7 + i * 13 + step) % 200) as i32,
+                    })
+                    .collect();
+                engine
+                    .step_batch(pool, &reqs, |_, logits| {
+                        std::hint::black_box(logits);
+                    })
+                    .unwrap();
+            } else {
+                for (i, &id) in ids.iter().enumerate() {
+                    let logits = engine
+                        .decode_reference(
+                            pool.slot_mut(id),
+                            prompt.len() + step,
+                            ((7 + i * 13 + step) % 200) as i32,
+                        )
+                        .unwrap();
+                    std::hint::black_box(&logits);
+                }
+            }
+        }
+        let tps =
+            (steps * ids.len()) as f64 / t0.elapsed().as_secs_f64();
+        best = best.max(tps);
+    }
+    best
 }
 
 fn main() {
@@ -31,11 +98,12 @@ fn main() {
     let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
     let mut rt = runtime();
 
-    // 1. isolated decode hot path: one token through the KV engine
+    // 1. isolated prefill hot path: 8 tokens through the KV engine
     let max_seq = 28;
     let engine = Engine::new(&mut rt, &store, &bits, max_seq).unwrap();
     let mut pool = KvCachePool::with_slots(&cfg, engine.attn_dim(), 1,
-                                           max_seq, 1.0, 1.0);
+                                           max_seq, KvPrecision::F32,
+                                           1.0, 1.0);
     let slot = pool.alloc().unwrap();
     let prompt: Vec<i32> = (0..8).map(|i| 3 + i).collect();
     harness::bench("serve_prefill8_tiny", 3, 50, || {
@@ -45,15 +113,72 @@ fn main() {
         std::hint::black_box(logits);
     });
 
-    // 2. closed-loop workloads at increasing concurrency
-    for (name, clients, max_batch) in
-        [("c1_b1", 1usize, 1usize), ("c4_b4", 4, 4), ("c8_b8", 8, 8)]
+    // 2. decode hot path: batched GEMM vs per-session matvec baseline.
+    // The GEMM path must win at batch >= 4 (weight rows stream once
+    // per step instead of once per session, and the workspace removes
+    // the per-token allocations).
+    let short_prompt: Vec<i32> = (0..4).map(|i| 3 + i).collect();
+    let steps = max_seq - short_prompt.len() - 1;
+    for &batch in &[1usize, 4, 8] {
+        let mut p = KvCachePool::with_slots(
+            &cfg,
+            engine.attn_dim(),
+            batch,
+            max_seq,
+            KvPrecision::F32,
+            1.0,
+            batch as f64,
+        );
+        let ids: Vec<usize> =
+            (0..batch).map(|_| p.alloc().unwrap()).collect();
+        let base = decode_tokens_per_sec(&engine, &mut rt, &mut p,
+                                         &ids, &short_prompt, steps,
+                                         30, false);
+        let gemm = decode_tokens_per_sec(&engine, &mut rt, &mut p,
+                                         &ids, &short_prompt, steps,
+                                         30, true);
+        println!(
+            "SERVE decode_b{batch} gemm_tokens_per_sec={gemm:.0} \
+             baseline_tokens_per_sec={base:.0} speedup={:.2}x",
+            gemm / base.max(1e-9)
+        );
+    }
+
+    // 3. KV-cache precision footprint at a fixed modeled budget:
+    // sessions admitted and host slab bytes for --kv-bits 32 vs 8
+    let paper = ModelConfig::paper_7b();
+    let per32 = memory::kv_bytes_per_session(&paper, 0, max_seq);
+    let budget_gb = 8.0 * per32 / 1e9 + 1e-12;
+    for (kv_bits, prec) in
+        [(32u32, KvPrecision::F32), (8, KvPrecision::Int8)]
     {
+        let p = KvCachePool::for_budget(&cfg, engine.attn_dim(),
+                                        &paper, 0, max_seq, prec,
+                                        budget_gb, 1024)
+            .unwrap();
+        println!(
+            "SERVE kv_bits={kv_bits} sessions={} \
+             host_slab_bytes={} modeled_budget_gb={:.3}",
+            p.capacity(),
+            p.host_slab_bytes(),
+            p.modeled_budget_bytes() / 1e9
+        );
+    }
+
+    // 4. closed-loop workloads at increasing concurrency, plus the
+    // int8-KV variant at the highest concurrency
+    for (name, clients, max_batch, prec) in [
+        ("c1_b1", 1usize, 1usize, KvPrecision::F32),
+        ("c4_b4", 4, 4, KvPrecision::F32),
+        ("c8_b8", 8, 8, KvPrecision::F32),
+        ("c8_b8_kv8", 8, 8, KvPrecision::Int8),
+    ] {
         let mut opts = ServeOpts::smoke();
         opts.clients = clients;
         opts.max_batch = max_batch;
         opts.requests = 64;
         opts.seed = 7;
+        opts.kv_precision = prec;
         let lang = Language::new(cfg.vocab, 1);
         let mut metrics = Metrics::new();
         let report = run_workload(&mut rt, &store, &bits, &lang, &opts,
@@ -61,12 +186,14 @@ fn main() {
             .unwrap();
         println!(
             "SERVE {name} tokens_per_sec={:.1} p50={:.3}ms p99={:.3}ms \
-             occ={:.2} completed={}",
+             occ={:.2} completed={} kv_bits={} kv_slab_bytes={}",
             report.tokens_per_sec(),
             report.latency.percentile_ms(50.0),
             report.latency.percentile_ms(99.0),
             report.mean_occupancy,
-            report.completed
+            report.completed,
+            report.kv_bits,
+            report.kv_host_slab_bytes
         );
         assert_eq!(report.completed, 64);
     }

@@ -35,6 +35,36 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::new(&[m, n], out)
 }
 
+/// out[m, n] = x[m, k] @ w[n, k]^T with `w` row-major `[n, k]`
+/// (weights-as-rows, the projection-stack layout of `ParamStore`).
+///
+/// This is the serving decode hot path: it writes into a caller-owned
+/// buffer (`serve/workspace.rs` holds reusable scratch) so a decode
+/// step performs zero allocations. The weight-row-outer / batch-inner
+/// loop order streams each weight row exactly once per call and reuses
+/// it across every row of `x`, which is where the batched GEMM beats
+/// per-session matvecs for batch >= 2. Each (weight row, x row) dot
+/// accumulates left-to-right exactly like a per-row `matvec`, so the
+/// batched and per-session decode paths agree bitwise — the invariant
+/// `tests/parity_decode.rs` pins down.
+pub fn matmul_nt_into(x: &[f32], m: usize, k: usize, w: &[f32],
+                      n: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m * k, "x is not [m, k]");
+    assert_eq!(w.len(), n * k, "w is not [n, k]");
+    assert_eq!(out.len(), m * n, "out is not [m, n]");
+    for r in 0..n {
+        let wrow = &w[r * k..(r + 1) * k];
+        for i in 0..m {
+            let xrow = &x[i * k..(i + 1) * k];
+            let mut s = 0.0f32;
+            for (a, b) in wrow.iter().zip(xrow) {
+                s += a * b;
+            }
+            out[i * n + r] = s;
+        }
+    }
+}
+
 /// y = A[m,n] @ x[n]
 pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
     let (m, n) = (a.shape()[0], a.shape()[1]);
@@ -286,6 +316,31 @@ mod tests {
     fn matvec_known() {
         let a = Tensor::new(&[2, 3], vec![1., 0., 2., 0., 1., 0.]);
         assert_eq!(matvec(&a, &[1., 2., 3.]), vec![7., 2.]);
+    }
+
+    #[test]
+    fn matmul_nt_into_matches_per_row_matvec_bitwise() {
+        let mut rng = Rng::new(21);
+        let (m, k, n) = (5, 48, 17);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let mut out = vec![0.0f32; m * n];
+        matmul_nt_into(x.data(), m, k, w.data(), n, &mut out);
+        for i in 0..m {
+            let y = matvec(&w, x.row(i));
+            assert_eq!(&out[i * n..(i + 1) * n], &y[..],
+                       "row {i} diverged from matvec");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_into_known_values() {
+        // x [1,2] @ w [2,2]^T, w rows are the output neurons
+        let x = [1.0f32, 2.0];
+        let w = [3.0f32, 4.0, 5.0, 6.0];
+        let mut out = [0.0f32; 2];
+        matmul_nt_into(&x, 1, 2, &w, 2, &mut out);
+        assert_eq!(out, [11.0, 17.0]);
     }
 
     #[test]

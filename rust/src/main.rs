@@ -48,6 +48,8 @@ fn usage() -> ! {
            --seed N                     workload + sampling seed\n\
            --quant fp16|nf4|fp4|int8    uniform deployment precision\n\
            --bits STR                   per-layer precision, e.g. 8444\n\
+           --kv-bits 32|8               KV-cache precision (int8 KV\n\
+                                        admits ~3.8x the sessions)\n\
            --device-gb G --max-seq N --max-queue N --ttl-steps N\n\
            --prompt-len LO:HI --max-new LO:HI (request length ranges)\n\
            --stall-prob P --temperature T --memory-arch 7b|13b"
@@ -272,6 +274,17 @@ fn main() -> Result<()> {
             serve::check_memory_arch(&sopts.memory_arch)
                 .context("bad --memory-arch")?;
             sopts.max_seq = cfg.usize_or("max-seq", sopts.max_seq)?;
+            if let Some(v) = cfg.get("kv-bits") {
+                let bits: u32 =
+                    v.parse().context("bad --kv-bits (expected 32|8)")?;
+                sopts.kv_precision =
+                    qpruner::serve::kv_cache::KvPrecision::from_bits(
+                        bits,
+                    )
+                    .with_context(|| {
+                        format!("bad --kv-bits {bits} (expected 32|8)")
+                    })?;
+            }
             if let Some(v) = cfg.get("prompt-len") {
                 sopts.prompt_len =
                     parse_range(v).context("bad --prompt-len")?;
@@ -323,9 +336,10 @@ fn main() -> Result<()> {
                 serve::resolve_kv_budget_gb(&sopts, store.ps.rate_pct,
                                             &bits);
             println!(
-                "serving {} (rate {}%, bits {}) — kv budget {:.2} GB \
-                 on a {:.0} GB {} device",
-                store.cfg.name, store.ps.rate_pct, bits.short(), budget,
+                "serving {} (rate {}%, bits {}, kv {}-bit) — kv \
+                 budget {:.2} GB on a {:.0} GB {} device",
+                store.cfg.name, store.ps.rate_pct, bits.short(),
+                sopts.kv_precision.bits(), budget,
                 sopts.device_gb, sopts.memory_arch
             );
             let report = serve::run_workload(&mut rt, &store, &bits,

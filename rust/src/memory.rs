@@ -107,14 +107,28 @@ pub fn stretch_bits(bits: &BitConfig, to_layers: usize) -> BitConfig {
     BitConfig { layers }
 }
 
-/// fp16 KV-cache bytes one serving session pins at deployment scale:
-/// per layer, K and V of `[max_seq, attn_dim]` at 2 bytes/element,
-/// where attn_dim shrinks with the pruning rate.
-pub fn kv_bytes_per_session(cfg: &ModelConfig, rate_pct: u32,
-                            max_seq: usize) -> f64 {
+/// KV-cache bytes one serving session pins at deployment scale, for an
+/// arbitrary per-element storage cost: per layer, K and V of
+/// `[max_seq, attn_dim]` at `bytes_per_elem` bytes/element, where
+/// attn_dim shrinks with the pruning rate. `bytes_per_elem` comes from
+/// `serve::kv_cache::KvPrecision::modeled_bytes_per_elem()` — 4.0 for
+/// f32 KV, ~1.06 for int8 KV with per-block absmax scales (the scale
+/// overhead is amortized exactly like `QuantFormat::bits_per_param`).
+pub fn kv_bytes_per_session_at(cfg: &ModelConfig, rate_pct: u32,
+                               max_seq: usize, bytes_per_elem: f64)
+                               -> f64 {
     let ps = cfg.pruned(rate_pct);
     let attn_dim = ps.attn_dim(cfg);
-    (cfg.n_layers * 2 * max_seq * attn_dim) as f64 * 2.0
+    (cfg.n_layers * 2 * max_seq * attn_dim) as f64 * bytes_per_elem
+}
+
+/// KV bytes per session at the default serving representation (f32
+/// host slabs, `KvPrecision::F32` — 4 bytes/element). Pass `--kv-bits
+/// 8` / `KvPrecision::Int8` through [`kv_bytes_per_session_at`] for the
+/// quantized cache footprint.
+pub fn kv_bytes_per_session(cfg: &ModelConfig, rate_pct: u32,
+                            max_seq: usize) -> f64 {
+    kv_bytes_per_session_at(cfg, rate_pct, max_seq, 4.0)
 }
 
 /// KV-cache budget available to the serving layer: the device headroom
@@ -307,9 +321,21 @@ mod tests {
                 > kv_bytes_per_session(&cfg, 50, 256));
         assert!(kv_bytes_per_session(&cfg, 0, 512)
                 > kv_bytes_per_session(&cfg, 0, 256));
-        // 7B @ max_seq 256: 32 layers * 2 * 256 * 4096 * 2B = 128 MiB
+        // 7B @ max_seq 256: 32 layers * 2 * 256 * 4096 * 4B (f32)
         let b = kv_bytes_per_session(&cfg, 0, 256);
-        assert!((b - 32.0 * 2.0 * 256.0 * 4096.0 * 2.0).abs() < 1.0);
+        assert!((b - 32.0 * 2.0 * 256.0 * 4096.0 * 4.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn kv_bytes_scale_linearly_with_precision() {
+        let cfg = ModelConfig::paper_7b();
+        let f32b = kv_bytes_per_session_at(&cfg, 20, 256, 4.0);
+        // int8 KV with per-64-block f32 scales: 1 + 4/64 bytes/elem
+        let i8b = kv_bytes_per_session_at(&cfg, 20, 256,
+                                          1.0 + 4.0 / 64.0);
+        assert!(f32b / i8b >= 3.5, "int8 KV ratio {}", f32b / i8b);
+        // the default accessor is the f32 figure
+        assert_eq!(kv_bytes_per_session(&cfg, 20, 256), f32b);
     }
 
     #[test]

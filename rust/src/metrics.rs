@@ -32,6 +32,16 @@ impl Metrics {
         *self.counters.entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Set a counter to an externally-accumulated value (gauge
+    /// semantics, last write wins). Used for counters owned by another
+    /// component — e.g. the serving engine's scratch-buffer reuse
+    /// statistics (`serve.scratch_grows` / `serve.scratch_reuses`),
+    /// which the decode workspace tracks itself and the workload
+    /// driver snapshots at the end of a run.
+    pub fn set_counter(&mut self, name: &str, value: u64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
     pub fn timer(&self, name: &str) -> f64 {
         self.timers.get(name).copied().unwrap_or(0.0)
     }
@@ -183,6 +193,17 @@ mod tests {
         m.incr("n", 2);
         m.incr("n", 3);
         assert_eq!(m.counter("n"), 5);
+    }
+
+    #[test]
+    fn set_counter_overwrites() {
+        let mut m = Metrics::new();
+        m.set_counter("g", 10);
+        m.set_counter("g", 4);
+        assert_eq!(m.counter("g"), 4);
+        // and can seed a counter later incremented
+        m.incr("g", 1);
+        assert_eq!(m.counter("g"), 5);
     }
 
     #[test]

@@ -427,6 +427,38 @@ pub fn dequantize_uniform_k(q: &QuantizedMatrix) -> Tensor {
     dequantize(q) // same signed-byte * blockwise-scale layout
 }
 
+/// Quantize one f32 row to signed int8 codes with per-[`BLOCK`] absmax
+/// scales — the same numerics as `quantize(.., QuantFormat::Int8)` on a
+/// one-row matrix, but writing into caller-owned buffers so the int8
+/// KV-cache write path (`serve/kv_cache.rs`) never allocates.
+/// `codes.len() == row.len()`, `scales.len() == row.len().div_ceil(BLOCK)`.
+pub fn quantize_row_i8(row: &[f32], codes: &mut [i8], scales: &mut [f32]) {
+    let nb = row.len().div_ceil(BLOCK);
+    assert_eq!(codes.len(), row.len(), "codes buffer mismatch");
+    assert_eq!(scales.len(), nb, "scales buffer mismatch");
+    for b in 0..nb {
+        let lo = b * BLOCK;
+        let hi = (lo + BLOCK).min(row.len());
+        let absmax =
+            row[lo..hi].iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        scales[b] = scale;
+        for (c, &x) in codes[lo..hi].iter_mut().zip(&row[lo..hi]) {
+            *c = (x / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+}
+
+/// Inverse of [`quantize_row_i8`] into a caller-owned buffer (the int8
+/// KV-cache read path; zero allocations).
+pub fn dequantize_row_i8(codes: &[i8], scales: &[f32], out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len(), "out buffer mismatch");
+    debug_assert_eq!(scales.len(), codes.len().div_ceil(BLOCK));
+    for (j, (&c, o)) in codes.iter().zip(out.iter_mut()).enumerate() {
+        *o = c as f32 * scales[j / BLOCK];
+    }
+}
+
 /// RMS and max absolute round-trip error of a quantizer on a matrix.
 pub fn error_stats(w: &Tensor, back: &Tensor) -> (f64, f64) {
     let mut sq = 0.0f64;
@@ -689,6 +721,45 @@ mod tests {
             error_stats(&w, &dequantize_uniform_k(&q)).0
         };
         assert!(e_nf4 < e_u4, "nf4 {e_nf4} !< uniform-int4 {e_u4}");
+    }
+
+    #[test]
+    fn row_i8_matches_matrix_int8_quantizer() {
+        let mut rng = Rng::new(71);
+        // ragged final block: 200 = 3*64 + 8
+        let w = Tensor::randn(&[1, 200], 2.0, &mut rng);
+        let q = quantize(&w, QuantFormat::Int8);
+        let mut codes = vec![0i8; 200];
+        let mut scales = vec![0.0f32; 4];
+        quantize_row_i8(w.row(0), &mut codes, &mut scales);
+        assert_eq!(scales, q.scales);
+        let matrix_codes: Vec<i8> =
+            q.codes.iter().map(|&c| c as i8).collect();
+        assert_eq!(codes, matrix_codes);
+        let mut back = vec![0.0f32; 200];
+        dequantize_row_i8(&codes, &scales, &mut back);
+        assert_eq!(back, dequantize(&q).data());
+    }
+
+    #[test]
+    fn row_i8_roundtrip_within_bound() {
+        let mut rng = Rng::new(72);
+        for _ in 0..20 {
+            let n = 1 + rng.below(190);
+            let scale = rng.uniform_in(0.01, 5.0);
+            let w = Tensor::randn(&[1, n], scale, &mut rng);
+            let nb = n.div_ceil(BLOCK);
+            let mut codes = vec![0i8; n];
+            let mut scales = vec![0.0f32; nb];
+            quantize_row_i8(w.row(0), &mut codes, &mut scales);
+            let mut back = vec![0.0f32; n];
+            dequantize_row_i8(&codes, &scales, &mut back);
+            let bound = roundtrip_error_bound(&w, QuantFormat::Int8);
+            for (a, b) in w.row(0).iter().zip(&back) {
+                assert!((a - b).abs() <= bound,
+                        "row err {} > bound {bound}", (a - b).abs());
+            }
+        }
     }
 
     #[test]

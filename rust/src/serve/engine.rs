@@ -8,28 +8,56 @@
 //!   The AOT artifacts are fixed-shape full-sequence programs, so this
 //!   path re-forwards the padded prefix each step — correct, but
 //!   O(S^2) per token.
-//! * **Native** — incremental single-token decode against the slab KV
-//!   cache, numerically mirroring `python/compile/model.py` (RMSNorm
-//!   eps 1e-6, RoPE theta 10000 with half-split rotation, SwiGLU,
-//!   pre-norm residuals). This is the default whenever artifacts are
-//!   absent (e.g. CI) and the only incremental path.
+//! * **Native** — incremental decode against the slab KV cache,
+//!   numerically mirroring `python/compile/model.py` (RMSNorm eps
+//!   1e-6, RoPE theta 10000 with half-split rotation, SwiGLU, pre-norm
+//!   residuals). This is the default whenever artifacts are absent
+//!   (e.g. CI) and the only incremental path.
+//!
+//! The native path is *batched*: [`Engine::step_batch`] stacks every
+//! active session's hidden state into a `[batch, hidden]` matrix and
+//! runs one `linalg::matmul_nt_into` GEMM per projection per layer,
+//! with all activation scratch held in a reusable
+//! `workspace::DecodeWorkspace` — the per-token q/k/v/ctx/logit `Vec`
+//! churn is gone (single-session `prefill`/`decode` allocate nothing
+//! per token; a fused step's only allocation is the batch's
+//! slot-borrow `Vec` from `slots_mut_many`). The original per-session
+//! matvec implementation is kept
+//! verbatim as [`Engine::prefill_reference`] /
+//! [`Engine::decode_reference`] — the oracle `tests/parity_decode.rs`
+//! diffs the GEMM path against, and the baseline `bench_serve`
+//! measures speedups over.
 //!
 //! Weights are "deployed" once at engine construction: projections are
 //! simulated-quantized per the layer `BitConfig`
 //! (`lora::quantize_base`), exactly the paper's deployment numerics.
 
+use crate::linalg::matmul_nt_into;
 use crate::lora;
 use crate::model::{proj_index, ModelConfig, ParamStore, PrunedShapes};
 use crate::quant::BitConfig;
 use crate::rng::Rng;
 use crate::runtime::{Arg, Runtime};
-use crate::serve::kv_cache::KvSlot;
+use crate::serve::kv_cache::{KvCachePool, KvSlot};
+use crate::serve::workspace::DecodeWorkspace;
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
+use std::cell::RefCell;
 
 enum Backend {
     Native,
     Artifact { name: String, lora_zeros: Vec<Tensor> },
+}
+
+/// One session's slice of a batched decode step: feed `token` at
+/// position `pos` into the KV cache at pool slot `slot`. The newest
+/// generated token is the one not yet cached, so
+/// `pos == prompt_len + generated_len - 1` and `pos == slot.len`.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchReq {
+    pub slot: usize,
+    pub pos: usize,
+    pub token: i32,
 }
 
 pub struct Engine {
@@ -44,6 +72,11 @@ pub struct Engine {
     rope_sin: Vec<f32>,
     half: usize,
     max_seq: usize,
+    /// reusable activation scratch for the native batched path.
+    /// Interior mutability keeps the public decode API `&self` (the
+    /// engine is logically immutable — scratch is not observable
+    /// state); the engine is single-threaded so `RefCell` suffices.
+    ws: RefCell<DecodeWorkspace>,
 }
 
 impl Engine {
@@ -95,6 +128,14 @@ impl Engine {
                 rope_sin[p * half + i] = ang.sin() as f32;
             }
         }
+        let ws = DecodeWorkspace::new(
+            cfg.d_model,
+            ps.attn_dim(&cfg),
+            ps.d_ff_kept,
+            cfg.vocab,
+            ps.heads_kept,
+            max_seq,
+        );
         Ok(Engine {
             base,
             bits: bits.clone(),
@@ -105,6 +146,7 @@ impl Engine {
             rope_sin,
             half,
             max_seq,
+            ws: RefCell::new(ws),
         })
     }
 
@@ -131,9 +173,26 @@ impl Engine {
         }
     }
 
+    /// True when decode runs through the native batched path
+    /// ([`Engine::step_batch`]); the scheduler falls back to
+    /// per-session [`Engine::decode`] calls for the artifact backend,
+    /// which must re-forward full padded sequences anyway.
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, Backend::Native)
+    }
+
+    /// (growths, reuses) of the decode scratch since construction —
+    /// the allocator-churn telemetry surfaced as
+    /// `serve.scratch_grows` / `serve.scratch_reuses` in `Metrics`.
+    /// Growths happen only when a step's batch exceeds every earlier
+    /// batch; steady-state decode must be all reuses.
+    pub fn scratch_stats(&self) -> (u64, u64) {
+        self.ws.borrow().stats()
+    }
+
     /// Feed the whole prompt into a fresh slot; returns the logits
     /// after its last token (from which the first new token samples).
-    pub fn prefill(&self, rt: &mut Runtime, slot: &mut KvSlot,
+    pub fn prefill(&self, rt: &mut Runtime, mut slot: &mut KvSlot,
                    prompt: &[i32]) -> Result<Vec<f32>> {
         ensure!(!prompt.is_empty(), "prefill with empty prompt");
         ensure!(slot.len == 0, "prefill into a dirty slot");
@@ -141,11 +200,17 @@ impl Engine {
             Backend::Native => {
                 // only the last position's logits are consumed, so the
                 // [V, d] lm_head projection runs once, not per token
-                let mut hidden = Vec::new();
+                let mut ws = self.ws.borrow_mut();
                 for (pos, &tok) in prompt.iter().enumerate() {
-                    hidden = self.advance_hidden(slot, pos, tok)?;
+                    // slot id is a placeholder: advance_batch pairs
+                    // positionally and we pass the borrow directly
+                    let req = [BatchReq { slot: 0, pos, token: tok }];
+                    self.advance_batch(&req,
+                                       std::slice::from_mut(&mut slot),
+                                       &mut ws)?;
                 }
-                Ok(self.logits_from_hidden(&hidden))
+                self.logits_batch(1, &mut ws);
+                Ok(ws.logits[..self.cfg.vocab].to_vec())
             }
             Backend::Artifact { name, lora_zeros } => {
                 let out = self.forward_artifact(rt, name, lora_zeros,
@@ -164,7 +229,7 @@ impl Engine {
     /// history) keeps the native hot path allocation-free; only the
     /// artifact backend materializes the full sequence, which it must
     /// pad into a fixed-shape buffer anyway.
-    pub fn decode(&self, rt: &mut Runtime, slot: &mut KvSlot,
+    pub fn decode(&self, rt: &mut Runtime, mut slot: &mut KvSlot,
                   prompt: &[i32], generated: &[i32])
                   -> Result<Vec<f32>> {
         ensure!(!prompt.is_empty(), "decode with empty prompt");
@@ -175,12 +240,13 @@ impl Engine {
         });
         match &self.backend {
             Backend::Native => {
-                ensure!(
-                    pos == slot.len,
-                    "KV desync: pos {pos} vs cached {}",
-                    slot.len
-                );
-                self.decode_native(slot, pos, token)
+                let mut ws = self.ws.borrow_mut();
+                let req = [BatchReq { slot: 0, pos, token }];
+                self.advance_batch(&req,
+                                   std::slice::from_mut(&mut slot),
+                                   &mut ws)?;
+                self.logits_batch(1, &mut ws);
+                Ok(ws.logits[..self.cfg.vocab].to_vec())
             }
             Backend::Artifact { name, lora_zeros } => {
                 let history: Vec<i32> = prompt
@@ -197,25 +263,265 @@ impl Engine {
     }
 
     // ------------------------------------------------------------------
-    // native incremental path
+    // native batched path
     // ------------------------------------------------------------------
 
-    fn decode_native(&self, slot: &mut KvSlot, pos: usize, token: i32)
-                     -> Result<Vec<f32>> {
-        let h = self.advance_hidden(slot, pos, token)?;
+    /// One fused decode step over the whole active batch: per layer,
+    /// one GEMM per projection over the stacked `[batch, hidden]`
+    /// activations, then per-session attention against each KV slot
+    /// (lengths may be ragged — each request carries its own `pos`).
+    /// `on_logits(i, row)` is invoked once per request, in order, with
+    /// that session's next-token logits — a callback rather than a
+    /// return value so the logits never leave the reusable workspace.
+    /// The callback runs while the engine's internal scratch is
+    /// borrowed: it must not re-enter this engine (`decode`,
+    /// `prefill`, `step_batch`, `scratch_stats`), or the `RefCell`
+    /// will panic at runtime. Sample/record and return.
+    ///
+    /// All requests are validated before any cache mutation, so an
+    /// error leaves every slot untouched. Native backend only.
+    pub fn step_batch(
+        &self,
+        pool: &mut KvCachePool,
+        reqs: &[BatchReq],
+        mut on_logits: impl FnMut(usize, &[f32]),
+    ) -> Result<()> {
+        if reqs.is_empty() {
+            return Ok(());
+        }
+        ensure!(
+            self.is_native(),
+            "step_batch requires the native backend; drive the \
+             artifact backend through Engine::decode per session"
+        );
+        let mut ws = self.ws.borrow_mut();
+        ws.slot_ids.clear();
+        ws.slot_ids.extend(reqs.iter().map(|r| r.slot));
+        let mut slots = pool.slots_mut_many(&ws.slot_ids)?;
+        self.advance_batch(reqs, &mut slots, &mut ws)?;
+        self.logits_batch(reqs.len(), &mut ws);
+        let v = self.cfg.vocab;
+        for i in 0..reqs.len() {
+            on_logits(i, &ws.logits[i * v..(i + 1) * v]);
+        }
+        Ok(())
+    }
+
+    /// Run one token per session through all transformer blocks,
+    /// updating each KV cache; leaves the final hidden states
+    /// (pre final-norm) in `ws.hidden`. The lm_head projection lives
+    /// in `logits_batch` so prefill can skip it for all but the last
+    /// position.
+    ///
+    /// Pairing is positional: `reqs[i]` drives `slots[i]`, and
+    /// `BatchReq::slot` is *not* read here — only the public
+    /// `step_batch` resolves slot ids (via the pool); internal batch-1
+    /// callers pass a placeholder id with the slot borrow itself.
+    fn advance_batch(&self, reqs: &[BatchReq],
+                     slots: &mut [&mut KvSlot],
+                     ws: &mut DecodeWorkspace) -> Result<()> {
+        debug_assert_eq!(reqs.len(), slots.len());
+        let b = reqs.len();
+        // validate everything up front: no slot is written until every
+        // request is known to be in range and in sync
+        for (r, slot) in reqs.iter().zip(slots.iter()) {
+            ensure!(
+                r.pos < self.max_seq,
+                "position {} exceeds KV capacity {}",
+                r.pos,
+                self.max_seq
+            );
+            ensure!(
+                r.pos == slot.len,
+                "KV desync: pos {} vs cached {}",
+                r.pos,
+                slot.len
+            );
+        }
+        ws.ensure_batch(b);
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let a = self.attn_dim();
+        let f = self.ps.d_ff_kept;
+        let heads = self.ps.heads_kept;
+        let hd = cfg.head_dim();
+        let ms = self.max_seq;
+        let w = &self.base.weights;
+
+        for (i, r) in reqs.iter().enumerate() {
+            ws.hidden[i * d..(i + 1) * d]
+                .copy_from_slice(self.base.embed_row(r.token));
+        }
+        for l in 0..cfg.n_layers {
+            // ---- attention block ----
+            let gain = w[1].slab(l).1;
+            for i in 0..b {
+                rmsnorm(&ws.hidden[i * d..(i + 1) * d], gain,
+                        &mut ws.normed[i * d..(i + 1) * d]);
+            }
+            let wq = w[proj_index("wq")].slab(l).1;
+            matmul_nt_into(&ws.normed[..b * d], b, d, wq, a,
+                           &mut ws.q[..b * a]);
+            let wk = w[proj_index("wk")].slab(l).1;
+            matmul_nt_into(&ws.normed[..b * d], b, d, wk, a,
+                           &mut ws.k[..b * a]);
+            let wv = w[proj_index("wv")].slab(l).1;
+            matmul_nt_into(&ws.normed[..b * d], b, d, wv, a,
+                           &mut ws.v[..b * a]);
+            for (i, r) in reqs.iter().enumerate() {
+                self.rope_inplace(&mut ws.q[i * a..(i + 1) * a],
+                                  r.pos, heads, hd);
+                self.rope_inplace(&mut ws.k[i * a..(i + 1) * a],
+                                  r.pos, heads, hd);
+                slots[i].write(l, r.pos, &ws.k[i * a..(i + 1) * a],
+                               &ws.v[i * a..(i + 1) * a]);
+            }
+
+            // causal attention, per session (ragged lengths)
+            let inv = 1.0 / (hd as f32).sqrt();
+            for (i, r) in reqs.iter().enumerate() {
+                let slot = &*slots[i];
+                let n_t = r.pos + 1;
+                for t in 0..n_t {
+                    let krow = slot.k_row(l, t, &mut ws.kv_row);
+                    for h in 0..heads {
+                        let o = h * hd;
+                        let mut dot = 0.0f32;
+                        for (qi, ki) in ws.q[i * a + o..i * a + o + hd]
+                            .iter()
+                            .zip(&krow[o..o + hd])
+                        {
+                            dot += qi * ki;
+                        }
+                        ws.scores[h * ms + t] = dot * inv;
+                    }
+                }
+                for h in 0..heads {
+                    softmax_inplace(
+                        &mut ws.scores[h * ms..h * ms + n_t]);
+                }
+                ws.ctx[i * a..(i + 1) * a].fill(0.0);
+                for t in 0..n_t {
+                    let vrow = slot.v_row(l, t, &mut ws.kv_row);
+                    for h in 0..heads {
+                        let p = ws.scores[h * ms + t];
+                        let o = h * hd;
+                        for (c, &vi) in ws.ctx
+                            [i * a + o..i * a + o + hd]
+                            .iter_mut()
+                            .zip(&vrow[o..o + hd])
+                        {
+                            *c += p * vi;
+                        }
+                    }
+                }
+            }
+            let wo = w[proj_index("wo")].slab(l).1;
+            matmul_nt_into(&ws.ctx[..b * a], b, a, wo, d,
+                           &mut ws.proj_d[..b * d]);
+            for (hi, &oi) in ws.hidden[..b * d]
+                .iter_mut()
+                .zip(&ws.proj_d[..b * d])
+            {
+                *hi += oi;
+            }
+
+            // ---- SwiGLU MLP block ----
+            let gain2 = w[6].slab(l).1;
+            for i in 0..b {
+                rmsnorm(&ws.hidden[i * d..(i + 1) * d], gain2,
+                        &mut ws.normed[i * d..(i + 1) * d]);
+            }
+            let wg = w[proj_index("w_gate")].slab(l).1;
+            matmul_nt_into(&ws.normed[..b * d], b, d, wg, f,
+                           &mut ws.gate[..b * f]);
+            let wu = w[proj_index("w_up")].slab(l).1;
+            matmul_nt_into(&ws.normed[..b * d], b, d, wu, f,
+                           &mut ws.up[..b * f]);
+            for (g, &u) in ws.gate[..b * f]
+                .iter_mut()
+                .zip(&ws.up[..b * f])
+            {
+                let s = 1.0 / (1.0 + (-*g).exp()); // silu
+                *g = *g * s * u;
+            }
+            let wd = w[proj_index("w_down")].slab(l).1;
+            matmul_nt_into(&ws.gate[..b * f], b, f, wd, d,
+                           &mut ws.proj_d[..b * d]);
+            for (hi, &di) in ws.hidden[..b * d]
+                .iter_mut()
+                .zip(&ws.proj_d[..b * d])
+            {
+                *hi += di;
+            }
+        }
+        for (r, slot) in reqs.iter().zip(slots.iter_mut()) {
+            slot.advance_to(r.pos + 1);
+        }
+        Ok(())
+    }
+
+    /// Final RMSNorm + one `[batch, vocab]` lm_head GEMM over
+    /// `ws.hidden`, into `ws.logits`.
+    fn logits_batch(&self, b: usize, ws: &mut DecodeWorkspace) {
+        let d = self.cfg.d_model;
+        let v = self.cfg.vocab;
+        let w = &self.base.weights;
+        let gain = w[10].data();
+        for i in 0..b {
+            rmsnorm(&ws.hidden[i * d..(i + 1) * d], gain,
+                    &mut ws.normed[i * d..(i + 1) * d]);
+        }
+        matmul_nt_into(&ws.normed[..b * d], b, d, w[11].data(), v,
+                       &mut ws.logits[..b * v]);
+    }
+
+    // ------------------------------------------------------------------
+    // per-session reference path (parity oracle + bench baseline)
+    // ------------------------------------------------------------------
+
+    /// Per-session matvec prefill — the pre-GEMM implementation, kept
+    /// as the differential-testing oracle (`tests/parity_decode.rs`)
+    /// and the `bench_serve` baseline. Allocates per token; never on
+    /// the production path.
+    pub fn prefill_reference(&self, slot: &mut KvSlot,
+                             prompt: &[i32]) -> Result<Vec<f32>> {
+        ensure!(!prompt.is_empty(), "prefill with empty prompt");
+        ensure!(slot.len == 0, "prefill into a dirty slot");
+        let mut hidden = Vec::new();
+        for (pos, &tok) in prompt.iter().enumerate() {
+            hidden = self.advance_hidden_ref(slot, pos, tok)?;
+        }
+        Ok(self.logits_from_hidden(&hidden))
+    }
+
+    /// Per-session matvec decode of one token; see
+    /// [`Engine::prefill_reference`].
+    pub fn decode_reference(&self, slot: &mut KvSlot, pos: usize,
+                            token: i32) -> Result<Vec<f32>> {
+        ensure!(
+            pos == slot.len,
+            "KV desync: pos {pos} vs cached {}",
+            slot.len
+        );
+        let h = self.advance_hidden_ref(slot, pos, token)?;
         Ok(self.logits_from_hidden(&h))
     }
 
-    /// Run one token through all transformer blocks, updating the KV
-    /// cache; returns the final hidden state (pre final-norm). The
-    /// lm_head projection lives in `logits_from_hidden` so prefill can
-    /// skip it for all but the last position.
-    fn advance_hidden(&self, slot: &mut KvSlot, pos: usize, token: i32)
-                      -> Result<Vec<f32>> {
+    /// Run one token through all transformer blocks with per-row
+    /// matvecs, updating the KV cache; returns the final hidden state
+    /// (pre final-norm).
+    fn advance_hidden_ref(&self, slot: &mut KvSlot, pos: usize,
+                          token: i32) -> Result<Vec<f32>> {
         ensure!(
             pos < self.max_seq,
             "position {pos} exceeds KV capacity {}",
             self.max_seq
+        );
+        ensure!(
+            pos == slot.len,
+            "KV desync: pos {pos} vs cached {}",
+            slot.len
         );
         let cfg = &self.cfg;
         let d = cfg.d_model;
@@ -223,6 +529,7 @@ impl Engine {
         let heads = self.ps.heads_kept;
         let hd = cfg.head_dim();
         let w = &self.base.weights;
+        let mut scratch = vec![0.0f32; a];
 
         let mut h = self.base.embed_row(token).to_vec();
         let mut hn = vec![0.0f32; d];
@@ -242,7 +549,8 @@ impl Engine {
             for head in 0..heads {
                 let o = head * hd;
                 for (t, s) in scores.iter_mut().enumerate() {
-                    let kt = &slot.k_at(l, t)[o..o + hd];
+                    let kt =
+                        &slot.k_row(l, t, &mut scratch)[o..o + hd];
                     let mut dot = 0.0f32;
                     for (qi, ki) in q[o..o + hd].iter().zip(kt) {
                         dot += qi * ki;
@@ -251,7 +559,8 @@ impl Engine {
                 }
                 softmax_inplace(&mut scores);
                 for (t, &p) in scores.iter().enumerate() {
-                    let vt = &slot.v_at(l, t)[o..o + hd];
+                    let vt =
+                        &slot.v_row(l, t, &mut scratch)[o..o + hd];
                     for (c, &vi) in ctx[o..o + hd].iter_mut().zip(vt) {
                         *c += p * vi;
                     }
@@ -279,7 +588,7 @@ impl Engine {
         Ok(h)
     }
 
-    /// Final RMSNorm + lm_head `[V, d]` projection.
+    /// Final RMSNorm + lm_head `[V, d]` projection (reference path).
     fn logits_from_hidden(&self, h: &[f32]) -> Vec<f32> {
         let d = self.cfg.d_model;
         let w = &self.base.weights;
@@ -415,10 +724,11 @@ pub fn sample_token(logits: &[f32], temperature: f32, rng: &mut Rng)
 mod tests {
     use super::*;
     use crate::quant::QuantFormat;
-    use crate::serve::kv_cache::KvCachePool;
+    use crate::serve::kv_cache::{KvCachePool, KvPrecision};
 
-    fn setup(fmt: QuantFormat)
-             -> (Runtime, Engine, KvCachePool) {
+    fn setup_p(fmt: QuantFormat, n_slots: usize,
+               precision: KvPrecision)
+               -> (Runtime, Engine, KvCachePool) {
         let dir = std::env::temp_dir().join("qpruner_serve_engine_t");
         std::fs::create_dir_all(&dir).unwrap();
         let mut rt = Runtime::new(&dir).unwrap();
@@ -427,14 +737,21 @@ mod tests {
         let bits = BitConfig::uniform(cfg.n_layers, fmt);
         let eng = Engine::new(&mut rt, &store, &bits, 24).unwrap();
         let a = eng.attn_dim();
-        let pool = KvCachePool::with_slots(&cfg, a, 2, 24, 1.0, 2.0);
+        let pool = KvCachePool::with_slots(&cfg, a, n_slots, 24,
+                                           precision, 1.0,
+                                           n_slots as f64);
         (rt, eng, pool)
+    }
+
+    fn setup(fmt: QuantFormat) -> (Runtime, Engine, KvCachePool) {
+        setup_p(fmt, 2, KvPrecision::F32)
     }
 
     #[test]
     fn native_backend_without_artifacts() {
         let (_rt, eng, _pool) = setup(QuantFormat::Nf4);
         assert_eq!(eng.backend_label(), "native-kv");
+        assert!(eng.is_native());
     }
 
     #[test]
@@ -476,6 +793,124 @@ mod tests {
         for (x, y) in la.iter().zip(&lb) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn batched_step_matches_reference_decode() {
+        // two staggered sessions decoded in one fused step must equal
+        // the per-session matvec oracle exactly
+        let (mut rt, eng, mut pool) = setup(QuantFormat::Nf4);
+        let s0 = pool.alloc().unwrap();
+        let s1 = pool.alloc().unwrap();
+        let p0 = [3i32, 9, 14];
+        let p1 = [5i32, 7, 11, 2, 30];
+        eng.prefill(&mut rt, pool.slot_mut(s0), &p0).unwrap();
+        eng.prefill(&mut rt, pool.slot_mut(s1), &p1).unwrap();
+        // oracle sessions with identical state
+        let (_, _, mut ref_pool) =
+            setup_p(QuantFormat::Nf4, 2, KvPrecision::F32);
+        let r0 = ref_pool.alloc().unwrap();
+        let r1 = ref_pool.alloc().unwrap();
+        eng.prefill_reference(ref_pool.slot_mut(r0), &p0).unwrap();
+        eng.prefill_reference(ref_pool.slot_mut(r1), &p1).unwrap();
+        let want0 = eng
+            .decode_reference(ref_pool.slot_mut(r0), p0.len(), 17)
+            .unwrap();
+        let want1 = eng
+            .decode_reference(ref_pool.slot_mut(r1), p1.len(), 19)
+            .unwrap();
+        let reqs = [
+            BatchReq { slot: s0, pos: p0.len(), token: 17 },
+            BatchReq { slot: s1, pos: p1.len(), token: 19 },
+        ];
+        let mut got: Vec<Vec<f32>> = vec![Vec::new(); 2];
+        eng.step_batch(&mut pool, &reqs, |i, l| {
+            got[i] = l.to_vec();
+        })
+        .unwrap();
+        for (x, y) in got[0].iter().zip(&want0) {
+            assert!((x - y).abs() < 1e-4, "s0 {x} vs {y}");
+        }
+        for (x, y) in got[1].iter().zip(&want1) {
+            assert!((x - y).abs() < 1e-4, "s1 {x} vs {y}");
+        }
+        assert_eq!(pool.slot(s0).len, p0.len() + 1);
+        assert_eq!(pool.slot(s1).len, p1.len() + 1);
+    }
+
+    #[test]
+    fn step_batch_validates_before_mutating() {
+        let (mut rt, eng, mut pool) = setup(QuantFormat::Nf4);
+        let s0 = pool.alloc().unwrap();
+        let s1 = pool.alloc().unwrap();
+        eng.prefill(&mut rt, pool.slot_mut(s0), &[3, 4]).unwrap();
+        eng.prefill(&mut rt, pool.slot_mut(s1), &[5, 6, 7]).unwrap();
+        // second request desynced (pos != len): nothing may advance
+        let reqs = [
+            BatchReq { slot: s0, pos: 2, token: 9 },
+            BatchReq { slot: s1, pos: 9, token: 9 },
+        ];
+        assert!(eng
+            .step_batch(&mut pool, &reqs, |_, _| {})
+            .is_err());
+        assert_eq!(pool.slot(s0).len, 2, "slot mutated before validation");
+        assert_eq!(pool.slot(s1).len, 3);
+        // aliased slots are refused too
+        let dup = [
+            BatchReq { slot: s0, pos: 2, token: 9 },
+            BatchReq { slot: s0, pos: 2, token: 9 },
+        ];
+        assert!(eng.step_batch(&mut pool, &dup, |_, _| {}).is_err());
+    }
+
+    #[test]
+    fn int8_kv_decode_tracks_f32_kv() {
+        // quantized KV perturbs logits only within the blockwise-int8
+        // error budget: the two paths must stay strongly aligned
+        let (mut rt, eng, mut pf) =
+            setup_p(QuantFormat::Fp16, 1, KvPrecision::F32);
+        let (_, _, mut pi) =
+            setup_p(QuantFormat::Fp16, 1, KvPrecision::Int8);
+        let prompt = [3i32, 9, 14, 5, 7, 21];
+        let a = pf.alloc().unwrap();
+        let b = pi.alloc().unwrap();
+        let lf = eng.prefill(&mut rt, pf.slot_mut(a), &prompt).unwrap();
+        let li = eng.prefill(&mut rt, pi.slot_mut(b), &prompt).unwrap();
+        assert!(li.iter().all(|x| x.is_finite()));
+        let dot: f64 = lf
+            .iter()
+            .zip(&li)
+            .map(|(x, y)| (*x as f64) * (*y as f64))
+            .sum();
+        let nf: f64 = lf.iter().map(|x| (*x as f64).powi(2)).sum();
+        let ni: f64 = li.iter().map(|x| (*x as f64).powi(2)).sum();
+        let cos = dot / (nf.sqrt() * ni.sqrt()).max(1e-12);
+        assert!(cos > 0.95, "int8 KV drifted: cos {cos}");
+    }
+
+    #[test]
+    fn steady_state_decode_reuses_scratch() {
+        // the allocator-churn fix: after the first token sizes the
+        // workspace, every subsequent token at batch <= cap is a pure
+        // reuse — no per-token allocation even at batch = 1
+        let (mut rt, eng, mut pool) = setup(QuantFormat::Nf4);
+        let id = pool.alloc().unwrap();
+        let prompt = [3i32, 9, 14, 5];
+        eng.prefill(&mut rt, pool.slot_mut(id), &prompt).unwrap();
+        let (grows_after_prefill, _) = eng.scratch_stats();
+        assert_eq!(grows_after_prefill, 1,
+                   "prefill should size the batch-1 scratch once");
+        let mut pos = prompt.len();
+        for step in 0..10 {
+            let reqs =
+                [BatchReq { slot: id, pos, token: (step % 7) as i32 }];
+            eng.step_batch(&mut pool, &reqs, |_, _| {}).unwrap();
+            pos += 1;
+        }
+        let (grows, reuses) = eng.scratch_stats();
+        assert_eq!(grows, 1, "decode grew the scratch per token");
+        // prompt tokens after the first + 10 decode steps all reused
+        assert_eq!(reuses, (prompt.len() - 1 + 10) as u64);
     }
 
     #[test]

@@ -1,44 +1,146 @@
-//! Slab-allocated KV-cache pool for the serving subsystem.
+//! Slab-allocated KV-cache pool for the serving subsystem, with a
+//! selectable per-element precision.
 //!
 //! All session KV storage is preallocated up front as fixed-size slots
 //! (one per concurrently-resident session), so the decode path never
 //! allocates or frees *KV storage* and cannot exceed its memory budget
-//! by construction (the engine's per-token activation scratch is a
-//! separate concern — see the ROADMAP item on fused batched decode).
+//! by construction (the engine's activation scratch lives in
+//! `serve/workspace.rs` and is likewise reused across tokens).
 //! Capacity derives from the precision-aware accounting in
 //! `memory.rs`: the number of slots is what the modeled deployment
 //! device could pin inside `serve_kv_budget_gb` (device headroom left
 //! after the active `BitConfig`'s inference footprint), capped by
 //! what the scheduler can actually keep resident (its batch cap plus
 //! a stall allowance) and a hard host-side slab limit.
+//!
+//! Two KV representations ([`KvPrecision`], `--kv-bits` on the CLI):
+//!
+//! * **F32** — plain f32 rows (4 bytes/element), the exact numerics of
+//!   the incremental decode reference path;
+//! * **Int8** — signed int8 codes with per-[`quant::BLOCK`] f32 absmax
+//!   scales, reusing the blockwise quantizer from `quant.rs` (the same
+//!   scheme the paper applies to weights, extended to the KV cache the
+//!   way QLoRA-style double quantization trades precision for serving
+//!   memory). ~3.8x smaller than f32, so `for_budget` admits
+//!   proportionally more concurrent sessions.
 
 use crate::memory;
 use crate::model::ModelConfig;
-use anyhow::{bail, Result};
+use crate::quant::{self, BLOCK};
+use anyhow::{bail, ensure, Result};
 
-/// Per-session KV storage: K and V stacks laid out `[L, max_seq, A]`
-/// contiguously (f32 host precision; the *modeled* deployment precision
-/// is fp16 — see `memory::kv_bytes_per_session`).
+/// Storage precision of the KV cache (`--kv-bits {32,8}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvPrecision {
+    /// f32 rows, bit-exact with the reference decode path.
+    F32,
+    /// int8 codes + per-block absmax scales (`quant::quantize_row_i8`).
+    Int8,
+}
+
+impl KvPrecision {
+    /// Map the CLI `--kv-bits` value onto a precision.
+    pub fn from_bits(bits: u32) -> Option<KvPrecision> {
+        match bits {
+            32 => Some(KvPrecision::F32),
+            8 => Some(KvPrecision::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn bits(self) -> u32 {
+        match self {
+            KvPrecision::F32 => 32,
+            KvPrecision::Int8 => 8,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            KvPrecision::F32 => "f32",
+            KvPrecision::Int8 => "int8",
+        }
+    }
+
+    /// Modeled deployment bytes per KV element, including the
+    /// per-block f32 scale amortized over the block for Int8 (mirrors
+    /// `QuantFormat::bits_per_param`). Feeds
+    /// `memory::kv_bytes_per_session_at`.
+    pub fn modeled_bytes_per_elem(self) -> f64 {
+        match self {
+            KvPrecision::F32 => 4.0,
+            KvPrecision::Int8 => 1.0 + 4.0 / BLOCK as f64,
+        }
+    }
+}
+
+/// Backing storage of one slot, laid out `[L, max_seq, A]` contiguously
+/// for both K and V.
+#[derive(Debug)]
+enum KvStore {
+    F32 {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    Int8 {
+        k_codes: Vec<i8>,
+        v_codes: Vec<i8>,
+        /// per-(layer, position, block) absmax scales,
+        /// `[L, max_seq, blocks_per_row]`
+        k_scales: Vec<f32>,
+        v_scales: Vec<f32>,
+    },
+}
+
+/// Per-session KV storage: K and V stacks for every layer, position
+/// and attention channel, at the pool's [`KvPrecision`].
 #[derive(Debug)]
 pub struct KvSlot {
-    k: Vec<f32>,
-    v: Vec<f32>,
+    store: KvStore,
     /// tokens currently cached (positions `0..len` are valid)
     pub len: usize,
     n_layers: usize,
     max_seq: usize,
     attn_dim: usize,
+    /// quantization blocks per KV row (Int8 only, 1-based even for F32
+    /// so offsets stay uniform)
+    blocks_per_row: usize,
 }
 
 impl KvSlot {
-    fn new(n_layers: usize, max_seq: usize, attn_dim: usize) -> KvSlot {
+    fn new(n_layers: usize, max_seq: usize, attn_dim: usize,
+           precision: KvPrecision) -> KvSlot {
+        let n = n_layers * max_seq * attn_dim;
+        let blocks_per_row = attn_dim.div_ceil(BLOCK);
+        let store = match precision {
+            KvPrecision::F32 => KvStore::F32 {
+                k: vec![0.0; n],
+                v: vec![0.0; n],
+            },
+            KvPrecision::Int8 => {
+                let ns = n_layers * max_seq * blocks_per_row;
+                KvStore::Int8 {
+                    k_codes: vec![0; n],
+                    v_codes: vec![0; n],
+                    k_scales: vec![0.0; ns],
+                    v_scales: vec![0.0; ns],
+                }
+            }
+        };
         KvSlot {
-            k: vec![0.0; n_layers * max_seq * attn_dim],
-            v: vec![0.0; n_layers * max_seq * attn_dim],
+            store,
             len: 0,
             n_layers,
             max_seq,
             attn_dim,
+            blocks_per_row,
+        }
+    }
+
+    pub fn precision(&self) -> KvPrecision {
+        match self.store {
+            KvStore::F32 { .. } => KvPrecision::F32,
+            KvStore::Int8 { .. } => KvPrecision::Int8,
         }
     }
 
@@ -48,15 +150,35 @@ impl KvSlot {
         (layer * self.max_seq + t) * self.attn_dim
     }
 
-    /// Write the K/V rows for position `t` of `layer`. The caller
-    /// advances `len` once per token via [`KvSlot::advance_to`].
+    #[inline]
+    fn scale_off(&self, layer: usize, t: usize) -> usize {
+        (layer * self.max_seq + t) * self.blocks_per_row
+    }
+
+    /// Write the K/V rows for position `t` of `layer` (quantizing when
+    /// the slot is Int8). The caller advances `len` once per token via
+    /// [`KvSlot::advance_to`].
     pub fn write(&mut self, layer: usize, t: usize, k_row: &[f32],
                  v_row: &[f32]) {
         assert!(t < self.max_seq, "kv overflow: pos {t} >= {}", self.max_seq);
         assert_eq!(k_row.len(), self.attn_dim);
+        assert_eq!(v_row.len(), self.attn_dim);
         let o = self.off(layer, t);
-        self.k[o..o + self.attn_dim].copy_from_slice(k_row);
-        self.v[o..o + self.attn_dim].copy_from_slice(v_row);
+        let so = self.scale_off(layer, t);
+        let a = self.attn_dim;
+        let nb = self.blocks_per_row;
+        match &mut self.store {
+            KvStore::F32 { k, v } => {
+                k[o..o + a].copy_from_slice(k_row);
+                v[o..o + a].copy_from_slice(v_row);
+            }
+            KvStore::Int8 { k_codes, v_codes, k_scales, v_scales } => {
+                quant::quantize_row_i8(k_row, &mut k_codes[o..o + a],
+                                       &mut k_scales[so..so + nb]);
+                quant::quantize_row_i8(v_row, &mut v_codes[o..o + a],
+                                       &mut v_scales[so..so + nb]);
+            }
+        }
     }
 
     pub fn advance_to(&mut self, len: usize) {
@@ -64,20 +186,79 @@ impl KvSlot {
         self.len = len;
     }
 
+    /// K row at (layer, t) as f32: a direct slice for F32 slots, a
+    /// dequantization into `scratch` for Int8 (scratch must hold at
+    /// least `attn_dim` values). The returned slice borrows whichever
+    /// storage backs it, so the engine's hot loop never copies on the
+    /// f32 path and never allocates on either.
+    pub fn k_row<'a>(&'a self, layer: usize, t: usize,
+                     scratch: &'a mut [f32]) -> &'a [f32] {
+        let o = self.off(layer, t);
+        let a = self.attn_dim;
+        match &self.store {
+            KvStore::F32 { k, .. } => &k[o..o + a],
+            KvStore::Int8 { k_codes, k_scales, .. } => {
+                let so = self.scale_off(layer, t);
+                quant::dequantize_row_i8(
+                    &k_codes[o..o + a],
+                    &k_scales[so..so + self.blocks_per_row],
+                    &mut scratch[..a],
+                );
+                &scratch[..a]
+            }
+        }
+    }
+
+    /// V row at (layer, t); see [`KvSlot::k_row`].
+    pub fn v_row<'a>(&'a self, layer: usize, t: usize,
+                     scratch: &'a mut [f32]) -> &'a [f32] {
+        let o = self.off(layer, t);
+        let a = self.attn_dim;
+        match &self.store {
+            KvStore::F32 { v, .. } => &v[o..o + a],
+            KvStore::Int8 { v_codes, v_scales, .. } => {
+                let so = self.scale_off(layer, t);
+                quant::dequantize_row_i8(
+                    &v_codes[o..o + a],
+                    &v_scales[so..so + self.blocks_per_row],
+                    &mut scratch[..a],
+                );
+                &scratch[..a]
+            }
+        }
+    }
+
+    /// Borrow the raw f32 K row (F32 slots only — Int8 rows have no
+    /// f32 representation to borrow; use [`KvSlot::k_row`]).
     #[inline]
     pub fn k_at(&self, layer: usize, t: usize) -> &[f32] {
         let o = self.off(layer, t);
-        &self.k[o..o + self.attn_dim]
+        match &self.store {
+            KvStore::F32 { k, .. } => &k[o..o + self.attn_dim],
+            KvStore::Int8 { .. } => {
+                panic!("k_at on an int8 slot; use k_row with scratch")
+            }
+        }
     }
 
+    /// Borrow the raw f32 V row (F32 slots only); see [`KvSlot::k_at`].
     #[inline]
     pub fn v_at(&self, layer: usize, t: usize) -> &[f32] {
         let o = self.off(layer, t);
-        &self.v[o..o + self.attn_dim]
+        match &self.store {
+            KvStore::F32 { v, .. } => &v[o..o + self.attn_dim],
+            KvStore::Int8 { .. } => {
+                panic!("v_at on an int8 slot; use v_row with scratch")
+            }
+        }
     }
 
     pub fn max_seq(&self) -> usize {
         self.max_seq
+    }
+
+    pub fn attn_dim(&self) -> usize {
+        self.attn_dim
     }
 
     fn reset(&mut self) {
@@ -86,7 +267,16 @@ impl KvSlot {
 
     /// Host bytes of this slot's backing storage.
     pub fn host_bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+        match &self.store {
+            KvStore::F32 { k, v } => {
+                (k.len() + v.len()) * std::mem::size_of::<f32>()
+            }
+            KvStore::Int8 { k_codes, v_codes, k_scales, v_scales } => {
+                k_codes.len() + v_codes.len()
+                    + (k_scales.len() + v_scales.len())
+                        * std::mem::size_of::<f32>()
+            }
+        }
     }
 }
 
@@ -94,7 +284,13 @@ impl KvSlot {
 pub struct KvCachePool {
     slots: Vec<KvSlot>,
     free: Vec<usize>,
-    /// modeled deployment bytes one session pins (fp16, paper arch)
+    precision: KvPrecision,
+    /// reusable aliasing bitmap for `slots_mut_many` (cleared per
+    /// call; kept here so the batched decode step allocates nothing
+    /// for the check)
+    seen: Vec<bool>,
+    /// modeled deployment bytes one session pins (paper arch, at the
+    /// pool's KV precision)
     modeled_bytes_per_session: f64,
     /// modeled deployment budget in bytes
     modeled_budget_bytes: f64,
@@ -109,30 +305,38 @@ impl KvCachePool {
     /// Size the pool from the modeled deployment: `budget_gb` of KV
     /// headroom on the target device (see `memory::serve_kv_budget_gb`)
     /// divided by the per-session KV bytes of the paper-scale
-    /// architecture at this pruning rate. Host slots are shaped by the
-    /// *served* (simulator) model config and capped at
+    /// architecture at this pruning rate *and KV precision* — int8 KV
+    /// packs ~3.8x more sessions into the same budget. Host slots are
+    /// shaped by the *served* (simulator) model config and capped at
     /// `host_slot_cap` — the scheduler's reachable concurrency — so a
     /// huge modeled headroom doesn't preallocate megabytes of slab no
     /// session can ever touch.
+    #[allow(clippy::too_many_arguments)]
     pub fn for_budget(
         host_cfg: &ModelConfig,
         host_attn_dim: usize,
         paper_cfg: &ModelConfig,
         rate_pct: u32,
         max_seq: usize,
+        precision: KvPrecision,
         budget_gb: f64,
         host_slot_cap: usize,
     ) -> Result<KvCachePool> {
-        let per_session =
-            memory::kv_bytes_per_session(paper_cfg, rate_pct, max_seq);
+        let per_session = memory::kv_bytes_per_session_at(
+            paper_cfg,
+            rate_pct,
+            max_seq,
+            precision.modeled_bytes_per_elem(),
+        );
         let budget_bytes = budget_gb * 1e9;
         let n = (budget_bytes / per_session).floor() as usize;
         if n == 0 {
             bail!(
                 "KV budget {budget_gb:.3} GB holds zero sessions \
-                 ({:.1} MB each at max_seq {max_seq}) — raise \
-                 --kv-budget-gb or lower --max-seq",
-                per_session / 1e6
+                 ({:.1} MB each at max_seq {max_seq}, {} KV) — raise \
+                 --kv-budget-gb, lower --max-seq, or drop --kv-bits",
+                per_session / 1e6,
+                precision.label()
             );
         }
         Ok(Self::with_slots(
@@ -140,6 +344,7 @@ impl KvCachePool {
             host_attn_dim,
             n.min(MAX_HOST_SLOTS).min(host_slot_cap.max(1)),
             max_seq,
+            precision,
             per_session,
             budget_bytes,
         ))
@@ -151,20 +356,30 @@ impl KvCachePool {
         host_attn_dim: usize,
         n_slots: usize,
         max_seq: usize,
+        precision: KvPrecision,
         modeled_bytes_per_session: f64,
         modeled_budget_bytes: f64,
     ) -> KvCachePool {
         assert!(n_slots > 0);
         let slots = (0..n_slots)
-            .map(|_| KvSlot::new(host_cfg.n_layers, max_seq, host_attn_dim))
+            .map(|_| {
+                KvSlot::new(host_cfg.n_layers, max_seq, host_attn_dim,
+                            precision)
+            })
             .collect();
         KvCachePool {
             slots,
             free: (0..n_slots).rev().collect(),
+            precision,
+            seen: vec![false; n_slots],
             modeled_bytes_per_session,
             modeled_budget_bytes,
             peak_in_use: 0,
         }
+    }
+
+    pub fn precision(&self) -> KvPrecision {
+        self.precision
     }
 
     pub fn capacity(&self) -> usize {
@@ -216,17 +431,59 @@ impl KvCachePool {
     pub fn slot_mut(&mut self, id: usize) -> &mut KvSlot {
         &mut self.slots[id]
     }
+
+    /// Mutably borrow several distinct slots at once — the batched
+    /// decode step (`engine::Engine::step_batch`) updates every active
+    /// session's cache within one fused pass. Errors if any id is out
+    /// of range or repeated (repetition would alias `&mut`s). The
+    /// returned `Vec` of borrows is the one per-step allocation on the
+    /// decode hot path (a reusable buffer of references is not
+    /// expressible — its lifetime changes per call); the aliasing
+    /// bitmap is pool-owned scratch.
+    pub fn slots_mut_many<'a>(&'a mut self, ids: &[usize])
+                              -> Result<Vec<&'a mut KvSlot>> {
+        let n = self.slots.len();
+        self.seen.fill(false);
+        for &id in ids {
+            ensure!(id < n, "slot {id} out of range ({n} slots)");
+            ensure!(!self.seen[id],
+                    "slot {id} requested twice in one batch");
+            self.seen[id] = true;
+        }
+        // validation complete: from here on, nothing touches `self`
+        // except through the raw pointer below
+        let base = self.slots.as_mut_ptr();
+        let mut out: Vec<&'a mut KvSlot> = Vec::with_capacity(ids.len());
+        for &id in ids {
+            // SAFETY: `id < n` keeps the pointer in-bounds of the
+            // `slots` allocation, and the `seen` pass above guarantees
+            // ids are pairwise distinct, so each `&mut` refers to a
+            // different element and none alias. No other access to
+            // `self` interleaves while these borrows exist, and they
+            // all carry lifetime 'a tied to `&'a mut self`, so the Vec
+            // cannot outlive (or race with) the pool borrow.
+            out.push(unsafe { &mut *base.add(id) });
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::quant::{BitConfig, QuantFormat};
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
 
-    fn pool(n: usize) -> KvCachePool {
+    fn pool_p(n: usize, precision: KvPrecision) -> KvCachePool {
         let cfg = ModelConfig::preset("tiny").unwrap();
         let a = cfg.pruned(0).attn_dim(&cfg);
-        KvCachePool::with_slots(&cfg, a, n, 16, 1e6, n as f64 * 1e6)
+        KvCachePool::with_slots(&cfg, a, n, 16, precision, 1e6,
+                                n as f64 * 1e6)
+    }
+
+    fn pool(n: usize) -> KvCachePool {
+        pool_p(n, KvPrecision::F32)
     }
 
     #[test]
@@ -270,6 +527,102 @@ mod tests {
         assert_eq!(p.slot(id).v_at(1, 3), &v[..]);
         // other positions untouched
         assert!(p.slot(id).k_at(1, 2).iter().all(|&x| x == 0.0));
+        // the precision-generic accessors agree with the raw slices
+        let mut scratch = vec![0.0f32; a];
+        assert_eq!(p.slot(id).k_row(1, 3, &mut scratch), &k[..]);
+        assert_eq!(p.slot(id).v_row(1, 3, &mut scratch), &v[..]);
+    }
+
+    #[test]
+    fn int8_roundtrip_within_quant_bound() {
+        // property sweep: random K/V rows must come back within the
+        // analytic bound `quant::roundtrip_error_bound` predicts for
+        // blockwise int8 absmax quantization
+        let mut p = pool_p(1, KvPrecision::Int8);
+        let id = p.alloc().unwrap();
+        let a = p.slot(id).attn_dim;
+        let mut rng = Rng::new(321);
+        let mut scratch = vec![0.0f32; a];
+        for trial in 0..40 {
+            let layer = rng.below(2);
+            let t = rng.below(16);
+            let scale = rng.uniform_in(0.01, 8.0);
+            let k = Tensor::randn(&[1, a], scale, &mut rng);
+            let v = Tensor::randn(&[1, a], scale, &mut rng);
+            p.slot_mut(id).write(layer, t, k.row(0), v.row(0));
+            let bk = quant::roundtrip_error_bound(&k, QuantFormat::Int8);
+            let bv = quant::roundtrip_error_bound(&v, QuantFormat::Int8);
+            let kr = p.slot(id).k_row(layer, t, &mut scratch).to_vec();
+            for (x, y) in k.row(0).iter().zip(&kr) {
+                assert!((x - y).abs() <= bk,
+                        "trial {trial}: k err {} > {bk}", (x - y).abs());
+            }
+            let vr = p.slot(id).v_row(layer, t, &mut scratch).to_vec();
+            for (x, y) in v.row(0).iter().zip(&vr) {
+                assert!((x - y).abs() <= bv,
+                        "trial {trial}: v err {} > {bv}", (x - y).abs());
+            }
+        }
+    }
+
+    #[test]
+    fn int8_slab_at_least_3p5x_smaller_than_f32() {
+        let pf = pool_p(4, KvPrecision::F32);
+        let pi = pool_p(4, KvPrecision::Int8);
+        assert_eq!(pf.capacity(), pi.capacity());
+        let ratio =
+            pf.host_slab_bytes() as f64 / pi.host_slab_bytes() as f64;
+        assert!(ratio >= 3.5, "int8 KV slab only {ratio:.2}x smaller");
+        // per-slot view agrees
+        let rs = pf.slot(0).host_bytes() as f64
+            / pi.slot(0).host_bytes() as f64;
+        assert!(rs >= 3.5, "per-slot ratio {rs:.2}");
+    }
+
+    #[test]
+    fn int8_budget_admits_at_least_2x_sessions() {
+        // the --kv-bits acceptance criterion: same modeled budget,
+        // >= 2x the concurrent sessions at int8 (the analytic ratio is
+        // ~3.76x; MAX_HOST_SLOTS and the slot cap must not mask it)
+        let host = ModelConfig::preset("tiny").unwrap();
+        let a = host.pruned(0).attn_dim(&host);
+        let paper = ModelConfig::paper_7b();
+        let per_f32 = memory::kv_bytes_per_session(&paper, 20, 64);
+        let gb = 6.0 * per_f32 / 1e9 + 1e-12;
+        let pf = KvCachePool::for_budget(&host, a, &paper, 20, 64,
+                                         KvPrecision::F32, gb, 512)
+            .unwrap();
+        let pi = KvCachePool::for_budget(&host, a, &paper, 20, 64,
+                                         KvPrecision::Int8, gb, 512)
+            .unwrap();
+        assert_eq!(pf.capacity(), 6);
+        assert!(
+            pi.capacity() >= 2 * pf.capacity(),
+            "int8 admitted {} vs f32 {}",
+            pi.capacity(),
+            pf.capacity()
+        );
+    }
+
+    #[test]
+    fn slots_mut_many_rejects_aliasing_and_oob() {
+        let mut p = pool(3);
+        {
+            let slots = p.slots_mut_many(&[2, 0]).unwrap();
+            assert_eq!(slots.len(), 2);
+        }
+        assert!(p.slots_mut_many(&[0, 0]).is_err(), "aliased ids");
+        assert!(p.slots_mut_many(&[3]).is_err(), "out of range");
+        // disjoint mutation through the batch view sticks
+        let a = p.slot(0).attn_dim;
+        let row = vec![1.5f32; a];
+        {
+            let mut slots = p.slots_mut_many(&[1, 2]).unwrap();
+            slots[0].write(0, 0, &row, &row);
+            slots[1].write(0, 1, &row, &row);
+        }
+        assert_eq!(p.slot(1).k_at(0, 0), &row[..]);
+        assert_eq!(p.slot(2).v_at(0, 1), &row[..]);
     }
 
     #[test]
@@ -280,19 +633,20 @@ mod tests {
         let per = memory::kv_bytes_per_session(&paper, 20, 64);
         // budget for exactly 3 sessions
         let gb = 3.0 * per / 1e9 + 1e-12;
-        let p =
-            KvCachePool::for_budget(&host, a, &paper, 20, 64, gb, 64)
-                .unwrap();
+        let p = KvCachePool::for_budget(&host, a, &paper, 20, 64,
+                                        KvPrecision::F32, gb, 64)
+            .unwrap();
         assert_eq!(p.capacity(), 3);
         // capacity * per-session never exceeds the budget
         assert!(p.capacity() as f64 * per <= p.modeled_budget_bytes());
         // the scheduler-reachable cap wins when it is tighter
-        let capped =
-            KvCachePool::for_budget(&host, a, &paper, 20, 64, gb, 2)
-                .unwrap();
+        let capped = KvCachePool::for_budget(&host, a, &paper, 20, 64,
+                                             KvPrecision::F32, gb, 2)
+            .unwrap();
         assert_eq!(capped.capacity(), 2);
         // zero-session budgets are a hard error
         assert!(KvCachePool::for_budget(&host, a, &paper, 20, 64,
+                                        KvPrecision::F32,
                                         per / 1e9 * 0.5, 64)
             .is_err());
     }
@@ -311,15 +665,15 @@ mod tests {
             &paper, 20,
             &BitConfig::uniform(paper.n_layers, QuantFormat::Fp16), dev);
         assert!(b4 > 0.0);
-        let p4 =
-            KvCachePool::for_budget(&host, a, &paper, 20, 256, b4,
-                                    MAX_HOST_SLOTS)
-                .unwrap();
+        let p4 = KvCachePool::for_budget(&host, a, &paper, 20, 256,
+                                         KvPrecision::F32, b4,
+                                         MAX_HOST_SLOTS)
+            .unwrap();
         if bf > 0.0 {
-            let pf =
-                KvCachePool::for_budget(&host, a, &paper, 20, 256, bf,
-                                        MAX_HOST_SLOTS)
-                    .unwrap();
+            let pf = KvCachePool::for_budget(&host, a, &paper, 20, 256,
+                                             KvPrecision::F32, bf,
+                                             MAX_HOST_SLOTS)
+                .unwrap();
             assert!(p4.capacity() >= pf.capacity());
         } else {
             assert!(p4.capacity() >= 1);

@@ -4,11 +4,12 @@
 //! A `ParamStore` (pruned shapes) plus a `BitConfig` (per-layer
 //! precision) becomes a serving process: continuous-batching scheduler
 //! (`scheduler.rs`), slab-allocated KV-cache pool sized from the
-//! precision-aware accounting in `memory.rs` (`kv_cache.rs`),
-//! per-session state with TTL eviction (`session.rs`), admission
-//! control (`admission.rs`), and a forward engine that prefers the
-//! PJRT AOT artifacts and falls back to a native incremental decode
-//! (`engine.rs`).
+//! precision-aware accounting in `memory.rs` with selectable f32/int8
+//! KV storage (`kv_cache.rs`), per-session state with TTL eviction
+//! (`session.rs`), admission control (`admission.rs`), a forward
+//! engine that prefers the PJRT AOT artifacts and otherwise decodes
+//! the whole active batch through fused per-layer GEMMs (`engine.rs`),
+//! and the engine's reusable activation scratch (`workspace.rs`).
 //!
 //! This module adds the closed-loop synthetic workload driver used by
 //! the `serve` / `bench-serve` subcommands, the benches, and the
@@ -22,6 +23,7 @@ pub mod engine;
 pub mod kv_cache;
 pub mod scheduler;
 pub mod session;
+pub mod workspace;
 
 use crate::data::Language;
 use crate::memory;
@@ -34,7 +36,7 @@ use crate::runtime::Runtime;
 use admission::AdmissionPolicy;
 use anyhow::{bail, ensure, Result};
 use engine::Engine;
-use kv_cache::KvCachePool;
+use kv_cache::{KvCachePool, KvPrecision};
 use scheduler::Scheduler;
 use std::time::Instant;
 
@@ -57,6 +59,9 @@ pub struct ServeOpts {
     pub memory_arch: String,
     /// KV slot capacity in tokens (prompt + generated)
     pub max_seq: usize,
+    /// KV-cache storage precision (`--kv-bits {32,8}`): int8 KV packs
+    /// ~3.8x more sessions into the same modeled budget
+    pub kv_precision: KvPrecision,
     /// sampled prompt length range [lo, hi]
     pub prompt_len: (usize, usize),
     /// sampled generation budget range [lo, hi]
@@ -83,6 +88,7 @@ impl ServeOpts {
             device_gb: 24.0,
             memory_arch: "7b".into(),
             max_seq: 28,
+            kv_precision: KvPrecision::F32,
             prompt_len: (4, 10),
             max_new: (3, 12),
             temperature: 0.8,
@@ -112,6 +118,8 @@ impl ServeOpts {
 pub struct ServeReport {
     pub backend: &'static str,
     pub bits_short: String,
+    /// KV-cache storage precision in bits (32 = f32, 8 = int8)
+    pub kv_bits: u32,
     pub submitted: usize,
     pub completed: usize,
     pub rejected: usize,
@@ -133,11 +141,17 @@ pub struct ServeReport {
     pub max_occupancy: usize,
     pub kv_capacity_sessions: usize,
     pub kv_peak_sessions: usize,
-    /// modeled deployment bytes at peak / budget (paper arch, fp16 KV)
+    /// modeled deployment bytes at peak / budget (paper arch, at the
+    /// pool's KV precision)
     pub kv_modeled_peak_bytes: f64,
     pub kv_modeled_budget_bytes: f64,
     /// host bytes actually pinned by the slab
     pub kv_host_slab_bytes: usize,
+    /// decode-workspace allocation telemetry: buffer growths (only
+    /// when a step's batch exceeds the high-water mark) vs. pure
+    /// reuses — the steady-state decode path must be all reuses
+    pub scratch_grows: u64,
+    pub scratch_reuses: u64,
 }
 
 impl ServeReport {
@@ -163,6 +177,7 @@ impl ServeReport {
         };
         push("backend", self.backend.to_string());
         push("bits", self.bits_short.clone());
+        push("kv bits", format!("{}", self.kv_bits));
         push("requests submitted", format!("{}", self.submitted));
         push("requests completed", format!("{}", self.completed));
         push("requests rejected", format!("{}", self.rejected));
@@ -204,6 +219,8 @@ impl ServeReport {
              format!("{:.3} GB", self.kv_modeled_budget_bytes / 1e9));
         push("kv host slab",
              format!("{:.2} MB", self.kv_host_slab_bytes as f64 / 1e6));
+        push("scratch grows/reuses",
+             format!("{}/{}", self.scratch_grows, self.scratch_reuses));
         t
     }
 }
@@ -314,6 +331,7 @@ pub fn run_workload(rt: &mut Runtime, store: &ParamStore,
         &arch,
         rate,
         opts.max_seq,
+        opts.kv_precision,
         budget_gb,
         opts.max_batch + stall_allowance,
     )?;
@@ -389,11 +407,17 @@ pub fn run_workload(rt: &mut Runtime, store: &ParamStore,
     metrics.add_time("serve.workload", wall);
     metrics.incr("serve.requests", sched.stats.submitted as u64);
     metrics.incr("serve.tokens", sched.stats.generated_tokens);
+    // allocator-churn telemetry: the decode workspace grows only on a
+    // new batch high-water mark; everything else must be a reuse
+    let (scratch_grows, scratch_reuses) = engine.scratch_stats();
+    metrics.set_counter("serve.scratch_grows", scratch_grows);
+    metrics.set_counter("serve.scratch_reuses", scratch_reuses);
 
     let st = &sched.stats;
     Ok(ServeReport {
         backend: engine.backend_label(),
         bits_short: bits.short(),
+        kv_bits: sched.pool.precision().bits(),
         submitted: st.submitted,
         completed: st.completed,
         rejected: st.rejected,
@@ -414,6 +438,8 @@ pub fn run_workload(rt: &mut Runtime, store: &ParamStore,
         kv_modeled_peak_bytes: sched.pool.modeled_peak_bytes(),
         kv_modeled_budget_bytes: sched.pool.modeled_budget_bytes(),
         kv_host_slab_bytes: sched.pool.host_slab_bytes(),
+        scratch_grows,
+        scratch_reuses,
     })
 }
 
@@ -465,6 +491,7 @@ mod tests {
         let r = ServeReport {
             backend: "native-kv",
             bits_short: "44".into(),
+            kv_bits: 8,
             submitted: 10,
             completed: 8,
             rejected: 2,
@@ -484,6 +511,8 @@ mod tests {
             kv_modeled_peak_bytes: 2e8,
             kv_modeled_budget_bytes: 4e8,
             kv_host_slab_bytes: 1_000_000,
+            scratch_grows: 2,
+            scratch_reuses: 68,
         };
         assert!((r.tokens_per_sec() - 140.0).abs() < 1e-9);
         assert!((r.rejection_rate() - 0.2).abs() < 1e-12);
@@ -493,5 +522,7 @@ mod tests {
         assert!(md.contains("tokens/sec"));
         assert!(md.contains("queue-full=2"));
         assert!(md.contains("decode steps (busy)"));
+        assert!(md.contains("kv bits"));
+        assert!(md.contains("2/68"));
     }
 }

@@ -7,7 +7,9 @@
 //!      measured through the same path a real server would take);
 //!   2. optionally stalls sessions (client-disconnect injection for the
 //!      synthetic workload);
-//!   3. runs one decode step for every active session — the batch
+//!   3. runs one decode step for every active session — a single
+//!      fused GEMM batch on the native backend (`Engine::step_batch`),
+//!      per-session forwards on the artifact backend; the batch
 //!      shrinks the moment a session finishes and grows the moment a
 //!      queued one is admitted;
 //!   4. retires finished sessions (slot freed immediately — the next
@@ -19,7 +21,7 @@ use crate::metrics::LatencyStats;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::serve::admission::{AdmissionPolicy, Decision, RejectReason};
-use crate::serve::engine::{sample_token, Engine};
+use crate::serve::engine::{sample_token, BatchReq, Engine};
 use crate::serve::kv_cache::KvCachePool;
 use crate::serve::session::{SessionState, SessionTable};
 use anyhow::Result;
@@ -76,6 +78,9 @@ pub struct Scheduler {
     pub stats: SchedStats,
     pub latency: LatencyStats,
     pub ttft: LatencyStats,
+    /// reusable request buffer for the batched decode step (avoids a
+    /// fresh Vec per step on the hot path)
+    reqs_buf: Vec<BatchReq>,
 }
 
 impl Scheduler {
@@ -95,6 +100,7 @@ impl Scheduler {
             stats: SchedStats::default(),
             latency: LatencyStats::new(),
             ttft: LatencyStats::new(),
+            reqs_buf: Vec::new(),
         }
     }
 
@@ -218,36 +224,91 @@ impl Scheduler {
             }
         }
 
-        // 3. decode one token for every active session
-        let batch: Vec<u64> = self.active.clone();
-        if !batch.is_empty() {
+        // 3. decode one token for every active session. On the native
+        // backend this is a single fused step: the engine stacks every
+        // session's hidden state into a [batch, hidden] matrix and
+        // runs per-layer GEMMs over the whole batch (step_batch). The
+        // artifact backend must re-forward full padded sequences per
+        // session, so it keeps the per-session loop.
+        let occupancy = self.active.len();
+        if occupancy > 0 {
             self.stats.busy_steps += 1;
-            self.stats.occupancy_sum += batch.len() as u64;
+            self.stats.occupancy_sum += occupancy as u64;
             self.stats.max_occupancy =
-                self.stats.max_occupancy.max(batch.len());
+                self.stats.max_occupancy.max(occupancy);
         }
-        for id in batch {
-            let s = self.table.get(id);
-            let slot = s.slot.expect("active session without slot");
-            let temperature = s.temperature;
-            let logits = match engine.decode(
-                rt,
-                self.pool.slot_mut(slot),
-                &s.prompt,
-                &s.generated,
-            ) {
-                Ok(l) => l,
-                Err(e) => {
-                    self.active.retain(|&x| x != id);
-                    self.fail_session(id);
-                    return Err(e);
-                }
+        if occupancy > 0 && engine.is_native() {
+            self.reqs_buf.clear();
+            for &id in &self.active {
+                let s = self.table.get(id);
+                let pos = s.prompt.len() + s.generated.len() - 1;
+                // admission samples the first token at prefill, so an
+                // active session always has generated history
+                let token = *s.generated.last().expect(
+                    "active session with no generated tokens",
+                );
+                self.reqs_buf.push(BatchReq {
+                    slot: s.slot.expect("active session without slot"),
+                    pos,
+                    token,
+                });
+            }
+            let reqs = std::mem::take(&mut self.reqs_buf);
+            let step_no = self.step_no;
+            let res = {
+                let table = &mut self.table;
+                let stats = &mut self.stats;
+                let active = &self.active;
+                engine.step_batch(&mut self.pool, &reqs,
+                                  |i, logits| {
+                    let s = table.get_mut(active[i]);
+                    let tok =
+                        sample_token(logits, s.temperature, &mut s.rng);
+                    s.generated.push(tok);
+                    s.last_active_step = step_no;
+                    stats.generated_tokens += 1;
+                })
             };
-            let s = self.table.get_mut(id);
-            let tok = sample_token(&logits, temperature, &mut s.rng);
-            s.generated.push(tok);
-            s.last_active_step = self.step_no;
-            self.stats.generated_tokens += 1;
+            self.reqs_buf = reqs;
+            if let Err(e) = res {
+                // step_batch validates every request before touching
+                // any KV state, so a failure here is a batch-wide
+                // invariant break (desync / bad slot): fail every
+                // active session so all slots are reclaimed, then
+                // surface the error
+                for id in std::mem::take(&mut self.active) {
+                    self.fail_session(id);
+                }
+                return Err(e);
+            }
+        } else if occupancy > 0 {
+            // artifact fallback re-forwards whole padded sequences per
+            // session — a per-step Vec is noise next to that, and the
+            // clone frees `self.active` for the error path's retain
+            let batch: Vec<u64> = self.active.clone();
+            for id in batch {
+                let s = self.table.get(id);
+                let slot = s.slot.expect("active session without slot");
+                let temperature = s.temperature;
+                let logits = match engine.decode(
+                    rt,
+                    self.pool.slot_mut(slot),
+                    &s.prompt,
+                    &s.generated,
+                ) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        self.active.retain(|&x| x != id);
+                        self.fail_session(id);
+                        return Err(e);
+                    }
+                };
+                let s = self.table.get_mut(id);
+                let tok = sample_token(&logits, temperature, &mut s.rng);
+                s.generated.push(tok);
+                s.last_active_step = self.step_no;
+                self.stats.generated_tokens += 1;
+            }
         }
 
         // 4. retire finished sessions
@@ -337,6 +398,7 @@ mod tests {
             engine.attn_dim(),
             n_slots,
             max_seq,
+            crate::serve::kv_cache::KvPrecision::F32,
             1e6,
             n_slots as f64 * 1e6,
         );

@@ -127,6 +127,14 @@ impl SessionTable {
         self.map.values().filter(|x| x.state == s).count()
     }
 
+    /// Iterate over all sessions, live and terminal (arbitrary order —
+    /// callers that need determinism must sort). Used by invariant
+    /// checks: e.g. the scheduler fuzz test asserts no two sessions
+    /// ever hold the same KV slot.
+    pub fn iter(&self) -> impl Iterator<Item = &Session> {
+        self.map.values()
+    }
+
     /// Drop a terminal session. Long-running servers must reap
     /// terminal sessions (the workload driver does, once the client
     /// has observed the outcome) or the table grows without bound.

@@ -1,0 +1,148 @@
+//! Reusable activation scratch for the native decode engine.
+//!
+//! Every buffer a batched decode step touches lives here, sized once
+//! for the largest batch seen and reused for every subsequent token —
+//! the fix for the ROADMAP item about the per-token q/k/v/ctx `Vec`s
+//! churning the allocator. [`DecodeWorkspace::ensure_batch`] is the
+//! only place capacity can change; it counts growths vs. reuses so
+//! tests (and `Metrics` via `serve.scratch_grows` /
+//! `serve.scratch_reuses`) can assert the steady-state decode path
+//! performs no per-token activation allocations, even at batch = 1.
+
+/// Scratch buffers for one engine. All matrices are row-major with the
+/// batch as the leading axis; capacities are `batch_cap * dim`.
+#[derive(Debug)]
+pub struct DecodeWorkspace {
+    d_model: usize,
+    attn_dim: usize,
+    d_ff: usize,
+    vocab: usize,
+    /// largest batch the buffers currently hold
+    batch_cap: usize,
+    /// residual stream `[B, d_model]`
+    pub hidden: Vec<f32>,
+    /// RMSNorm output `[B, d_model]` (also reused for the final norm)
+    pub normed: Vec<f32>,
+    /// attention projections `[B, attn_dim]`
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// attention context `[B, attn_dim]`
+    pub ctx: Vec<f32>,
+    /// wo / w_down output `[B, d_model]`
+    pub proj_d: Vec<f32>,
+    /// SwiGLU intermediates `[B, d_ff]`
+    pub gate: Vec<f32>,
+    pub up: Vec<f32>,
+    /// per-session attention scores `[heads, max_seq]` (fixed size)
+    pub scores: Vec<f32>,
+    /// dequantization scratch for one KV row `[attn_dim]` (fixed size)
+    pub kv_row: Vec<f32>,
+    /// next-token logits `[B, vocab]`
+    pub logits: Vec<f32>,
+    /// reusable slot-id staging for `Engine::step_batch` (grows to the
+    /// largest batch once, then reused — not counted in `grows`, which
+    /// tracks the activation buffers)
+    pub slot_ids: Vec<usize>,
+    grows: u64,
+    reuses: u64,
+}
+
+impl DecodeWorkspace {
+    /// Buffers start empty (`batch_cap == 0`); the fixed-size scratch
+    /// (`scores`, `kv_row`) is allocated up front since it does not
+    /// depend on the batch.
+    pub fn new(d_model: usize, attn_dim: usize, d_ff: usize,
+               vocab: usize, heads: usize, max_seq: usize)
+               -> DecodeWorkspace {
+        DecodeWorkspace {
+            d_model,
+            attn_dim,
+            d_ff,
+            vocab,
+            batch_cap: 0,
+            hidden: Vec::new(),
+            normed: Vec::new(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            ctx: Vec::new(),
+            proj_d: Vec::new(),
+            gate: Vec::new(),
+            up: Vec::new(),
+            scores: vec![0.0; heads * max_seq],
+            kv_row: vec![0.0; attn_dim],
+            logits: Vec::new(),
+            slot_ids: Vec::new(),
+            grows: 0,
+            reuses: 0,
+        }
+    }
+
+    /// Make every batch-sized buffer hold at least `batch` rows.
+    /// Growth (an allocation) only happens when `batch` exceeds the
+    /// high-water mark; every other call is a pure reuse. The decode
+    /// hot path must see `grows` stay flat while `reuses` tracks the
+    /// token count — `engine::tests::steady_state_decode_reuses_scratch`
+    /// pins this down.
+    pub fn ensure_batch(&mut self, batch: usize) {
+        if batch <= self.batch_cap {
+            self.reuses += 1;
+            return;
+        }
+        self.grows += 1;
+        self.batch_cap = batch;
+        self.hidden.resize(batch * self.d_model, 0.0);
+        self.normed.resize(batch * self.d_model, 0.0);
+        self.q.resize(batch * self.attn_dim, 0.0);
+        self.k.resize(batch * self.attn_dim, 0.0);
+        self.v.resize(batch * self.attn_dim, 0.0);
+        self.ctx.resize(batch * self.attn_dim, 0.0);
+        self.proj_d.resize(batch * self.d_model, 0.0);
+        self.gate.resize(batch * self.d_ff, 0.0);
+        self.up.resize(batch * self.d_ff, 0.0);
+        self.logits.resize(batch * self.vocab, 0.0);
+    }
+
+    pub fn batch_cap(&self) -> usize {
+        self.batch_cap
+    }
+
+    /// (growth count, reuse count) since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.grows, self.reuses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_monotonically_and_counts_reuse() {
+        let mut ws = DecodeWorkspace::new(8, 4, 16, 32, 2, 10);
+        assert_eq!(ws.stats(), (0, 0));
+        ws.ensure_batch(2);
+        assert_eq!(ws.batch_cap(), 2);
+        assert_eq!(ws.hidden.len(), 16);
+        assert_eq!(ws.logits.len(), 64);
+        // smaller or equal batches never reallocate
+        ws.ensure_batch(1);
+        ws.ensure_batch(2);
+        assert_eq!(ws.stats(), (1, 2));
+        assert_eq!(ws.batch_cap(), 2);
+        // growth bumps the high-water mark once
+        ws.ensure_batch(5);
+        assert_eq!(ws.stats(), (2, 2));
+        assert_eq!(ws.gate.len(), 5 * 16);
+        ws.ensure_batch(5);
+        assert_eq!(ws.stats(), (2, 3));
+    }
+
+    #[test]
+    fn fixed_scratch_sized_at_construction() {
+        let ws = DecodeWorkspace::new(8, 4, 16, 32, 3, 12);
+        assert_eq!(ws.scores.len(), 36);
+        assert_eq!(ws.kv_row.len(), 4);
+    }
+}
