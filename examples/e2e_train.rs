@@ -43,12 +43,12 @@ fn main() -> Result<()> {
 
     let mut opts = PipelineOpts::quick(20, Method::QPruner3);
     Scale::paper().apply(&mut opts);
-    opts.finetune.steps = ft_steps;
+    opts.recover.finetune.steps = ft_steps;
     opts.eval_items = 60;
-    opts.bo_iters = 4;
-    opts.bo_init_random = 2;
-    opts.proxy_steps = 12;
-    opts.proxy_items = 10;
+    opts.bo.iters = 4;
+    opts.bo.init_random = 2;
+    opts.bo.proxy_steps = 12;
+    opts.bo.proxy_items = 10;
 
     let t1 = std::time::Instant::now();
     let res = coord.run(&store, &opts)?;

@@ -32,12 +32,12 @@ fn main() -> Result<()> {
     for method in [Method::LlmPruner, Method::QPruner1, Method::QPruner2,
                    Method::QPruner3] {
         let mut opts = PipelineOpts::quick(20, method);
-        opts.finetune.steps = 24;
+        opts.recover.finetune.steps = 24;
         opts.eval_items = 25;
-        opts.bo_iters = 3;
-        opts.bo_init_random = 2;
-        opts.proxy_steps = 8;
-        opts.proxy_items = 10;
+        opts.bo.iters = 3;
+        opts.bo.init_random = 2;
+        opts.bo.proxy_steps = 8;
+        opts.bo.proxy_items = 10;
         let res = coord.run(&store, &opts)?;
         println!(
             "{:<12} bits={} mean-acc={:.2}% mem={:.2}GB (trainable {})",

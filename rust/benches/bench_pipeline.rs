@@ -25,16 +25,19 @@ fn main() {
     Scale::smoke().apply(&mut opts);
 
     harness::bench("stage_prune_taylor_compact", 1, 5, || {
-        std::hint::black_box(coord.prune(&store, &opts).unwrap());
+        std::hint::black_box(
+            coord.prune(&store, &opts.prune, opts.seed).unwrap());
     });
 
-    let pruned = coord.prune(&store, &opts).unwrap();
+    let pruned = coord.prune(&store, &opts.prune, opts.seed).unwrap();
     harness::bench("stage_mi_allocate", 1, 5, || {
         std::hint::black_box(
-            coord.allocate_bits_mi(&pruned, &opts).unwrap());
+            coord.allocate_bits_mi(&pruned, &opts.quant, opts.seed)
+                .unwrap());
     });
 
-    let bits = coord.allocate_bits_mi(&pruned, &opts).unwrap();
+    let bits =
+        coord.allocate_bits_mi(&pruned, &opts.quant, opts.seed).unwrap();
     harness::bench("stage_bo_candidate_eval", 1, 5, || {
         let mut rng = qpruner::rng::Rng::new(9);
         std::hint::black_box(

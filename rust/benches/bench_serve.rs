@@ -19,9 +19,9 @@ use qpruner::metrics::Metrics;
 use qpruner::model::{ModelConfig, ParamStore};
 use qpruner::quant::{BitConfig, QuantFormat};
 use qpruner::runtime::Runtime;
-use qpruner::serve::engine::{BatchReq, Engine};
+use qpruner::serve::engine::{BatchReq, Engine, EngineBuilder};
 use qpruner::serve::kv_cache::{KvCachePool, KvPrecision};
-use qpruner::serve::{run_workload, ServeOpts};
+use qpruner::serve::{bench_json, run_workload, ServeOpts, ServeReport};
 use std::time::Instant;
 
 fn runtime() -> Runtime {
@@ -100,7 +100,11 @@ fn main() {
 
     // 1. isolated prefill hot path: 8 tokens through the KV engine
     let max_seq = 28;
-    let engine = Engine::new(&mut rt, &store, &bits, max_seq).unwrap();
+    let engine = EngineBuilder::new()
+        .store(&store, &bits)
+        .max_seq(max_seq)
+        .build(&mut rt)
+        .unwrap();
     let mut pool = KvCachePool::with_slots(&cfg, engine.attn_dim(), 1,
                                            max_seq, KvPrecision::F32,
                                            1.0, 1.0);
@@ -166,7 +170,10 @@ fn main() {
     }
 
     // 4. closed-loop workloads at increasing concurrency, plus the
-    // int8-KV variant at the highest concurrency
+    // int8-KV variant at the highest concurrency; every config also
+    // lands in results/BENCH_serve.json so the perf trajectory is
+    // machine-readable across PRs
+    let mut reports: Vec<(String, ServeReport)> = Vec::new();
     for (name, clients, max_batch, prec) in [
         ("c1_b1", 1usize, 1usize, KvPrecision::F32),
         ("c4_b4", 4, 4, KvPrecision::F32),
@@ -178,10 +185,12 @@ fn main() {
         opts.max_batch = max_batch;
         opts.requests = 64;
         opts.seed = 7;
-        opts.kv_precision = prec;
         let lang = Language::new(cfg.vocab, 1);
         let mut metrics = Metrics::new();
-        let report = run_workload(&mut rt, &store, &bits, &lang, &opts,
+        let builder = EngineBuilder::new()
+            .store(&store, &bits)
+            .kv_precision(prec);
+        let report = run_workload(&mut rt, builder, &lang, &opts,
                                   &mut metrics)
             .unwrap();
         println!(
@@ -196,5 +205,15 @@ fn main() {
             report.kv_host_slab_bytes
         );
         assert_eq!(report.completed, 64);
+        reports.push((name.to_string(), report));
     }
+    let entries: Vec<(String, &ServeReport)> = reports
+        .iter()
+        .map(|(n, r)| (n.clone(), r))
+        .collect();
+    let out_dir = std::path::Path::new("results");
+    std::fs::create_dir_all(out_dir).unwrap();
+    let json_path = out_dir.join("BENCH_serve.json");
+    std::fs::write(&json_path, bench_json(&entries)).unwrap();
+    println!("wrote {json_path:?}");
 }

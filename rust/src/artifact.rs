@@ -1,0 +1,828 @@
+//! The deployable `ModelArtifact` — the typed hand-off between the
+//! QPruner pipeline and the serving layer.
+//!
+//! The pipeline's whole point (§3.1–3.3) is a *deployable compressed
+//! model*: pruned shapes, a per-layer mixed-precision assignment, the
+//! quantized base weights, and the LoRA recovery adapters trained on
+//! top of the frozen base. This module makes that deliverable a
+//! first-class, serialized, versioned object:
+//!
+//! * projection weights are stored in their **native encodings** —
+//!   nf4/fp4 packed nibbles or int8 codes with per-block absmax scales
+//!   (`quant::QuantizedMatrix`), fp16 layers as raw f32 — so the file
+//!   is the size the paper's memory accounting promises, not an fp32
+//!   checkpoint;
+//! * optional **LoRA A/B deltas** ride along with a merge-or-adjoin
+//!   deployment flag (`LoraMode`): fold `s·BA` into the base at engine
+//!   build time, or keep the low-rank side path live in decode;
+//! * **provenance** records which stages produced the artifact
+//!   (method, seed, stage trail, source checkpoint);
+//! * an FNV-1a **integrity checksum** and a format **version** gate
+//!   loading: corrupt bytes and future formats are rejected instead of
+//!   silently decoding garbage.
+//!
+//! Round-trip exactness: `deployed_store()` reproduces
+//! `lora::quantize_base(store, bits)` bit-for-bit for nf4/fp4 (the
+//! block absmax maps to the ±1.0 codebook ends, so re-quantization is
+//! a fixed point) and to within one ulp for int8 — the property
+//! `tests/artifact_roundtrip.rs` pins down end-to-end through
+//! `serve::engine::EngineBuilder`.
+
+use crate::lora::LoraState;
+use crate::model::{proj_index, ModelConfig, ParamStore, PrunedShapes,
+                   PROJS};
+use crate::quant::{self, BitConfig, QuantFormat, QuantizedMatrix};
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// Current on-disk format version. Bump on any layout change; loaders
+/// reject other versions outright.
+pub const ARTIFACT_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 8] = b"QPMARTF1";
+
+/// The 12-stack indices stored raw (always f32): embed, attn_norm,
+/// mlp_norm, final_norm, lm_head. Projections live in `projs`.
+const FP_STACKS: [usize; 5] = [0, 1, 6, 10, 11];
+
+/// How LoRA deltas deploy at engine build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoraMode {
+    /// Fold `s·BA` into the (dequantized) base weights once at build:
+    /// plain GEMMs afterwards, no per-token adapter cost.
+    Merge,
+    /// Keep A/B as a low-rank side path evaluated every decode step —
+    /// exactly the training-time numerics.
+    Adjoin,
+}
+
+impl LoraMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            LoraMode::Merge => "merge",
+            LoraMode::Adjoin => "adjoin",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LoraMode> {
+        match s {
+            "merge" | "merged" => Some(LoraMode::Merge),
+            "adjoin" | "adjoined" => Some(LoraMode::Adjoin),
+            _ => None,
+        }
+    }
+}
+
+/// Trained LoRA adapters in pipeline ABI order (A/B stacks per
+/// projection, 14 tensors — the same layout as `lora::LoraState`).
+#[derive(Clone, Debug)]
+pub struct LoraDelta {
+    pub tensors: Vec<Tensor>,
+    pub rank: usize,
+    pub alpha: usize,
+}
+
+impl LoraDelta {
+    pub fn scaling(&self) -> f32 {
+        self.alpha as f32 / self.rank as f32
+    }
+
+    pub fn from_state(state: &LoraState) -> LoraDelta {
+        LoraDelta {
+            tensors: state.tensors.clone(),
+            rank: state.rank,
+            alpha: state.alpha,
+        }
+    }
+
+    /// (A, B) slabs of one layer/projection (A `[r, in]`, B `[out, r]`
+    /// row-major slices into the stacked tensors).
+    pub fn layer_ab(&self, proj_idx: usize, layer: usize)
+                    -> (&[f32], &[f32]) {
+        let (_, a) = self.tensors[2 * proj_idx].slab(layer);
+        let (_, b) = self.tensors[2 * proj_idx + 1].slab(layer);
+        (a, b)
+    }
+}
+
+/// Where an artifact came from — recorded verbatim, surfaced by
+/// `info`-style tooling and the export CLI.
+#[derive(Clone, Debug, Default)]
+pub struct Provenance {
+    /// method label ("QPruner^3", ...)
+    pub method: String,
+    pub seed: u64,
+    /// stage trail, e.g. "prune>mi>bo>recover"
+    pub stages: String,
+    /// source checkpoint or "random-init"
+    pub source: String,
+}
+
+/// One projection matrix in its native deployment encoding.
+#[derive(Clone, Debug)]
+pub enum WeightBlob {
+    /// fp16-precision layer, stored as raw f32 (the simulator's fp16
+    /// is exact f32 — see `lora::quantize_base`)
+    F32(Tensor),
+    /// nf4/fp4/int8 blockwise codes + absmax scales
+    Packed(QuantizedMatrix),
+}
+
+impl WeightBlob {
+    /// Native storage bytes (codes + scales for packed, 4 B/elem raw).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            WeightBlob::F32(t) => t.len() * 4,
+            WeightBlob::Packed(q) => q.storage_bytes(),
+        }
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        match self {
+            WeightBlob::F32(t) => (t.shape()[0], t.shape()[1]),
+            WeightBlob::Packed(q) => (q.rows, q.cols),
+        }
+    }
+}
+
+/// The serialized, versioned deliverable of one pipeline run.
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    pub cfg: ModelConfig,
+    pub ps: PrunedShapes,
+    /// per-layer deployment precision (the encoding of `projs`)
+    pub bits: BitConfig,
+    /// raw f32 stacks in `FP_STACKS` order: embed, attn_norm,
+    /// mlp_norm, final_norm, lm_head
+    pub fp_stacks: Vec<Tensor>,
+    /// `[PROJS.len()][n_layers]` native-encoded projection matrices
+    pub projs: Vec<Vec<WeightBlob>>,
+    pub lora: Option<LoraDelta>,
+    /// default deployment mode for `lora` (builders may override)
+    pub lora_mode: LoraMode,
+    pub provenance: Provenance,
+}
+
+impl ModelArtifact {
+    /// Encode a pipeline output. `store` is the deployment base in
+    /// f32 (either the pruned full-precision weights, or — after a
+    /// LoftQ/PiSSA recovery — the prepared base whose projections
+    /// already sit on the quantization grid; encoding is a fixed point
+    /// of the quantizer either way). `lora`, when present, must match
+    /// the store's adapter shapes.
+    pub fn from_pipeline(store: &ParamStore, bits: &BitConfig,
+                         lora: Option<LoraDelta>, lora_mode: LoraMode,
+                         provenance: Provenance)
+                         -> Result<ModelArtifact> {
+        ensure!(
+            bits.n_layers() == store.cfg.n_layers,
+            "bit config has {} layers, model has {}",
+            bits.n_layers(),
+            store.cfg.n_layers
+        );
+        if let Some(d) = &lora {
+            let want = LoraState::shapes(store);
+            ensure!(
+                d.tensors.len() == want.len(),
+                "lora delta has {} tensors, expected {}",
+                d.tensors.len(),
+                want.len()
+            );
+            for (t, w) in d.tensors.iter().zip(&want) {
+                ensure!(
+                    t.shape() == w.as_slice(),
+                    "lora delta shape {:?} != expected {:?}",
+                    t.shape(),
+                    w
+                );
+            }
+            ensure!(d.rank > 0, "lora rank must be positive");
+        }
+        let fp_stacks =
+            FP_STACKS.iter().map(|&i| store.weights[i].clone()).collect();
+        let mut projs = Vec::with_capacity(PROJS.len());
+        for p in PROJS {
+            let mut per_layer = Vec::with_capacity(store.cfg.n_layers);
+            for l in 0..store.cfg.n_layers {
+                let w = store.layer_proj(l, p);
+                per_layer.push(match bits.layers[l] {
+                    QuantFormat::Fp16 => WeightBlob::F32(w),
+                    fmt => WeightBlob::Packed(quant::quantize(&w, fmt)),
+                });
+            }
+            projs.push(per_layer);
+        }
+        Ok(ModelArtifact {
+            cfg: store.cfg.clone(),
+            ps: store.ps,
+            bits: bits.clone(),
+            fp_stacks,
+            projs,
+            lora,
+            lora_mode,
+            provenance,
+        })
+    }
+
+    /// Check every stack and blob against the shapes the config
+    /// demands — the load-time validation, without materializing any
+    /// dequantized weights.
+    pub fn validate_shapes(&self) -> Result<()> {
+        let shapes = ParamStore::shapes(&self.cfg, &self.ps);
+        ensure!(
+            self.fp_stacks.len() == FP_STACKS.len()
+                && self.projs.len() == PROJS.len(),
+            "artifact stack counts are wrong"
+        );
+        for (fi, &wi) in FP_STACKS.iter().enumerate() {
+            ensure!(
+                self.fp_stacks[fi].shape() == shapes[wi].as_slice(),
+                "artifact stack {wi} shape {:?} != expected {:?}",
+                self.fp_stacks[fi].shape(),
+                shapes[wi]
+            );
+        }
+        for (pi, p) in PROJS.iter().enumerate() {
+            let (o, i) = self.cfg.proj_shape(&self.ps, p);
+            ensure!(
+                self.projs[pi].len() == self.cfg.n_layers,
+                "artifact proj {p} has {} layers, expected {}",
+                self.projs[pi].len(),
+                self.cfg.n_layers
+            );
+            for (l, blob) in self.projs[pi].iter().enumerate() {
+                ensure!(
+                    blob.dims() == (o, i),
+                    "artifact proj {p} layer {l} is {:?}, expected \
+                     ({o}, {i})",
+                    blob.dims()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Reassemble the deployment `ParamStore`: packed blobs are
+    /// dequantized to f32, exactly the numerics of
+    /// `lora::quantize_base(store, bits)`.
+    pub fn deployed_store(&self) -> Result<ParamStore> {
+        self.validate_shapes()?;
+        let shapes = ParamStore::shapes(&self.cfg, &self.ps);
+        let mut weights: Vec<Tensor> =
+            shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        for (fi, &wi) in FP_STACKS.iter().enumerate() {
+            weights[wi] = self.fp_stacks[fi].clone();
+        }
+        for (pi, p) in PROJS.iter().enumerate() {
+            let stack = &mut weights[proj_index(p)];
+            for (l, blob) in self.projs[pi].iter().enumerate() {
+                match blob {
+                    WeightBlob::F32(t) => {
+                        stack.slab_mut(l).copy_from_slice(t.data());
+                    }
+                    WeightBlob::Packed(q) => {
+                        let t = quant::dequantize(q);
+                        stack.slab_mut(l).copy_from_slice(t.data());
+                    }
+                }
+            }
+        }
+        Ok(ParamStore { cfg: self.cfg.clone(), ps: self.ps, weights })
+    }
+
+    /// Total native storage bytes of the encoded weights (+ LoRA).
+    pub fn storage_bytes(&self) -> usize {
+        let mut n: usize =
+            self.fp_stacks.iter().map(|t| t.len() * 4).sum();
+        for per_layer in &self.projs {
+            for b in per_layer {
+                n += b.storage_bytes();
+            }
+        }
+        if let Some(d) = &self.lora {
+            n += d.tensors.iter().map(|t| t.len() * 4).sum::<usize>();
+        }
+        n
+    }
+
+    /// One-line human summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} rate {}% bits {} lora {} ({}) — {:.2} MB native \
+             [{} seed {} via {}]",
+            self.cfg.name,
+            self.ps.rate_pct,
+            self.bits.short(),
+            if self.lora.is_some() { "yes" } else { "no" },
+            self.lora_mode.label(),
+            self.storage_bytes() as f64 / 1e6,
+            self.provenance.method,
+            self.provenance.seed,
+            if self.provenance.stages.is_empty() {
+                "?"
+            } else {
+                self.provenance.stages.as_str()
+            },
+        )
+    }
+
+    // ---------------- serialization ----------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let payload = self.encode_payload();
+        let mut out =
+            Vec::with_capacity(payload.len() + MAGIC.len() + 20);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&payload);
+        std::fs::write(path, out)
+            .with_context(|| format!("write artifact {path:?}"))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ModelArtifact> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("open artifact {path:?}"))?;
+        ensure!(
+            bytes.len() >= MAGIC.len() + 20,
+            "artifact {path:?} truncated ({} bytes)",
+            bytes.len()
+        );
+        ensure!(
+            bytes[..MAGIC.len()] == MAGIC[..],
+            "bad artifact magic in {path:?} (not a qpruner model \
+             artifact)"
+        );
+        let mut cur = Cursor { b: &bytes[..], p: MAGIC.len() };
+        let version = cur.u32()?;
+        ensure!(
+            version == ARTIFACT_VERSION,
+            "unsupported artifact version {version} (this build reads \
+             version {ARTIFACT_VERSION}) — re-export the artifact"
+        );
+        let checksum = cur.u64()?;
+        let plen = cur.u64()? as usize;
+        let payload = cur.take(plen)?;
+        ensure!(
+            cur.p == bytes.len(),
+            "artifact {path:?} has {} trailing bytes",
+            bytes.len() - cur.p
+        );
+        ensure!(
+            fnv1a64(payload) == checksum,
+            "artifact checksum mismatch in {path:?} (corrupt or \
+             truncated file)"
+        );
+        Self::decode_payload(payload)
+            .with_context(|| format!("decode artifact {path:?}"))
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let (rank, alpha) = self
+            .lora
+            .as_ref()
+            .map(|d| (d.rank, d.alpha))
+            .unwrap_or((0, 0));
+        // free-text provenance fields go into a tab-separated header:
+        // strip the separator (and newlines) so a checkpoint path
+        // containing a tab can't produce an artifact that saves fine
+        // but fails the field-count check on every load
+        let clean = |s: &str| s.replace(['\t', '\n', '\r'], " ");
+        let meta = format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+            self.cfg.name,
+            self.ps.rate_pct,
+            self.ps.heads_kept,
+            self.ps.d_ff_kept,
+            self.bits.short(),
+            self.lora_mode.label(),
+            rank,
+            alpha,
+            clean(&self.provenance.method),
+            self.provenance.seed,
+            clean(&self.provenance.stages),
+            clean(&self.provenance.source),
+        );
+        put_u32(&mut out, meta.len() as u32);
+        out.extend_from_slice(meta.as_bytes());
+        for t in &self.fp_stacks {
+            put_tensor(&mut out, t);
+        }
+        for per_layer in &self.projs {
+            for blob in per_layer {
+                match blob {
+                    WeightBlob::F32(t) => {
+                        out.push(0u8);
+                        put_tensor(&mut out, t);
+                    }
+                    WeightBlob::Packed(q) => {
+                        out.push(1u8);
+                        out.push(fmt_code(q.fmt));
+                        put_u64(&mut out, q.rows as u64);
+                        put_u64(&mut out, q.cols as u64);
+                        put_u64(&mut out, q.codes.len() as u64);
+                        out.extend_from_slice(&q.codes);
+                        put_u64(&mut out, q.scales.len() as u64);
+                        for &s in &q.scales {
+                            out.extend_from_slice(&s.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+        match &self.lora {
+            None => out.push(0u8),
+            Some(d) => {
+                out.push(1u8);
+                put_u32(&mut out, d.tensors.len() as u32);
+                for t in &d.tensors {
+                    put_tensor(&mut out, t);
+                }
+            }
+        }
+        out
+    }
+
+    fn decode_payload(payload: &[u8]) -> Result<ModelArtifact> {
+        let mut cur = Cursor { b: payload, p: 0 };
+        let mlen = cur.u32()? as usize;
+        let meta = std::str::from_utf8(cur.take(mlen)?)
+            .context("artifact meta is not utf-8")?;
+        let f: Vec<&str> = meta.split('\t').collect();
+        ensure!(f.len() == 12, "bad artifact meta ({} fields)", f.len());
+        let cfg = ModelConfig::preset(f[0])?;
+        let ps = PrunedShapes {
+            rate_pct: f[1].parse().context("artifact rate")?,
+            heads_kept: f[2].parse().context("artifact heads")?,
+            d_ff_kept: f[3].parse().context("artifact d_ff")?,
+        };
+        let bits = BitConfig::parse_short(f[4])
+            .with_context(|| format!("bad artifact bits {:?}", f[4]))?;
+        ensure!(
+            bits.n_layers() == cfg.n_layers,
+            "artifact bits cover {} layers, model has {}",
+            bits.n_layers(),
+            cfg.n_layers
+        );
+        let lora_mode = LoraMode::parse(f[5]).with_context(|| {
+            format!("bad artifact lora mode {:?}", f[5])
+        })?;
+        let rank: usize = f[6].parse().context("artifact rank")?;
+        let alpha: usize = f[7].parse().context("artifact alpha")?;
+        let provenance = Provenance {
+            method: f[8].to_string(),
+            seed: f[9].parse().context("artifact seed")?,
+            stages: f[10].to_string(),
+            source: f[11].to_string(),
+        };
+        let mut fp_stacks = Vec::with_capacity(FP_STACKS.len());
+        for _ in 0..FP_STACKS.len() {
+            fp_stacks.push(take_tensor(&mut cur)?);
+        }
+        let mut projs = Vec::with_capacity(PROJS.len());
+        for _ in 0..PROJS.len() {
+            let mut per_layer = Vec::with_capacity(cfg.n_layers);
+            for _ in 0..cfg.n_layers {
+                per_layer.push(match cur.u8()? {
+                    0 => WeightBlob::F32(take_tensor(&mut cur)?),
+                    1 => {
+                        let fmt = fmt_from_code(cur.u8()?)?;
+                        let rows = cur.u64()? as usize;
+                        let cols = cur.u64()? as usize;
+                        let nc = cur.u64()? as usize;
+                        let codes = cur.take(nc)?.to_vec();
+                        let ns = cur.u64()? as usize;
+                        ensure!(ns <= 1 << 31, "scales too large");
+                        let raw = cur.take(ns * 4)?;
+                        let scales: Vec<f32> = raw
+                            .chunks_exact(4)
+                            .map(|c| f32::from_le_bytes([
+                                c[0], c[1], c[2], c[3],
+                            ]))
+                            .collect();
+                        WeightBlob::Packed(QuantizedMatrix {
+                            fmt,
+                            rows,
+                            cols,
+                            codes,
+                            scales,
+                        })
+                    }
+                    t => bail!("bad weight blob tag {t}"),
+                });
+            }
+            projs.push(per_layer);
+        }
+        let lora = match cur.u8()? {
+            0 => None,
+            1 => {
+                ensure!(rank > 0, "lora present but rank is 0");
+                let n = cur.u32()? as usize;
+                let mut tensors = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tensors.push(take_tensor(&mut cur)?);
+                }
+                Some(LoraDelta { tensors, rank, alpha })
+            }
+            t => bail!("bad lora tag {t}"),
+        };
+        ensure!(
+            cur.p == payload.len(),
+            "artifact payload has {} undecoded bytes",
+            payload.len() - cur.p
+        );
+        let art = ModelArtifact {
+            cfg,
+            ps,
+            bits,
+            fp_stacks,
+            projs,
+            lora,
+            lora_mode,
+            provenance,
+        };
+        // shape-check everything once up front, without paying for a
+        // dequantization the engine build will do anyway
+        art.validate_shapes()?;
+        Ok(art)
+    }
+}
+
+fn fmt_code(fmt: QuantFormat) -> u8 {
+    match fmt {
+        QuantFormat::Nf4 => 0,
+        QuantFormat::Fp4 => 1,
+        QuantFormat::Int8 => 2,
+        QuantFormat::Fp16 => 3,
+    }
+}
+
+fn fmt_from_code(c: u8) -> Result<QuantFormat> {
+    Ok(match c {
+        0 => QuantFormat::Nf4,
+        1 => QuantFormat::Fp4,
+        2 => QuantFormat::Int8,
+        3 => QuantFormat::Fp16,
+        _ => bail!("bad quant format code {c}"),
+    })
+}
+
+/// FNV-1a 64-bit — small, dependency-free, and plenty for integrity
+/// (this guards against corruption, not adversaries).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    put_u32(out, t.ndim() as u32);
+    for &d in t.shape() {
+        put_u64(out, d as u64);
+    }
+    for &x in t.data() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .p
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len());
+        let Some(end) = end else {
+            bail!(
+                "artifact truncated: need {n} bytes at offset {}",
+                self.p
+            );
+        };
+        let s = &self.b[self.p..end];
+        self.p = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+}
+
+fn take_tensor(cur: &mut Cursor) -> Result<Tensor> {
+    let nd = cur.u32()? as usize;
+    ensure!(nd >= 1 && nd <= 4, "bad tensor ndim {nd}");
+    let mut shape = Vec::with_capacity(nd);
+    for _ in 0..nd {
+        let d = cur.u64()? as usize;
+        ensure!(d > 0 && d <= 1 << 32, "bad tensor dim {d}");
+        shape.push(d);
+    }
+    let count = shape
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .context("tensor shape overflows")?;
+    ensure!(count <= 1 << 31, "tensor too large ({count} elems)");
+    // one bounds-checked take for the whole payload, not one per
+    // element — artifact load is dominated by these reads
+    let raw = cur.take(count * 4)?;
+    let data: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor::new(&shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lora;
+    use crate::rng::Rng;
+
+    fn setup() -> (ParamStore, BitConfig) {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 9);
+        let mut bits =
+            BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+        bits.layers[0] = QuantFormat::Int8;
+        (store, bits)
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qpruner_artifact_mod_t");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn deployed_store_matches_quantize_base_exactly() {
+        let (store, bits) = setup();
+        let art = ModelArtifact::from_pipeline(
+            &store, &bits, None, LoraMode::Merge,
+            Provenance::default(),
+        )
+        .unwrap();
+        let deployed = art.deployed_store().unwrap();
+        let want = lora::quantize_base(&store, &bits);
+        for (a, b) in deployed.weights.iter().zip(&want.weights) {
+            assert_eq!(a.data(), b.data());
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_everything() {
+        let (store, bits) = setup();
+        let mut rng = Rng::new(3);
+        let prep =
+            lora::init_gaussian(&store, &bits, &mut rng);
+        let art = ModelArtifact::from_pipeline(
+            &store,
+            &bits,
+            Some(LoraDelta::from_state(&prep.lora)),
+            LoraMode::Adjoin,
+            Provenance {
+                method: "QPruner^2".into(),
+                seed: 42,
+                stages: "prune>mi>recover".into(),
+                source: "unit-test".into(),
+            },
+        )
+        .unwrap();
+        let path = tmp("roundtrip.qpart");
+        art.save(&path).unwrap();
+        let back = ModelArtifact::load(&path).unwrap();
+        assert_eq!(back.bits, art.bits);
+        assert_eq!(back.ps, art.ps);
+        assert_eq!(back.lora_mode, LoraMode::Adjoin);
+        assert_eq!(back.provenance.method, "QPruner^2");
+        assert_eq!(back.provenance.seed, 42);
+        assert_eq!(back.provenance.stages, "prune>mi>recover");
+        let a = art.deployed_store().unwrap();
+        let b = back.deployed_store().unwrap();
+        for (x, y) in a.weights.iter().zip(&b.weights) {
+            assert_eq!(x.data(), y.data());
+        }
+        let la = art.lora.as_ref().unwrap();
+        let lb = back.lora.as_ref().unwrap();
+        assert_eq!(la.rank, lb.rank);
+        assert_eq!(la.alpha, lb.alpha);
+        for (x, y) in la.tensors.iter().zip(&lb.tensors) {
+            assert_eq!(x.data(), y.data());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupted_payload_is_rejected() {
+        let (store, bits) = setup();
+        let art = ModelArtifact::from_pipeline(
+            &store, &bits, None, LoraMode::Merge,
+            Provenance::default(),
+        )
+        .unwrap();
+        let path = tmp("corrupt.qpart");
+        art.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelArtifact::load(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("checksum"),
+            "unexpected error: {err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let (store, bits) = setup();
+        let art = ModelArtifact::from_pipeline(
+            &store, &bits, None, LoraMode::Merge,
+            Provenance::default(),
+        )
+        .unwrap();
+        let path = tmp("version.qpart");
+        art.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // version u32 sits right after the 8-byte magic
+        bytes[8..12]
+            .copy_from_slice(&(ARTIFACT_VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelArtifact::load(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("version"),
+            "unexpected error: {err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let path = tmp("magic.qpart");
+        std::fs::write(&path, b"definitely not an artifact at all")
+            .unwrap();
+        assert!(ModelArtifact::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn native_encoding_is_smaller_than_f32() {
+        let (store, bits) = setup();
+        let art = ModelArtifact::from_pipeline(
+            &store, &bits, None, LoraMode::Merge,
+            Provenance::default(),
+        )
+        .unwrap();
+        // nf4-dominated projections must store far below 4 B/param;
+        // allow for the raw embed/head stacks which dominate tiny
+        let f32_bytes = store.total_params() * 4;
+        assert!(
+            art.storage_bytes() < f32_bytes,
+            "{} !< {}",
+            art.storage_bytes(),
+            f32_bytes
+        );
+    }
+
+    #[test]
+    fn lora_mode_parse_roundtrip() {
+        for m in [LoraMode::Merge, LoraMode::Adjoin] {
+            assert_eq!(LoraMode::parse(m.label()), Some(m));
+        }
+        assert!(LoraMode::parse("fold").is_none());
+    }
+}

@@ -125,6 +125,18 @@ impl Config {
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.map.keys()
     }
+
+    /// Resolve the shared `--scale smoke|paper` fidelity choice into a
+    /// preset pair — the one helper behind every subcommand arm
+    /// (`Scale::{smoke,paper}`, `ServeOpts::{smoke,paper}`, ...)
+    /// instead of a copy-pasted match per arm.
+    pub fn scale_preset<T>(&self, smoke: impl FnOnce() -> T,
+                           paper: impl FnOnce() -> T) -> T {
+        match self.str_or("scale", "paper").as_str() {
+            "smoke" => smoke(),
+            _ => paper(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -176,5 +188,15 @@ mod tests {
         assert_eq!(c.usize_or("missing", 7).unwrap(), 7);
         let b = Config::from_str_content("flag = yes\n").unwrap();
         assert!(b.bool_or("flag", false).unwrap());
+    }
+
+    #[test]
+    fn scale_preset_picks_smoke_or_paper() {
+        let c = Config::from_str_content("scale = smoke\n").unwrap();
+        assert_eq!(c.scale_preset(|| 1, || 2), 1);
+        let c = Config::from_str_content("scale = paper\n").unwrap();
+        assert_eq!(c.scale_preset(|| 1, || 2), 2);
+        // default (unset) is paper fidelity
+        assert_eq!(Config::new().scale_preset(|| 1, || 2), 2);
     }
 }

@@ -16,7 +16,17 @@
 //!      frozen (simulated-quantized) base;
 //!   5. **zero-shot evaluation** over the 7-task suite + paper-scale
 //!      peak-memory accounting.
+//!
+//! Each stage is a composable method with a *stage-scoped* option
+//! struct ([`PruneOpts`], [`QuantOpts`], [`BoOpts`], [`RecoverOpts`]);
+//! [`PipelineOpts`] is the bundle the full [`Coordinator::run`]
+//! composition reads. The pipeline's deliverable is a deployable
+//! [`ModelArtifact`] ([`Coordinator::run_with_artifact`] /
+//! `qpruner export`): the frozen recovery base in its native
+//! quantized encodings plus the trained LoRA deltas, which
+//! `serve --artifact` boots without re-running any stage.
 
+use crate::artifact::{LoraDelta, LoraMode, ModelArtifact, Provenance};
 use crate::bo::{self, Acquisition, Observation};
 use crate::data::{paper_suite, CorpusStream, Language, TaskSpec};
 use crate::eval::{eval_suite, mean_accuracy, TaskResult};
@@ -66,31 +76,57 @@ impl Method {
     }
 }
 
-/// All knobs of one pipeline run.
+/// Structured-pruning stage knobs (§3.1).
 #[derive(Clone, Debug)]
-pub struct PipelineOpts {
+pub struct PruneOpts {
     pub rate_pct: u32,
-    pub method: Method,
-    /// 4-bit data type (Table 2 ablation: NF4 vs FP4)
-    pub four_bit: QuantFormat,
-    /// adapter init (Table 2: LoftQ / Gaussian / PiSSA, LoftQ iters)
-    pub init: InitMethod,
     /// importance estimation (Table 2: element^1 / element^2)
     pub taylor: TaylorOrder,
     pub aggregate: Aggregate,
+}
+
+/// Mixed-precision search-space knobs (§3.2) shared by the MI
+/// allocator and the BO loop.
+#[derive(Clone, Debug)]
+pub struct QuantOpts {
+    /// 4-bit data type (Table 2 ablation: NF4 vs FP4)
+    pub four_bit: QuantFormat,
     /// max fraction of 8-bit layers (paper: 0.25)
     pub frac8: f64,
-    /// acquisition function for the BO loop (Eq. 8's alpha)
+}
+
+/// Bayesian-optimization stage knobs (Algorithm 1).
+#[derive(Clone, Debug)]
+pub struct BoOpts {
+    /// acquisition function (Eq. 8's alpha)
     pub acquisition: Acquisition,
     /// BO iterations after the MI warm start (QPruner^3)
-    pub bo_iters: usize,
-    /// random configs appended to the BO warm start (paper App. D: 10)
-    pub bo_init_random: usize,
-    pub finetune: FinetuneOpts,
-    /// steps of the cheap proxy fine-tune inside the BO loop
+    pub iters: usize,
+    /// random configs appended to the warm start (paper App. D: 10)
+    pub init_random: usize,
+    /// steps of the cheap proxy fine-tune inside the loop
     pub proxy_steps: usize,
-    /// items/task for the proxy evaluation inside the BO loop
+    /// items/task for the proxy evaluation inside the loop
     pub proxy_items: usize,
+}
+
+/// Performance-recovery stage knobs (§3.3).
+#[derive(Clone, Debug)]
+pub struct RecoverOpts {
+    /// adapter init (Table 2: LoftQ / Gaussian / PiSSA, LoftQ iters)
+    pub init: InitMethod,
+    pub finetune: FinetuneOpts,
+}
+
+/// All knobs of one pipeline run — a bundle of the stage-scoped
+/// option structs plus the cross-stage method/seed/eval settings.
+#[derive(Clone, Debug)]
+pub struct PipelineOpts {
+    pub method: Method,
+    pub prune: PruneOpts,
+    pub quant: QuantOpts,
+    pub bo: BoOpts,
+    pub recover: RecoverOpts,
     /// items/task for the final evaluation
     pub eval_items: usize,
     pub seed: u64,
@@ -101,22 +137,38 @@ pub struct PipelineOpts {
 impl PipelineOpts {
     pub fn quick(rate_pct: u32, method: Method) -> PipelineOpts {
         PipelineOpts {
-            rate_pct,
             method,
-            four_bit: QuantFormat::Nf4,
-            init: InitMethod::LoftQ { iters: 1 },
-            taylor: TaylorOrder::First,
-            aggregate: Aggregate::Sum,
-            frac8: 0.25,
-            acquisition: Acquisition::Ei,
-            bo_iters: 6,
-            bo_init_random: 3,
-            finetune: FinetuneOpts::default(),
-            proxy_steps: 16,
-            proxy_items: 12,
+            prune: PruneOpts {
+                rate_pct,
+                taylor: TaylorOrder::First,
+                aggregate: Aggregate::Sum,
+            },
+            quant: QuantOpts { four_bit: QuantFormat::Nf4, frac8: 0.25 },
+            bo: BoOpts {
+                acquisition: Acquisition::Ei,
+                iters: 6,
+                init_random: 3,
+                proxy_steps: 16,
+                proxy_items: 12,
+            },
+            recover: RecoverOpts {
+                init: InitMethod::LoftQ { iters: 1 },
+                finetune: FinetuneOpts::default(),
+            },
             eval_items: 50,
             seed: 42,
             memory_arch: "7b".into(),
+        }
+    }
+
+    /// Adapter init the recovery stage actually uses: the fp16
+    /// baseline takes Gaussian LoRA, quantized methods the configured
+    /// init (paper §4 protocol).
+    pub fn effective_init(&self) -> InitMethod {
+        if self.method == Method::LlmPruner {
+            InitMethod::Gaussian
+        } else {
+            self.recover.init
         }
     }
 }
@@ -147,8 +199,8 @@ impl Coordinator {
         Coordinator { rt, lang, metrics: Metrics::new() }
     }
 
-    fn memory_cfg(&self, opts: &PipelineOpts) -> ModelConfig {
-        if opts.memory_arch == "13b" {
+    fn memory_cfg(memory_arch: &str) -> ModelConfig {
+        if memory_arch == "13b" {
             ModelConfig::paper_13b()
         } else {
             ModelConfig::paper_7b()
@@ -156,13 +208,13 @@ impl Coordinator {
     }
 
     /// Paper-scale memory for a bit config at this rate.
-    pub fn memory_gb(&self, opts: &PipelineOpts, bits_small: &BitConfig)
-                     -> f64 {
+    pub fn memory_gb(&self, memory_arch: &str, rate_pct: u32,
+                     bits_small: &BitConfig) -> f64 {
         // map the small model's per-layer bits onto the paper arch by
         // proportional stretching of the layer index
-        let arch = self.memory_cfg(opts);
+        let arch = Self::memory_cfg(memory_arch);
         let stretched = memory::stretch_bits(bits_small, arch.n_layers);
-        memory::peak_finetune_gb(&arch, opts.rate_pct, &stretched)
+        memory::peak_finetune_gb(&arch, rate_pct, &stretched)
     }
 
     // ------------------------------------------------------------------
@@ -226,15 +278,15 @@ impl Coordinator {
     // ------------------------------------------------------------------
 
     /// Gradient pass + Taylor importance + compaction.
-    pub fn prune(&mut self, store: &ParamStore, opts: &PipelineOpts)
-                 -> Result<ParamStore> {
+    pub fn prune(&mut self, store: &ParamStore, opts: &PruneOpts,
+                 seed: u64) -> Result<ParamStore> {
         if opts.rate_pct == 0 {
             return Ok(store.clone());
         }
         let cfg = store.cfg.clone();
         let graph = DependencyGraph::build(&cfg);
         let zero = LoraState::zeros(store);
-        let mut stream = CorpusStream::new(&self.lang, opts.seed ^ 0xA11CE);
+        let mut stream = CorpusStream::new(&self.lang, seed ^ 0xA11CE);
         // accumulate grads over a few calibration batches
         let mut acc: Option<Vec<crate::tensor::Tensor>> = None;
         let n_batches = 4;
@@ -268,10 +320,11 @@ impl Coordinator {
 
     /// MI-based initial allocation b0 (QPruner^2).
     pub fn allocate_bits_mi(&mut self, pruned: &ParamStore,
-                            opts: &PipelineOpts) -> Result<BitConfig> {
+                            opts: &QuantOpts, seed: u64)
+                            -> Result<BitConfig> {
         let cfg = &pruned.cfg;
         let zero = LoraState::zeros(pruned);
-        let mut stream = CorpusStream::new(&self.lang, opts.seed ^ 0xCA11B);
+        let mut stream = CorpusStream::new(&self.lang, seed ^ 0xCA11B);
         // several calib batches -> more samples for the MI histogram
         let n_batches = 8;
         let mut pooled_all: Vec<f32> = Vec::new();
@@ -313,7 +366,7 @@ impl Coordinator {
         }
         let scores = mi::layer_mi_scores(
             &pooled_all, cfg.n_layers, batch_total, cfg.d_model, &preds,
-            opts.seed ^ 0x31,
+            seed ^ 0x31,
         );
         Ok(mi::allocate_bits(&scores, opts.frac8, opts.four_bit))
     }
@@ -327,13 +380,13 @@ impl Coordinator {
     pub fn evaluate_candidate(&mut self, pruned: &ParamStore,
                               bits: &BitConfig, opts: &PipelineOpts,
                               rng: &mut Rng) -> Result<(f64, f64)> {
-        let prep = lora::prepare(pruned, bits, opts.init, rng)?;
+        let prep = lora::prepare(pruned, bits, opts.recover.init, rng)?;
         let mut state = FinetuneState::new(prep.lora);
         let mut stream =
             CorpusStream::new(&self.lang, opts.seed ^ rng.next_u64());
         let ft = FinetuneOpts {
-            steps: opts.proxy_steps,
-            lr: opts.finetune.lr,
+            steps: opts.bo.proxy_steps,
+            lr: opts.recover.finetune.lr,
             warmup: 4,
             seed: opts.seed,
         };
@@ -341,9 +394,10 @@ impl Coordinator {
                            &ft)?;
         let tasks: Vec<TaskSpec> = paper_suite();
         let results = eval_suite(&mut self.rt, &prep.base, &state.lora,
-                                 &self.lang, &tasks, opts.proxy_items)?;
+                                 &self.lang, &tasks, opts.bo.proxy_items)?;
         let perf = mean_accuracy(&results);
-        let mem = self.memory_gb(opts, bits);
+        let mem = self.memory_gb(&opts.memory_arch, opts.prune.rate_pct,
+                                 bits);
         Ok((perf, mem))
     }
 
@@ -353,13 +407,13 @@ impl Coordinator {
         &mut self, pruned: &ParamStore, bits: &BitConfig,
         opts: &PipelineOpts, rng: &mut Rng,
     ) -> Result<(Vec<TaskResult>, f64)> {
-        let prep = lora::prepare(pruned, bits, opts.init, rng)?;
+        let prep = lora::prepare(pruned, bits, opts.recover.init, rng)?;
         let mut state = FinetuneState::new(prep.lora);
         let mut stream =
             CorpusStream::new(&self.lang, opts.seed ^ rng.next_u64());
         let ft = FinetuneOpts {
-            steps: opts.proxy_steps,
-            lr: opts.finetune.lr,
+            steps: opts.bo.proxy_steps,
+            lr: opts.recover.finetune.lr,
             warmup: 4,
             seed: opts.seed,
         };
@@ -367,8 +421,9 @@ impl Coordinator {
                            &ft)?;
         let tasks = paper_suite();
         let results = eval_suite(&mut self.rt, &prep.base, &state.lora,
-                                 &self.lang, &tasks, opts.proxy_items)?;
-        let mem = self.memory_gb(opts, bits);
+                                 &self.lang, &tasks, opts.bo.proxy_items)?;
+        let mem = self.memory_gb(&opts.memory_arch, opts.prune.rate_pct,
+                                 bits);
         Ok((results, mem))
     }
 
@@ -383,10 +438,10 @@ impl Coordinator {
 
         // warm start: the MI config + random budget-respecting configs
         let mut warm = vec![b0];
-        let max8 = ((n_layers as f64) * opts.frac8).floor() as usize;
-        for _ in 0..opts.bo_init_random {
+        let max8 = ((n_layers as f64) * opts.quant.frac8).floor() as usize;
+        for _ in 0..opts.bo.init_random {
             let n8 = rng.below(max8 + 1);
-            let mut c = BitConfig::uniform(n_layers, opts.four_bit);
+            let mut c = BitConfig::uniform(n_layers, opts.quant.four_bit);
             for i in rng.choose_k(n_layers, n8) {
                 c.layers[i] = QuantFormat::Int8;
             }
@@ -400,9 +455,10 @@ impl Coordinator {
             observed.push(Observation { config: c, perf, memory_gb: mem });
         }
 
-        for _ in 0..opts.bo_iters {
-            let Some(cand) = bo::suggest(&observed, opts.acquisition,
-                                         opts.four_bit, opts.frac8,
+        for _ in 0..opts.bo.iters {
+            let Some(cand) = bo::suggest(&observed, opts.bo.acquisition,
+                                         opts.quant.four_bit,
+                                         opts.quant.frac8,
                                          &mut rng)?
             else {
                 break; // search space exhausted
@@ -422,16 +478,43 @@ impl Coordinator {
     }
 
     // ------------------------------------------------------------------
+    // stage 4: performance recovery
+    // ------------------------------------------------------------------
+
+    /// Prepare the frozen (simulated-quantized) base + adapters and
+    /// run the recovery fine-tune. Returns the prepared base (the
+    /// deployment weights) and the trained adapter state.
+    pub fn recover(&mut self, pruned: &ParamStore, bits: &BitConfig,
+                   init: InitMethod, opts: &RecoverOpts, seed: u64,
+                   rng: &mut Rng)
+                   -> Result<(ParamStore, FinetuneState)> {
+        let prep = lora::prepare(pruned, bits, init, rng)?;
+        let mut state = FinetuneState::new(prep.lora);
+        let mut stream = CorpusStream::new(&self.lang, seed ^ 0xF17E);
+        finetune::finetune(&mut self.rt, &prep.base, &mut state,
+                           &mut stream, &opts.finetune)?;
+        Ok((prep.base, state))
+    }
+
+    // ------------------------------------------------------------------
     // the full pipeline
     // ------------------------------------------------------------------
 
     pub fn run(&mut self, store: &ParamStore, opts: &PipelineOpts)
                -> Result<PipelineResult> {
+        let (result, _, _) = self.run_stages(store, opts)?;
+        Ok(result)
+    }
+
+    /// Run the full pipeline *and* keep the deployable pieces: the
+    /// frozen recovery base and the trained adapters.
+    fn run_stages(&mut self, store: &ParamStore, opts: &PipelineOpts)
+                  -> Result<(PipelineResult, ParamStore, LoraState)> {
         let mut rng = Rng::new(opts.seed);
 
         // 1. prune
         let t0 = std::time::Instant::now();
-        let pruned = self.prune(store, opts)?;
+        let pruned = self.prune(store, &opts.prune, opts.seed)?;
         self.metrics.add_time("pipeline.prune", t0.elapsed().as_secs_f64());
 
         // 2. bit allocation per method
@@ -441,59 +524,84 @@ impl Coordinator {
                 Vec::new(),
             ),
             Method::QPruner1 => (
-                BitConfig::uniform(pruned.cfg.n_layers, opts.four_bit),
+                BitConfig::uniform(pruned.cfg.n_layers,
+                                   opts.quant.four_bit),
                 Vec::new(),
             ),
             Method::QPruner2 => {
-                let b = self.allocate_bits_mi(&pruned, opts)?;
+                let b = self.allocate_bits_mi(&pruned, &opts.quant,
+                                              opts.seed)?;
                 (b, Vec::new())
             }
             Method::QPruner3 => {
-                let b0 = self.allocate_bits_mi(&pruned, opts)?;
+                let b0 = self.allocate_bits_mi(&pruned, &opts.quant,
+                                               opts.seed)?;
                 let (best, obs) = self.bo_loop(&pruned, b0, opts)?;
                 (best, obs)
             }
         };
 
-        // 3. prepare base + adapters (fp16 baseline uses Gaussian LoRA,
-        //    quantized methods the configured init — paper §4 protocol)
-        let init = if opts.method == Method::LlmPruner {
-            InitMethod::Gaussian
-        } else {
-            opts.init
-        };
-        let prep = lora::prepare(&pruned, &bits, init, &mut rng)?;
-        let trainable = prep.lora.trainable_params();
-
-        // 4. recovery fine-tune
-        let mut state = FinetuneState::new(prep.lora);
-        let mut stream = CorpusStream::new(&self.lang, opts.seed ^ 0xF17E);
+        // 3 + 4. prepare base + adapters, recovery fine-tune
+        let init = opts.effective_init();
         let t1 = std::time::Instant::now();
-        finetune::finetune(&mut self.rt, &prep.base, &mut state, &mut stream,
-                           &opts.finetune)?;
+        let (base, state) = self.recover(&pruned, &bits, init,
+                                         &opts.recover, opts.seed,
+                                         &mut rng)?;
+        let trainable = state.lora.trainable_params();
         self.metrics
             .add_time("pipeline.finetune", t1.elapsed().as_secs_f64());
 
         // 5. evaluate
         let tasks = paper_suite();
         let t2 = std::time::Instant::now();
-        let results = eval_suite(&mut self.rt, &prep.base, &state.lora,
+        let results = eval_suite(&mut self.rt, &base, &state.lora,
                                  &self.lang, &tasks, opts.eval_items)?;
         self.metrics.add_time("pipeline.eval", t2.elapsed().as_secs_f64());
         let mean = mean_accuracy(&results);
-        let mem = self.memory_gb(opts, &bits);
+        let mem = self.memory_gb(&opts.memory_arch, opts.prune.rate_pct,
+                                 &bits);
 
-        Ok(PipelineResult {
+        let result = PipelineResult {
             method: opts.method,
-            rate_pct: opts.rate_pct,
+            rate_pct: opts.prune.rate_pct,
             bits,
             tasks: results,
             mean_accuracy: mean,
             memory_gb: mem,
             observations,
-            curve: state.curve,
+            curve: state.curve.clone(),
             trainable_params: trainable,
-        })
+        };
+        Ok((result, base, state.lora))
+    }
+
+    /// Run the pipeline and package the deliverable: the result row
+    /// plus a [`ModelArtifact`] holding the frozen base in its native
+    /// quantized encodings and the trained LoRA deltas —
+    /// `serve --artifact` boots it without re-running any stage.
+    pub fn run_with_artifact(&mut self, store: &ParamStore,
+                             opts: &PipelineOpts, source: &str)
+                             -> Result<(PipelineResult, ModelArtifact)> {
+        let (result, base, lora) = self.run_stages(store, opts)?;
+        let stages = match opts.method {
+            Method::LlmPruner => "prune>recover",
+            Method::QPruner1 => "prune>quant>recover",
+            Method::QPruner2 => "prune>mi>recover",
+            Method::QPruner3 => "prune>mi>bo>recover",
+        };
+        let artifact = ModelArtifact::from_pipeline(
+            &base,
+            &result.bits,
+            Some(LoraDelta::from_state(&lora)),
+            LoraMode::Merge,
+            Provenance {
+                method: opts.method.label().to_string(),
+                seed: opts.seed,
+                stages: stages.to_string(),
+                source: source.to_string(),
+            },
+        )?;
+        Ok((result, artifact))
     }
 
     /// Evaluate a store without any tuning ("w/o tuning" rows).
@@ -525,7 +633,10 @@ mod tests {
     #[test]
     fn quick_opts_sane() {
         let o = PipelineOpts::quick(20, Method::QPruner2);
-        assert_eq!(o.rate_pct, 20);
-        assert!(o.frac8 <= 0.25);
+        assert_eq!(o.prune.rate_pct, 20);
+        assert!(o.quant.frac8 <= 0.25);
+        assert_eq!(o.effective_init(), InitMethod::LoftQ { iters: 1 });
+        let b = PipelineOpts::quick(20, Method::LlmPruner);
+        assert_eq!(b.effective_init(), InitMethod::Gaussian);
     }
 }

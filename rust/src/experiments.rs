@@ -65,12 +65,12 @@ impl Scale {
     }
 
     pub fn apply(&self, opts: &mut PipelineOpts) {
-        opts.finetune.steps = self.finetune_steps;
+        opts.recover.finetune.steps = self.finetune_steps;
         opts.eval_items = self.eval_items;
-        opts.bo_iters = self.bo_iters;
-        opts.bo_init_random = self.bo_init_random;
-        opts.proxy_steps = self.proxy_steps;
-        opts.proxy_items = self.proxy_items;
+        opts.bo.iters = self.bo_iters;
+        opts.bo.init_random = self.bo_init_random;
+        opts.bo.proxy_steps = self.proxy_steps;
+        opts.bo.proxy_items = self.proxy_items;
     }
 }
 
@@ -196,27 +196,27 @@ pub fn table2_ablation(
         // 4-bit dtype
         for fmt in [QuantFormat::Nf4, QuantFormat::Fp4] {
             let mut o = base(Method::QPruner2);
-            o.four_bit = fmt;
+            o.quant.four_bit = fmt;
             v.push(("Dtype of 4-bit", fmt.label().to_string(), o));
         }
         // adapter init
         for init in [InitMethod::LoftQ { iters: 1 }, InitMethod::Gaussian,
                      InitMethod::Pissa] {
             let mut o = base(Method::QPruner2);
-            o.init = init;
+            o.recover.init = init;
             v.push(("Adapter init", init.label(), o));
         }
         // LoftQ iterations
         for iters in [1usize, 2, 4] {
             let mut o = base(Method::QPruner2);
-            o.init = InitMethod::LoftQ { iters };
+            o.recover.init = InitMethod::LoftQ { iters };
             v.push(("LoftQ iters", format!("iter={iters}"), o));
         }
         // importance estimation
         for (label, ord) in [("element^1", TaylorOrder::First),
                              ("element^2", TaylorOrder::Second)] {
             let mut o = base(Method::QPruner2);
-            o.taylor = ord;
+            o.prune.taylor = ord;
             v.push(("Importance", label.to_string(), o));
         }
         v
@@ -306,17 +306,17 @@ pub fn fig3_pareto(
     let mut opts = PipelineOpts::quick(rate, Method::QPruner3);
     scale.apply(&mut opts);
     // Figures 3/4 explore the space more broadly than the table budget
-    opts.frac8 = 0.5;
-    let pruned = coord.prune(store, &opts)?;
+    opts.quant.frac8 = 0.5;
+    let pruned = coord.prune(store, &opts.prune, opts.seed)?;
     let n_layers = pruned.cfg.n_layers;
     let mut rng = Rng::new(opts.seed ^ 0xFA3);
 
-    let b0 = coord.allocate_bits_mi(&pruned, &opts)?;
+    let b0 = coord.allocate_bits_mi(&pruned, &opts.quant, opts.seed)?;
     let mut configs: Vec<BitConfig> = vec![b0];
-    let max8 = ((n_layers as f64) * opts.frac8).floor() as usize;
+    let max8 = ((n_layers as f64) * opts.quant.frac8).floor() as usize;
     while configs.len() < n_init {
         let n8 = rng.below(max8 + 1);
-        let mut c = BitConfig::uniform(n_layers, opts.four_bit);
+        let mut c = BitConfig::uniform(n_layers, opts.quant.four_bit);
         for i in rng.choose_k(n_layers, n8) {
             c.layers[i] = QuantFormat::Int8;
         }
@@ -350,7 +350,7 @@ pub fn fig3_pareto(
     }
     while detailed.len() < n_points {
         let Some(cand) = bo::suggest(&observed, Acquisition::Ei,
-                                     opts.four_bit, opts.frac8, &mut rng)?
+                                     opts.quant.four_bit, opts.quant.frac8, &mut rng)?
         else {
             break;
         };

@@ -17,6 +17,7 @@
 mod xla_stub;
 
 pub mod rng;
+pub mod artifact;
 pub mod tensor;
 pub mod linalg;
 pub mod quant;

@@ -65,6 +65,32 @@ pub fn matmul_nt_into(x: &[f32], m: usize, k: usize, w: &[f32],
     }
 }
 
+/// out[m, n] += scale * (x[m, k] @ w[n, k]^T) — the accumulating
+/// variant of [`matmul_nt_into`], used by the serving engine's
+/// adjoined-LoRA side path (y += s * (x A^T) B^T on top of the base
+/// GEMM). Each dot accumulates left-to-right and is scaled *before*
+/// the add, exactly mirroring the per-row reference matvec
+/// (`y[o] += s * dot(B[o], tmp)`), so the batched and per-session
+/// adjoin paths agree bitwise like the base paths do.
+pub fn matmul_nt_scaled_acc_into(x: &[f32], m: usize, k: usize,
+                                 w: &[f32], n: usize, scale: f32,
+                                 out: &mut [f32]) {
+    assert_eq!(x.len(), m * k, "x is not [m, k]");
+    assert_eq!(w.len(), n * k, "w is not [n, k]");
+    assert_eq!(out.len(), m * n, "out is not [m, n]");
+    for r in 0..n {
+        let wrow = &w[r * k..(r + 1) * k];
+        for i in 0..m {
+            let xrow = &x[i * k..(i + 1) * k];
+            let mut s = 0.0f32;
+            for (a, b) in wrow.iter().zip(xrow) {
+                s += a * b;
+            }
+            out[i * n + r] += scale * s;
+        }
+    }
+}
+
 /// y = A[m,n] @ x[n]
 pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
     let (m, n) = (a.shape()[0], a.shape()[1]);
@@ -331,6 +357,20 @@ mod tests {
             assert_eq!(&out[i * n..(i + 1) * n], &y[..],
                        "row {i} diverged from matvec");
         }
+    }
+
+    #[test]
+    fn matmul_nt_scaled_acc_adds_on_top() {
+        // out starts non-zero; the scaled product accumulates onto it
+        let x = [1.0f32, 2.0];
+        let w = [3.0f32, 4.0, 5.0, 6.0];
+        let mut out = [10.0f32, 20.0];
+        matmul_nt_scaled_acc_into(&x, 1, 2, &w, 2, 0.5, &mut out);
+        assert_eq!(out, [10.0 + 0.5 * 11.0, 20.0 + 0.5 * 17.0]);
+        // scale 0 is a no-op
+        let before = out;
+        matmul_nt_scaled_acc_into(&x, 1, 2, &w, 2, 0.0, &mut out);
+        assert_eq!(out, before);
     }
 
     #[test]

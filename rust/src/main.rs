@@ -4,13 +4,17 @@
 //!   pretrain   pretrain a corpus checkpoint (the LLaMA/Vicuna stand-in)
 //!   run        one QPruner pipeline run (prune -> quantize -> BO ->
 //!              fine-tune -> eval) with a table-style summary
+//!   export     run the pipeline and write the deployable ModelArtifact
+//!              (native-encoded quantized base + trained LoRA deltas)
 //!   table1 | table2 | table3 | fig1 | fig3
 //!              regenerate a paper table/figure (writes results/)
 //!   serve      synthetic multi-client serving run over a pruned +
-//!              quantized checkpoint (continuous batching, KV pool)
+//!              quantized checkpoint or an exported --artifact
+//!              (continuous batching, KV pool)
 //!   bench-serve
 //!              closed-loop load generator: p50/p95/p99 latency,
 //!              tokens/sec, batch occupancy, rejection rate
+//!              (writes results/bench_serve.md + BENCH_serve.json)
 //!   quantize   per-format round-trip error analysis on a checkpoint
 //!   info       artifact + runtime environment report
 
@@ -28,18 +32,29 @@ use std::path::PathBuf;
 fn usage() -> ! {
     eprintln!(
         "usage: qpruner <cmd> [--key value ...]\n\
-         cmds: pretrain | run | table1 | table2 | table3 | fig1 | fig3 |\n\
-               serve | bench-serve | quantize | info\n\
+         cmds: pretrain | run | export | table1 | table2 | table3 |\n\
+               fig1 | fig3 | serve | bench-serve | quantize | info\n\
          common flags:\n\
            --size tiny|small|base       model preset   (default small)\n\
            --style llama|vicuna         corpus dialect (default llama)\n\
            --ckpt-dir DIR               checkpoints    (default checkpoints)\n\
            --out-dir DIR                results        (default results)\n\
            --scale smoke|paper          harness fidelity (default paper)\n\
-         run flags:\n\
+         run / export flags:\n\
            --rate 20 --method q3 --four-bit nf4|fp4 --init loftq1|gaussian|pissa\n\
            --taylor first|second --steps N --bo-iters N --seed N\n\
+           --out PATH                   (export) artifact path, default\n\
+                                        CKPT_DIR/SIZE_STYLE_METHOD_rRATE.qpart\n\
+           --deploy-only true           (export) skip the AOT pipeline:\n\
+                                        quantize the checkpoint per\n\
+                                        --quant/--bits + LoftQ adapters\n\
          serve / bench-serve flags:\n\
+           --artifact PATH              boot an exported ModelArtifact\n\
+                                        (pruned+quantized+LoRA) instead\n\
+                                        of a raw checkpoint\n\
+           --lora merge|adjoin          LoRA deployment override: fold\n\
+                                        s*BA into the base at build, or\n\
+                                        keep a low-rank decode side path\n\
            --clients N                  concurrent closed-loop clients\n\
            --requests N                 total requests to issue\n\
            --max-batch N                continuous-batching cap per step\n\
@@ -57,6 +72,35 @@ fn usage() -> ! {
     std::process::exit(2);
 }
 
+/// Shared `run` / `export` pipeline-option plumbing: preset from
+/// `--rate`/`--method`, fidelity from `--scale`, then per-stage flag
+/// overrides mapped onto the stage-scoped option structs.
+fn pipeline_opts_from(cfg: &Config, scale: &Scale)
+                      -> Result<PipelineOpts> {
+    let method = Method::parse(&cfg.str_or("method", "q3"))
+        .context("bad --method")?;
+    let mut opts =
+        PipelineOpts::quick(cfg.usize_or("rate", 20)? as u32, method);
+    scale.apply(&mut opts);
+    if let Some(fb) = cfg.get("four-bit") {
+        opts.quant.four_bit =
+            QuantFormat::parse(fb).context("bad --four-bit")?;
+    }
+    if let Some(init) = cfg.get("init") {
+        opts.recover.init =
+            InitMethod::parse(init).context("bad --init")?;
+    }
+    if let Some(t) = cfg.get("taylor") {
+        opts.prune.taylor =
+            TaylorOrder::parse(t).context("bad --taylor")?;
+    }
+    opts.recover.finetune.steps =
+        cfg.usize_or("steps", opts.recover.finetune.steps)?;
+    opts.bo.iters = cfg.usize_or("bo-iters", opts.bo.iters)?;
+    opts.seed = cfg.u64_or("seed", opts.seed)?;
+    Ok(opts)
+}
+
 /// Parse "LO:HI" (or a single "N" meaning N..=N) into an inclusive
 /// range pair for the serve workload length flags.
 fn parse_range(s: &str) -> Result<(usize, usize)> {
@@ -71,13 +115,6 @@ fn parse_range(s: &str) -> Result<(usize, usize)> {
         bail!("bad range {s:?} (expected LO:HI with 1 <= LO <= HI)");
     }
     Ok((lo, hi))
-}
-
-fn scale_of(cfg: &Config) -> Scale {
-    match cfg.str_or("scale", "paper").as_str() {
-        "smoke" => Scale::smoke(),
-        _ => Scale::paper(),
-    }
 }
 
 fn main() -> Result<()> {
@@ -98,7 +135,7 @@ fn main() -> Result<()> {
     let ckpt_dir = PathBuf::from(cfg.str_or("ckpt-dir", "checkpoints"));
     let out_dir = PathBuf::from(cfg.str_or("out-dir", "results"));
     let model_cfg = ModelConfig::preset(&size)?;
-    let scale = scale_of(&cfg);
+    let scale = cfg.scale_preset(Scale::smoke, Scale::paper);
 
     match cmd {
         "info" => {
@@ -132,24 +169,7 @@ fn main() -> Result<()> {
             let store = experiments::load_or_pretrain(
                 &mut coord, &model_cfg, &ckpt_dir, &style,
                 cfg.usize_or("pretrain-steps", scale.pretrain_steps)?)?;
-            let method = Method::parse(&cfg.str_or("method", "q3"))
-                .context("bad --method")?;
-            let mut opts =
-                PipelineOpts::quick(cfg.usize_or("rate", 20)? as u32, method);
-            scale.apply(&mut opts);
-            if let Some(fb) = cfg.get("four-bit") {
-                opts.four_bit =
-                    QuantFormat::parse(fb).context("bad --four-bit")?;
-            }
-            if let Some(init) = cfg.get("init") {
-                opts.init = InitMethod::parse(init).context("bad --init")?;
-            }
-            if let Some(t) = cfg.get("taylor") {
-                opts.taylor = TaylorOrder::parse(t).context("bad --taylor")?;
-            }
-            opts.finetune.steps = cfg.usize_or("steps", opts.finetune.steps)?;
-            opts.bo_iters = cfg.usize_or("bo-iters", opts.bo_iters)?;
-            opts.seed = cfg.u64_or("seed", opts.seed)?;
+            let opts = pipeline_opts_from(&cfg, &scale)?;
             let res = coord.run(&store, &opts)?;
             println!("method      : {}", res.method.label());
             println!("rate        : {}%", res.rate_pct);
@@ -162,6 +182,98 @@ fn main() -> Result<()> {
             println!("memory (GB) : {:.2}", res.memory_gb);
             println!("final loss  : {:.4}", res.curve.tail_mean(8));
             println!("-- stage timings --\n{}", coord.metrics.report());
+        }
+        "export" => {
+            // write the deployable ModelArtifact (native-encoded
+            // quantized base + LoRA deltas). Two modes:
+            //  * full pipeline (default): prune -> allocate -> BO ->
+            //    recovery fine-tune, then export the frozen base +
+            //    trained adapters (needs the AOT artifacts);
+            //  * --deploy-only: skip the runtime-backed stages —
+            //    quantize a checkpoint per --quant/--bits and attach
+            //    LoftQ/PiSSA-initialized correction adapters (pure
+            //    host math; what CI smokes).
+            use qpruner::artifact::{LoraDelta, LoraMode,
+                                    ModelArtifact, Provenance};
+            use qpruner::model::ParamStore;
+            use qpruner::quant::BitConfig;
+
+            let ckpt =
+                experiments::checkpoint_path(&ckpt_dir, &size, &style);
+            let opts = pipeline_opts_from(&cfg, &scale)?;
+            let deploy_only = cfg.bool_or("deploy-only", false)?;
+            let (artifact, label) = if deploy_only {
+                let store = if ckpt.exists() {
+                    ParamStore::load(&ckpt)?
+                } else {
+                    eprintln!(
+                        "no checkpoint at {ckpt:?}; exporting a \
+                         random init (run `qpruner pretrain` first)"
+                    );
+                    ParamStore::init(&model_cfg, opts.seed)
+                };
+                let bits = if let Some(s) = cfg.get("bits") {
+                    let b = BitConfig::parse_short(s)
+                        .context("bad --bits (expected e.g. 8444)")?;
+                    if b.n_layers() != store.cfg.n_layers {
+                        bail!("--bits has {} layers, model has {}",
+                              b.n_layers(), store.cfg.n_layers);
+                    }
+                    b
+                } else {
+                    let fmt = QuantFormat::parse(
+                        &cfg.str_or("quant", "nf4"))
+                        .context("bad --quant")?;
+                    BitConfig::uniform(store.cfg.n_layers, fmt)
+                };
+                let mut rng = qpruner::rng::Rng::new(opts.seed);
+                let prep = qpruner::lora::prepare(
+                    &store, &bits, opts.recover.init, &mut rng)?;
+                let art = ModelArtifact::from_pipeline(
+                    &prep.base,
+                    &bits,
+                    Some(LoraDelta::from_state(&prep.lora)),
+                    LoraMode::Merge,
+                    Provenance {
+                        method: format!(
+                            "deploy-only:{}",
+                            opts.recover.init.label()
+                        ),
+                        seed: opts.seed,
+                        stages: "quantize>adapter-init".into(),
+                        source: format!("{}", ckpt.display()),
+                    },
+                )?;
+                (art, format!("deploy-only bits {}", bits.short()))
+            } else {
+                let mut coord = experiments::open_coordinator(
+                    model_cfg.vocab, &style)?;
+                let store = experiments::load_or_pretrain(
+                    &mut coord, &model_cfg, &ckpt_dir, &style,
+                    cfg.usize_or("pretrain-steps",
+                                 scale.pretrain_steps)?)?;
+                let source = format!("{}", ckpt.display());
+                let (res, art) =
+                    coord.run_with_artifact(&store, &opts, &source)?;
+                println!("mean acc    : {:.2}%",
+                         100.0 * res.mean_accuracy);
+                (art, format!("{} bits {}", res.method.label(),
+                              res.bits.short()))
+            };
+            let out = match cfg.get("out") {
+                Some(p) => PathBuf::from(p),
+                None => ckpt_dir.join(format!(
+                    "{size}_{style}_{}_r{}.qpart",
+                    cfg.str_or("method", "q3"),
+                    artifact.ps.rate_pct
+                )),
+            };
+            artifact.save(&out)?;
+            println!("export      : {label}");
+            println!("artifact    : {}", artifact.summary());
+            println!("wrote {out:?}");
+            println!("serve it: qpruner serve --artifact {}",
+                     out.display());
         }
         "table1" => {
             let mut coord =
@@ -249,16 +361,17 @@ fn main() -> Result<()> {
                      data.n_evals);
         }
         "serve" | "bench-serve" => {
+            use qpruner::artifact::{LoraMode, ModelArtifact};
             use qpruner::data::Language;
             use qpruner::metrics::Metrics;
             use qpruner::model::ParamStore;
             use qpruner::quant::BitConfig;
+            use qpruner::serve::engine::EngineBuilder;
+            use qpruner::serve::kv_cache::KvPrecision;
             use qpruner::serve::{self, ServeOpts};
 
-            let mut sopts = match cfg.str_or("scale", "paper").as_str() {
-                "smoke" => ServeOpts::smoke(),
-                _ => ServeOpts::paper(),
-            };
+            let mut sopts =
+                cfg.scale_preset(ServeOpts::smoke, ServeOpts::paper);
             sopts.clients = cfg.usize_or("clients", sopts.clients)?;
             sopts.requests = cfg.usize_or("requests", sopts.requests)?;
             sopts.max_batch =
@@ -274,17 +387,17 @@ fn main() -> Result<()> {
             serve::check_memory_arch(&sopts.memory_arch)
                 .context("bad --memory-arch")?;
             sopts.max_seq = cfg.usize_or("max-seq", sopts.max_seq)?;
-            if let Some(v) = cfg.get("kv-bits") {
-                let bits: u32 =
-                    v.parse().context("bad --kv-bits (expected 32|8)")?;
-                sopts.kv_precision =
-                    qpruner::serve::kv_cache::KvPrecision::from_bits(
-                        bits,
-                    )
-                    .with_context(|| {
+            let kv_precision = match cfg.get("kv-bits") {
+                None => KvPrecision::F32,
+                Some(v) => {
+                    let bits: u32 = v
+                        .parse()
+                        .context("bad --kv-bits (expected 32|8)")?;
+                    KvPrecision::from_bits(bits).with_context(|| {
                         format!("bad --kv-bits {bits} (expected 32|8)")
-                    })?;
-            }
+                    })?
+                }
+            };
             if let Some(v) = cfg.get("prompt-len") {
                 sopts.prompt_len =
                     parse_range(v).context("bad --prompt-len")?;
@@ -303,51 +416,81 @@ fn main() -> Result<()> {
                     as f32;
             sopts.seed = cfg.u64_or("seed", sopts.seed)?;
 
-            let path =
-                experiments::checkpoint_path(&ckpt_dir, &size, &style);
-            let store = if path.exists() {
-                ParamStore::load(&path)?
-            } else {
-                eprintln!(
-                    "no checkpoint at {path:?}; serving a random init \
-                     (run `qpruner pretrain` first for a trained model)"
+            // deployment source: an exported artifact boots the
+            // pipeline's own pruned+quantized+LoRA deliverable; the
+            // checkpoint path quantizes a raw store per --bits/--quant
+            let mut builder =
+                EngineBuilder::new().kv_precision(kv_precision);
+            if let Some(m) = cfg.get("lora") {
+                builder = builder.lora(
+                    LoraMode::parse(m)
+                        .context("bad --lora (expected merge|adjoin)")?,
                 );
-                ParamStore::init(&model_cfg, sopts.seed)
-            };
-            let n_layers = store.cfg.n_layers;
-            let bits = if let Some(s) = cfg.get("bits") {
-                let b = BitConfig::parse_short(s)
-                    .context("bad --bits (expected e.g. 8444)")?;
-                if b.n_layers() != n_layers {
-                    bail!("--bits has {} layers, model has {n_layers}",
-                          b.n_layers());
-                }
-                b
+            }
+            let (model_name, vocab, rate, bits);
+            if let Some(p) = cfg.get("artifact") {
+                let art =
+                    ModelArtifact::load(std::path::Path::new(p))?;
+                println!("artifact : {}", art.summary());
+                model_name = art.cfg.name.clone();
+                vocab = art.cfg.vocab;
+                rate = art.ps.rate_pct;
+                bits = art.bits.clone();
+                builder = builder.artifact(art);
             } else {
-                let fmt = QuantFormat::parse(&cfg.str_or("quant", "nf4"))
-                    .context("bad --quant")?;
-                BitConfig::uniform(n_layers, fmt)
-            };
-            let lang = Language::new(store.cfg.vocab,
-                                     experiments::style_seed(&style));
+                let path = experiments::checkpoint_path(
+                    &ckpt_dir, &size, &style,
+                );
+                let store = if path.exists() {
+                    ParamStore::load(&path)?
+                } else {
+                    eprintln!(
+                        "no checkpoint at {path:?}; serving a random \
+                         init (run `qpruner pretrain` first for a \
+                         trained model)"
+                    );
+                    ParamStore::init(&model_cfg, sopts.seed)
+                };
+                let n_layers = store.cfg.n_layers;
+                bits = if let Some(s) = cfg.get("bits") {
+                    let b = BitConfig::parse_short(s)
+                        .context("bad --bits (expected e.g. 8444)")?;
+                    if b.n_layers() != n_layers {
+                        bail!(
+                            "--bits has {} layers, model has {n_layers}",
+                            b.n_layers()
+                        );
+                    }
+                    b
+                } else {
+                    let fmt =
+                        QuantFormat::parse(&cfg.str_or("quant", "nf4"))
+                            .context("bad --quant")?;
+                    BitConfig::uniform(n_layers, fmt)
+                };
+                model_name = store.cfg.name.clone();
+                vocab = store.cfg.vocab;
+                rate = store.ps.rate_pct;
+                builder = builder.store(&store, &bits);
+            }
+            let lang =
+                Language::new(vocab, experiments::style_seed(&style));
             let mut rt = qpruner::runtime::Runtime::open_default()?;
             let mut metrics = Metrics::new();
             let budget =
-                serve::resolve_kv_budget_gb(&sopts, store.ps.rate_pct,
-                                            &bits);
+                serve::resolve_kv_budget_gb(&sopts, rate, &bits);
             println!(
                 "serving {} (rate {}%, bits {}, kv {}-bit) — kv \
                  budget {:.2} GB on a {:.0} GB {} device",
-                store.cfg.name, store.ps.rate_pct, bits.short(),
-                sopts.kv_precision.bits(), budget,
+                model_name, rate, bits.short(),
+                kv_precision.bits(), budget,
                 sopts.device_gb, sopts.memory_arch
             );
-            let report = serve::run_workload(&mut rt, &store, &bits,
-                                             &lang, &sopts,
-                                             &mut metrics)?;
+            let report = serve::run_workload(&mut rt, builder, &lang,
+                                             &sopts, &mut metrics)?;
             let title = format!(
                 "{} ({}, {} requests, {} clients, max-batch {})",
-                cmd, store.cfg.name, sopts.requests, sopts.clients,
+                cmd, model_name, sopts.requests, sopts.clients,
                 sopts.max_batch
             );
             let t = report.to_table(&title);
@@ -367,7 +510,21 @@ fn main() -> Result<()> {
                     report.mean_occupancy,
                     report.rejection_rate()
                 );
+                let cfg_name = format!(
+                    "c{}_b{}_kv{}_{}",
+                    sopts.clients, sopts.max_batch, report.kv_bits,
+                    report.lora
+                );
+                std::fs::create_dir_all(&out_dir)?;
+                let json_path = out_dir.join("BENCH_serve.json");
+                let prev = std::fs::read_to_string(&json_path).ok();
+                std::fs::write(
+                    &json_path,
+                    serve::bench_json_append(prev.as_deref(),
+                                             &cfg_name, &report),
+                )?;
                 println!("wrote {:?}", out_dir.join("bench_serve.md"));
+                println!("wrote {json_path:?}");
             }
             println!("-- stage timings --\n{}", metrics.report());
         }

@@ -28,25 +28,39 @@
 //! diffs the GEMM path against, and the baseline `bench_serve`
 //! measures speedups over.
 //!
-//! Weights are "deployed" once at engine construction: projections are
-//! simulated-quantized per the layer `BitConfig`
-//! (`lora::quantize_base`), exactly the paper's deployment numerics.
+//! Weights are "deployed" once at engine construction, through the
+//! [`EngineBuilder`] — the one typed entry from pipeline output to
+//! serving input. Two sources:
+//!
+//! * `.store(&ParamStore, &BitConfig)` — projections are
+//!   simulated-quantized per the layer `BitConfig`
+//!   (`lora::quantize_base`), exactly the paper's deployment numerics;
+//! * `.artifact(ModelArtifact)` / `.artifact_path(..)` — a pipeline
+//!   `export` is decoded from its native nf4/int8/fp16 blobs, and any
+//!   trained LoRA deltas deploy per [`LoraMode`]: **merged** (fold
+//!   `s·BA` into the base once at build — plain GEMMs afterwards) or
+//!   **adjoined** (a low-rank side path `y += s·(xAᵀ)Bᵀ` evaluated in
+//!   both the batched and the reference decode paths, sharing the
+//!   same accumulation order so parity testing covers it too).
 
-use crate::linalg::matmul_nt_into;
+use crate::artifact::{LoraDelta, LoraMode, ModelArtifact};
+use crate::linalg::{self, matmul_nt_into, matmul_nt_scaled_acc_into};
 use crate::lora;
-use crate::model::{proj_index, ModelConfig, ParamStore, PrunedShapes};
+use crate::model::{proj_index, ModelConfig, ParamStore, PrunedShapes,
+                   PROJS};
 use crate::quant::BitConfig;
 use crate::rng::Rng;
 use crate::runtime::{Arg, Runtime};
-use crate::serve::kv_cache::{KvCachePool, KvSlot};
+use crate::serve::kv_cache::{KvCachePool, KvPrecision, KvSlot};
 use crate::serve::workspace::DecodeWorkspace;
 use crate::tensor::Tensor;
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 use std::cell::RefCell;
+use std::path::PathBuf;
 
 enum Backend {
     Native,
-    Artifact { name: String, lora_zeros: Vec<Tensor> },
+    Artifact { name: String, lora_args: Vec<Tensor> },
 }
 
 /// One session's slice of a batched decode step: feed `token` at
@@ -61,12 +75,21 @@ pub struct BatchReq {
 }
 
 pub struct Engine {
-    /// frozen deployment weights (simulated-quantized projections)
+    /// frozen deployment weights (simulated-quantized projections,
+    /// with LoRA deltas folded in when deployed merged)
     base: ParamStore,
     bits: BitConfig,
     cfg: ModelConfig,
     ps: PrunedShapes,
     backend: Backend,
+    /// adjoined LoRA adapters (low-rank side path in every decode
+    /// step); `None` for merged or adapter-free deployments
+    adjoin: Option<LoraDelta>,
+    /// "none" | "merged" | "adjoined" — reporting only
+    lora_label: &'static str,
+    /// KV-cache storage precision the deployment was built for; the
+    /// serving layer sizes its pool from this
+    kv_precision: KvPrecision,
     /// RoPE tables `[max_seq, head_dim/2]`
     rope_cos: Vec<f32>,
     rope_sin: Vec<f32>,
@@ -79,28 +102,214 @@ pub struct Engine {
     ws: RefCell<DecodeWorkspace>,
 }
 
+/// Weight source of an [`EngineBuilder`].
+enum Source {
+    /// pipeline in-memory output: quantize per `bits` at build
+    Store { store: ParamStore, bits: BitConfig },
+    /// exported deployable artifact (already in deployment numerics)
+    Artifact(Box<ModelArtifact>),
+    /// path to a serialized artifact, loaded at build
+    Path(PathBuf),
+}
+
+/// Typed constructor for [`Engine`] — the single API from pipeline
+/// output (in-memory store + bits, or an exported `ModelArtifact`) to
+/// serving input. Replaces the old positional `Engine::new`.
+///
+/// ```ignore
+/// let engine = EngineBuilder::new()
+///     .artifact_path("checkpoints/tiny_llama_q3_r20.qpart")
+///     .max_seq(64)
+///     .kv_precision(KvPrecision::Int8)
+///     .lora(LoraMode::Adjoin)
+///     .build(&mut rt)?;
+/// ```
+pub struct EngineBuilder {
+    source: Option<Source>,
+    max_seq: usize,
+    kv_precision: KvPrecision,
+    lora_mode: Option<LoraMode>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            source: None,
+            max_seq: 256,
+            kv_precision: KvPrecision::F32,
+            lora_mode: None,
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Serve a pipeline `ParamStore`: projections are
+    /// simulated-quantized per `bits` at build time.
+    pub fn store(mut self, store: &ParamStore, bits: &BitConfig)
+                 -> Self {
+        self.source = Some(Source::Store {
+            store: store.clone(),
+            bits: bits.clone(),
+        });
+        self
+    }
+
+    /// Serve an exported [`ModelArtifact`] (weights already in
+    /// deployment numerics; no re-quantization happens).
+    pub fn artifact(mut self, art: ModelArtifact) -> Self {
+        self.source = Some(Source::Artifact(Box::new(art)));
+        self
+    }
+
+    /// Like [`EngineBuilder::artifact`], loading (and
+    /// checksum/version-validating) the file at build time.
+    pub fn artifact_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.source = Some(Source::Path(path.into()));
+        self
+    }
+
+    /// KV slot capacity in tokens (prompt + generated). Default 256.
+    pub fn max_seq(mut self, n: usize) -> Self {
+        self.max_seq = n;
+        self
+    }
+
+    /// KV-cache storage precision the deployment targets (default
+    /// f32); the serving layer reads it back via
+    /// [`Engine::kv_precision`] when sizing the pool.
+    pub fn kv_precision(mut self, p: KvPrecision) -> Self {
+        self.kv_precision = p;
+        self
+    }
+
+    /// Override the artifact's LoRA deployment mode (merge the deltas
+    /// into the base at build, or adjoin them as a decode-time
+    /// side path). No effect on artifacts without adapters or on
+    /// store sources.
+    pub fn lora(mut self, mode: LoraMode) -> Self {
+        self.lora_mode = Some(mode);
+        self
+    }
+
+    pub fn build(self, rt: &mut Runtime) -> Result<Engine> {
+        let Some(source) = self.source else {
+            bail!(
+                "EngineBuilder needs a weight source: call .store(..) \
+                 or .artifact(..) / .artifact_path(..)"
+            );
+        };
+        let source = match source {
+            Source::Path(p) => {
+                Source::Artifact(Box::new(ModelArtifact::load(&p)?))
+            }
+            s => s,
+        };
+        match source {
+            Source::Store { store, bits } => {
+                let base = lora::quantize_base(&store, &bits);
+                Engine::assemble(rt, base, bits, self.max_seq,
+                                 self.kv_precision, None, "none")
+            }
+            Source::Artifact(art) => {
+                let art = *art;
+                let mode = self.lora_mode.unwrap_or(art.lora_mode);
+                let mut base = art.deployed_store()?;
+                let (adjoin, label) = match (art.lora, mode) {
+                    (None, _) => (None, "none"),
+                    (Some(delta), LoraMode::Merge) => {
+                        merge_lora_into(&mut base, &delta);
+                        (None, "merged")
+                    }
+                    (Some(delta), LoraMode::Adjoin) => {
+                        (Some(delta), "adjoined")
+                    }
+                };
+                Engine::assemble(rt, base, art.bits, self.max_seq,
+                                 self.kv_precision, adjoin, label)
+            }
+            Source::Path(_) => unreachable!("path resolved above"),
+        }
+    }
+}
+
+/// Fold `W += s · B A` into every projection — merged-LoRA
+/// deployment: one-time cost at build, zero per-token adapter cost.
+fn merge_lora_into(base: &mut ParamStore, delta: &LoraDelta) {
+    let s = delta.scaling();
+    for (pi, proj) in PROJS.iter().enumerate() {
+        for l in 0..base.cfg.n_layers {
+            let (ash, ad) = delta.tensors[2 * pi].slab(l);
+            let (bsh, bd) = delta.tensors[2 * pi + 1].slab(l);
+            let a_t = Tensor::new(ash, ad.to_vec());
+            let b_t = Tensor::new(bsh, bd.to_vec());
+            let ba = linalg::matmul(&b_t, &a_t).scale(s);
+            let mut w = base.layer_proj(l, proj);
+            w.add_assign(&ba);
+            base.set_layer_proj(l, proj, &w);
+        }
+    }
+}
+
+/// `y[.., out] += s · (x A_lᵀ) B_lᵀ` for one layer's adjoined
+/// adapter. Shared by the batched path (any `b`) and the per-session
+/// reference path (`b == 1`), so both accumulate identically — the
+/// parity suite covers adjoined decode for free.
+fn adjoin_into(delta: &LoraDelta, proj_idx: usize, layer: usize,
+               x: &[f32], b: usize, in_dim: usize, out_dim: usize,
+               tmp: &mut [f32], y: &mut [f32]) {
+    let (a, bw) = delta.layer_ab(proj_idx, layer);
+    let r = delta.rank;
+    let s = delta.scaling();
+    let tmp = &mut tmp[..b * r];
+    matmul_nt_into(x, b, in_dim, a, r, tmp);
+    matmul_nt_scaled_acc_into(tmp, b, r, bw, out_dim, s,
+                              &mut y[..b * out_dim]);
+}
+
 impl Engine {
-    /// Quantize the store per `bits` and pick a backend. Probes the
-    /// runtime for the matching forward artifact; falls back to the
-    /// native decode path when it is absent or the PJRT backend is not
-    /// linked.
-    pub fn new(rt: &mut Runtime, store: &ParamStore, bits: &BitConfig,
-               max_seq: usize) -> Result<Engine> {
+    /// Pick a backend and precompute decode state over an
+    /// already-deployed base. Probes the runtime for the matching
+    /// forward artifact; falls back to the native decode path when it
+    /// is absent or the PJRT backend is not linked.
+    fn assemble(rt: &mut Runtime, base: ParamStore, bits: BitConfig,
+                max_seq: usize, kv_precision: KvPrecision,
+                adjoin: Option<LoraDelta>,
+                lora_label: &'static str) -> Result<Engine> {
         ensure!(max_seq >= 2, "max_seq {max_seq} too small to serve");
-        let cfg = store.cfg.clone();
-        let ps = store.ps;
-        let base = lora::quantize_base(store, bits);
+        let cfg = base.cfg.clone();
+        let ps = base.ps;
 
         let art = format!("fwd_{}_r{}", cfg.name, ps.rate_pct);
         let backend = if rt.has_artifact(&art) && max_seq <= cfg.seq {
             match rt.load(&art) {
                 Ok(()) => {
-                    let lora_zeros: Vec<Tensor> =
-                        lora::LoraState::shapes(store)
+                    // the AOT program takes LoRA args: pass the
+                    // adjoined deltas when their shapes match the
+                    // ABI, zeros otherwise (merged deltas are already
+                    // folded into the base weights)
+                    let abi = lora::LoraState::shapes(&base);
+                    let lora_args: Vec<Tensor> = match &adjoin {
+                        Some(d)
+                            if d.tensors.len() == abi.len()
+                                && d.tensors
+                                    .iter()
+                                    .zip(&abi)
+                                    .all(|(t, s)| {
+                                        t.shape() == s.as_slice()
+                                    }) =>
+                        {
+                            d.tensors.clone()
+                        }
+                        _ => abi
                             .iter()
                             .map(|s| Tensor::zeros(s))
-                            .collect();
-                    Backend::Artifact { name: art, lora_zeros }
+                            .collect(),
+                    };
+                    Backend::Artifact { name: art, lora_args }
                 }
                 Err(e) => {
                     eprintln!(
@@ -135,13 +344,17 @@ impl Engine {
             cfg.vocab,
             ps.heads_kept,
             max_seq,
+            adjoin.as_ref().map(|d| d.rank).unwrap_or(0),
         );
         Ok(Engine {
             base,
-            bits: bits.clone(),
+            bits,
             cfg,
             ps,
             backend,
+            adjoin,
+            lora_label,
+            kv_precision,
             rope_cos,
             rope_sin,
             half,
@@ -160,6 +373,16 @@ impl Engine {
 
     pub fn pruned_shapes(&self) -> &PrunedShapes {
         &self.ps
+    }
+
+    /// KV-cache storage precision this deployment was built for.
+    pub fn kv_precision(&self) -> KvPrecision {
+        self.kv_precision
+    }
+
+    /// LoRA deployment: "none" | "merged" | "adjoined".
+    pub fn lora_label(&self) -> &'static str {
+        self.lora_label
     }
 
     pub fn attn_dim(&self) -> usize {
@@ -212,8 +435,8 @@ impl Engine {
                 self.logits_batch(1, &mut ws);
                 Ok(ws.logits[..self.cfg.vocab].to_vec())
             }
-            Backend::Artifact { name, lora_zeros } => {
-                let out = self.forward_artifact(rt, name, lora_zeros,
+            Backend::Artifact { name, lora_args } => {
+                let out = self.forward_artifact(rt, name, lora_args,
                                                 prompt)?;
                 slot.advance_to(prompt.len());
                 Ok(out)
@@ -248,13 +471,13 @@ impl Engine {
                 self.logits_batch(1, &mut ws);
                 Ok(ws.logits[..self.cfg.vocab].to_vec())
             }
-            Backend::Artifact { name, lora_zeros } => {
+            Backend::Artifact { name, lora_args } => {
                 let history: Vec<i32> = prompt
                     .iter()
                     .chain(generated)
                     .copied()
                     .collect();
-                let out = self.forward_artifact(rt, name, lora_zeros,
+                let out = self.forward_artifact(rt, name, lora_args,
                                                 &history)?;
                 slot.advance_to(len);
                 Ok(out)
@@ -368,6 +591,14 @@ impl Engine {
             let wv = w[proj_index("wv")].slab(l).1;
             matmul_nt_into(&ws.normed[..b * d], b, d, wv, a,
                            &mut ws.v[..b * a]);
+            if let Some(delta) = &self.adjoin {
+                adjoin_into(delta, 0, l, &ws.normed[..b * d], b, d, a,
+                            &mut ws.lora_tmp, &mut ws.q);
+                adjoin_into(delta, 1, l, &ws.normed[..b * d], b, d, a,
+                            &mut ws.lora_tmp, &mut ws.k);
+                adjoin_into(delta, 2, l, &ws.normed[..b * d], b, d, a,
+                            &mut ws.lora_tmp, &mut ws.v);
+            }
             for (i, r) in reqs.iter().enumerate() {
                 self.rope_inplace(&mut ws.q[i * a..(i + 1) * a],
                                   r.pos, heads, hd);
@@ -419,6 +650,10 @@ impl Engine {
             let wo = w[proj_index("wo")].slab(l).1;
             matmul_nt_into(&ws.ctx[..b * a], b, a, wo, d,
                            &mut ws.proj_d[..b * d]);
+            if let Some(delta) = &self.adjoin {
+                adjoin_into(delta, 3, l, &ws.ctx[..b * a], b, a, d,
+                            &mut ws.lora_tmp, &mut ws.proj_d);
+            }
             for (hi, &oi) in ws.hidden[..b * d]
                 .iter_mut()
                 .zip(&ws.proj_d[..b * d])
@@ -438,6 +673,12 @@ impl Engine {
             let wu = w[proj_index("w_up")].slab(l).1;
             matmul_nt_into(&ws.normed[..b * d], b, d, wu, f,
                            &mut ws.up[..b * f]);
+            if let Some(delta) = &self.adjoin {
+                adjoin_into(delta, 4, l, &ws.normed[..b * d], b, d, f,
+                            &mut ws.lora_tmp, &mut ws.gate);
+                adjoin_into(delta, 5, l, &ws.normed[..b * d], b, d, f,
+                            &mut ws.lora_tmp, &mut ws.up);
+            }
             for (g, &u) in ws.gate[..b * f]
                 .iter_mut()
                 .zip(&ws.up[..b * f])
@@ -448,6 +689,10 @@ impl Engine {
             let wd = w[proj_index("w_down")].slab(l).1;
             matmul_nt_into(&ws.gate[..b * f], b, f, wd, d,
                            &mut ws.proj_d[..b * d]);
+            if let Some(delta) = &self.adjoin {
+                adjoin_into(delta, 6, l, &ws.gate[..b * f], b, f, d,
+                            &mut ws.lora_tmp, &mut ws.proj_d);
+            }
             for (hi, &di) in ws.hidden[..b * d]
                 .iter_mut()
                 .zip(&ws.proj_d[..b * d])
@@ -526,10 +771,15 @@ impl Engine {
         let cfg = &self.cfg;
         let d = cfg.d_model;
         let a = self.attn_dim();
+        let f = self.ps.d_ff_kept;
         let heads = self.ps.heads_kept;
         let hd = cfg.head_dim();
         let w = &self.base.weights;
         let mut scratch = vec![0.0f32; a];
+        let mut lora_tmp = vec![
+            0.0f32;
+            self.adjoin.as_ref().map(|x| x.rank).unwrap_or(0)
+        ];
 
         let mut h = self.base.embed_row(token).to_vec();
         let mut hn = vec![0.0f32; d];
@@ -538,7 +788,15 @@ impl Engine {
             rmsnorm(&h, w[1].slab(l).1, &mut hn);
             let mut q = matvec_slab(&w[proj_index("wq")], l, &hn);
             let mut k = matvec_slab(&w[proj_index("wk")], l, &hn);
-            let v = matvec_slab(&w[proj_index("wv")], l, &hn);
+            let mut v = matvec_slab(&w[proj_index("wv")], l, &hn);
+            if let Some(delta) = &self.adjoin {
+                adjoin_into(delta, 0, l, &hn, 1, d, a,
+                            &mut lora_tmp, &mut q);
+                adjoin_into(delta, 1, l, &hn, 1, d, a,
+                            &mut lora_tmp, &mut k);
+                adjoin_into(delta, 2, l, &hn, 1, d, a,
+                            &mut lora_tmp, &mut v);
+            }
             self.rope_inplace(&mut q, pos, heads, hd);
             self.rope_inplace(&mut k, pos, heads, hd);
             slot.write(l, pos, &k, &v);
@@ -566,7 +824,12 @@ impl Engine {
                     }
                 }
             }
-            let attn_out = matvec_slab(&w[proj_index("wo")], l, &ctx);
+            let mut attn_out =
+                matvec_slab(&w[proj_index("wo")], l, &ctx);
+            if let Some(delta) = &self.adjoin {
+                adjoin_into(delta, 3, l, &ctx, 1, a, d,
+                            &mut lora_tmp, &mut attn_out);
+            }
             for (hi, &oi) in h.iter_mut().zip(&attn_out) {
                 *hi += oi;
             }
@@ -574,12 +837,23 @@ impl Engine {
             // SwiGLU MLP block
             rmsnorm(&h, w[6].slab(l).1, &mut hn);
             let mut gate = matvec_slab(&w[proj_index("w_gate")], l, &hn);
-            let up = matvec_slab(&w[proj_index("w_up")], l, &hn);
+            let mut up = matvec_slab(&w[proj_index("w_up")], l, &hn);
+            if let Some(delta) = &self.adjoin {
+                adjoin_into(delta, 4, l, &hn, 1, d, f,
+                            &mut lora_tmp, &mut gate);
+                adjoin_into(delta, 5, l, &hn, 1, d, f,
+                            &mut lora_tmp, &mut up);
+            }
             for (g, &u) in gate.iter_mut().zip(&up) {
                 let s = 1.0 / (1.0 + (-*g).exp()); // silu
                 *g = *g * s * u;
             }
-            let down = matvec_slab(&w[proj_index("w_down")], l, &gate);
+            let mut down =
+                matvec_slab(&w[proj_index("w_down")], l, &gate);
+            if let Some(delta) = &self.adjoin {
+                adjoin_into(delta, 6, l, &gate, 1, f, d,
+                            &mut lora_tmp, &mut down);
+            }
             for (hi, &di) in h.iter_mut().zip(&down) {
                 *hi += di;
             }
@@ -629,7 +903,7 @@ impl Engine {
     // ------------------------------------------------------------------
 
     fn forward_artifact(&self, rt: &mut Runtime, name: &str,
-                        lora_zeros: &[Tensor], history: &[i32])
+                        lora_args: &[Tensor], history: &[i32])
                         -> Result<Vec<f32>> {
         let cfg = &self.cfg;
         ensure!(
@@ -647,7 +921,7 @@ impl Engine {
         for w in &self.base.weights {
             args.push(Arg::F32(w));
         }
-        for t in lora_zeros {
+        for t in lora_args {
             args.push(Arg::F32(t));
         }
         args.push(Arg::I32(&tokens, &shape));
@@ -723,6 +997,7 @@ pub fn sample_token(logits: &[f32], temperature: f32, rng: &mut Rng)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::artifact::{ModelArtifact, Provenance};
     use crate::quant::QuantFormat;
     use crate::serve::kv_cache::{KvCachePool, KvPrecision};
 
@@ -735,7 +1010,11 @@ mod tests {
         let cfg = ModelConfig::preset("tiny").unwrap();
         let store = ParamStore::init(&cfg, 11);
         let bits = BitConfig::uniform(cfg.n_layers, fmt);
-        let eng = Engine::new(&mut rt, &store, &bits, 24).unwrap();
+        let eng = EngineBuilder::new()
+            .store(&store, &bits)
+            .max_seq(24)
+            .build(&mut rt)
+            .unwrap();
         let a = eng.attn_dim();
         let pool = KvCachePool::with_slots(&cfg, a, n_slots, 24,
                                            precision, 1.0,
@@ -752,6 +1031,153 @@ mod tests {
         let (_rt, eng, _pool) = setup(QuantFormat::Nf4);
         assert_eq!(eng.backend_label(), "native-kv");
         assert!(eng.is_native());
+        assert_eq!(eng.lora_label(), "none");
+        assert_eq!(eng.kv_precision(), KvPrecision::F32);
+    }
+
+    #[test]
+    fn builder_without_source_is_an_error() {
+        let dir = std::env::temp_dir().join("qpruner_serve_engine_t");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        assert!(EngineBuilder::new().build(&mut rt).is_err());
+    }
+
+    #[test]
+    fn builder_records_kv_precision() {
+        let dir = std::env::temp_dir().join("qpruner_serve_engine_t");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 11);
+        let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+        let eng = EngineBuilder::new()
+            .store(&store, &bits)
+            .max_seq(16)
+            .kv_precision(KvPrecision::Int8)
+            .build(&mut rt)
+            .unwrap();
+        assert_eq!(eng.kv_precision(), KvPrecision::Int8);
+    }
+
+    /// Random LoRA deltas on a quantized base: the artifact-built
+    /// engine must decode identically between its batched and
+    /// reference paths in both deployment modes, and the two modes
+    /// must agree semantically (merge is just an associativity
+    /// change).
+    #[test]
+    fn merged_and_adjoined_lora_decode_agree() {
+        let dir = std::env::temp_dir().join("qpruner_serve_engine_t");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 11);
+        let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+        let mut rng = Rng::new(4);
+        let prep = lora::init_loftq(&store, &bits, 1, &mut rng)
+            .unwrap();
+        let art = ModelArtifact::from_pipeline(
+            &prep.base,
+            &bits,
+            Some(crate::artifact::LoraDelta::from_state(&prep.lora)),
+            LoraMode::Adjoin,
+            Provenance::default(),
+        )
+        .unwrap();
+        let prompt = [3i32, 9, 14, 5];
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for mode in [LoraMode::Merge, LoraMode::Adjoin] {
+            let eng = EngineBuilder::new()
+                .artifact(art.clone())
+                .lora(mode)
+                .max_seq(24)
+                .build(&mut rt)
+                .unwrap();
+            assert_eq!(
+                eng.lora_label(),
+                if mode == LoraMode::Merge { "merged" }
+                else { "adjoined" }
+            );
+            // batched path
+            let mut pool = KvCachePool::with_slots(
+                &cfg, eng.attn_dim(), 2, 24, KvPrecision::F32, 1.0,
+                2.0,
+            );
+            let id = pool.alloc().unwrap();
+            eng.prefill(&mut rt, pool.slot_mut(id), &prompt).unwrap();
+            let reqs =
+                [BatchReq { slot: id, pos: prompt.len(), token: 17 }];
+            let mut got = Vec::new();
+            eng.step_batch(&mut pool, &reqs, |_, l| got = l.to_vec())
+                .unwrap();
+            // reference path of the same engine: must match batched
+            let rid = pool.alloc().unwrap();
+            eng.prefill_reference(pool.slot_mut(rid), &prompt)
+                .unwrap();
+            let want = eng
+                .decode_reference(pool.slot_mut(rid), prompt.len(), 17)
+                .unwrap();
+            for (x, y) in got.iter().zip(&want) {
+                assert!(
+                    (x - y).abs() < 1e-4,
+                    "{mode:?}: batched {x} vs reference {y}"
+                );
+            }
+            outs.push(got);
+        }
+        // merged vs adjoined only differ by fp accumulation order
+        let max_abs = outs[0]
+            .iter()
+            .fold(0.0f32, |m, x| m.max(x.abs()))
+            .max(1.0);
+        for (x, y) in outs[0].iter().zip(&outs[1]) {
+            assert!(
+                (x - y).abs() < 1e-3 * max_abs,
+                "merge {x} vs adjoin {y}"
+            );
+        }
+    }
+
+    /// With all-zero adapters the adjoined side path must be an exact
+    /// no-op: same logits as the adapter-free engine.
+    #[test]
+    fn zero_adjoined_lora_is_identity() {
+        let dir = std::env::temp_dir().join("qpruner_serve_engine_t");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 11);
+        let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+        let zeros = lora::LoraState::zeros(&store);
+        let art = ModelArtifact::from_pipeline(
+            &store,
+            &bits,
+            Some(crate::artifact::LoraDelta::from_state(&zeros)),
+            LoraMode::Adjoin,
+            Provenance::default(),
+        )
+        .unwrap();
+        let eng_lora = EngineBuilder::new()
+            .artifact(art)
+            .max_seq(24)
+            .build(&mut rt)
+            .unwrap();
+        let (mut rt2, eng_plain, mut pool_plain) =
+            setup(QuantFormat::Nf4);
+        let mut pool = KvCachePool::with_slots(
+            &cfg, eng_lora.attn_dim(), 1, 24, KvPrecision::F32, 1.0,
+            1.0,
+        );
+        let prompt = [3i32, 9, 14, 5];
+        let a = pool.alloc().unwrap();
+        let b = pool_plain.alloc().unwrap();
+        let la = eng_lora
+            .prefill(&mut rt, pool.slot_mut(a), &prompt)
+            .unwrap();
+        let lb = eng_plain
+            .prefill(&mut rt2, pool_plain.slot_mut(b), &prompt)
+            .unwrap();
+        assert_eq!(la, lb, "zero adapters changed the logits");
     }
 
     #[test]

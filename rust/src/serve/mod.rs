@@ -1,8 +1,10 @@
 //! Batched inference serving over pruned + quantized artifacts — the
 //! deployment layer the paper's memory wins pay for.
 //!
-//! A `ParamStore` (pruned shapes) plus a `BitConfig` (per-layer
-//! precision) becomes a serving process: continuous-batching scheduler
+//! A deployment — a `ParamStore` plus `BitConfig`, or an exported
+//! `artifact::ModelArtifact` with its LoRA deltas, fed through
+//! `engine::EngineBuilder` — becomes a serving process:
+//! continuous-batching scheduler
 //! (`scheduler.rs`), slab-allocated KV-cache pool sized from the
 //! precision-aware accounting in `memory.rs` with selectable f32/int8
 //! KV storage (`kv_cache.rs`), per-session state with TTL eviction
@@ -28,15 +30,15 @@ pub mod workspace;
 use crate::data::Language;
 use crate::memory;
 use crate::metrics::{LatencyStats, Metrics};
-use crate::model::{ModelConfig, ParamStore};
+use crate::model::ModelConfig;
 use crate::quant::BitConfig;
 use crate::report::Table;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use admission::AdmissionPolicy;
 use anyhow::{bail, ensure, Result};
-use engine::Engine;
-use kv_cache::{KvCachePool, KvPrecision};
+use engine::EngineBuilder;
+use kv_cache::KvCachePool;
 use scheduler::Scheduler;
 use std::time::Instant;
 
@@ -59,9 +61,6 @@ pub struct ServeOpts {
     pub memory_arch: String,
     /// KV slot capacity in tokens (prompt + generated)
     pub max_seq: usize,
-    /// KV-cache storage precision (`--kv-bits {32,8}`): int8 KV packs
-    /// ~3.8x more sessions into the same modeled budget
-    pub kv_precision: KvPrecision,
     /// sampled prompt length range [lo, hi]
     pub prompt_len: (usize, usize),
     /// sampled generation budget range [lo, hi]
@@ -88,7 +87,6 @@ impl ServeOpts {
             device_gb: 24.0,
             memory_arch: "7b".into(),
             max_seq: 28,
-            kv_precision: KvPrecision::F32,
             prompt_len: (4, 10),
             max_new: (3, 12),
             temperature: 0.8,
@@ -118,6 +116,8 @@ impl ServeOpts {
 pub struct ServeReport {
     pub backend: &'static str,
     pub bits_short: String,
+    /// LoRA deployment of the engine: "none" | "merged" | "adjoined"
+    pub lora: &'static str,
     /// KV-cache storage precision in bits (32 = f32, 8 = int8)
     pub kv_bits: u32,
     pub submitted: usize,
@@ -177,6 +177,7 @@ impl ServeReport {
         };
         push("backend", self.backend.to_string());
         push("bits", self.bits_short.clone());
+        push("lora", self.lora.to_string());
         push("kv bits", format!("{}", self.kv_bits));
         push("requests submitted", format!("{}", self.submitted));
         push("requests completed", format!("{}", self.completed));
@@ -222,6 +223,108 @@ impl ServeReport {
         push("scratch grows/reuses",
              format!("{}/{}", self.scratch_grows, self.scratch_reuses));
         t
+    }
+
+    /// One machine-readable JSON object for `BENCH_serve.json` — the
+    /// perf-trajectory record tracked across PRs (tokens/sec,
+    /// latency percentiles, footprint). `name` labels the config
+    /// (e.g. "c8_b8_kv8"). Hand-rolled: no JSON dependency in-tree.
+    pub fn to_json(&self, name: &str) -> String {
+        let lat = self.latency.percentiles_ms(&[50.0, 95.0, 99.0]);
+        format!(
+            "{{\"name\":{},\"backend\":{},\"bits\":{},\"lora\":{},\
+             \"kv_bits\":{},\"requests_submitted\":{},\
+             \"requests_completed\":{},\"requests_rejected\":{},\
+             \"tokens_per_sec\":{:.3},\"p50_ms\":{:.4},\
+             \"p95_ms\":{:.4},\"p99_ms\":{:.4},\"ttft_p50_ms\":{:.4},\
+             \"mean_occupancy\":{:.4},\"generated_tokens\":{},\
+             \"wall_secs\":{:.4},\"kv_sessions_capacity\":{},\
+             \"kv_sessions_peak\":{},\"kv_host_slab_bytes\":{},\
+             \"kv_modeled_budget_bytes\":{:.0},\
+             \"scratch_grows\":{},\"scratch_reuses\":{}}}",
+            json_str(name),
+            json_str(self.backend),
+            json_str(&self.bits_short),
+            json_str(self.lora),
+            self.kv_bits,
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.tokens_per_sec(),
+            lat[0],
+            lat[1],
+            lat[2],
+            self.ttft.percentile_ms(50.0),
+            self.mean_occupancy,
+            self.generated_tokens,
+            self.wall_secs,
+            self.kv_capacity_sessions,
+            self.kv_peak_sessions,
+            self.kv_host_slab_bytes,
+            self.kv_modeled_budget_bytes,
+            self.scratch_grows,
+            self.scratch_reuses,
+        )
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Assemble `BENCH_serve.json` from named reports.
+pub fn bench_json(entries: &[(String, &ServeReport)]) -> String {
+    let mut out = String::from("[\n");
+    for (i, (name, r)) in entries.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&r.to_json(name));
+        if i + 1 < entries.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Append one report to an existing `BENCH_serve.json` body instead of
+/// clobbering it — consecutive `bench-serve` runs (and a prior
+/// `cargo bench`) accumulate configs in one trajectory file. Anything
+/// that doesn't look like a JSON array is replaced wholesale.
+pub fn bench_json_append(prev: Option<&str>, name: &str,
+                         r: &ServeReport) -> String {
+    let fresh = || bench_json(&[(name.to_string(), r)]);
+    let Some(prev) = prev else { return fresh() };
+    let trimmed = prev.trim_end();
+    let Some(head) = trimmed.strip_suffix(']') else {
+        return fresh();
+    };
+    let head = head.trim_end();
+    if !head.starts_with('[') {
+        return fresh();
+    }
+    let entry = r.to_json(name);
+    if head == "[" {
+        format!("[\n  {entry}\n]\n")
+    } else {
+        format!("{head},\n  {entry}\n]\n")
     }
 }
 
@@ -271,10 +374,15 @@ pub fn resolve_kv_budget_gb(opts: &ServeOpts, rate_pct: u32,
 }
 
 /// Run a closed-loop synthetic multi-client workload to completion.
-pub fn run_workload(rt: &mut Runtime, store: &ParamStore,
-                    bits: &BitConfig, lang: &Language,
-                    opts: &ServeOpts, metrics: &mut Metrics)
-                    -> Result<ServeReport> {
+///
+/// The deployment comes in as a *pre-configured* [`EngineBuilder`]
+/// (weight source + KV precision + LoRA mode); this function stamps
+/// the workload's `max_seq` onto it, builds the engine, sizes the KV
+/// pool from the engine's own bit config and KV precision, and drives
+/// the scheduler until the workload drains.
+pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
+                    lang: &Language, opts: &ServeOpts,
+                    metrics: &mut Metrics) -> Result<ServeReport> {
     ensure!(opts.clients > 0 && opts.requests > 0, "empty workload");
     ensure!(opts.prompt_len.0 >= 1
             && opts.prompt_len.0 <= opts.prompt_len.1,
@@ -294,16 +402,24 @@ pub fn run_workload(rt: &mut Runtime, store: &ParamStore,
     );
 
     let t_build = Instant::now();
-    let engine = Engine::new(rt, store, bits, opts.max_seq)?;
+    let engine = builder.max_seq(opts.max_seq).build(rt)?;
     metrics.add_time("serve.build_engine",
                      t_build.elapsed().as_secs_f64());
+    ensure!(
+        engine.cfg().vocab == lang.vocab,
+        "language vocab {} != model vocab {}",
+        lang.vocab,
+        engine.cfg().vocab
+    );
 
-    let rate = store.ps.rate_pct;
+    let rate = engine.pruned_shapes().rate_pct;
+    let bits = engine.bits().clone();
+    let host_cfg = engine.cfg().clone();
     check_memory_arch(&opts.memory_arch)?;
     let arch = paper_arch(&opts.memory_arch);
     // diagnose the no-headroom case before budget resolution clamps an
     // explicit --kv-budget-gb to zero with a misleading error
-    let (inference, headroom) = modeled_memory_gb(opts, rate, bits);
+    let (inference, headroom) = modeled_memory_gb(opts, rate, &bits);
     if headroom <= 0.0 {
         bail!(
             "no KV headroom: inference footprint {inference:.2} GB \
@@ -315,7 +431,7 @@ pub fn run_workload(rt: &mut Runtime, store: &ParamStore,
             opts.memory_arch
         );
     }
-    let budget_gb = resolve_kv_budget_gb(opts, rate, bits);
+    let budget_gb = resolve_kv_budget_gb(opts, rate, &bits);
     // the scheduler can keep at most max_batch sessions decoding plus
     // the stalled ones TTL has not yet reclaimed — host slots beyond
     // that are unreachable slab
@@ -326,12 +442,12 @@ pub fn run_workload(rt: &mut Runtime, store: &ParamStore,
         0
     };
     let pool = KvCachePool::for_budget(
-        &store.cfg,
+        &host_cfg,
         engine.attn_dim(),
         &arch,
         rate,
         opts.max_seq,
-        opts.kv_precision,
+        engine.kv_precision(),
         budget_gb,
         opts.max_batch + stall_allowance,
     )?;
@@ -417,6 +533,7 @@ pub fn run_workload(rt: &mut Runtime, store: &ParamStore,
     Ok(ServeReport {
         backend: engine.backend_label(),
         bits_short: bits.short(),
+        lora: engine.lora_label(),
         kv_bits: sched.pool.precision().bits(),
         submitted: st.submitted,
         completed: st.completed,
@@ -491,6 +608,7 @@ mod tests {
         let r = ServeReport {
             backend: "native-kv",
             bits_short: "44".into(),
+            lora: "merged",
             kv_bits: 8,
             submitted: 10,
             completed: 8,
@@ -523,6 +641,36 @@ mod tests {
         assert!(md.contains("queue-full=2"));
         assert!(md.contains("decode steps (busy)"));
         assert!(md.contains("kv bits"));
+        assert!(md.contains("lora"));
+        assert!(md.contains("merged"));
         assert!(md.contains("2/68"));
+        // machine-readable twin of the table
+        let j = r.to_json("smoke_cfg");
+        assert!(j.contains("\"name\":\"smoke_cfg\""));
+        assert!(j.contains("\"tokens_per_sec\":140.000"));
+        assert!(j.contains("\"lora\":\"merged\""));
+        assert!(j.contains("\"kv_bits\":8"));
+        let arr = bench_json(&[("a".into(), &r), ("b".into(), &r)]);
+        assert!(arr.starts_with("[\n"));
+        assert!(arr.trim_end().ends_with(']'));
+        assert_eq!(arr.matches("\"backend\"").count(), 2);
+        // appending accumulates configs instead of clobbering
+        let appended = bench_json_append(Some(&arr), "c", &r);
+        assert_eq!(appended.matches("\"backend\"").count(), 3);
+        assert!(appended.trim_end().ends_with(']'));
+        assert!(appended.contains("\"name\":\"c\""));
+        // garbage (or absent) files are replaced wholesale
+        let replaced = bench_json_append(Some("not json"), "d", &r);
+        assert_eq!(replaced.matches("\"backend\"").count(), 1);
+        assert_eq!(bench_json_append(None, "e", &r)
+                       .matches("\"backend\"")
+                       .count(),
+                   1);
+    }
+
+    #[test]
+    fn json_str_escapes() {
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("x\ny"), "\"x\\ny\"");
     }
 }

@@ -391,8 +391,11 @@ mod tests {
         let store = ParamStore::init(&cfg, 21);
         let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
         let max_seq = 24;
-        let engine =
-            Engine::new(&mut rt, &store, &bits, max_seq).unwrap();
+        let engine = crate::serve::engine::EngineBuilder::new()
+            .store(&store, &bits)
+            .max_seq(max_seq)
+            .build(&mut rt)
+            .unwrap();
         let pool = KvCachePool::with_slots(
             &cfg,
             engine.attn_dim(),

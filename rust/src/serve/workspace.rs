@@ -17,6 +17,8 @@ pub struct DecodeWorkspace {
     attn_dim: usize,
     d_ff: usize,
     vocab: usize,
+    /// adapter rank of the engine's adjoined LoRA (0 = no side path)
+    lora_rank: usize,
     /// largest batch the buffers currently hold
     batch_cap: usize,
     /// residual stream `[B, d_model]`
@@ -40,6 +42,9 @@ pub struct DecodeWorkspace {
     pub kv_row: Vec<f32>,
     /// next-token logits `[B, vocab]`
     pub logits: Vec<f32>,
+    /// adjoined-LoRA intermediate `x A^T` `[B, lora_rank]` (empty when
+    /// the engine carries no adjoined adapters)
+    pub lora_tmp: Vec<f32>,
     /// reusable slot-id staging for `Engine::step_batch` (grows to the
     /// largest batch once, then reused — not counted in `grows`, which
     /// tracks the activation buffers)
@@ -52,14 +57,17 @@ impl DecodeWorkspace {
     /// Buffers start empty (`batch_cap == 0`); the fixed-size scratch
     /// (`scores`, `kv_row`) is allocated up front since it does not
     /// depend on the batch.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(d_model: usize, attn_dim: usize, d_ff: usize,
-               vocab: usize, heads: usize, max_seq: usize)
+               vocab: usize, heads: usize, max_seq: usize,
+               lora_rank: usize)
                -> DecodeWorkspace {
         DecodeWorkspace {
             d_model,
             attn_dim,
             d_ff,
             vocab,
+            lora_rank,
             batch_cap: 0,
             hidden: Vec::new(),
             normed: Vec::new(),
@@ -73,6 +81,7 @@ impl DecodeWorkspace {
             scores: vec![0.0; heads * max_seq],
             kv_row: vec![0.0; attn_dim],
             logits: Vec::new(),
+            lora_tmp: Vec::new(),
             slot_ids: Vec::new(),
             grows: 0,
             reuses: 0,
@@ -102,6 +111,7 @@ impl DecodeWorkspace {
         self.gate.resize(batch * self.d_ff, 0.0);
         self.up.resize(batch * self.d_ff, 0.0);
         self.logits.resize(batch * self.vocab, 0.0);
+        self.lora_tmp.resize(batch * self.lora_rank, 0.0);
     }
 
     pub fn batch_cap(&self) -> usize {
@@ -120,7 +130,7 @@ mod tests {
 
     #[test]
     fn grows_monotonically_and_counts_reuse() {
-        let mut ws = DecodeWorkspace::new(8, 4, 16, 32, 2, 10);
+        let mut ws = DecodeWorkspace::new(8, 4, 16, 32, 2, 10, 0);
         assert_eq!(ws.stats(), (0, 0));
         ws.ensure_batch(2);
         assert_eq!(ws.batch_cap(), 2);
@@ -141,8 +151,19 @@ mod tests {
 
     #[test]
     fn fixed_scratch_sized_at_construction() {
-        let ws = DecodeWorkspace::new(8, 4, 16, 32, 3, 12);
+        let ws = DecodeWorkspace::new(8, 4, 16, 32, 3, 12, 0);
         assert_eq!(ws.scores.len(), 36);
         assert_eq!(ws.kv_row.len(), 4);
+    }
+
+    #[test]
+    fn lora_scratch_tracks_batch_and_rank() {
+        let mut ws = DecodeWorkspace::new(8, 4, 16, 32, 2, 10, 4);
+        ws.ensure_batch(3);
+        assert_eq!(ws.lora_tmp.len(), 12);
+        // rank 0 engines keep the buffer empty at any batch
+        let mut ws0 = DecodeWorkspace::new(8, 4, 16, 32, 2, 10, 0);
+        ws0.ensure_batch(5);
+        assert!(ws0.lora_tmp.is_empty());
     }
 }

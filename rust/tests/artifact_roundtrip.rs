@@ -1,0 +1,279 @@
+//! Artifact round-trip acceptance suite: `export` → save → load →
+//! `EngineBuilder::build` must reproduce the reference decode logits
+//! (|Δ| < 1e-4 — in practice bit-exact, since the native encodings
+//! are a fixed point of the quantizer) for nf4/int8/fp16 weights ×
+//! {merged, adjoined} LoRA, and corrupt or version-skewed files must
+//! be rejected before any weight is decoded.
+
+use qpruner::artifact::{LoraDelta, LoraMode, ModelArtifact,
+                        Provenance, ARTIFACT_VERSION};
+use qpruner::lora;
+use qpruner::model::{ModelConfig, ParamStore};
+use qpruner::quant::{BitConfig, QuantFormat};
+use qpruner::rng::Rng;
+use qpruner::runtime::Runtime;
+use qpruner::serve::engine::{BatchReq, Engine, EngineBuilder};
+use qpruner::serve::kv_cache::{KvCachePool, KvPrecision};
+use std::path::PathBuf;
+
+const MAX_SEQ: usize = 24;
+
+fn runtime() -> Runtime {
+    let dir = std::env::temp_dir().join("qpruner_artifact_rt");
+    std::fs::create_dir_all(&dir).unwrap();
+    Runtime::new(&dir).unwrap()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("qpruner_artifact_rt");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn pool_for(engine: &Engine, cfg: &ModelConfig, n: usize)
+            -> KvCachePool {
+    KvCachePool::with_slots(cfg, engine.attn_dim(), n, MAX_SEQ,
+                            KvPrecision::F32, 1.0, n as f64)
+}
+
+/// Build the pipeline-style deliverable for one weight format: a
+/// LoftQ-prepared quantized base + non-trivial adapters.
+fn make_artifact(fmt: QuantFormat, seed: u64, mode: LoraMode)
+                 -> (ModelArtifact, BitConfig, ModelConfig) {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, seed);
+    let mut bits = BitConfig::uniform(cfg.n_layers, fmt);
+    if fmt != QuantFormat::Fp16 {
+        // exercise a mixed row too: layer 0 at int8
+        bits.layers[0] = QuantFormat::Int8;
+    }
+    let mut rng = Rng::new(seed ^ 0xAB);
+    // LoftQ leaves fp16 layers with zero adapters by construction, so
+    // the all-fp16 row uses PiSSA to get non-trivial deltas on every
+    // projection
+    let prep = if fmt == QuantFormat::Fp16 {
+        lora::init_pissa(&store, &bits, &mut rng).unwrap()
+    } else {
+        lora::init_loftq(&store, &bits, 1, &mut rng).unwrap()
+    };
+    let art = ModelArtifact::from_pipeline(
+        &prep.base,
+        &bits,
+        Some(LoraDelta::from_state(&prep.lora)),
+        mode,
+        Provenance {
+            method: "QPruner^2".into(),
+            seed,
+            stages: "prune>mi>recover".into(),
+            source: "roundtrip-test".into(),
+        },
+    )
+    .unwrap();
+    (art, bits, cfg)
+}
+
+/// Decode a fixed prompt + a few steps on an engine's *reference*
+/// path; returns per-step logits.
+fn reference_decode(rt: &mut Runtime, engine: &Engine,
+                    cfg: &ModelConfig) -> Vec<Vec<f32>> {
+    let _ = rt;
+    let mut pool = pool_for(engine, cfg, 1);
+    let id = pool.alloc().unwrap();
+    let prompt = [3i32, 9, 14, 5, 7];
+    let mut out = Vec::new();
+    out.push(
+        engine
+            .prefill_reference(pool.slot_mut(id), &prompt)
+            .unwrap(),
+    );
+    for step in 0..4 {
+        let pos = prompt.len() + step;
+        let tok = ((11 + step * 5) % cfg.vocab) as i32;
+        out.push(
+            engine
+                .decode_reference(pool.slot_mut(id), pos, tok)
+                .unwrap(),
+        );
+    }
+    out
+}
+
+/// Same token stream through the batched path.
+fn batched_decode(rt: &mut Runtime, engine: &Engine,
+                  cfg: &ModelConfig) -> Vec<Vec<f32>> {
+    let mut pool = pool_for(engine, cfg, 1);
+    let id = pool.alloc().unwrap();
+    let prompt = [3i32, 9, 14, 5, 7];
+    let mut out = Vec::new();
+    out.push(
+        engine.prefill(rt, pool.slot_mut(id), &prompt).unwrap(),
+    );
+    for step in 0..4 {
+        let pos = prompt.len() + step;
+        let tok = ((11 + step * 5) % cfg.vocab) as i32;
+        let reqs = [BatchReq { slot: id, pos, token: tok }];
+        let mut got = Vec::new();
+        engine
+            .step_batch(&mut pool, &reqs, |_, l| got = l.to_vec())
+            .unwrap();
+        out.push(got);
+    }
+    out
+}
+
+fn max_abs_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.len(), y.len());
+        for (p, q) in x.iter().zip(y) {
+            worst = worst.max((p - q).abs());
+        }
+    }
+    worst
+}
+
+/// The acceptance matrix: export→save→load→build reproduces the
+/// in-memory reference decode to |Δ| < 1e-4 for every format × LoRA
+/// deployment mode, on both decode paths.
+#[test]
+fn roundtrip_reproduces_reference_logits_all_formats_and_modes() {
+    for fmt in [QuantFormat::Nf4, QuantFormat::Int8,
+                QuantFormat::Fp16] {
+        for mode in [LoraMode::Merge, LoraMode::Adjoin] {
+            let (art, _bits, cfg) = make_artifact(fmt, 77, mode);
+            // reference: engine built from the in-memory artifact
+            let mut rt = runtime();
+            let eng_ref = EngineBuilder::new()
+                .artifact(art.clone())
+                .max_seq(MAX_SEQ)
+                .build(&mut rt)
+                .unwrap();
+            let want = reference_decode(&mut rt, &eng_ref, &cfg);
+
+            // disk round-trip, then both decode paths
+            let path = tmp(&format!(
+                "rt_{}_{}.qpart",
+                fmt.label(),
+                match mode {
+                    LoraMode::Merge => "merge",
+                    LoraMode::Adjoin => "adjoin",
+                }
+            ));
+            art.save(&path).unwrap();
+            let eng = EngineBuilder::new()
+                .artifact_path(path.clone())
+                .max_seq(MAX_SEQ)
+                .build(&mut rt)
+                .unwrap();
+            assert_eq!(
+                eng.lora_label(),
+                match mode {
+                    LoraMode::Merge => "merged",
+                    LoraMode::Adjoin => "adjoined",
+                }
+            );
+            let got_ref = reference_decode(&mut rt, &eng, &cfg);
+            let got_batched = batched_decode(&mut rt, &eng, &cfg);
+            let d_ref = max_abs_diff(&got_ref, &want);
+            let d_bat = max_abs_diff(&got_batched, &want);
+            assert!(
+                d_ref < 1e-4,
+                "{fmt:?} {mode:?}: reference path drifted {d_ref}"
+            );
+            assert!(
+                d_bat < 1e-4,
+                "{fmt:?} {mode:?}: batched path drifted {d_bat}"
+            );
+            std::fs::remove_file(&path).ok();
+        }
+    }
+}
+
+/// Property sweep (hand-rolled; proptest is not vendored): random
+/// seeds and random mixed-precision rows — the deployed store decoded
+/// from disk is byte-identical to the in-memory encoding.
+#[test]
+fn prop_random_mixed_configs_roundtrip_bit_exact() {
+    let mut rng = Rng::new(2024);
+    for trial in 0..6 {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 100 + trial);
+        let mut bits =
+            BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+        for l in 0..cfg.n_layers {
+            bits.layers[l] = match rng.below(4) {
+                0 => QuantFormat::Nf4,
+                1 => QuantFormat::Fp4,
+                2 => QuantFormat::Int8,
+                _ => QuantFormat::Fp16,
+            };
+        }
+        let art = ModelArtifact::from_pipeline(
+            &store, &bits, None, LoraMode::Merge,
+            Provenance::default(),
+        )
+        .unwrap();
+        let path = tmp(&format!("prop_{trial}.qpart"));
+        art.save(&path).unwrap();
+        let back = ModelArtifact::load(&path).unwrap();
+        assert_eq!(back.bits, bits);
+        let a = art.deployed_store().unwrap();
+        let b = back.deployed_store().unwrap();
+        for (x, y) in a.weights.iter().zip(&b.weights) {
+            assert_eq!(x.data(), y.data(), "trial {trial} drifted");
+        }
+        // and the deployment equals quantize_base numerics
+        let want = lora::quantize_base(&store, &bits);
+        for (x, y) in b.weights.iter().zip(&want.weights) {
+            assert_eq!(x.data(), y.data(), "trial {trial} != simulate");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn corrupted_checksum_is_rejected_before_build() {
+    let (art, _, _) = make_artifact(QuantFormat::Nf4, 5,
+                                    LoraMode::Merge);
+    let path = tmp("corrupt_build.qpart");
+    art.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let at = bytes.len() - 9; // somewhere in the lora payload
+    bytes[at] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let mut rt = runtime();
+    let err = EngineBuilder::new()
+        .artifact_path(path.clone())
+        .max_seq(MAX_SEQ)
+        .build(&mut rt)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("checksum"),
+        "unexpected error: {err:#}"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn version_mismatch_is_rejected_before_build() {
+    let (art, _, _) = make_artifact(QuantFormat::Nf4, 6,
+                                    LoraMode::Merge);
+    let path = tmp("version_build.qpart");
+    art.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[8..12]
+        .copy_from_slice(&(ARTIFACT_VERSION + 7).to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    let mut rt = runtime();
+    let err = EngineBuilder::new()
+        .artifact_path(path.clone())
+        .max_seq(MAX_SEQ)
+        .build(&mut rt)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("version"),
+        "unexpected error: {err:#}"
+    );
+    std::fs::remove_file(&path).ok();
+}

@@ -78,7 +78,7 @@ fn finetune_reduces_loss_after_pruning_and_quant() {
         Scale::smoke().apply(&mut o);
         o
     };
-    let pruned = c.prune(store, &opts).unwrap();
+    let pruned = c.prune(store, &opts.prune, opts.seed).unwrap();
     let bits = BitConfig::uniform(pruned.cfg.n_layers, QuantFormat::Nf4);
     let mut rng = qpruner::rng::Rng::new(5);
     let prep =
@@ -150,10 +150,10 @@ fn mi_allocation_respects_budget() {
     let mut c = coord();
     let mut opts = PipelineOpts::quick(20, Method::QPruner2);
     Scale::smoke().apply(&mut opts);
-    let pruned = c.prune(store, &opts).unwrap();
-    let bits = c.allocate_bits_mi(&pruned, &opts).unwrap();
+    let pruned = c.prune(store, &opts.prune, opts.seed).unwrap();
+    let bits = c.allocate_bits_mi(&pruned, &opts.quant, opts.seed).unwrap();
     assert_eq!(bits.n_layers(), pruned.cfg.n_layers);
-    assert!(bits.frac_8bit() <= opts.frac8 + 1e-9);
+    assert!(bits.frac_8bit() <= opts.quant.frac8 + 1e-9);
 }
 
 #[test]
@@ -163,10 +163,10 @@ fn bo_loop_improves_or_matches_warm_start() {
     let mut c = coord();
     let mut opts = PipelineOpts::quick(20, Method::QPruner3);
     Scale::smoke().apply(&mut opts);
-    opts.bo_iters = 3;
-    let pruned = c.prune(store, &opts).unwrap();
-    let b0 = c.allocate_bits_mi(&pruned, &opts).unwrap();
-    let (best, obs) = c.bo_loop(&pruned, b0.clone(), &mut opts.clone())
+    opts.bo.iters = 3;
+    let pruned = c.prune(store, &opts.prune, opts.seed).unwrap();
+    let b0 = c.allocate_bits_mi(&pruned, &opts.quant, opts.seed).unwrap();
+    let (best, obs) = c.bo_loop(&pruned, b0.clone(), &opts)
         .map(|(b, o)| (b, o))
         .unwrap();
     // best is argmax over D, so it cannot be worse than the warm start
@@ -183,7 +183,7 @@ fn bo_loop_improves_or_matches_warm_start() {
     assert!(best_perf >= warm_perf);
     // all observations respect the budget constraint
     for o in &obs {
-        assert!(o.config.frac_8bit() <= opts.frac8 + 1e-9);
+        assert!(o.config.frac_8bit() <= opts.quant.frac8 + 1e-9);
     }
 }
 
@@ -251,7 +251,7 @@ fn pruned_model_evaluates_below_or_near_unpruned() {
     let mut c = coord();
     let mut opts = PipelineOpts::quick(50, Method::QPruner1);
     Scale::smoke().apply(&mut opts);
-    let pruned = c.prune(store, &opts).unwrap();
+    let pruned = c.prune(store, &opts.prune, opts.seed).unwrap();
     let zero = LoraState::zeros(&pruned);
     let full = c.eval_untuned(store, 24).unwrap();
     let cut = qpruner::eval::eval_suite(&mut c.rt, &pruned, &zero, &c.lang,

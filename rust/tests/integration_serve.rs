@@ -11,7 +11,7 @@ use qpruner::quant::{BitConfig, QuantFormat};
 use qpruner::rng::Rng;
 use qpruner::runtime::Runtime;
 use qpruner::serve::admission::AdmissionPolicy;
-use qpruner::serve::engine::Engine;
+use qpruner::serve::engine::EngineBuilder;
 use qpruner::serve::kv_cache::{KvCachePool, KvPrecision};
 use qpruner::serve::scheduler::Scheduler;
 use qpruner::serve::{run_workload, ServeOpts, ServeReport};
@@ -32,13 +32,21 @@ fn nf4(store: &ParamStore) -> BitConfig {
     BitConfig::uniform(store.cfg.n_layers, QuantFormat::Nf4)
 }
 
-fn run(store: &ParamStore, bits: &BitConfig, opts: &ServeOpts)
-       -> ServeReport {
+fn run_p(store: &ParamStore, bits: &BitConfig, opts: &ServeOpts,
+         precision: KvPrecision) -> ServeReport {
     let mut rt = runtime();
     let lang = Language::new(store.cfg.vocab, 1);
     let mut metrics = Metrics::new();
-    run_workload(&mut rt, store, bits, &lang, opts, &mut metrics)
+    let builder = EngineBuilder::new()
+        .store(store, bits)
+        .kv_precision(precision);
+    run_workload(&mut rt, builder, &lang, opts, &mut metrics)
         .expect("workload must drain")
+}
+
+fn run(store: &ParamStore, bits: &BitConfig, opts: &ServeOpts)
+       -> ServeReport {
+    run_p(store, bits, opts, KvPrecision::F32)
 }
 
 /// All requests are accounted for exactly once.
@@ -217,8 +225,7 @@ fn int8_kv_serves_same_workload_in_a_smaller_slab() {
     opts.requests = 48;
     opts.clients = 4;
     let rf = run(&store, &bits, &opts);
-    opts.kv_precision = KvPrecision::Int8;
-    let ri = run(&store, &bits, &opts);
+    let ri = run_p(&store, &bits, &opts, KvPrecision::Int8);
 
     assert_accounted(&ri, 48);
     assert_eq!(ri.completed, rf.completed);
@@ -251,8 +258,9 @@ fn decode_workspace_growth_is_bounded_by_batch_not_tokens() {
     let mut rt = runtime();
     let lang = Language::new(store.cfg.vocab, 1);
     let mut metrics = Metrics::new();
-    let r = run_workload(&mut rt, &store, &bits, &lang, &opts,
-                         &mut metrics)
+    let r = run_workload(&mut rt,
+                         EngineBuilder::new().store(&store, &bits),
+                         &lang, &opts, &mut metrics)
         .expect("workload must drain");
     let grows = metrics.counter("serve.scratch_grows");
     let reuses = metrics.counter("serve.scratch_reuses");
@@ -287,8 +295,11 @@ fn scheduler_fuzz_is_deterministic_and_never_leaks_slots() {
         let store = ParamStore::init(&cfg, 31);
         let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
         let max_seq = 24;
-        let engine =
-            Engine::new(&mut rt, &store, &bits, max_seq).unwrap();
+        let engine = EngineBuilder::new()
+            .store(&store, &bits)
+            .max_seq(max_seq)
+            .build(&mut rt)
+            .unwrap();
         let pool = KvCachePool::with_slots(
             &cfg,
             engine.attn_dim(),
@@ -388,6 +399,53 @@ fn scheduler_fuzz_is_deterministic_and_never_leaks_slots() {
     // actually encodes scheduler behaviour, not constants)
     let (tc, _, _) = run_trace(0xBEEF);
     assert_ne!(ta, tc, "trace insensitive to the seed");
+}
+
+#[test]
+fn exported_artifact_serves_end_to_end_with_lora() {
+    // the `export` -> `serve --artifact` path: a pipeline-style
+    // artifact (quantized base + LoftQ adapters) boots through the
+    // builder and drains a full smoke workload in both LoRA modes
+    use qpruner::artifact::{LoraDelta, LoraMode, ModelArtifact,
+                            Provenance};
+    let store = tiny_store(12);
+    let bits = nf4(&store);
+    let mut rng = Rng::new(7);
+    let prep =
+        qpruner::lora::init_loftq(&store, &bits, 1, &mut rng).unwrap();
+    let art = ModelArtifact::from_pipeline(
+        &prep.base,
+        &bits,
+        Some(LoraDelta::from_state(&prep.lora)),
+        LoraMode::Merge,
+        Provenance::default(),
+    )
+    .unwrap();
+    let path = std::env::temp_dir()
+        .join("qpruner_serve_it")
+        .join("e2e_lora.qpart");
+    art.save(&path).unwrap();
+
+    let mut opts = ServeOpts::smoke();
+    opts.requests = 32;
+    opts.clients = 4;
+    for (mode, label) in [(LoraMode::Merge, "merged"),
+                          (LoraMode::Adjoin, "adjoined")] {
+        let mut rt = runtime();
+        let lang = Language::new(store.cfg.vocab, 1);
+        let mut metrics = Metrics::new();
+        let builder = EngineBuilder::new()
+            .artifact_path(path.clone())
+            .lora(mode);
+        let r = run_workload(&mut rt, builder, &lang, &opts,
+                             &mut metrics)
+            .expect("artifact workload must drain");
+        assert_eq!(r.completed, 32, "{label}");
+        assert_eq!(r.lora, label);
+        assert_eq!(r.bits_short, bits.short());
+        assert_within_budget(&r);
+    }
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]

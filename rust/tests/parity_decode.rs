@@ -12,10 +12,12 @@
 //! 1e-4 envelope exists to catch fast-math-ish divergence under
 //! `--release` (CI runs this suite in both profiles).
 
+use qpruner::artifact::{LoraDelta, LoraMode, ModelArtifact,
+                        Provenance};
 use qpruner::model::{ModelConfig, ParamStore};
 use qpruner::quant::{BitConfig, QuantFormat};
 use qpruner::runtime::Runtime;
-use qpruner::serve::engine::{BatchReq, Engine};
+use qpruner::serve::engine::{BatchReq, Engine, EngineBuilder};
 use qpruner::serve::kv_cache::{KvCachePool, KvPrecision};
 
 const MAX_SEQ: usize = 24;
@@ -23,14 +25,51 @@ const DECODE_STEPS: usize = 6;
 /// staggered prompt lengths; batches of size n take the first n
 const PROMPT_LENS: [usize; 8] = [3, 5, 8, 4, 6, 9, 3, 7];
 
-fn engine_for(fmt: QuantFormat) -> (Runtime, Engine, ModelConfig) {
+fn parity_runtime() -> Runtime {
     let dir = std::env::temp_dir().join("qpruner_parity_decode");
     std::fs::create_dir_all(&dir).unwrap();
-    let mut rt = Runtime::new(&dir).unwrap();
+    Runtime::new(&dir).unwrap()
+}
+
+fn engine_for(fmt: QuantFormat) -> (Runtime, Engine, ModelConfig) {
+    let mut rt = parity_runtime();
     let cfg = ModelConfig::preset("tiny").unwrap();
     let store = ParamStore::init(&cfg, 1234);
     let bits = BitConfig::uniform(cfg.n_layers, fmt);
-    let engine = Engine::new(&mut rt, &store, &bits, MAX_SEQ).unwrap();
+    let engine = EngineBuilder::new()
+        .store(&store, &bits)
+        .max_seq(MAX_SEQ)
+        .build(&mut rt)
+        .unwrap();
+    assert!(engine.is_native(), "parity needs the native backend");
+    (rt, engine, cfg)
+}
+
+/// Engine with trained-looking (LoftQ) LoRA deltas deployed from an
+/// artifact in the given mode — the merged-LoRA-GEMMs-vs-reference
+/// stake of the ModelArtifact redesign.
+fn lora_engine_for(fmt: QuantFormat, mode: LoraMode)
+                   -> (Runtime, Engine, ModelConfig) {
+    let mut rt = parity_runtime();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 1234);
+    let bits = BitConfig::uniform(cfg.n_layers, fmt);
+    let mut rng = qpruner::rng::Rng::new(55);
+    let prep =
+        qpruner::lora::init_loftq(&store, &bits, 1, &mut rng).unwrap();
+    let art = ModelArtifact::from_pipeline(
+        &prep.base,
+        &bits,
+        Some(LoraDelta::from_state(&prep.lora)),
+        mode,
+        Provenance::default(),
+    )
+    .unwrap();
+    let engine = EngineBuilder::new()
+        .artifact(art)
+        .max_seq(MAX_SEQ)
+        .build(&mut rt)
+        .unwrap();
     assert!(engine.is_native(), "parity needs the native backend");
     (rt, engine, cfg)
 }
@@ -66,7 +105,17 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 /// given KV precision and assert per-step logit parity.
 fn assert_parity(fmt: QuantFormat, batch: usize,
                  precision: KvPrecision) {
-    let (mut rt, engine, cfg) = engine_for(fmt);
+    let (rt, engine, cfg) = engine_for(fmt);
+    assert_parity_engine(rt, engine, cfg, batch, precision,
+                         &format!("{fmt:?}"));
+}
+
+/// Core differential check against a prepared engine (base or
+/// LoRA-deployed): batched GEMM decode vs the per-session reference.
+fn assert_parity_engine(mut rt: Runtime, engine: Engine,
+                        cfg: ModelConfig, batch: usize,
+                        precision: KvPrecision, tag: &str) {
+    let fmt = tag;
     let vocab = cfg.vocab;
 
     // --- reference: per-session matvec decode ---
@@ -157,6 +206,42 @@ fn parity_int8_weights_batches_1_3_8() {
 fn parity_fp16_weights_batches_1_3_8() {
     for batch in [1usize, 3, 8] {
         assert_parity(QuantFormat::Fp16, batch, KvPrecision::F32);
+    }
+}
+
+#[test]
+fn parity_merged_lora_batches_1_3_8() {
+    // merged-LoRA deployment: s*BA folded into the quantized base at
+    // build — the fused GEMM decode must still match the per-session
+    // reference exactly
+    for batch in [1usize, 3, 8] {
+        let (rt, engine, cfg) =
+            lora_engine_for(QuantFormat::Nf4, LoraMode::Merge);
+        assert_parity_engine(rt, engine, cfg, batch,
+                             KvPrecision::F32, "nf4+merged");
+    }
+}
+
+#[test]
+fn parity_adjoined_lora_batches_1_3_8() {
+    // adjoined deployment: the low-rank side path runs inside both
+    // the batched and the reference decode with shared accumulation
+    // order, so parity must hold at the same 1e-4 envelope
+    for batch in [1usize, 3, 8] {
+        let (rt, engine, cfg) =
+            lora_engine_for(QuantFormat::Nf4, LoraMode::Adjoin);
+        assert_parity_engine(rt, engine, cfg, batch,
+                             KvPrecision::F32, "nf4+adjoined");
+    }
+}
+
+#[test]
+fn parity_lora_int8_weights_and_int8_kv() {
+    for mode in [LoraMode::Merge, LoraMode::Adjoin] {
+        let (rt, engine, cfg) =
+            lora_engine_for(QuantFormat::Int8, mode);
+        assert_parity_engine(rt, engine, cfg, 3, KvPrecision::Int8,
+                             "int8+lora");
     }
 }
 
