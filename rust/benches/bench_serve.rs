@@ -1,14 +1,22 @@
 //! Serving-path benchmarks: closed-loop throughput/latency of the
 //! continuous-batching scheduler + native KV decode engine, the decode
-//! hot path in isolation (batched GEMM vs. the per-session matvec
-//! baseline), and the KV-cache footprint at 32- vs 8-bit storage.
+//! hot path in isolation (fused quantized-residency kernels on all
+//! cores vs. the PR-3 f32-GEMM single-lane baseline vs. the
+//! per-session matvec reference), and the KV-cache footprint at 32-
+//! vs 8-bit storage.
 //!
 //! Like the other benches this needs no artifacts — the engine falls
 //! back to the native backend. Output format:
 //!   BENCH <name> iters=<n> mean=<ms> p50=<ms> p95=<ms>
 //!   SERVE <name> tokens_per_sec=<..> p50=<..>ms p99=<..>ms occ=<..>
-//!   SERVE decode_b<B> gemm_tokens_per_sec=<..> baseline_...=<..>
+//!   SERVE decode_b<B> fused_...=<..> f32_gemm_...=<..> matvec_...
 //!   SERVE kv_bits=<32|8> sessions=<..> host_slab_bytes=<..>
+//!
+//! Every config also lands in `results/BENCH_serve.json` — the
+//! machine-readable perf trajectory CI uploads per run. The
+//! `decode_b{1,4,8}` entries carry both the fused-kernel line and the
+//! f32-GEMM baseline line the acceptance criteria compare (fused at
+//! batch 8 on nf4 must be >= 2x the baseline).
 
 #[path = "harness.rs"]
 mod harness;
@@ -21,7 +29,8 @@ use qpruner::quant::{BitConfig, QuantFormat};
 use qpruner::runtime::Runtime;
 use qpruner::serve::engine::{BatchReq, Engine, EngineBuilder};
 use qpruner::serve::kv_cache::{KvCachePool, KvPrecision};
-use qpruner::serve::{bench_json, run_workload, ServeOpts, ServeReport};
+use qpruner::serve::{bench_json, bench_json_append_obj, run_workload,
+                     ServeOpts, ServeReport};
 use std::time::Instant;
 
 fn runtime() -> Runtime {
@@ -117,16 +126,36 @@ fn main() {
         std::hint::black_box(logits);
     });
 
-    // 2. decode hot path: batched GEMM vs per-session matvec baseline.
-    // The GEMM path must win at batch >= 4 (weight rows stream once
-    // per step instead of once per session, and the workspace removes
-    // the per-token allocations).
+    // 2. decode hot path on the `small` preset (enough arithmetic for
+    // the pool to matter): three engines over identical nf4 numerics —
+    //   fused    quantized residency, fused kernels, all cores
+    //   f32_gemm the PR-3 baseline: materialized f32 GEMMs, 1 lane
+    //   matvec   the per-session reference path (PR-2 baseline)
+    // The acceptance line: fused >= 2x f32_gemm at batch 8.
+    let dcfg = ModelConfig::preset("small").unwrap();
+    let dstore = ParamStore::init(&dcfg, 2);
+    let dbits = BitConfig::uniform(dcfg.n_layers, QuantFormat::Nf4);
+    let fused_eng = EngineBuilder::new()
+        .store(&dstore, &dbits)
+        .max_seq(max_seq)
+        .build(&mut rt)
+        .unwrap();
+    let base_eng = EngineBuilder::new()
+        .store(&dstore, &dbits)
+        .max_seq(max_seq)
+        .f32_residency()
+        .threads(1)
+        .build(&mut rt)
+        .unwrap();
+    assert_eq!(fused_eng.residency_label(), "quantized");
+    assert_eq!(base_eng.residency_label(), "f32");
     let short_prompt: Vec<i32> = (0..4).map(|i| 3 + i).collect();
     let steps = max_seq - short_prompt.len() - 1;
+    let mut decode_entries: Vec<String> = Vec::new();
     for &batch in &[1usize, 4, 8] {
         let mut p = KvCachePool::with_slots(
-            &cfg,
-            engine.attn_dim(),
+            &dcfg,
+            fused_eng.attn_dim(),
             batch,
             max_seq,
             KvPrecision::F32,
@@ -135,17 +164,36 @@ fn main() {
         );
         let ids: Vec<usize> =
             (0..batch).map(|_| p.alloc().unwrap()).collect();
-        let base = decode_tokens_per_sec(&engine, &mut rt, &mut p,
-                                         &ids, &short_prompt, steps,
-                                         30, false);
-        let gemm = decode_tokens_per_sec(&engine, &mut rt, &mut p,
-                                         &ids, &short_prompt, steps,
-                                         30, true);
+        let rounds = 8;
+        let fused = decode_tokens_per_sec(&fused_eng, &mut rt, &mut p,
+                                          &ids, &short_prompt, steps,
+                                          rounds, true);
+        let f32_gemm = decode_tokens_per_sec(&base_eng, &mut rt,
+                                             &mut p, &ids,
+                                             &short_prompt, steps,
+                                             rounds, true);
+        let matvec = decode_tokens_per_sec(&base_eng, &mut rt, &mut p,
+                                           &ids, &short_prompt, steps,
+                                           rounds, false);
+        let speedup = fused / f32_gemm.max(1e-9);
         println!(
-            "SERVE decode_b{batch} gemm_tokens_per_sec={gemm:.0} \
-             baseline_tokens_per_sec={base:.0} speedup={:.2}x",
-            gemm / base.max(1e-9)
+            "SERVE decode_b{batch} fused_tokens_per_sec={fused:.0} \
+             f32_gemm_tokens_per_sec={f32_gemm:.0} \
+             matvec_tokens_per_sec={matvec:.0} \
+             fused_speedup_vs_f32_gemm={speedup:.2}x \
+             threads={}",
+            fused_eng.threads()
         );
+        decode_entries.push(format!(
+            "{{\"name\":\"decode_b{batch}\",\"weights\":\"nf4\",\
+             \"residency\":\"quantized\",\
+             \"fused_tokens_per_sec\":{fused:.1},\
+             \"f32_gemm_tokens_per_sec\":{f32_gemm:.1},\
+             \"matvec_tokens_per_sec\":{matvec:.1},\
+             \"fused_speedup_vs_f32_gemm\":{speedup:.3},\
+             \"threads\":{}}}",
+            fused_eng.threads()
+        ));
     }
 
     // 3. KV-cache precision footprint at a fixed modeled budget:
@@ -168,6 +216,17 @@ fn main() {
             p.modeled_budget_bytes() / 1e9
         );
     }
+    // weights-side footprint twin: native residency vs f32
+    println!(
+        "SERVE weights residency=quantized host_bytes={} \
+         f32_host_bytes={} modeled_native_gb={:.3}",
+        fused_eng.weight_host_bytes(),
+        base_eng.weight_host_bytes(),
+        memory::weight_bytes_at(&paper, 0,
+                                &memory::stretch_bits(&dbits,
+                                                      paper.n_layers))
+            / 1e9
+    );
 
     // 4. closed-loop workloads at increasing concurrency, plus the
     // int8-KV variant at the highest concurrency; every config also
@@ -195,14 +254,17 @@ fn main() {
             .unwrap();
         println!(
             "SERVE {name} tokens_per_sec={:.1} p50={:.3}ms p99={:.3}ms \
-             occ={:.2} completed={} kv_bits={} kv_slab_bytes={}",
+             occ={:.2} completed={} kv_bits={} kv_slab_bytes={} \
+             weight_bytes={} threads={}",
             report.tokens_per_sec(),
             report.latency.percentile_ms(50.0),
             report.latency.percentile_ms(99.0),
             report.mean_occupancy,
             report.completed,
             report.kv_bits,
-            report.kv_host_slab_bytes
+            report.kv_host_slab_bytes,
+            report.weight_resident_bytes,
+            report.threads
         );
         assert_eq!(report.completed, 64);
         reports.push((name.to_string(), report));
@@ -214,6 +276,12 @@ fn main() {
     let out_dir = std::path::Path::new("results");
     std::fs::create_dir_all(out_dir).unwrap();
     let json_path = out_dir.join("BENCH_serve.json");
-    std::fs::write(&json_path, bench_json(&entries)).unwrap();
+    // workload entries first, then the decode-kernel lines appended
+    // into the same trajectory array
+    let mut body = bench_json(&entries);
+    for e in &decode_entries {
+        body = bench_json_append_obj(Some(&body), e);
+    }
+    std::fs::write(&json_path, body).unwrap();
     println!("wrote {json_path:?}");
 }

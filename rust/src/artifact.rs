@@ -31,7 +31,7 @@
 use crate::lora::LoraState;
 use crate::model::{proj_index, ModelConfig, ParamStore, PrunedShapes,
                    PROJS};
-use crate::quant::{self, BitConfig, QuantFormat, QuantizedMatrix};
+use crate::quant::{BitConfig, QuantFormat, QuantSlab, QuantizedMatrix};
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
@@ -119,32 +119,11 @@ pub struct Provenance {
     pub source: String,
 }
 
-/// One projection matrix in its native deployment encoding.
-#[derive(Clone, Debug)]
-pub enum WeightBlob {
-    /// fp16-precision layer, stored as raw f32 (the simulator's fp16
-    /// is exact f32 — see `lora::quantize_base`)
-    F32(Tensor),
-    /// nf4/fp4/int8 blockwise codes + absmax scales
-    Packed(QuantizedMatrix),
-}
-
-impl WeightBlob {
-    /// Native storage bytes (codes + scales for packed, 4 B/elem raw).
-    pub fn storage_bytes(&self) -> usize {
-        match self {
-            WeightBlob::F32(t) => t.len() * 4,
-            WeightBlob::Packed(q) => q.storage_bytes(),
-        }
-    }
-
-    fn dims(&self) -> (usize, usize) {
-        match self {
-            WeightBlob::F32(t) => (t.shape()[0], t.shape()[1]),
-            WeightBlob::Packed(q) => (q.rows, q.cols),
-        }
-    }
-}
+/// One projection matrix in its native deployment encoding — the
+/// exact type the serving engine keeps resident ([`quant::QuantSlab`]):
+/// loading an artifact moves these blobs straight into the engine with
+/// no dequantization and no re-encoding.
+pub use crate::quant::QuantSlab as WeightBlob;
 
 /// The serialized, versioned deliverable of one pipeline run.
 #[derive(Clone, Debug)]
@@ -156,8 +135,9 @@ pub struct ModelArtifact {
     /// raw f32 stacks in `FP_STACKS` order: embed, attn_norm,
     /// mlp_norm, final_norm, lm_head
     pub fp_stacks: Vec<Tensor>,
-    /// `[PROJS.len()][n_layers]` native-encoded projection matrices
-    pub projs: Vec<Vec<WeightBlob>>,
+    /// `[PROJS.len()][n_layers]` native-encoded projection matrices —
+    /// the engine's residency unit, adopted as-is at build time
+    pub projs: Vec<Vec<QuantSlab>>,
     pub lora: Option<LoraDelta>,
     /// default deployment mode for `lora` (builders may override)
     pub lora_mode: LoraMode,
@@ -206,10 +186,7 @@ impl ModelArtifact {
             let mut per_layer = Vec::with_capacity(store.cfg.n_layers);
             for l in 0..store.cfg.n_layers {
                 let w = store.layer_proj(l, p);
-                per_layer.push(match bits.layers[l] {
-                    QuantFormat::Fp16 => WeightBlob::F32(w),
-                    fmt => WeightBlob::Packed(quant::quantize(&w, fmt)),
-                });
+                per_layer.push(QuantSlab::from_f32(&w, bits.layers[l]));
             }
             projs.push(per_layer);
         }
@@ -277,15 +254,8 @@ impl ModelArtifact {
         for (pi, p) in PROJS.iter().enumerate() {
             let stack = &mut weights[proj_index(p)];
             for (l, blob) in self.projs[pi].iter().enumerate() {
-                match blob {
-                    WeightBlob::F32(t) => {
-                        stack.slab_mut(l).copy_from_slice(t.data());
-                    }
-                    WeightBlob::Packed(q) => {
-                        let t = quant::dequantize(q);
-                        stack.slab_mut(l).copy_from_slice(t.data());
-                    }
-                }
+                let t = blob.dequantized();
+                stack.slab_mut(l).copy_from_slice(t.data());
             }
         }
         Ok(ParamStore { cfg: self.cfg.clone(), ps: self.ps, weights })
@@ -418,11 +388,11 @@ impl ModelArtifact {
         for per_layer in &self.projs {
             for blob in per_layer {
                 match blob {
-                    WeightBlob::F32(t) => {
+                    QuantSlab::F32(t) => {
                         out.push(0u8);
                         put_tensor(&mut out, t);
                     }
-                    WeightBlob::Packed(q) => {
+                    QuantSlab::Packed(q) => {
                         out.push(1u8);
                         out.push(fmt_code(q.fmt));
                         put_u64(&mut out, q.rows as u64);
@@ -491,7 +461,7 @@ impl ModelArtifact {
             let mut per_layer = Vec::with_capacity(cfg.n_layers);
             for _ in 0..cfg.n_layers {
                 per_layer.push(match cur.u8()? {
-                    0 => WeightBlob::F32(take_tensor(&mut cur)?),
+                    0 => QuantSlab::F32(take_tensor(&mut cur)?),
                     1 => {
                         let fmt = fmt_from_code(cur.u8()?)?;
                         let rows = cur.u64()? as usize;
@@ -507,7 +477,7 @@ impl ModelArtifact {
                                 c[0], c[1], c[2], c[3],
                             ]))
                             .collect();
-                        WeightBlob::Packed(QuantizedMatrix {
+                        QuantSlab::Packed(QuantizedMatrix {
                             fmt,
                             rows,
                             cols,

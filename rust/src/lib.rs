@@ -19,6 +19,7 @@ mod xla_stub;
 pub mod rng;
 pub mod artifact;
 pub mod tensor;
+pub mod parallel;
 pub mod linalg;
 pub mod quant;
 pub mod model;

@@ -65,6 +65,9 @@ fn usage() -> ! {
            --bits STR                   per-layer precision, e.g. 8444\n\
            --kv-bits 32|8               KV-cache precision (int8 KV\n\
                                         admits ~3.8x the sessions)\n\
+           --threads N                  decode thread-pool lanes\n\
+                                        (default: all cores; results\n\
+                                        are identical at any count)\n\
            --device-gb G --max-seq N --max-queue N --ttl-steps N\n\
            --prompt-len LO:HI --max-new LO:HI (request length ranges)\n\
            --stall-prob P --temperature T --memory-arch 7b|13b"
@@ -421,6 +424,11 @@ fn main() -> Result<()> {
             // checkpoint path quantizes a raw store per --bits/--quant
             let mut builder =
                 EngineBuilder::new().kv_precision(kv_precision);
+            if let Some(t) = cfg.get("threads") {
+                let n: usize =
+                    t.parse().context("bad --threads (expected N)")?;
+                builder = builder.threads(n);
+            }
             if let Some(m) = cfg.get("lora") {
                 builder = builder.lora(
                     LoraMode::parse(m)

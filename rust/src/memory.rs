@@ -19,7 +19,7 @@
 //! 30/50 % rows within ~10 % — see EXPERIMENTS.md §Table1.
 
 use crate::model::{ModelConfig, PROJS};
-use crate::quant::BitConfig;
+use crate::quant::{BitConfig, QuantFormat, BLOCK};
 
 /// Multiplier on resident weight bytes covering gradients-of-activations
 /// workspace, dequant buffers and fragmentation (calibrated).
@@ -49,6 +49,43 @@ pub fn weight_bytes(cfg: &ModelConfig, rate_pct: u32, bits: &BitConfig)
         + cfg.d_model
         + 2 * cfg.n_layers * cfg.d_model;
     bytes + rest as f64 * 2.0
+}
+
+/// Host bytes the serving engine actually pins for weights at native
+/// **quantized residency** — the `_at` sibling of [`weight_bytes`]
+/// (which models paper-scale GPU bytes with fp16 conventions). This
+/// one mirrors `serve::engine`'s slab layout byte-for-byte, so
+/// `Engine::weight_host_bytes() == weight_bytes_at(cfg, rate, bits)`
+/// is an exact invariant (tested from the engine side):
+///
+/// * nf4/fp4 layers: `o·i/2` packed-nibble codes + one f32 absmax
+///   scale per `(row, BLOCK)` block;
+/// * int8 layers: `o·i` code bytes + the same scale overhead;
+/// * fp16-format layers and the fp stacks (embed, norms, lm_head):
+///   raw f32, 4 B/elem (host-side representation).
+pub fn weight_bytes_at(cfg: &ModelConfig, rate_pct: u32,
+                       bits: &BitConfig) -> f64 {
+    assert_eq!(bits.n_layers(), cfg.n_layers);
+    let ps = cfg.pruned(rate_pct);
+    let mut bytes = 0usize;
+    for fmt in &bits.layers {
+        for p in PROJS {
+            let (o, i) = cfg.proj_shape(&ps, p);
+            bytes += match fmt {
+                QuantFormat::Fp16 => 4 * o * i,
+                QuantFormat::Nf4 | QuantFormat::Fp4 => {
+                    o * i / 2 + 4 * o * i.div_ceil(BLOCK)
+                }
+                QuantFormat::Int8 => {
+                    o * i + 4 * o * i.div_ceil(BLOCK)
+                }
+            };
+        }
+    }
+    let fp_params = 2 * cfg.vocab * cfg.d_model
+        + cfg.d_model
+        + 2 * cfg.n_layers * cfg.d_model;
+    (bytes + 4 * fp_params) as f64
 }
 
 /// LoRA parameter + optimizer state bytes (fp16 param + fp16 grad +
@@ -218,6 +255,40 @@ mod tests {
         let g4 = peak_finetune_gb(&cfg, 20, &nf4(&cfg));
         let gm = peak_finetune_gb(&cfg, 20, &mixed);
         assert!(gm - g4 > 0.3 && gm - g4 < 3.0, "delta {}", gm - g4);
+    }
+
+    #[test]
+    fn weight_residency_bytes_track_formats() {
+        let cfg = ModelConfig::paper_7b();
+        let w4 = weight_bytes_at(&cfg, 20, &nf4(&cfg));
+        let mut i8b = nf4(&cfg);
+        for f in i8b.layers.iter_mut() {
+            *f = QuantFormat::Int8;
+        }
+        let w8 = weight_bytes_at(&cfg, 20, &i8b);
+        let wf = weight_bytes_at(&cfg, 20, &fp16(&cfg));
+        assert!(w4 < w8 && w8 < wf, "{w4} !< {w8} !< {wf}");
+        // nf4 residency: codes at 0.5 B/param + 1/16 B scale overhead
+        // per param — the ±scales-overhead envelope of the acceptance
+        // criterion
+        let ps = cfg.pruned(20);
+        let mut proj_params = 0usize;
+        for p in PROJS {
+            let (o, i) = cfg.proj_shape(&ps, p);
+            proj_params += o * i;
+        }
+        proj_params *= cfg.n_layers;
+        let fp_params = 2 * cfg.vocab * cfg.d_model
+            + cfg.d_model
+            + 2 * cfg.n_layers * cfg.d_model;
+        let proj_bytes = w4 - 4.0 * fp_params as f64;
+        let per_param = proj_bytes / proj_params as f64;
+        assert!(
+            per_param >= 0.5 && per_param < 0.57,
+            "nf4 residency {per_param} B/param"
+        );
+        // and shrinks with pruning like every other component
+        assert!(weight_bytes_at(&cfg, 50, &nf4(&cfg)) < w4);
     }
 
     #[test]

@@ -165,6 +165,20 @@ pub fn proj_index(proj: &str) -> usize {
     }
 }
 
+/// Row of an `[vocab, d]` embedding table for a token id, with the
+/// OOB-clamp policy shared by the pipeline (`ParamStore::embed_row`)
+/// and the serving engine: negative / out-of-range ids map to the PAD
+/// row (row 0) instead of panicking on client-supplied garbage.
+pub fn embed_row_clamped(embed: &Tensor, vocab: usize, token: i32)
+                         -> &[f32] {
+    let idx = if token < 0 || token as usize >= vocab {
+        0
+    } else {
+        token as usize
+    };
+    embed.row(idx)
+}
+
 /// Full parameter set of one model: 12 stacked tensors.
 #[derive(Clone, Debug)]
 pub struct ParamStore {
@@ -224,13 +238,7 @@ impl ParamStore {
     /// serving path tolerates arbitrary client-supplied token ids
     /// (reserved/OOB ids map to the PAD row rather than panicking).
     pub fn embed_row(&self, token: i32) -> &[f32] {
-        let v = self.cfg.vocab;
-        let idx = if token < 0 || token as usize >= v {
-            0
-        } else {
-            token as usize
-        };
-        self.weights[0].row(idx)
+        embed_row_clamped(&self.weights[0], self.cfg.vocab, token)
     }
 
     /// Projection matrix of one layer as a fresh `[out, in]` tensor.

@@ -1,0 +1,414 @@
+//! Std-only persistent thread pool for the serving decode hot path.
+//!
+//! The offline build bans external crates (no rayon), so this module
+//! provides the minimal fork/join primitive the fused decode kernels
+//! need: a pool of persistent workers plus [`ThreadPool::run`], which
+//! hands every worker one *lane* index and blocks until all lanes
+//! finish. Work is partitioned **statically** via [`chunk_range`] —
+//! each output element is computed by exactly one lane with a fixed
+//! inner accumulation order, so results are bit-identical across
+//! thread counts (the determinism invariant `tests/parity_decode.rs`
+//! pins down: 1 vs 2 vs 8 workers produce the same logits).
+//!
+//! Design notes:
+//!
+//! * workers park on a condvar between jobs — no spinning, and a pool
+//!   constructed once per engine costs nothing while idle;
+//! * `run` borrows its closure for the duration of the call only (the
+//!   lifetime is erased to hand it to the workers, and the submitter
+//!   does not return until every worker has finished — the standard
+//!   scoped-pool argument);
+//! * submissions are serialized by a submitter lock, so a pool shared
+//!   by several engines (or several tests) is safe, just not
+//!   concurrent;
+//! * `threads == 1` short-circuits to an inline call: a single-lane
+//!   pool spawns no threads at all and is exactly the serial kernel.
+
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Lifetime-erased reference to the job closure. Safety: only called
+/// by workers between job publication and the final `active == 0`
+/// handshake, a window during which `ThreadPool::run` keeps the real
+/// closure alive on the submitter's stack (the `'static` is a lie the
+/// handshake makes honest — the standard scoped-pool argument).
+#[derive(Clone, Copy)]
+struct Job(&'static (dyn Fn(usize) + Sync));
+
+struct PoolState {
+    /// bumped once per published job; workers run each epoch once
+    epoch: u64,
+    job: Option<Job>,
+    /// workers still executing the current epoch
+    active: usize,
+    /// a worker lane's job panicked (caught; re-raised by `run`)
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// workers wait here for a new epoch
+    work_cv: Condvar,
+    /// the submitter waits here for `active == 0`
+    done_cv: Condvar,
+}
+
+/// Persistent fork/join pool; see the module docs.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// lane submissions are serialized through this (a pool is shared,
+    /// not concurrent)
+    submit: Mutex<()>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total lanes: the calling thread runs lane 0
+    /// and `threads - 1` spawned workers run lanes `1..threads`.
+    /// `threads` is clamped to at least 1.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|lane| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("qpruner-pool-{lane}"))
+                    .spawn(move || worker_loop(&shared, lane))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, handles, submit: Mutex::new(()), threads }
+    }
+
+    /// Total lanes (including the caller's lane 0).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(lane)` once for every lane in `0..threads()`,
+    /// returning after all lanes finish. The caller runs lane 0; the
+    /// workers run the rest concurrently. `f` must partition its work
+    /// by lane (see [`chunk_range`]) — the pool does no splitting
+    /// itself.
+    ///
+    /// Panic behavior: a panic on any lane is contained — worker
+    /// panics are caught and re-raised here after the join; a panic on
+    /// the caller's lane unwinds only after every worker has finished
+    /// (the drop guard below), so the lifetime-erased closure and the
+    /// buffers it writes are never freed while a lane still runs.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.threads == 1 {
+            f(0);
+            return;
+        }
+        let _serial = self.submit.lock().unwrap();
+        // SAFETY: the 'static is fiction — see `Job`. Every worker
+        // finishes (active == 0, enforced by `JoinGuard` even on
+        // unwind) before this frame returns, so the closure is alive
+        // whenever a worker calls it.
+        let job = Job(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync),
+                                  &'static (dyn Fn(usize) + Sync)>(f)
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none() && st.active == 0);
+            st.job = Some(job);
+            st.epoch += 1;
+            st.active = self.threads - 1;
+            // a stale flag can survive a run whose caller lane also
+            // panicked (the check below is skipped by the unwind);
+            // clear it so this job can't inherit a prior job's panic
+            st.panicked = false;
+            self.shared.work_cv.notify_all();
+        }
+        // joins (and unpublishes the job) on both the normal path and
+        // the unwind path of f(0)
+        let guard = JoinGuard { shared: &self.shared };
+        f(0);
+        drop(guard);
+        let mut st = self.shared.state.lock().unwrap();
+        if std::mem::take(&mut st.panicked) {
+            drop(st);
+            panic!("qpruner thread pool: a worker lane panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Blocks until the current epoch's workers all report done, then
+/// unpublishes the job — in `Drop` so the join happens even when the
+/// submitter's own lane unwinds (no lane may outlive the closure).
+struct JoinGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for JoinGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+fn worker_loop(shared: &Shared, lane: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(job) = st.job {
+                        seen = st.epoch;
+                        break job;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // the submitter blocks until we report done — see `Job`. A
+        // panic is caught so `active` always reaches 0 (no deadlocked
+        // submitter, no poisoned lock); `run` re-raises it.
+        let poisoned = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| (job.0)(lane)),
+        )
+        .is_err();
+        let mut st = shared.state.lock().unwrap();
+        if poisoned {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+/// Contiguous slice of `0..n` owned by `lane` out of `lanes` — the
+/// static partition every parallel kernel uses. Balanced to within one
+/// item; empty for lanes beyond `n`. Deterministic: the mapping
+/// depends only on `(n, lane, lanes)`, and because each item is
+/// processed by exactly one lane with an order fixed by the kernel,
+/// *results* do not depend on `lanes` at all.
+pub fn chunk_range(n: usize, lane: usize, lanes: usize)
+                   -> std::ops::Range<usize> {
+    debug_assert!(lane < lanes);
+    let base = n / lanes;
+    let extra = n % lanes;
+    let lo = lane * base + lane.min(extra);
+    let hi = lo + base + usize::from(lane < extra);
+    lo..hi.min(n)
+}
+
+/// Shareable raw pointer into an `f32` buffer, for parallel kernels
+/// whose lanes write *disjoint* index sets of one output slice (e.g.
+/// interleaved columns of a row-major `[m, n]` matrix, or per-session
+/// regions of a workspace buffer).
+///
+/// Safety contract for [`SyncPtr::slice_mut`]: callers must guarantee
+/// (1) the pointed-to buffer outlives the parallel region, and (2) no
+/// two lanes touch overlapping ranges. Both are enforced structurally
+/// by the kernels in `linalg.rs` / `serve/engine.rs` (partitions come
+/// from [`chunk_range`] or per-session offsets).
+#[derive(Clone, Copy)]
+pub struct SyncPtr(*mut f32);
+
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+impl SyncPtr {
+    pub fn new(buf: &mut [f32]) -> SyncPtr {
+        SyncPtr(buf.as_mut_ptr())
+    }
+
+    /// `&mut buf[off..off + len]` without a borrow — see the struct
+    /// docs for the aliasing contract.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, off: usize, len: usize)
+                            -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(off), len)
+    }
+
+    /// Write one element; same contract as [`SyncPtr::slice_mut`].
+    pub unsafe fn write(&self, idx: usize, v: f32) {
+        *self.0.add(idx) = v;
+    }
+}
+
+/// Lane count for auto-configured pools: `available_parallelism`,
+/// falling back to 1 when the host refuses to say.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Process-wide shared pool, sized by [`auto_threads`] on first use.
+/// Engines built without an explicit `--threads` override share it;
+/// tests that need a specific lane count construct their own pools.
+pub fn shared() -> Arc<ThreadPool> {
+    static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+    Arc::clone(
+        POOL.get_or_init(|| Arc::new(ThreadPool::new(auto_threads()))),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_lane_runs_exactly_once() {
+        for threads in [1usize, 2, 5] {
+            let pool = ThreadPool::new(threads);
+            let hits: Vec<AtomicUsize> =
+                (0..threads).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(&|lane| {
+                hits[lane].fetch_add(1, Ordering::SeqCst);
+            });
+            for (lane, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1,
+                           "lane {lane} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = ThreadPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(&|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 150);
+    }
+
+    #[test]
+    fn chunk_ranges_tile_exactly() {
+        for n in [0usize, 1, 5, 7, 64, 100] {
+            for lanes in [1usize, 2, 3, 8, 13] {
+                let mut seen = vec![0u8; n];
+                for lane in 0..lanes {
+                    for i in chunk_range(n, lane, lanes) {
+                        seen[i] += 1;
+                    }
+                }
+                assert!(seen.iter().all(|&c| c == 1),
+                        "n={n} lanes={lanes}: {seen:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_parallel_sum_matches_serial() {
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        let mut out = vec![0.0f32; xs.len()];
+        let pool = ThreadPool::new(4);
+        let lanes = pool.threads();
+        let ptr = SyncPtr::new(&mut out);
+        pool.run(&|lane| {
+            for i in chunk_range(xs.len(), lane, lanes) {
+                unsafe { ptr.write(i, xs[i] * 2.0) };
+            }
+        });
+        for (i, (&x, &o)) in xs.iter().zip(&out).enumerate() {
+            assert_eq!(o, x * 2.0, "index {i}");
+        }
+    }
+
+    #[test]
+    fn worker_panic_is_contained_and_reraised() {
+        let pool = ThreadPool::new(3);
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run(&|lane| {
+                    if lane == 1 {
+                        panic!("boom on a worker lane");
+                    }
+                });
+            }),
+        );
+        assert!(r.is_err(), "worker panic was swallowed");
+        // the pool joins cleanly and stays usable afterwards
+        let total = AtomicUsize::new(0);
+        pool.run(&|_| {
+            total.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn submitter_panic_still_joins_workers() {
+        let pool = ThreadPool::new(3);
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run(&|lane| {
+                    if lane == 0 {
+                        panic!("boom on the caller lane");
+                    }
+                });
+            }),
+        );
+        assert!(r.is_err());
+        // JoinGuard waited out the workers during the unwind: a new
+        // job runs every lane exactly once
+        let total = AtomicUsize::new(0);
+        pool.run(&|_| {
+            total.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let ran = AtomicUsize::new(0);
+        pool.run(&|lane| {
+            assert_eq!(lane, 0);
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn shared_pool_is_a_singleton() {
+        let a = shared();
+        let b = shared();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.threads() >= 1);
+    }
+}

@@ -203,12 +203,87 @@ impl QuantizedMatrix {
     }
 }
 
+/// One weight matrix in its deployment-resident encoding — the unit
+/// the serving engine keeps per (projection, layer) so decode streams
+/// 0.5–1 byte/param instead of re-materialized f32, and the unit
+/// `artifact::ModelArtifact` serializes (the file *is* the residency).
+///
+/// `F32` holds fp16-format layers (the simulator's fp16 is exact f32)
+/// and the forced representation of the f32-residency parity/bench
+/// oracle; `Packed` holds nf4/fp4/int8 codes + per-block absmax scales.
+#[derive(Clone, Debug)]
+pub enum QuantSlab {
+    /// full-precision layer, stored as raw f32 host-side
+    F32(Tensor),
+    /// blockwise codes + absmax scales in their native encoding
+    Packed(QuantizedMatrix),
+}
+
+impl QuantSlab {
+    /// Encode an f32 `[out, in]` matrix for residency at `fmt`.
+    pub fn from_f32(w: &Tensor, fmt: QuantFormat) -> QuantSlab {
+        match fmt {
+            QuantFormat::Fp16 => QuantSlab::F32(w.clone()),
+            fmt => QuantSlab::Packed(quantize(w, fmt)),
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            QuantSlab::F32(t) => (t.shape()[0], t.shape()[1]),
+            QuantSlab::Packed(q) => (q.rows, q.cols),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.dims().0
+    }
+
+    pub fn cols(&self) -> usize {
+        self.dims().1
+    }
+
+    /// Host bytes this slab actually pins (codes + f32 scales for
+    /// packed encodings, 4 B/elem raw) — the residency the
+    /// `memory::weight_bytes_at` model accounts for.
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            QuantSlab::F32(t) => t.len() * 4,
+            QuantSlab::Packed(q) => q.storage_bytes(),
+        }
+    }
+
+    /// Materialize the f32 deployment numerics (dequantized codes, or
+    /// a clone for raw layers). Oracle/build-time use only — the
+    /// decode hot path consumes slabs through the fused kernels in
+    /// `linalg` without ever calling this.
+    pub fn dequantized(&self) -> Tensor {
+        match self {
+            QuantSlab::F32(t) => t.clone(),
+            QuantSlab::Packed(q) => dequantize(q),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            QuantSlab::F32(_) => "f32",
+            QuantSlab::Packed(q) => q.fmt.label(),
+        }
+    }
+}
+
 fn codebook_for(fmt: QuantFormat) -> &'static [f32; 16] {
     match fmt {
         QuantFormat::Nf4 => &NF4_CODEBOOK,
         QuantFormat::Fp4 => &FP4_CODEBOOK,
         _ => panic!("codebook_for: {fmt:?} is not a 4-bit format"),
     }
+}
+
+/// Public codebook accessor for the fused 4-bit decode kernels in
+/// `linalg` (panics for non-4-bit formats, like [`codebook_for`]).
+pub fn codebook(fmt: QuantFormat) -> &'static [f32; 16] {
+    codebook_for(fmt)
 }
 
 /// Reference nearest-code scan (kept as the oracle for

@@ -147,6 +147,19 @@ pub struct ServeReport {
     pub kv_modeled_budget_bytes: f64,
     /// host bytes actually pinned by the slab
     pub kv_host_slab_bytes: usize,
+    /// weight residency of the engine: "quantized" (native encodings
+    /// on the decode path, the default) or "f32" (oracle/bench builds)
+    pub weight_residency: &'static str,
+    /// host bytes the deployment weights actually pin
+    /// (`Engine::weight_host_bytes` — codes + scales, no f32
+    /// materialization at the default residency)
+    pub weight_resident_bytes: usize,
+    /// modeled native weight residency at the paper arch
+    /// (`memory::weight_bytes_at`), the weights-side sibling of the
+    /// modeled KV lines
+    pub weight_modeled_native_bytes: f64,
+    /// decode pool lane count (`--threads`)
+    pub threads: usize,
     /// decode-workspace allocation telemetry: buffer growths (only
     /// when a step's batch exceeds the high-water mark) vs. pure
     /// reuses — the steady-state decode path must be all reuses
@@ -220,6 +233,14 @@ impl ServeReport {
              format!("{:.3} GB", self.kv_modeled_budget_bytes / 1e9));
         push("kv host slab",
              format!("{:.2} MB", self.kv_host_slab_bytes as f64 / 1e6));
+        push("weight residency", self.weight_residency.to_string());
+        push("weight host bytes",
+             format!("{:.2} MB",
+                     self.weight_resident_bytes as f64 / 1e6));
+        push("weight modeled native",
+             format!("{:.3} GB",
+                     self.weight_modeled_native_bytes / 1e9));
+        push("decode threads", format!("{}", self.threads));
         push("scratch grows/reuses",
              format!("{}/{}", self.scratch_grows, self.scratch_reuses));
         t
@@ -241,6 +262,8 @@ impl ServeReport {
              \"wall_secs\":{:.4},\"kv_sessions_capacity\":{},\
              \"kv_sessions_peak\":{},\"kv_host_slab_bytes\":{},\
              \"kv_modeled_budget_bytes\":{:.0},\
+             \"weight_residency\":{},\"weight_resident_bytes\":{},\
+             \"weight_modeled_native_bytes\":{:.0},\"threads\":{},\
              \"scratch_grows\":{},\"scratch_reuses\":{}}}",
             json_str(name),
             json_str(self.backend),
@@ -262,6 +285,10 @@ impl ServeReport {
             self.kv_peak_sessions,
             self.kv_host_slab_bytes,
             self.kv_modeled_budget_bytes,
+            json_str(self.weight_residency),
+            self.weight_resident_bytes,
+            self.weight_modeled_native_bytes,
+            self.threads,
             self.scratch_grows,
             self.scratch_reuses,
         )
@@ -310,7 +337,15 @@ pub fn bench_json(entries: &[(String, &ServeReport)]) -> String {
 /// that doesn't look like a JSON array is replaced wholesale.
 pub fn bench_json_append(prev: Option<&str>, name: &str,
                          r: &ServeReport) -> String {
-    let fresh = || bench_json(&[(name.to_string(), r)]);
+    bench_json_append_obj(prev, &r.to_json(name))
+}
+
+/// [`bench_json_append`] for a pre-rendered JSON object — lets the
+/// bench binary record non-`ServeReport` entries (the `decode_b{N}`
+/// fused-vs-baseline kernel lines) in the same trajectory file.
+pub fn bench_json_append_obj(prev: Option<&str>, entry: &str)
+                             -> String {
+    let fresh = || format!("[\n  {entry}\n]\n");
     let Some(prev) = prev else { return fresh() };
     let trimmed = prev.trim_end();
     let Some(head) = trimmed.strip_suffix(']') else {
@@ -320,7 +355,6 @@ pub fn bench_json_append(prev: Option<&str>, name: &str,
     if !head.starts_with('[') {
         return fresh();
     }
-    let entry = r.to_json(name);
     if head == "[" {
         format!("[\n  {entry}\n]\n")
     } else {
@@ -529,6 +563,13 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
     metrics.set_counter("serve.scratch_grows", scratch_grows);
     metrics.set_counter("serve.scratch_reuses", scratch_reuses);
 
+    // weights-side residency accounting, next to the KV footprint:
+    // actual host bytes pinned by the engine's slabs, and the modeled
+    // native residency at the paper arch
+    let stretched = memory::stretch_bits(&bits, arch.n_layers);
+    let weight_modeled_native_bytes =
+        memory::weight_bytes_at(&arch, rate, &stretched);
+
     let st = &sched.stats;
     Ok(ServeReport {
         backend: engine.backend_label(),
@@ -555,6 +596,10 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
         kv_modeled_peak_bytes: sched.pool.modeled_peak_bytes(),
         kv_modeled_budget_bytes: sched.pool.modeled_budget_bytes(),
         kv_host_slab_bytes: sched.pool.host_slab_bytes(),
+        weight_residency: engine.residency_label(),
+        weight_resident_bytes: engine.weight_host_bytes(),
+        weight_modeled_native_bytes,
+        threads: engine.threads(),
         scratch_grows,
         scratch_reuses,
     })
@@ -629,6 +674,10 @@ mod tests {
             kv_modeled_peak_bytes: 2e8,
             kv_modeled_budget_bytes: 4e8,
             kv_host_slab_bytes: 1_000_000,
+            weight_residency: "quantized",
+            weight_resident_bytes: 2_500_000,
+            weight_modeled_native_bytes: 3.5e9,
+            threads: 4,
             scratch_grows: 2,
             scratch_reuses: 68,
         };
@@ -644,12 +693,25 @@ mod tests {
         assert!(md.contains("lora"));
         assert!(md.contains("merged"));
         assert!(md.contains("2/68"));
+        assert!(md.contains("weight residency"));
+        assert!(md.contains("quantized"));
+        assert!(md.contains("decode threads"));
         // machine-readable twin of the table
         let j = r.to_json("smoke_cfg");
         assert!(j.contains("\"name\":\"smoke_cfg\""));
         assert!(j.contains("\"tokens_per_sec\":140.000"));
         assert!(j.contains("\"lora\":\"merged\""));
         assert!(j.contains("\"kv_bits\":8"));
+        assert!(j.contains("\"weight_residency\":\"quantized\""));
+        assert!(j.contains("\"weight_resident_bytes\":2500000"));
+        assert!(j.contains("\"threads\":4"));
+        // raw-object append used by the decode-kernel bench lines
+        let with_obj = bench_json_append_obj(
+            Some("[\n]"),
+            "{\"name\":\"decode_b8\",\"fused_tokens_per_sec\":1.0}",
+        );
+        assert!(with_obj.contains("\"name\":\"decode_b8\""));
+        assert!(with_obj.trim_end().ends_with(']'));
         let arr = bench_json(&[("a".into(), &r), ("b".into(), &r)]);
         assert!(arr.starts_with("[\n"));
         assert!(arr.trim_end().ends_with(']'));

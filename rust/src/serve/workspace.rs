@@ -8,6 +8,14 @@
 //! tests (and `Metrics` via `serve.scratch_grows` /
 //! `serve.scratch_reuses`) can assert the steady-state decode path
 //! performs no per-token activation allocations, even at batch = 1.
+//!
+//! Since the decode engine went multi-threaded (`parallel.rs`), the
+//! attention scratch (`scores`, `kv_row`) is laid out **per session**
+//! — `[B, heads * max_seq]` and `[B, attn_dim]` — so the per-session
+//! attention loop can run one session per pool lane with each lane
+//! writing a disjoint region. The reference (oracle) logits path also
+//! borrows `normed`/`logits` here instead of allocating two fresh
+//! `Vec`s per sampled token.
 
 /// Scratch buffers for one engine. All matrices are row-major with the
 /// batch as the leading axis; capacities are `batch_cap * dim`.
@@ -17,6 +25,8 @@ pub struct DecodeWorkspace {
     attn_dim: usize,
     d_ff: usize,
     vocab: usize,
+    heads: usize,
+    max_seq: usize,
     /// adapter rank of the engine's adjoined LoRA (0 = no side path)
     lora_rank: usize,
     /// largest batch the buffers currently hold
@@ -36,9 +46,10 @@ pub struct DecodeWorkspace {
     /// SwiGLU intermediates `[B, d_ff]`
     pub gate: Vec<f32>,
     pub up: Vec<f32>,
-    /// per-session attention scores `[heads, max_seq]` (fixed size)
+    /// per-session attention scores `[B, heads * max_seq]` — one
+    /// disjoint region per session so pool lanes never share
     pub scores: Vec<f32>,
-    /// dequantization scratch for one KV row `[attn_dim]` (fixed size)
+    /// per-session KV dequantization scratch `[B, attn_dim]`
     pub kv_row: Vec<f32>,
     /// next-token logits `[B, vocab]`
     pub logits: Vec<f32>,
@@ -54,9 +65,9 @@ pub struct DecodeWorkspace {
 }
 
 impl DecodeWorkspace {
-    /// Buffers start empty (`batch_cap == 0`); the fixed-size scratch
-    /// (`scores`, `kv_row`) is allocated up front since it does not
-    /// depend on the batch.
+    /// Buffers start empty (`batch_cap == 0`); the first
+    /// [`DecodeWorkspace::ensure_batch`] sizes everything, including
+    /// the per-session attention scratch.
     #[allow(clippy::too_many_arguments)]
     pub fn new(d_model: usize, attn_dim: usize, d_ff: usize,
                vocab: usize, heads: usize, max_seq: usize,
@@ -67,6 +78,8 @@ impl DecodeWorkspace {
             attn_dim,
             d_ff,
             vocab,
+            heads,
+            max_seq,
             lora_rank,
             batch_cap: 0,
             hidden: Vec::new(),
@@ -78,14 +91,19 @@ impl DecodeWorkspace {
             proj_d: Vec::new(),
             gate: Vec::new(),
             up: Vec::new(),
-            scores: vec![0.0; heads * max_seq],
-            kv_row: vec![0.0; attn_dim],
+            scores: Vec::new(),
+            kv_row: Vec::new(),
             logits: Vec::new(),
             lora_tmp: Vec::new(),
             slot_ids: Vec::new(),
             grows: 0,
             reuses: 0,
         }
+    }
+
+    /// Per-session stride of the `scores` buffer.
+    pub fn scores_stride(&self) -> usize {
+        self.heads * self.max_seq
     }
 
     /// Make every batch-sized buffer hold at least `batch` rows.
@@ -110,6 +128,8 @@ impl DecodeWorkspace {
         self.proj_d.resize(batch * self.d_model, 0.0);
         self.gate.resize(batch * self.d_ff, 0.0);
         self.up.resize(batch * self.d_ff, 0.0);
+        self.scores.resize(batch * self.heads * self.max_seq, 0.0);
+        self.kv_row.resize(batch * self.attn_dim, 0.0);
         self.logits.resize(batch * self.vocab, 0.0);
         self.lora_tmp.resize(batch * self.lora_rank, 0.0);
     }
@@ -150,10 +170,17 @@ mod tests {
     }
 
     #[test]
-    fn fixed_scratch_sized_at_construction() {
-        let ws = DecodeWorkspace::new(8, 4, 16, 32, 3, 12, 0);
-        assert_eq!(ws.scores.len(), 36);
-        assert_eq!(ws.kv_row.len(), 4);
+    fn attention_scratch_is_per_session() {
+        let mut ws = DecodeWorkspace::new(8, 4, 16, 32, 3, 12, 0);
+        assert_eq!(ws.scores_stride(), 36);
+        assert!(ws.scores.is_empty() && ws.kv_row.is_empty());
+        ws.ensure_batch(2);
+        // one disjoint region per session: pool lanes never overlap
+        assert_eq!(ws.scores.len(), 2 * 36);
+        assert_eq!(ws.kv_row.len(), 2 * 4);
+        ws.ensure_batch(5);
+        assert_eq!(ws.scores.len(), 5 * 36);
+        assert_eq!(ws.kv_row.len(), 5 * 4);
     }
 
     #[test]
