@@ -196,6 +196,64 @@ fn main() {
         ));
     }
 
+    // 2b. phase-profiler overhead: the same fused engine config with
+    // the sampled step timer on *every* decode step (the worst case —
+    // serving defaults to every 4th) vs. profiling off. The
+    // acceptance bar for the observability layer is < 2% throughput
+    // regression; the measured ratio lands in BENCH_serve.json so the
+    // trajectory is tracked across PRs. Also checks the lap-tiling
+    // invariant: the per-phase times must sum to ~the sampled wall.
+    {
+        let prof_eng = EngineBuilder::new()
+            .store(&dstore, &dbits)
+            .max_seq(max_seq)
+            .profile_every(1)
+            .build(&mut rt)
+            .unwrap();
+        let batch = 8usize;
+        let mut p = KvCachePool::with_slots(
+            &dcfg,
+            fused_eng.attn_dim(),
+            batch,
+            max_seq,
+            KvPrecision::F32,
+            1.0,
+            batch as f64,
+        );
+        let ids: Vec<usize> =
+            (0..batch).map(|_| p.alloc().unwrap()).collect();
+        let rounds = 8;
+        let off = decode_tokens_per_sec(&fused_eng, &mut rt, &mut p,
+                                        &ids, &short_prompt, steps,
+                                        rounds, true);
+        let on = decode_tokens_per_sec(&prof_eng, &mut rt, &mut p,
+                                       &ids, &short_prompt, steps,
+                                       rounds, true);
+        let overhead_pct = 100.0 * (1.0 - on / off.max(1e-9));
+        let snap = prof_eng.phase_snapshot();
+        assert!(snap.sampled_steps > 0, "profiler sampled nothing");
+        let cov = snap.coverage();
+        assert!(
+            cov > 0.90 && cov < 1.01,
+            "phase laps must tile the sampled wall (coverage {cov})"
+        );
+        println!(
+            "SERVE profile_overhead_b8 tokens_per_sec_off={off:.0} \
+             tokens_per_sec_on={on:.0} overhead_pct={overhead_pct:.2} \
+             phase_coverage={cov:.4} sampled_steps={}",
+            snap.sampled_steps
+        );
+        decode_entries.push(format!(
+            "{{\"name\":\"profile_overhead_b8\",\
+             \"tokens_per_sec_off\":{off:.1},\
+             \"tokens_per_sec_on\":{on:.1},\
+             \"overhead_pct\":{overhead_pct:.3},\
+             \"phase_coverage\":{cov:.4},\
+             \"sampled_steps\":{}}}",
+            snap.sampled_steps
+        ));
+    }
+
     // 3. KV-cache precision footprint at a fixed modeled budget:
     // sessions admitted and host slab bytes for --kv-bits 32 vs 8
     let paper = ModelConfig::paper_7b();

@@ -32,6 +32,7 @@ pub mod memory;
 pub mod config;
 pub mod report;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod finetune;
 pub mod eval;

@@ -33,7 +33,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: qpruner <cmd> [--key value ...]\n\
          cmds: pretrain | run | export | table1 | table2 | table3 |\n\
-               fig1 | fig3 | serve | bench-serve | quantize | info\n\
+               fig1 | fig3 | serve | bench-serve | trace-check |\n\
+               quantize | info\n\
          common flags:\n\
            --size tiny|small|base       model preset   (default small)\n\
            --style llama|vicuna         corpus dialect (default llama)\n\
@@ -70,7 +71,22 @@ fn usage() -> ! {
                                         are identical at any count)\n\
            --device-gb G --max-seq N --max-queue N --ttl-steps N\n\
            --prompt-len LO:HI --max-new LO:HI (request length ranges)\n\
-           --stall-prob P --temperature T --memory-arch 7b|13b"
+           --stall-prob P --temperature T --memory-arch 7b|13b\n\
+         serve observability flags:\n\
+           --trace-out PATH             write a Chrome/Perfetto trace\n\
+                                        (chrome://tracing or ui.perfetto.dev)\n\
+           --events-out PATH            structured JSONL event log\n\
+           --metrics-out PATH           metrics-registry JSON snapshot\n\
+           --stats-every N              progress line every N scheduler\n\
+                                        steps (0 = off)\n\
+           --profile-every N            sample every Nth decode step for\n\
+                                        the phase profiler (0 = off)\n\
+         trace-check flags:\n\
+           --trace PATH                 trace.json to validate\n\
+           --min-sessions N             require >= N complete session\n\
+                                        spans (default 1)\n\
+           --require-phases true|false  require >= 1 phase event\n\
+                                        (default true)"
     );
     std::process::exit(2);
 }
@@ -418,12 +434,26 @@ fn main() -> Result<()> {
                 cfg.f64_or("temperature", sopts.temperature as f64)?
                     as f32;
             sopts.seed = cfg.u64_or("seed", sopts.seed)?;
+            sopts.stats_every =
+                cfg.u64_or("stats-every", sopts.stats_every)?;
+            sopts.trace_out =
+                cfg.get("trace-out").map(PathBuf::from);
+            sopts.events_out =
+                cfg.get("events-out").map(PathBuf::from);
+            sopts.metrics_out =
+                cfg.get("metrics-out").map(PathBuf::from);
 
             // deployment source: an exported artifact boots the
             // pipeline's own pruned+quantized+LoRA deliverable; the
             // checkpoint path quantizes a raw store per --bits/--quant
             let mut builder =
                 EngineBuilder::new().kv_precision(kv_precision);
+            if let Some(v) = cfg.get("profile-every") {
+                let n: u32 = v
+                    .parse()
+                    .context("bad --profile-every (expected N)")?;
+                builder = builder.profile_every(n);
+            }
             if let Some(t) = cfg.get("threads") {
                 let n: usize =
                     t.parse().context("bad --threads (expected N)")?;
@@ -534,7 +564,48 @@ fn main() -> Result<()> {
                 println!("wrote {:?}", out_dir.join("bench_serve.md"));
                 println!("wrote {json_path:?}");
             }
+            for (what, path) in [
+                ("trace", &sopts.trace_out),
+                ("event log", &sopts.events_out),
+                ("metrics snapshot", &sopts.metrics_out),
+            ] {
+                if let Some(p) = path {
+                    println!("wrote {what} {p:?}");
+                }
+            }
             println!("-- stage timings --\n{}", metrics.report());
+        }
+        "trace-check" => {
+            // CI gate: the trace a `serve --trace-out` run produced
+            // must parse as Chrome Trace Event JSON and contain real
+            // lifecycle + phase content, not just metadata
+            use qpruner::obs::trace_export::validate_trace;
+            let path = cfg
+                .get("trace")
+                .context("trace-check needs --trace PATH")?;
+            let body = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            let summary = validate_trace(&body)
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let min_sessions = cfg.usize_or("min-sessions", 1)?;
+            let require_phases = cfg.bool_or("require-phases", true)?;
+            println!(
+                "{path}: {} events, {} session spans \
+                 ({} complete), {} phase events",
+                summary.total_events, summary.sessions,
+                summary.complete_sessions, summary.phase_events
+            );
+            if summary.complete_sessions < min_sessions {
+                bail!(
+                    "{path}: {} complete session span(s), \
+                     need >= {min_sessions}",
+                    summary.complete_sessions
+                );
+            }
+            if require_phases && summary.phase_events == 0 {
+                bail!("{path}: no decode phase events in trace");
+            }
+            println!("trace OK");
         }
         "quantize" => {
             // per-format round-trip error analysis on a checkpoint:

@@ -62,11 +62,41 @@ impl Metrics {
     }
 }
 
-/// Latency sample recorder with nearest-rank percentiles — the serving
-/// subsystem's p50/p95/p99 source of truth.
-#[derive(Default, Debug, Clone)]
+/// Reservoir size of [`LatencyStats`]: below this every sample is
+/// kept and percentiles are exact; above it a uniform reservoir
+/// (Algorithm R) bounds memory and percentiles become estimates.
+pub const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+/// Latency sample recorder with nearest-rank percentiles, used by the
+/// offline benches. (The serving hot path records into
+/// `obs::hist::Hist` instead — O(1), fixed memory, mergeable.)
+///
+/// Memory is bounded: up to [`LATENCY_RESERVOIR_CAP`] raw samples are
+/// retained. Past the cap, reservoir sampling keeps a uniform subset,
+/// so `percentile_ms` is a consistent estimator whose error shrinks
+/// as the cap grows; `len`, `mean_ms` stay exact (tracked on the
+/// side), and `min`/`max` order statistics are only approximate.
+#[derive(Debug, Clone)]
 pub struct LatencyStats {
     samples_ms: Vec<f64>,
+    /// total recorded samples (exact, even past the cap)
+    count: u64,
+    /// exact running sum for `mean_ms`
+    sum_ms: f64,
+    /// xorshift64 state for reservoir replacement (deterministic —
+    /// never zero, which would be a fixed point)
+    rng_state: u64,
+}
+
+impl Default for LatencyStats {
+    fn default() -> LatencyStats {
+        LatencyStats {
+            samples_ms: Vec::new(),
+            count: 0,
+            sum_ms: 0.0,
+            rng_state: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
 }
 
 impl LatencyStats {
@@ -74,23 +104,49 @@ impl LatencyStats {
         LatencyStats::default()
     }
 
-    pub fn record_ms(&mut self, ms: f64) {
-        self.samples_ms.push(ms);
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.rng_state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng_state = x;
+        x
     }
 
+    pub fn record_ms(&mut self, ms: f64) {
+        self.count += 1;
+        self.sum_ms += ms;
+        if self.samples_ms.len() < LATENCY_RESERVOIR_CAP {
+            self.samples_ms.push(ms);
+            return;
+        }
+        // Algorithm R: after n records, every sample has been kept
+        // with probability cap/n
+        let j = self.next_u64() % self.count;
+        if (j as usize) < LATENCY_RESERVOIR_CAP {
+            self.samples_ms[j as usize] = ms;
+        }
+    }
+
+    /// Total samples recorded (exact — not the reservoir size).
     pub fn len(&self) -> usize {
-        self.samples_ms.len()
+        self.count as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples_ms.is_empty()
+        self.count == 0
+    }
+
+    /// Raw samples currently held (== `len()` until the cap).
+    pub fn reservoir_len(&self) -> usize {
+        self.samples_ms.len()
     }
 
     pub fn mean_ms(&self) -> f64 {
-        if self.samples_ms.is_empty() {
+        if self.count == 0 {
             return f64::NAN;
         }
-        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+        self.sum_ms / self.count as f64
     }
 
     /// Nearest-rank percentiles for several `q`s in (0, 100] at once,
@@ -232,6 +288,30 @@ mod tests {
         assert_eq!(one.percentile_ms(50.0), 7.5);
         assert_eq!(one.percentile_ms(99.0), 7.5);
         assert!(one.summary().contains("n=1"));
+    }
+
+    #[test]
+    fn latency_reservoir_bounds_memory() {
+        let mut l = LatencyStats::new();
+        let n = 10 * LATENCY_RESERVOIR_CAP;
+        for i in 1..=n {
+            l.record_ms(i as f64);
+        }
+        // exact aggregates survive the cap
+        assert_eq!(l.len(), n);
+        assert_eq!(l.reservoir_len(), LATENCY_RESERVOIR_CAP);
+        let exact_mean = (n + 1) as f64 / 2.0;
+        assert!((l.mean_ms() - exact_mean).abs() < 1e-6);
+        // percentile estimates stay in the right neighbourhood (the
+        // reservoir is a uniform subset; deterministic rng makes this
+        // assertion stable)
+        let p50 = l.percentile_ms(50.0);
+        assert!(
+            p50 > 0.4 * n as f64 && p50 < 0.6 * n as f64,
+            "p50 estimate {p50} far from {exact_mean}"
+        );
+        let p = l.percentiles_ms(&[50.0, 95.0, 99.0]);
+        assert!(p[0] <= p[1] && p[1] <= p[2]);
     }
 
     #[test]

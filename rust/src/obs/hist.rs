@@ -1,0 +1,461 @@
+//! Bounded log2-bucket latency histograms and the metric registry.
+//!
+//! `LatencyStats` (metrics.rs) keeps raw samples and clones-and-sorts
+//! on every percentile query — fine for offline benches, wrong for a
+//! serving hot path that records one latency per token. [`Hist`] is
+//! the streaming replacement: a fixed array of power-of-two buckets
+//! with 8 linear sub-buckets per octave (HDR-histogram style), so
+//! `record` is O(1) with no allocation, two histograms merge by adding
+//! counts, and memory is constant (~4 KB) regardless of run length.
+//! Quantiles are nearest-rank over bucket midpoints; the relative
+//! error is bounded by the sub-bucket width (≤ 1/16 of the value),
+//! and exact `min`/`max`/`mean` are tracked on the side.
+//!
+//! [`Registry`] is the serve-side metric namespace: named counters,
+//! gauges, and histograms in a `BTreeMap` so the JSON snapshot
+//! (`snapshot_json`) is stable and diffable across runs.
+
+use std::collections::BTreeMap;
+
+/// Linear sub-buckets per octave (2^3 = 8).
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS;
+/// Values below 2^(SUB_BITS+1) get one exact bucket each.
+const LINEAR_MAX: u64 = SUB * 2; // 16
+/// 16 exact buckets + 8 per octave for msb 4..=63.
+const N_BUCKETS: usize = LINEAR_MAX as usize + 60 * SUB as usize;
+
+fn bucket_index(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= 4
+    let sub = (v >> (msb - SUB_BITS)) & (SUB - 1);
+    LINEAR_MAX as usize
+        + (msb as usize - 4) * SUB as usize
+        + sub as usize
+}
+
+/// Inclusive lower bound of bucket `i` in the recorded unit (ns).
+fn bucket_low(i: usize) -> u64 {
+    if i < LINEAR_MAX as usize {
+        return i as u64;
+    }
+    let rel = i - LINEAR_MAX as usize;
+    let msb = (rel / SUB as usize) as u32 + 4;
+    let sub = (rel % SUB as usize) as u64;
+    (1u64 << msb) + (sub << (msb - SUB_BITS))
+}
+
+/// Exclusive upper bound of bucket `i`.
+fn bucket_high(i: usize) -> u64 {
+    if i < LINEAR_MAX as usize {
+        return i as u64 + 1;
+    }
+    let rel = i - LINEAR_MAX as usize;
+    let msb = (rel / SUB as usize) as u32 + 4;
+    bucket_low(i) + (1u64 << (msb - SUB_BITS))
+}
+
+/// Streaming latency histogram over nanoseconds. The public API
+/// mirrors `LatencyStats` (record/percentiles in milliseconds) so the
+/// scheduler and `ServeReport` swapped over without reshaping callers.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    /// O(1), allocation-free record of one duration in nanoseconds.
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[bucket_index(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Record a duration in milliseconds (negatives clamp to zero).
+    pub fn record_ms(&mut self, ms: f64) {
+        let ns = if ms <= 0.0 || !ms.is_finite() {
+            0
+        } else {
+            (ms * 1e6).round().min(u64::MAX as f64) as u64
+        };
+        self.record_ns(ns);
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum_ns as f64 / self.count as f64 / 1e6
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.min_ns as f64 / 1e6
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.max_ns as f64 / 1e6
+    }
+
+    /// Nearest-rank percentile over bucket midpoints, clamped into
+    /// `[min, max]` so the tails report the exact extremes. `NaN`
+    /// when empty (serialization maps it to `null`, never `NaN`).
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank =
+            ((q / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let mid = (bucket_low(i) + bucket_high(i)) as f64 / 2.0;
+                let mid = mid
+                    .max(self.min_ns as f64)
+                    .min(self.max_ns as f64);
+                return mid / 1e6;
+            }
+        }
+        self.max_ms()
+    }
+
+    pub fn percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
+        qs.iter().map(|&q| self.percentile_ms(q)).collect()
+    }
+
+    /// Add another histogram's population into this one.
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// `"p50 1.2ms  p95 3.4ms  p99 5.6ms  mean 1.5ms (n=100)"`
+    pub fn summary(&self) -> String {
+        if self.count == 0 {
+            return "n=0".to_string();
+        }
+        let p = self.percentiles_ms(&[50.0, 95.0, 99.0]);
+        format!(
+            "p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  mean {:.2}ms (n={})",
+            p[0],
+            p[1],
+            p[2],
+            self.mean_ms(),
+            self.count
+        )
+    }
+
+    /// Stable JSON object: summary stats plus the sparse non-empty
+    /// buckets as `[index, count]` pairs.
+    pub fn to_json(&self) -> String {
+        let num = |v: f64| {
+            if v.is_finite() {
+                format!("{v:.4}")
+            } else {
+                "null".to_string()
+            }
+        };
+        let p = self.percentiles_ms(&[50.0, 90.0, 95.0, 99.0]);
+        let buckets: Vec<String> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| format!("[{i},{c}]"))
+            .collect();
+        format!(
+            "{{\"count\":{},\"mean_ms\":{},\"min_ms\":{},\
+             \"max_ms\":{},\"p50_ms\":{},\"p90_ms\":{},\
+             \"p95_ms\":{},\"p99_ms\":{},\"buckets\":[{}]}}",
+            self.count,
+            num(self.mean_ms()),
+            num(self.min_ms()),
+            num(self.max_ms()),
+            num(p[0]),
+            num(p[1]),
+            num(p[2]),
+            num(p[3]),
+            buckets.join(",")
+        )
+    }
+}
+
+/// One named metric in the registry.
+#[derive(Clone, Debug)]
+pub enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Hist(Hist),
+}
+
+/// Named metric namespace with a stable JSON snapshot. Names follow
+/// the `serve.*` dotted convention (see the README glossary).
+#[derive(Default, Debug)]
+pub struct Registry {
+    metrics: BTreeMap<String, Metric>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter_add(&mut self, name: &str, by: u64) {
+        match self
+            .metrics
+            .entry(name.to_string())
+            .or_insert(Metric::Counter(0))
+        {
+            Metric::Counter(c) => *c += by,
+            other => panic!("{name} is not a counter: {other:?}"),
+        }
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.metrics.insert(name.to_string(), Metric::Gauge(v));
+    }
+
+    pub fn hist_mut(&mut self, name: &str) -> &mut Hist {
+        match self
+            .metrics
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Hist(Hist::new()))
+        {
+            Metric::Hist(h) => h,
+            other => panic!("{name} is not a histogram: {other:?}"),
+        }
+    }
+
+    /// Install a pre-populated histogram under `name`.
+    pub fn hist_set(&mut self, name: &str, h: Hist) {
+        self.metrics.insert(name.to_string(), Metric::Hist(h));
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        match self.metrics.get(name) {
+            Some(Metric::Counter(c)) => Some(*c),
+            _ => None,
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        match self.metrics.get(name) {
+            Some(Metric::Gauge(g)) => Some(*g),
+            _ => None,
+        }
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        match self.metrics.get(name) {
+            Some(Metric::Hist(h)) => Some(h),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Versioned snapshot: kinds are grouped so consumers can iterate
+    /// one section without sniffing value shapes. Keys inside each
+    /// section are sorted (BTreeMap order) — byte-stable given the
+    /// same metric values.
+    pub fn snapshot_json(&self) -> String {
+        let esc = super::json::escape;
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut hists = Vec::new();
+        for (name, m) in &self.metrics {
+            match m {
+                Metric::Counter(c) => {
+                    counters.push(format!("\"{}\":{}", esc(name), c));
+                }
+                Metric::Gauge(g) => {
+                    let v = if g.is_finite() {
+                        format!("{g:.6}")
+                    } else {
+                        "null".to_string()
+                    };
+                    gauges.push(format!("\"{}\":{}", esc(name), v));
+                }
+                Metric::Hist(h) => {
+                    hists.push(format!(
+                        "\"{}\":{}",
+                        esc(name),
+                        h.to_json()
+                    ));
+                }
+            }
+        }
+        format!(
+            "{{\"schema\":\"qpruner.serve.metrics.v1\",\
+             \"counters\":{{{}}},\"gauges\":{{{}}},\
+             \"histograms\":{{{}}}}}",
+            counters.join(","),
+            gauges.join(","),
+            hists.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_tile_the_axis() {
+        // every bucket's high == next bucket's low, and index() maps
+        // both endpoints into the right bucket
+        for i in 0..N_BUCKETS - 1 {
+            assert_eq!(bucket_high(i), bucket_low(i + 1), "gap at {i}");
+            assert_eq!(bucket_index(bucket_low(i)), i);
+            assert_eq!(bucket_index(bucket_high(i) - 1), i);
+        }
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn empty_hist_is_nan_and_json_null() {
+        let h = Hist::new();
+        assert!(h.is_empty());
+        assert!(h.percentile_ms(50.0).is_nan());
+        assert!(h.mean_ms().is_nan());
+        let j = h.to_json();
+        assert!(j.contains("\"p50_ms\":null"), "{j}");
+        assert!(!j.contains("NaN"), "{j}");
+    }
+
+    #[test]
+    fn percentiles_are_ordered_and_bounded() {
+        let mut h = Hist::new();
+        // deterministic skewed population
+        let mut x = 9u64;
+        for _ in 0..10_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let ms = 0.1 + (x % 1000) as f64 / 50.0;
+            h.record_ms(ms);
+        }
+        let p = h.percentiles_ms(&[50.0, 95.0, 99.0]);
+        assert!(p[0] <= p[1] && p[1] <= p[2], "{p:?}");
+        assert!(p[0] >= h.min_ms() && p[2] <= h.max_ms());
+        assert_eq!(h.len(), 10_000);
+    }
+
+    #[test]
+    fn relative_error_is_within_sub_bucket_width() {
+        // constant population: every quantile must land within 1/16
+        // (6.25% at the midpoint) of the true value
+        for ms in [0.001, 0.7, 3.0, 42.0, 1234.5] {
+            let mut h = Hist::new();
+            for _ in 0..100 {
+                h.record_ms(ms);
+            }
+            for q in [1.0, 50.0, 99.0] {
+                let got = h.percentile_ms(q);
+                // min==max clamps the midpoint to the exact value
+                assert!(
+                    (got - ms).abs() / ms < 1e-9,
+                    "q{q} of {ms}: {got}"
+                );
+            }
+            assert!((h.mean_ms() - ms).abs() / ms < 1e-6);
+        }
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut u = Hist::new();
+        for i in 0..500 {
+            let ms = 0.5 + i as f64 * 0.01;
+            if i % 2 == 0 {
+                a.record_ms(ms);
+            } else {
+                b.record_ms(ms);
+            }
+            u.record_ms(ms);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), u.len());
+        for q in [10.0, 50.0, 90.0, 99.0] {
+            assert_eq!(a.percentile_ms(q), u.percentile_ms(q));
+        }
+        assert_eq!(a.min_ms(), u.min_ms());
+        assert_eq!(a.max_ms(), u.max_ms());
+    }
+
+    #[test]
+    fn registry_kinds_and_snapshot_schema() {
+        let mut r = Registry::new();
+        r.counter_add("serve.completed", 3);
+        r.counter_add("serve.completed", 2);
+        r.gauge_set("serve.kv_used_frac", 0.25);
+        r.hist_mut("serve.latency_ms").record_ms(1.5);
+        assert_eq!(r.counter("serve.completed"), Some(5));
+        assert_eq!(r.gauge("serve.kv_used_frac"), Some(0.25));
+        assert_eq!(r.hist("serve.latency_ms").unwrap().len(), 1);
+        let snap = r.snapshot_json();
+        let v = super::super::json::Json::parse(&snap).unwrap();
+        assert_eq!(
+            v.get("schema").and_then(|s| s.as_str()),
+            Some("qpruner.serve.metrics.v1")
+        );
+        let c = v.get("counters").unwrap();
+        assert_eq!(
+            c.get("serve.completed").and_then(|x| x.as_f64()),
+            Some(5.0)
+        );
+        assert!(v.get("histograms")
+            .and_then(|h| h.get("serve.latency_ms"))
+            .is_some());
+    }
+}

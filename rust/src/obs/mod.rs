@@ -1,0 +1,402 @@
+//! Serving observability: lifecycle tracing, decode-phase profiling,
+//! and bounded streaming metrics.
+//!
+//! Three layers, all allocation-free on the hot path:
+//!
+//! * [`span`] — per-session lifecycle records (submit → admit →
+//!   first token → finish/evict) collected by the scheduler, with
+//!   TTFT / inter-token latency derivable per session.
+//! * this module — [`PhaseProfiler`], sampled wall-time attribution
+//!   of decode steps to phases (qkv / attn / mlp / lora / vocab) and
+//!   layers. `Engine` decides once per public call whether to sample
+//!   (default 1-in-4); non-sampled steps cost one relaxed atomic
+//!   increment. A sampled step runs a [`StepTimer`] whose laps tile
+//!   the step's wall time, so the per-phase sum reconstructs the
+//!   measured wall time instead of drifting from it. Accumulators are
+//!   plain atomics merged at [`PhaseProfiler::snapshot`]; timers
+//!   never touch activations, so logits stay bit-identical with
+//!   profiling on or off (pinned by `tests/parity_decode.rs`).
+//! * [`hist`] — fixed log2-bucket histograms and the metric
+//!   [`hist::Registry`] replacing unbounded `LatencyStats` buffers on
+//!   the serving path.
+//!
+//! [`trace_export`] turns spans + phase events into a
+//! Chrome/Perfetto-loadable `trace.json` and a JSONL event log;
+//! [`json`] is the strict parser CI uses to validate both.
+
+pub mod hist;
+pub mod json;
+pub mod span;
+pub mod trace_export;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Where a decode step spends its time. `Lora` only accrues on
+/// engines with adjoined adapters; `Vocab` is the final norm + lm_head
+/// projection (recorded once per step under layer 0).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Qkv,
+    Attn,
+    Mlp,
+    Lora,
+    Vocab,
+}
+
+pub const PHASES: [Phase; 5] =
+    [Phase::Qkv, Phase::Attn, Phase::Mlp, Phase::Lora, Phase::Vocab];
+
+impl Phase {
+    pub fn idx(&self) -> usize {
+        match self {
+            Phase::Qkv => 0,
+            Phase::Attn => 1,
+            Phase::Mlp => 2,
+            Phase::Lora => 3,
+            Phase::Vocab => 4,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Qkv => "qkv",
+            Phase::Attn => "attn",
+            Phase::Mlp => "mlp",
+            Phase::Lora => "lora",
+            Phase::Vocab => "vocab",
+        }
+    }
+}
+
+/// One timed interval from a sampled step (feeds the trace export).
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseEvent {
+    pub phase: Phase,
+    pub layer: u32,
+    pub step: u64,
+    pub start: Instant,
+    pub dur_ns: u64,
+}
+
+/// Sampled per-phase / per-layer wall-time accumulators for one
+/// engine. Shared `Arc` between the engine and whoever snapshots;
+/// all counters are relaxed atomics (telemetry only — no ordering
+/// requirements).
+#[derive(Debug)]
+pub struct PhaseProfiler {
+    n_layers: usize,
+    /// sample every Nth instrumented call; 0 disables profiling
+    every: u32,
+    /// keep raw [`PhaseEvent`]s for trace export (off by default:
+    /// aggregates cost nothing, events cost memory)
+    events_on: bool,
+    events_cap: usize,
+    calls: AtomicU64,
+    sampled: AtomicU64,
+    wall_ns: AtomicU64,
+    /// `[phase][layer]` flattened as `phase * n_layers + layer`
+    phase_ns: Vec<AtomicU64>,
+    events: Mutex<Vec<PhaseEvent>>,
+    events_dropped: AtomicU64,
+}
+
+impl PhaseProfiler {
+    pub fn new(
+        n_layers: usize,
+        every: u32,
+        events_on: bool,
+        events_cap: usize,
+    ) -> PhaseProfiler {
+        let n = PHASES.len() * n_layers.max(1);
+        PhaseProfiler {
+            n_layers: n_layers.max(1),
+            every,
+            events_on,
+            events_cap,
+            calls: AtomicU64::new(0),
+            sampled: AtomicU64::new(0),
+            wall_ns: AtomicU64::new(0),
+            phase_ns: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            events: Mutex::new(Vec::new()),
+            events_dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.every > 0
+    }
+
+    pub fn every(&self) -> u32 {
+        self.every
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Decide whether this instrumented call is sampled. Costs one
+    /// relaxed fetch_add when profiling is on; returns the step index
+    /// when sampled.
+    pub fn sample_step(&self) -> Option<u64> {
+        if self.every == 0 {
+            return None;
+        }
+        let c = self.calls.fetch_add(1, Ordering::Relaxed);
+        if c % self.every as u64 == 0 {
+            Some(c)
+        } else {
+            None
+        }
+    }
+
+    /// Fold one sampled step's accumulator (layout
+    /// `phase * n_layers + layer`) and its events into the shared
+    /// totals. One mutex lock per *sampled* step, never per token.
+    pub fn commit(
+        &self,
+        acc: &[u64],
+        wall_ns: u64,
+        events: &[PhaseEvent],
+    ) {
+        self.sampled.fetch_add(1, Ordering::Relaxed);
+        self.wall_ns.fetch_add(wall_ns, Ordering::Relaxed);
+        for (slot, &ns) in self.phase_ns.iter().zip(acc) {
+            if ns > 0 {
+                slot.fetch_add(ns, Ordering::Relaxed);
+            }
+        }
+        if self.events_on && !events.is_empty() {
+            let mut buf = self.events.lock().unwrap();
+            let room = self.events_cap.saturating_sub(buf.len());
+            let take = room.min(events.len());
+            buf.extend_from_slice(&events[..take]);
+            if take < events.len() {
+                self.events_dropped.fetch_add(
+                    (events.len() - take) as u64,
+                    Ordering::Relaxed,
+                );
+            }
+        }
+    }
+
+    /// Drain the retained raw events (trace export calls this once at
+    /// end of run).
+    pub fn take_events(&self) -> Vec<PhaseEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    pub fn snapshot(&self) -> PhaseSnapshot {
+        let l = self.n_layers;
+        let mut per_phase = [0.0f64; 5];
+        let mut per_layer = vec![0.0f64; l];
+        for (i, slot) in self.phase_ns.iter().enumerate() {
+            let s = slot.load(Ordering::Relaxed) as f64 / 1e9;
+            per_phase[i / l] += s;
+            per_layer[i % l] += s;
+        }
+        PhaseSnapshot {
+            per_phase_secs: per_phase,
+            per_layer_secs: per_layer,
+            total_steps: self.calls.load(Ordering::Relaxed),
+            sampled_steps: self.sampled.load(Ordering::Relaxed),
+            sampled_wall_secs: self.wall_ns.load(Ordering::Relaxed)
+                as f64
+                / 1e9,
+            lane_busy_secs: Vec::new(),
+            events_dropped: self
+                .events_dropped
+                .load(Ordering::Relaxed),
+            every: self.every,
+        }
+    }
+}
+
+/// Merged view of a [`PhaseProfiler`] (plus, when the engine fills it
+/// in, the thread pool's per-lane busy time over the same sampled
+/// steps).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseSnapshot {
+    /// seconds per phase, indexed by [`Phase::idx`]
+    pub per_phase_secs: [f64; 5],
+    pub per_layer_secs: Vec<f64>,
+    /// instrumented calls seen (sampled or not)
+    pub total_steps: u64,
+    pub sampled_steps: u64,
+    /// wall time of the sampled steps only
+    pub sampled_wall_secs: f64,
+    /// per-lane busy seconds from `ThreadPool` profiling
+    pub lane_busy_secs: Vec<f64>,
+    pub events_dropped: u64,
+    pub every: u32,
+}
+
+impl PhaseSnapshot {
+    pub fn phase_sum_secs(&self) -> f64 {
+        self.per_phase_secs.iter().sum()
+    }
+
+    /// phase-sum / sampled wall — the tiling invariant puts this in
+    /// (0.9, 1.0] on any sane clock; NaN with zero sampled steps.
+    pub fn coverage(&self) -> f64 {
+        if self.sampled_wall_secs <= 0.0 {
+            return f64::NAN;
+        }
+        self.phase_sum_secs() / self.sampled_wall_secs
+    }
+
+    /// Share of one phase in the sampled total (NaN when nothing was
+    /// sampled).
+    pub fn phase_frac(&self, p: Phase) -> f64 {
+        let sum = self.phase_sum_secs();
+        if sum <= 0.0 {
+            return f64::NAN;
+        }
+        self.per_phase_secs[p.idx()] / sum
+    }
+}
+
+/// Lap timer for one sampled step. Owns the scratch buffers (taken
+/// from the engine workspace, returned by [`StepTimer::finish`]) so
+/// the steady state allocates nothing. `lap(phase, layer)` attributes
+/// everything since the previous lap to `(phase, layer)` — laps tile
+/// `[start, last lap]`, which is what makes the phase sum track the
+/// step wall time instead of under-counting.
+pub struct StepTimer<'a> {
+    prof: &'a PhaseProfiler,
+    step: u64,
+    t0: Instant,
+    last: Instant,
+    acc: Vec<u64>,
+    events: Vec<PhaseEvent>,
+}
+
+impl<'a> StepTimer<'a> {
+    pub fn begin(
+        prof: &'a PhaseProfiler,
+        step: u64,
+        mut acc: Vec<u64>,
+        mut events: Vec<PhaseEvent>,
+    ) -> StepTimer<'a> {
+        acc.clear();
+        acc.resize(PHASES.len() * prof.n_layers, 0);
+        events.clear();
+        let now = Instant::now();
+        StepTimer { prof, step, t0: now, last: now, acc, events }
+    }
+
+    pub fn lap(&mut self, phase: Phase, layer: usize) {
+        let now = Instant::now();
+        let dur = now.duration_since(self.last).as_nanos() as u64;
+        self.acc[phase.idx() * self.prof.n_layers + layer] += dur;
+        if self.prof.events_on {
+            self.events.push(PhaseEvent {
+                phase,
+                layer: layer as u32,
+                step: self.step,
+                start: self.last,
+                dur_ns: dur,
+            });
+        }
+        self.last = now;
+    }
+
+    /// Commit to the profiler and hand the scratch buffers back.
+    pub fn finish(self) -> (Vec<u64>, Vec<PhaseEvent>) {
+        let wall =
+            self.last.duration_since(self.t0).as_nanos() as u64;
+        self.prof.commit(&self.acc, wall, &self.events);
+        (self.acc, self.events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_rate_is_exact() {
+        let p = PhaseProfiler::new(2, 4, false, 0);
+        let hits = (0..16)
+            .filter(|_| p.sample_step().is_some())
+            .count();
+        assert_eq!(hits, 4);
+        let s = p.snapshot();
+        assert_eq!(s.total_steps, 16);
+        // sample_step does not imply commit
+        assert_eq!(s.sampled_steps, 0);
+        // disabled profiler never samples and never counts
+        let off = PhaseProfiler::new(2, 0, false, 0);
+        assert!(off.sample_step().is_none());
+        assert!(!off.enabled());
+    }
+
+    #[test]
+    fn laps_tile_the_step_and_attribute_by_phase() {
+        let p = PhaseProfiler::new(2, 1, true, 100);
+        let step = p.sample_step().unwrap();
+        let mut t =
+            StepTimer::begin(&p, step, Vec::new(), Vec::new());
+        busy_wait_us(200);
+        t.lap(Phase::Qkv, 0);
+        busy_wait_us(200);
+        t.lap(Phase::Attn, 0);
+        busy_wait_us(200);
+        t.lap(Phase::Mlp, 1);
+        t.lap(Phase::Vocab, 0);
+        t.finish();
+        let s = p.snapshot();
+        assert_eq!(s.sampled_steps, 1);
+        let sum = s.phase_sum_secs();
+        assert!(sum > 0.0);
+        // the tiling invariant: laps cover the whole wall time
+        assert!(
+            s.coverage() > 0.999 && s.coverage() <= 1.001,
+            "coverage {}",
+            s.coverage()
+        );
+        assert!(s.per_phase_secs[Phase::Qkv.idx()] > 0.0);
+        assert!(s.per_layer_secs[1] > 0.0);
+        assert_eq!(p.take_events().len(), 4);
+        assert_eq!(p.take_events().len(), 0, "drain empties");
+    }
+
+    #[test]
+    fn event_cap_drops_and_counts() {
+        let p = PhaseProfiler::new(1, 1, true, 2);
+        let step = p.sample_step().unwrap();
+        let mut t =
+            StepTimer::begin(&p, step, Vec::new(), Vec::new());
+        for _ in 0..5 {
+            t.lap(Phase::Attn, 0);
+        }
+        t.finish();
+        assert_eq!(p.take_events().len(), 2);
+        assert_eq!(p.snapshot().events_dropped, 3);
+    }
+
+    #[test]
+    fn commit_merges_across_steps() {
+        let p = PhaseProfiler::new(1, 1, false, 0);
+        let mut acc = vec![0u64; 5];
+        acc[Phase::Attn.idx()] = 1_000;
+        p.commit(&acc, 2_000, &[]);
+        p.commit(&acc, 2_000, &[]);
+        let s = p.snapshot();
+        assert_eq!(s.sampled_steps, 2);
+        assert!(
+            (s.per_phase_secs[Phase::Attn.idx()] - 2e-6).abs() < 1e-12
+        );
+        assert!((s.sampled_wall_secs - 4e-6).abs() < 1e-12);
+        assert!((s.coverage() - 0.5).abs() < 1e-9);
+        assert!((s.phase_frac(Phase::Attn) - 1.0).abs() < 1e-9);
+    }
+
+    fn busy_wait_us(us: u64) {
+        let t0 = Instant::now();
+        while t0.elapsed().as_micros() < us as u128 {
+            std::hint::spin_loop();
+        }
+    }
+}

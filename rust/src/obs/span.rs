@@ -1,0 +1,232 @@
+//! Request-lifecycle span records for the serving scheduler.
+//!
+//! Every session that enters the scheduler gets one [`SessionSpan`]:
+//! the wall-clock instants of its lifecycle transitions
+//! (submitted → admitted → first token → finished/evicted), the token
+//! count, and the outcome. The scheduler drives the [`Tracer`] with
+//! one call per transition; the tracer keeps live sessions in a map
+//! and moves them to a bounded completed list at finish — a week-long
+//! run drops spans past the cap (counted) instead of growing without
+//! limit. Derived per-session latencies (TTFT, decode span, mean ITL)
+//! come straight from the instants, so tests can assert the histogram
+//! recordings equal the span deltas exactly.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanOutcome {
+    Done,
+    Evicted,
+}
+
+impl SpanOutcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanOutcome::Done => "done",
+            SpanOutcome::Evicted => "evicted",
+        }
+    }
+}
+
+/// One finished session's lifecycle record.
+#[derive(Clone, Debug)]
+pub struct SessionSpan {
+    pub id: u64,
+    pub client: usize,
+    pub prompt_len: usize,
+    pub submitted: Instant,
+    /// left the wait queue and was prefilled (None: evicted while
+    /// still queued — cannot happen today, kept for forward-compat)
+    pub admitted: Option<Instant>,
+    pub first_token: Option<Instant>,
+    pub finished: Instant,
+    pub tokens: u64,
+    pub outcome: SpanOutcome,
+}
+
+impl SessionSpan {
+    /// Time-to-first-token: submit → first sampled token.
+    pub fn ttft_ms(&self) -> Option<f64> {
+        self.first_token.map(|t| {
+            t.duration_since(self.submitted).as_secs_f64() * 1e3
+        })
+    }
+
+    /// Decode span: first token → finished.
+    pub fn decode_ms(&self) -> Option<f64> {
+        self.first_token.map(|t| {
+            self.finished.duration_since(t).as_secs_f64() * 1e3
+        })
+    }
+
+    /// Mean inter-token latency over the decode span (None with
+    /// fewer than two tokens).
+    pub fn mean_itl_ms(&self) -> Option<f64> {
+        if self.tokens < 2 {
+            return None;
+        }
+        self.decode_ms().map(|d| d / (self.tokens - 1) as f64)
+    }
+}
+
+struct LiveSpan {
+    client: usize,
+    prompt_len: usize,
+    submitted: Instant,
+    admitted: Option<Instant>,
+    first_token: Option<Instant>,
+}
+
+/// Collects session spans during a serve run. Not thread-safe by
+/// design: the scheduler is single-threaded (parallelism lives below
+/// it, inside `Engine::step_batch`).
+pub struct Tracer {
+    epoch: Instant,
+    live: HashMap<u64, LiveSpan>,
+    done: Vec<SessionSpan>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Tracer {
+    /// `cap` bounds the completed-span list; spans finished past it
+    /// are counted in [`Tracer::dropped`] and discarded.
+    pub fn new(cap: usize) -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            live: HashMap::new(),
+            done: Vec::new(),
+            cap,
+            dropped: 0,
+        }
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Microseconds from the tracer epoch (trace timestamp base).
+    pub fn us_since_epoch(&self, t: Instant) -> f64 {
+        t.saturating_duration_since(self.epoch).as_secs_f64() * 1e6
+    }
+
+    pub fn on_submit(
+        &mut self,
+        id: u64,
+        client: usize,
+        prompt_len: usize,
+        t: Instant,
+    ) {
+        self.live.insert(
+            id,
+            LiveSpan {
+                client,
+                prompt_len,
+                submitted: t,
+                admitted: None,
+                first_token: None,
+            },
+        );
+    }
+
+    pub fn on_admitted(&mut self, id: u64, t: Instant) {
+        if let Some(s) = self.live.get_mut(&id) {
+            s.admitted = Some(t);
+        }
+    }
+
+    pub fn on_first_token(&mut self, id: u64, t: Instant) {
+        if let Some(s) = self.live.get_mut(&id) {
+            s.first_token = Some(t);
+        }
+    }
+
+    pub fn on_finish(
+        &mut self,
+        id: u64,
+        t: Instant,
+        tokens: u64,
+        outcome: SpanOutcome,
+    ) {
+        let Some(s) = self.live.remove(&id) else { return };
+        if self.done.len() >= self.cap {
+            self.dropped += 1;
+            return;
+        }
+        self.done.push(SessionSpan {
+            id,
+            client: s.client,
+            prompt_len: s.prompt_len,
+            submitted: s.submitted,
+            admitted: s.admitted,
+            first_token: s.first_token,
+            finished: t,
+            tokens,
+            outcome,
+        });
+    }
+
+    pub fn spans(&self) -> &[SessionSpan] {
+        &self.done
+    }
+
+    pub fn live_len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn lifecycle_produces_consistent_span() {
+        let mut tr = Tracer::new(16);
+        let t0 = Instant::now();
+        tr.on_submit(7, 2, 5, t0);
+        let t1 = t0 + Duration::from_millis(3);
+        tr.on_admitted(7, t1);
+        let t2 = t0 + Duration::from_millis(5);
+        tr.on_first_token(7, t2);
+        let t3 = t0 + Duration::from_millis(25);
+        tr.on_finish(7, t3, 6, SpanOutcome::Done);
+        assert_eq!(tr.live_len(), 0);
+        let s = &tr.spans()[0];
+        assert_eq!((s.id, s.client, s.prompt_len), (7, 2, 5));
+        assert!((s.ttft_ms().unwrap() - 5.0).abs() < 1e-9);
+        assert!((s.decode_ms().unwrap() - 20.0).abs() < 1e-9);
+        assert!((s.mean_itl_ms().unwrap() - 4.0).abs() < 1e-9);
+        assert_eq!(s.outcome, SpanOutcome::Done);
+    }
+
+    #[test]
+    fn cap_drops_and_counts() {
+        let mut tr = Tracer::new(1);
+        let t = Instant::now();
+        for id in 0..3 {
+            tr.on_submit(id, 0, 1, t);
+            tr.on_finish(id, t, 1, SpanOutcome::Done);
+        }
+        assert_eq!(tr.spans().len(), 1);
+        assert_eq!(tr.dropped(), 2);
+    }
+
+    #[test]
+    fn finish_of_unknown_id_is_a_noop() {
+        let mut tr = Tracer::new(4);
+        tr.on_finish(99, Instant::now(), 0, SpanOutcome::Evicted);
+        assert!(tr.spans().is_empty());
+        // single-token sessions have no ITL
+        let t = Instant::now();
+        tr.on_submit(1, 0, 1, t);
+        tr.on_first_token(1, t);
+        tr.on_finish(1, t, 1, SpanOutcome::Done);
+        assert!(tr.spans()[0].mean_itl_ms().is_none());
+    }
+}

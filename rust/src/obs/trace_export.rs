@@ -1,0 +1,328 @@
+//! Export spans and phase events as a Chrome/Perfetto trace and a
+//! structured JSONL event log; validate both (the `trace-check` CLI
+//! subcommand CI runs against every traced serve smoke).
+//!
+//! The trace uses the Trace Event Format's complete ("X") events with
+//! microsecond timestamps relative to the tracer epoch. Each session
+//! gets its own track (`tid = session id + 1`) carrying one
+//! whole-lifecycle `session` event plus nested `queued` / `prefill` /
+//! `decode` sub-spans; sampled decode-phase events land on the shared
+//! engine track (`tid = 0`) under category `phase`. Load the file at
+//! `https://ui.perfetto.dev` or `chrome://tracing` as-is.
+
+use super::json::{escape, Json};
+use super::span::Tracer;
+use super::PhaseEvent;
+
+fn x_event(
+    tid: u64,
+    cat: &str,
+    name: &str,
+    ts_us: f64,
+    dur_us: f64,
+    args: &str,
+) -> String {
+    format!(
+        "{{\"ph\":\"X\",\"pid\":1,\"tid\":{tid},\"cat\":\"{cat}\",\
+         \"name\":\"{name}\",\"ts\":{ts_us:.3},\"dur\":{dur_us:.3},\
+         \"args\":{{{args}}}}}"
+    )
+}
+
+/// Build the full Chrome trace JSON document.
+pub fn chrome_trace(tracer: &Tracer, phases: &[PhaseEvent]) -> String {
+    let mut ev: Vec<String> = vec![
+        "{\"ph\":\"M\",\"pid\":1,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"qpruner-serve\"}}"
+            .to_string(),
+        "{\"ph\":\"M\",\"pid\":1,\"tid\":0,\"name\":\"thread_name\",\
+         \"args\":{\"name\":\"decode-engine\"}}"
+            .to_string(),
+    ];
+    for s in tracer.spans() {
+        let tid = s.id + 1;
+        let sub = tracer.us_since_epoch(s.submitted);
+        let fin = tracer.us_since_epoch(s.finished);
+        ev.push(format!(
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+             \"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"session {}\"}}}}",
+            s.id
+        ));
+        let num_or_null = |v: Option<f64>| match v {
+            Some(x) if x.is_finite() => format!("{x:.3}"),
+            _ => "null".to_string(),
+        };
+        ev.push(x_event(
+            tid,
+            "session",
+            "session",
+            sub,
+            (fin - sub).max(0.0),
+            &format!(
+                "\"id\":{},\"client\":{},\"prompt_len\":{},\
+                 \"tokens\":{},\"outcome\":\"{}\",\"ttft_ms\":{},\
+                 \"mean_itl_ms\":{}",
+                s.id,
+                s.client,
+                s.prompt_len,
+                s.tokens,
+                s.outcome.label(),
+                num_or_null(s.ttft_ms()),
+                num_or_null(s.mean_itl_ms()),
+            ),
+        ));
+        if let Some(adm) = s.admitted {
+            let adm_us = tracer.us_since_epoch(adm);
+            ev.push(x_event(
+                tid,
+                "session",
+                "queued",
+                sub,
+                (adm_us - sub).max(0.0),
+                "",
+            ));
+            if let Some(ft) = s.first_token {
+                let ft_us = tracer.us_since_epoch(ft);
+                ev.push(x_event(
+                    tid,
+                    "session",
+                    "prefill",
+                    adm_us,
+                    (ft_us - adm_us).max(0.0),
+                    "",
+                ));
+                ev.push(x_event(
+                    tid,
+                    "session",
+                    "decode",
+                    ft_us,
+                    (fin - ft_us).max(0.0),
+                    &format!("\"tokens\":{}", s.tokens),
+                ));
+            }
+        }
+    }
+    for p in phases {
+        ev.push(x_event(
+            0,
+            "phase",
+            p.phase.label(),
+            tracer.us_since_epoch(p.start),
+            p.dur_ns as f64 / 1e3,
+            &format!("\"layer\":{},\"step\":{}", p.layer, p.step),
+        ));
+    }
+    format!(
+        "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n{}\n]}}",
+        ev.join(",\n")
+    )
+}
+
+/// Structured JSONL event log: one meta line, one line per session
+/// span, one line per retained phase event. Every line is a complete
+/// JSON object — stream-parseable without loading the file.
+pub fn events_jsonl(tracer: &Tracer, phases: &[PhaseEvent]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"type\":\"meta\",\
+         \"schema\":\"qpruner.serve.events.v1\",\"sessions\":{},\
+         \"phase_events\":{},\"spans_dropped\":{}}}\n",
+        tracer.spans().len(),
+        phases.len(),
+        tracer.dropped()
+    ));
+    let num_or_null = |v: Option<f64>| match v {
+        Some(x) if x.is_finite() => format!("{x:.4}"),
+        _ => "null".to_string(),
+    };
+    for s in tracer.spans() {
+        let opt_us = |t: Option<std::time::Instant>| match t {
+            Some(t) => format!("{:.3}", tracer.us_since_epoch(t)),
+            None => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "{{\"type\":\"session\",\"id\":{},\"client\":{},\
+             \"prompt_len\":{},\"tokens\":{},\"outcome\":\"{}\",\
+             \"submitted_us\":{:.3},\"admitted_us\":{},\
+             \"first_token_us\":{},\"finished_us\":{:.3},\
+             \"ttft_ms\":{},\"decode_ms\":{},\"mean_itl_ms\":{}}}\n",
+            s.id,
+            s.client,
+            s.prompt_len,
+            s.tokens,
+            escape(s.outcome.label()),
+            tracer.us_since_epoch(s.submitted),
+            opt_us(s.admitted),
+            opt_us(s.first_token),
+            tracer.us_since_epoch(s.finished),
+            num_or_null(s.ttft_ms()),
+            num_or_null(s.decode_ms()),
+            num_or_null(s.mean_itl_ms()),
+        ));
+    }
+    for p in phases {
+        out.push_str(&format!(
+            "{{\"type\":\"phase\",\"phase\":\"{}\",\"layer\":{},\
+             \"step\":{},\"start_us\":{:.3},\"dur_us\":{:.3}}}\n",
+            p.phase.label(),
+            p.layer,
+            p.step,
+            tracer.us_since_epoch(p.start),
+            p.dur_ns as f64 / 1e3,
+        ));
+    }
+    out
+}
+
+/// What `trace-check` asserts about a trace document.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceSummary {
+    /// whole-lifecycle `session` events
+    pub sessions: usize,
+    /// sessions whose outcome is `done`
+    pub complete_sessions: usize,
+    pub phase_events: usize,
+    pub total_events: usize,
+}
+
+/// Strict-parse a Chrome trace document and count what matters.
+/// Errors on malformed JSON or a missing/ill-typed `traceEvents`
+/// array — the exact failure modes a `NaN` or truncated write would
+/// produce.
+pub fn validate_trace(body: &str) -> Result<TraceSummary, String> {
+    let doc = Json::parse(body)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or("no traceEvents array")?;
+    let mut sum = TraceSummary {
+        total_events: events.len(),
+        ..Default::default()
+    };
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        let cat = e.get("cat").and_then(|c| c.as_str()).unwrap_or("");
+        let name =
+            e.get("name").and_then(|n| n.as_str()).unwrap_or("");
+        if ph != "X" {
+            continue;
+        }
+        // complete events must carry finite ts + dur
+        for k in ["ts", "dur"] {
+            e.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("X event missing {k}"))?;
+        }
+        if cat == "session" && name == "session" {
+            sum.sessions += 1;
+            let done = e
+                .get("args")
+                .and_then(|a| a.get("outcome"))
+                .and_then(|o| o.as_str())
+                == Some("done");
+            if done {
+                sum.complete_sessions += 1;
+            }
+        } else if cat == "phase" {
+            sum.phase_events += 1;
+        }
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::SpanOutcome;
+    use crate::obs::Phase;
+    use std::time::{Duration, Instant};
+
+    fn tracer_with_sessions() -> Tracer {
+        let mut tr = Tracer::new(64);
+        let t0 = Instant::now();
+        for id in 0..3u64 {
+            tr.on_submit(id, id as usize, 4, t0);
+            tr.on_admitted(id, t0 + Duration::from_millis(1 + id));
+            tr.on_first_token(
+                id,
+                t0 + Duration::from_millis(2 + id),
+            );
+            tr.on_finish(
+                id,
+                t0 + Duration::from_millis(10 + id),
+                5,
+                if id == 2 {
+                    SpanOutcome::Evicted
+                } else {
+                    SpanOutcome::Done
+                },
+            );
+        }
+        tr
+    }
+
+    fn phase_events(tr: &Tracer) -> Vec<PhaseEvent> {
+        let t = tr.epoch() + Duration::from_millis(3);
+        vec![
+            PhaseEvent {
+                phase: Phase::Qkv,
+                layer: 0,
+                step: 1,
+                start: t,
+                dur_ns: 5_000,
+            },
+            PhaseEvent {
+                phase: Phase::Vocab,
+                layer: 0,
+                step: 1,
+                start: t + Duration::from_micros(5),
+                dur_ns: 7_000,
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_counts() {
+        let tr = tracer_with_sessions();
+        let body = chrome_trace(&tr, &phase_events(&tr));
+        let sum = validate_trace(&body).unwrap();
+        assert_eq!(sum.sessions, 3);
+        assert_eq!(sum.complete_sessions, 2);
+        assert_eq!(sum.phase_events, 2);
+        // 2 process/engine meta + 3 * (meta + session + 3 subspans)
+        // + 2 phase events
+        assert_eq!(sum.total_events, 2 + 3 * 5 + 2);
+    }
+
+    #[test]
+    fn events_jsonl_lines_all_parse() {
+        let tr = tracer_with_sessions();
+        let log = events_jsonl(&tr, &phase_events(&tr));
+        let mut kinds = std::collections::BTreeMap::new();
+        for line in log.lines() {
+            let v = Json::parse(line).unwrap();
+            let t = v
+                .get("type")
+                .and_then(|t| t.as_str())
+                .unwrap()
+                .to_string();
+            *kinds.entry(t).or_insert(0usize) += 1;
+        }
+        assert_eq!(kinds.get("meta"), Some(&1));
+        assert_eq!(kinds.get("session"), Some(&3));
+        assert_eq!(kinds.get("phase"), Some(&2));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        assert!(validate_trace("not json").is_err());
+        assert!(validate_trace("{\"traceEvents\":3}").is_err());
+        // NaN in a ts field is a parse error, not a silent pass
+        let bad = "{\"traceEvents\":[{\"ph\":\"X\",\"ts\":NaN,\
+                   \"dur\":1,\"cat\":\"phase\",\"name\":\"qkv\"}]}";
+        assert!(validate_trace(bad).is_err());
+        let empty = validate_trace("{\"traceEvents\":[]}").unwrap();
+        assert_eq!(empty.sessions, 0);
+    }
+}

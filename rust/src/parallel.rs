@@ -24,8 +24,10 @@
 //! * `threads == 1` short-circuits to an inline call: a single-lane
 //!   pool spawns no threads at all and is exactly the serial kernel.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Lifetime-erased reference to the job closure. Safety: only called
 /// by workers between job publication and the final `active == 0`
@@ -52,6 +54,33 @@ struct Shared {
     work_cv: Condvar,
     /// the submitter waits here for `active == 0`
     done_cv: Condvar,
+    /// when set, lanes accumulate per-job busy time into `busy_ns` —
+    /// telemetry for the serving profiler (`obs::PhaseProfiler`),
+    /// toggled only around *sampled* decode steps so the default cost
+    /// is one relaxed load per job per lane
+    profile: AtomicBool,
+    /// per-lane cumulative busy nanoseconds (index = lane)
+    busy_ns: Vec<AtomicU64>,
+}
+
+impl Shared {
+    /// Run one lane's job, timing it when profiling is on. Relaxed
+    /// atomics throughout: the counters are telemetry, never part of
+    /// the fork/join handshake, and never read by the kernels — so
+    /// profiling cannot perturb results (logits stay bit-identical
+    /// with it on).
+    fn run_lane(&self, lane: usize, f: &(dyn Fn(usize) + Sync)) {
+        if self.profile.load(Ordering::Relaxed) {
+            let t0 = Instant::now();
+            f(lane);
+            self.busy_ns[lane].fetch_add(
+                t0.elapsed().as_nanos() as u64,
+                Ordering::Relaxed,
+            );
+        } else {
+            f(lane);
+        }
+    }
 }
 
 /// Persistent fork/join pool; see the module docs.
@@ -80,6 +109,8 @@ impl ThreadPool {
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            profile: AtomicBool::new(false),
+            busy_ns: (0..threads).map(|_| AtomicU64::new(0)).collect(),
         });
         let handles = (1..threads)
             .map(|lane| {
@@ -111,7 +142,7 @@ impl ThreadPool {
     /// buffers it writes are never freed while a lane still runs.
     pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
         if self.threads == 1 {
-            f(0);
+            self.shared.run_lane(0, f);
             return;
         }
         let _serial = self.submit.lock().unwrap();
@@ -138,13 +169,34 @@ impl ThreadPool {
         // joins (and unpublishes the job) on both the normal path and
         // the unwind path of f(0)
         let guard = JoinGuard { shared: &self.shared };
-        f(0);
+        self.shared.run_lane(0, f);
         drop(guard);
         let mut st = self.shared.state.lock().unwrap();
         if std::mem::take(&mut st.panicked) {
             drop(st);
             panic!("qpruner thread pool: a worker lane panicked");
         }
+    }
+
+    /// Toggle per-lane busy-time accounting. The serving profiler
+    /// turns this on only for sampled decode steps; on a pool shared
+    /// between engines the counters aggregate across them (documented
+    /// telemetry semantics — lane *utilization*, not attribution).
+    pub fn set_profiling(&self, on: bool) {
+        self.shared.profile.store(on, Ordering::Relaxed);
+    }
+
+    pub fn profiling(&self) -> bool {
+        self.shared.profile.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative busy nanoseconds per lane while profiling was on.
+    pub fn lane_busy_ns(&self) -> Vec<u64> {
+        self.shared
+            .busy_ns
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect()
     }
 }
 
@@ -200,7 +252,9 @@ fn worker_loop(shared: &Shared, lane: usize) {
         // panic is caught so `active` always reaches 0 (no deadlocked
         // submitter, no poisoned lock); `run` re-raises it.
         let poisoned = std::panic::catch_unwind(
-            std::panic::AssertUnwindSafe(|| (job.0)(lane)),
+            std::panic::AssertUnwindSafe(|| {
+                shared.run_lane(lane, job.0)
+            }),
         )
         .is_err();
         let mut st = shared.state.lock().unwrap();
@@ -402,6 +456,37 @@ mod tests {
             ran.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn lane_profiling_accumulates_only_when_on() {
+        for threads in [1usize, 3] {
+            let pool = ThreadPool::new(threads);
+            let spin = |_lane: usize| {
+                let t0 = std::time::Instant::now();
+                while t0.elapsed().as_micros() < 200 {
+                    std::hint::spin_loop();
+                }
+            };
+            assert!(!pool.profiling());
+            pool.run(&spin);
+            assert!(
+                pool.lane_busy_ns().iter().all(|&n| n == 0),
+                "accounted while profiling was off"
+            );
+            pool.set_profiling(true);
+            pool.run(&spin);
+            pool.set_profiling(false);
+            let busy = pool.lane_busy_ns();
+            assert_eq!(busy.len(), threads);
+            assert!(
+                busy.iter().all(|&n| n >= 100_000),
+                "lane busy time missing: {busy:?}"
+            );
+            // toggling off freezes the counters
+            pool.run(&spin);
+            assert_eq!(pool.lane_busy_ns(), busy);
+        }
     }
 
     #[test]

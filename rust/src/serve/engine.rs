@@ -74,6 +74,7 @@ use crate::linalg::{self, matmul_nt_into, matmul_nt_scaled_acc_into,
 use crate::lora;
 use crate::model::{proj_index, ModelConfig, ParamStore, PrunedShapes,
                    PROJS};
+use crate::obs::{Phase, PhaseProfiler, PhaseSnapshot, StepTimer};
 use crate::parallel::{self, chunk_range, SyncPtr, ThreadPool};
 use crate::quant::{self, BitConfig, QuantSlab};
 use crate::rng::Rng;
@@ -106,6 +107,21 @@ pub struct BatchReq {
     pub slot: usize,
     pub pos: usize,
     pub token: i32,
+}
+
+/// Default phase-profiler sampling rate: every 4th instrumented call
+/// runs under lap timers (`EngineBuilder::profile_every`, 0 = off).
+pub const DEFAULT_PROFILE_EVERY: u32 = 4;
+
+/// Bound on retained raw phase events (~40 B each); aggregates keep
+/// accumulating past it, only the trace-export detail is capped.
+const PHASE_EVENTS_CAP: usize = 100_000;
+
+/// Forward a lap to the step's timer when this step is sampled.
+fn lap(timer: &mut Option<StepTimer<'_>>, phase: Phase, layer: usize) {
+    if let Some(t) = timer {
+        t.lap(phase, layer);
+    }
 }
 
 /// Frozen deployment weights in serving residency: raw f32 fp stacks
@@ -249,6 +265,9 @@ pub struct Engine {
     /// decode thread pool (deterministic static partitioning; see
     /// `parallel.rs`)
     pool: Arc<ThreadPool>,
+    /// sampled decode-phase wall-time accumulators (`obs`); shared so
+    /// snapshots can be taken while the engine serves
+    profiler: Arc<PhaseProfiler>,
     /// RoPE tables `[max_seq, head_dim/2]`
     rope_cos: Vec<f32>,
     rope_sin: Vec<f32>,
@@ -293,6 +312,8 @@ pub struct EngineBuilder {
     lora_mode: Option<LoraMode>,
     threads: Option<usize>,
     f32_residency: bool,
+    profile_every: u32,
+    profile_events: bool,
 }
 
 impl Default for EngineBuilder {
@@ -304,6 +325,8 @@ impl Default for EngineBuilder {
             lora_mode: None,
             threads: None,
             f32_residency: false,
+            profile_every: DEFAULT_PROFILE_EVERY,
+            profile_events: false,
         }
     }
 }
@@ -379,6 +402,26 @@ impl EngineBuilder {
         self
     }
 
+    /// Sample every Nth instrumented forward call (`step_batch`,
+    /// native `prefill`/`decode`) into the decode-phase profiler —
+    /// `--profile-every N` on the CLI; 0 disables profiling entirely.
+    /// Default [`DEFAULT_PROFILE_EVERY`]. Unsampled calls cost one
+    /// relaxed atomic increment; sampled calls add lap timers that
+    /// never touch activations, so logits are unchanged either way.
+    pub fn profile_every(mut self, n: u32) -> Self {
+        self.profile_every = n;
+        self
+    }
+
+    /// Also retain raw per-lap [`crate::obs::PhaseEvent`]s (bounded)
+    /// for Chrome-trace export. Aggregate phase totals are always
+    /// kept; the raw events cost memory, so serving enables this only
+    /// when `--trace-out`/`--events-out` asks for a trace.
+    pub fn profile_events(mut self, on: bool) -> Self {
+        self.profile_events = on;
+        self
+    }
+
     pub fn build(self, rt: &mut Runtime) -> Result<Engine> {
         let Some(source) = self.source else {
             bail!(
@@ -406,7 +449,9 @@ impl EngineBuilder {
                 }
                 Engine::assemble(rt, dep, bits, self.max_seq,
                                  self.kv_precision, None, "none",
-                                 pool, residency)
+                                 pool, residency,
+                                 self.profile_every,
+                                 self.profile_events)
             }
             Source::Artifact(art) => {
                 let (mut dep, bits, lora, default_mode) =
@@ -427,7 +472,9 @@ impl EngineBuilder {
                 }
                 Engine::assemble(rt, dep, bits, self.max_seq,
                                  self.kv_precision, adjoin, label,
-                                 pool, residency)
+                                 pool, residency,
+                                 self.profile_every,
+                                 self.profile_events)
             }
             Source::Path(_) => unreachable!("path resolved above"),
         }
@@ -487,11 +534,18 @@ impl Engine {
     fn assemble(rt: &mut Runtime, dep: Deployed, bits: BitConfig,
                 max_seq: usize, kv_precision: KvPrecision,
                 adjoin: Option<LoraDelta>, lora_label: &'static str,
-                pool: Arc<ThreadPool>, residency: &'static str)
+                pool: Arc<ThreadPool>, residency: &'static str,
+                profile_every: u32, profile_events: bool)
                 -> Result<Engine> {
         ensure!(max_seq >= 2, "max_seq {max_seq} too small to serve");
         let cfg = dep.cfg.clone();
         let ps = dep.ps;
+        let profiler = Arc::new(PhaseProfiler::new(
+            cfg.n_layers,
+            profile_every,
+            profile_events,
+            PHASE_EVENTS_CAP,
+        ));
 
         let art = format!("fwd_{}_r{}", cfg.name, ps.rate_pct);
         let backend = if rt.has_artifact(&art) && max_seq <= cfg.seq {
@@ -580,6 +634,7 @@ impl Engine {
             lora_label,
             kv_precision,
             pool,
+            profiler,
             rope_cos,
             rope_sin,
             half,
@@ -691,6 +746,56 @@ impl Engine {
         self.ws.borrow().stats()
     }
 
+    /// The engine's decode-phase profiler (aggregate accumulators +
+    /// retained raw events for trace export).
+    pub fn profiler(&self) -> &PhaseProfiler {
+        &self.profiler
+    }
+
+    /// Profiler snapshot with the thread pool's per-lane busy time
+    /// attached. On a shared (default) pool the lane counters
+    /// aggregate every engine's sampled steps — utilization telemetry,
+    /// not per-engine attribution; pin `--threads` for an exclusive
+    /// pool.
+    pub fn phase_snapshot(&self) -> PhaseSnapshot {
+        let mut s = self.profiler.snapshot();
+        s.lane_busy_secs = self
+            .pool
+            .lane_busy_ns()
+            .iter()
+            .map(|&n| n as f64 / 1e9)
+            .collect();
+        s
+    }
+
+    /// Start lap timing if the profiler samples this call; takes the
+    /// workspace's reusable profiler scratch (returned by
+    /// [`Engine::end_step_timer`]) and switches the pool's lane
+    /// accounting on for the duration of the step.
+    fn begin_step_timer(&self, ws: &mut DecodeWorkspace)
+                        -> Option<StepTimer<'_>> {
+        let step = self.profiler.sample_step()?;
+        self.pool.set_profiling(true);
+        Some(StepTimer::begin(
+            &self.profiler,
+            step,
+            std::mem::take(&mut ws.phase_acc),
+            std::mem::take(&mut ws.phase_events),
+        ))
+    }
+
+    /// Commit a sampled step (no-op when this call was unsampled) and
+    /// hand the scratch buffers back to the workspace.
+    fn end_step_timer(&self, ws: &mut DecodeWorkspace,
+                      timer: &mut Option<StepTimer<'_>>) {
+        if let Some(t) = timer.take() {
+            let (acc, events) = t.finish();
+            self.pool.set_profiling(false);
+            ws.phase_acc = acc;
+            ws.phase_events = events;
+        }
+    }
+
     /// Embedding row for a token id — the shared OOB-clamp policy of
     /// `model::embed_row_clamped` (client-supplied garbage maps to the
     /// PAD row).
@@ -710,15 +815,30 @@ impl Engine {
                 // only the last position's logits are consumed, so the
                 // [V, d] lm_head projection runs once, not per token
                 let mut ws = self.ws.borrow_mut();
+                // one sampling decision per prefill call: a sampled
+                // prefill laps every (token, layer), accumulating the
+                // whole prompt's phase profile
+                let mut timer = self.begin_step_timer(&mut ws);
+                let mut res = Ok(());
                 for (pos, &tok) in prompt.iter().enumerate() {
                     // slot id is a placeholder: advance_batch pairs
                     // positionally and we pass the borrow directly
                     let req = [BatchReq { slot: 0, pos, token: tok }];
-                    self.advance_batch(&req,
-                                       std::slice::from_mut(&mut slot),
-                                       &mut ws)?;
+                    res = self.advance_batch(
+                        &req,
+                        std::slice::from_mut(&mut slot),
+                        &mut ws,
+                        &mut timer,
+                    );
+                    if res.is_err() {
+                        break;
+                    }
                 }
-                self.logits_batch(1, &mut ws);
+                if res.is_ok() {
+                    self.logits_batch(1, &mut ws, &mut timer);
+                }
+                self.end_step_timer(&mut ws, &mut timer);
+                res?;
                 Ok(ws.logits[..self.cfg.vocab].to_vec())
             }
             Backend::Artifact { name, weights, lora_args } => {
@@ -750,11 +870,19 @@ impl Engine {
         match &self.backend {
             Backend::Native => {
                 let mut ws = self.ws.borrow_mut();
+                let mut timer = self.begin_step_timer(&mut ws);
                 let req = [BatchReq { slot: 0, pos, token }];
-                self.advance_batch(&req,
-                                   std::slice::from_mut(&mut slot),
-                                   &mut ws)?;
-                self.logits_batch(1, &mut ws);
+                let res = self.advance_batch(
+                    &req,
+                    std::slice::from_mut(&mut slot),
+                    &mut ws,
+                    &mut timer,
+                );
+                if res.is_ok() {
+                    self.logits_batch(1, &mut ws, &mut timer);
+                }
+                self.end_step_timer(&mut ws, &mut timer);
+                res?;
                 Ok(ws.logits[..self.cfg.vocab].to_vec())
             }
             Backend::Artifact { name, weights, lora_args } => {
@@ -811,8 +939,14 @@ impl Engine {
         ws.slot_ids.clear();
         ws.slot_ids.extend(reqs.iter().map(|r| r.slot));
         let mut slots = pool.slots_mut_many(&ws.slot_ids)?;
-        self.advance_batch(reqs, &mut slots, &mut ws)?;
-        self.logits_batch(reqs.len(), &mut ws);
+        let mut timer = self.begin_step_timer(&mut ws);
+        let res =
+            self.advance_batch(reqs, &mut slots, &mut ws, &mut timer);
+        if res.is_ok() {
+            self.logits_batch(reqs.len(), &mut ws, &mut timer);
+        }
+        self.end_step_timer(&mut ws, &mut timer);
+        res?;
         let v = self.cfg.vocab;
         for i in 0..reqs.len() {
             on_logits(i, &ws.logits[i * v..(i + 1) * v]);
@@ -830,9 +964,16 @@ impl Engine {
     /// `BatchReq::slot` is *not* read here — only the public
     /// `step_batch` resolves slot ids (via the pool); internal batch-1
     /// callers pass a placeholder id with the slot borrow itself.
+    /// When `timer` is `Some` (a profiler-sampled step), lap
+    /// boundaries tile the whole call: qkv GEMMs → `Qkv`, adjoined
+    /// side paths → `Lora`, rope + KV write + attention + wo → `Attn`,
+    /// norms/SwiGLU GEMMs/residuals → `Mlp` (the lm_head lap lives in
+    /// `logits_batch` as `Vocab`). Timing never touches activations,
+    /// so logits are bit-identical with profiling on or off.
     fn advance_batch(&self, reqs: &[BatchReq],
                      slots: &mut [&mut KvSlot],
-                     ws: &mut DecodeWorkspace) -> Result<()> {
+                     ws: &mut DecodeWorkspace,
+                     timer: &mut Option<StepTimer<'_>>) -> Result<()> {
         debug_assert_eq!(reqs.len(), slots.len());
         let b = reqs.len();
         // validate everything up front: no slot is written until every
@@ -885,6 +1026,7 @@ impl Engine {
                     (&self.projs[2][l], &mut ws.v[..b * a]),
                 ],
             );
+            lap(timer, Phase::Qkv, l);
             if let Some(delta) = &self.adjoin {
                 adjoin_into(delta, 0, l, &ws.normed[..b * d], b, d, a,
                             &mut ws.lora_tmp, &mut ws.q);
@@ -892,6 +1034,7 @@ impl Engine {
                             &mut ws.lora_tmp, &mut ws.k);
                 adjoin_into(delta, 2, l, &ws.normed[..b * d], b, d, a,
                             &mut ws.lora_tmp, &mut ws.v);
+                lap(timer, Phase::Lora, l);
             }
             for (i, r) in reqs.iter().enumerate() {
                 self.rope_inplace(&mut ws.q[i * a..(i + 1) * a],
@@ -968,9 +1111,11 @@ impl Engine {
             matmul_nt_slab_into(pool, &ws.ctx[..b * a], b, a,
                                 &self.projs[3][l],
                                 &mut ws.proj_d[..b * d]);
+            lap(timer, Phase::Attn, l);
             if let Some(delta) = &self.adjoin {
                 adjoin_into(delta, 3, l, &ws.ctx[..b * a], b, a, d,
                             &mut ws.lora_tmp, &mut ws.proj_d);
+                lap(timer, Phase::Lora, l);
             }
             for (hi, &oi) in ws.hidden[..b * d]
                 .iter_mut()
@@ -995,11 +1140,13 @@ impl Engine {
                     (&self.projs[5][l], &mut ws.up[..b * f]),
                 ],
             );
+            lap(timer, Phase::Mlp, l);
             if let Some(delta) = &self.adjoin {
                 adjoin_into(delta, 4, l, &ws.normed[..b * d], b, d, f,
                             &mut ws.lora_tmp, &mut ws.gate);
                 adjoin_into(delta, 5, l, &ws.normed[..b * d], b, d, f,
                             &mut ws.lora_tmp, &mut ws.up);
+                lap(timer, Phase::Lora, l);
             }
             for (g, &u) in ws.gate[..b * f]
                 .iter_mut()
@@ -1011,9 +1158,11 @@ impl Engine {
             matmul_nt_slab_into(pool, &ws.gate[..b * f], b, f,
                                 &self.projs[6][l],
                                 &mut ws.proj_d[..b * d]);
+            lap(timer, Phase::Mlp, l);
             if let Some(delta) = &self.adjoin {
                 adjoin_into(delta, 6, l, &ws.gate[..b * f], b, f, d,
                             &mut ws.lora_tmp, &mut ws.proj_d);
+                lap(timer, Phase::Lora, l);
             }
             for (hi, &di) in ws.hidden[..b * d]
                 .iter_mut()
@@ -1021,6 +1170,7 @@ impl Engine {
             {
                 *hi += di;
             }
+            lap(timer, Phase::Mlp, l);
         }
         for (r, slot) in reqs.iter().zip(slots.iter_mut()) {
             slot.advance_to(r.pos + 1);
@@ -1031,7 +1181,8 @@ impl Engine {
     /// Final RMSNorm + one `[batch, vocab]` lm_head GEMM over
     /// `ws.hidden`, into `ws.logits` — vocab rows split across the
     /// pool (the lm_head stack is always f32-resident).
-    fn logits_batch(&self, b: usize, ws: &mut DecodeWorkspace) {
+    fn logits_batch(&self, b: usize, ws: &mut DecodeWorkspace,
+                    timer: &mut Option<StepTimer<'_>>) {
         let d = self.cfg.d_model;
         let v = self.cfg.vocab;
         let gain = self.final_norm.data();
@@ -1042,6 +1193,7 @@ impl Engine {
         par_matmul_nt_into(&self.pool, &ws.normed[..b * d], b, d,
                            self.lm_head.data(), v,
                            &mut ws.logits[..b * v]);
+        lap(timer, Phase::Vocab, 0);
     }
 
     // ------------------------------------------------------------------

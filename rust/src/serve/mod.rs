@@ -29,18 +29,28 @@ pub mod workspace;
 
 use crate::data::Language;
 use crate::memory;
-use crate::metrics::{LatencyStats, Metrics};
+use crate::metrics::Metrics;
 use crate::model::ModelConfig;
+use crate::obs::hist::{Hist, Registry};
+use crate::obs::span::Tracer;
+use crate::obs::trace_export;
+use crate::obs::{PhaseSnapshot, PHASES};
 use crate::quant::BitConfig;
 use crate::report::Table;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use admission::AdmissionPolicy;
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 use engine::EngineBuilder;
 use kv_cache::KvCachePool;
 use scheduler::Scheduler;
+use std::path::PathBuf;
 use std::time::Instant;
+
+/// Completed-span cap for the lifecycle tracer: bounds trace memory on
+/// long runs (dropped spans are counted in the export, not lost
+/// silently).
+const TRACE_SPAN_CAP: usize = 65_536;
 
 /// Workload + server knobs for one serving run.
 #[derive(Clone, Debug)]
@@ -74,6 +84,16 @@ pub struct ServeOpts {
     /// per-step probability an active session stalls (client
     /// disconnect injection; 0 disables)
     pub stall_prob: f64,
+    /// emit a progress line to stderr every N scheduler steps
+    /// (0 disables)
+    pub stats_every: u64,
+    /// write a Chrome/Perfetto trace of the run here (installs the
+    /// lifecycle tracer and turns on raw phase-event capture)
+    pub trace_out: Option<PathBuf>,
+    /// write the structured JSONL event log here
+    pub events_out: Option<PathBuf>,
+    /// write the metrics-registry JSON snapshot here
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl ServeOpts {
@@ -94,6 +114,10 @@ impl ServeOpts {
             max_queue: 64,
             ttl_steps: 16,
             stall_prob: 0.0,
+            stats_every: 0,
+            trace_out: None,
+            events_out: None,
+            metrics_out: None,
         }
     }
 
@@ -135,8 +159,15 @@ pub struct ServeReport {
     pub prefill_tokens: u64,
     pub generated_tokens: u64,
     pub wall_secs: f64,
-    pub latency: LatencyStats,
-    pub ttft: LatencyStats,
+    /// end-to-end latency (submit → last token), log2-bucket histogram
+    pub latency: Hist,
+    /// time-to-first-token
+    pub ttft: Hist,
+    /// inter-token latency (one sample per decoded token after a
+    /// session's first)
+    pub itl: Hist,
+    /// sampled decode-phase breakdown (`Engine::phase_snapshot`)
+    pub phases: PhaseSnapshot,
     pub mean_occupancy: f64,
     pub max_occupancy: usize,
     pub kv_capacity_sessions: usize,
@@ -221,6 +252,38 @@ impl ServeReport {
         push("latency p99", format!("{:.3} ms", lat[2]));
         push("ttft p50", format!("{:.3} ms",
                                  self.ttft.percentile_ms(50.0)));
+        let itl = self.itl.percentiles_ms(&[50.0, 95.0, 99.0]);
+        push("itl p50", format!("{:.3} ms", itl[0]));
+        push("itl p95", format!("{:.3} ms", itl[1]));
+        push("itl p99", format!("{:.3} ms", itl[2]));
+        // sampled decode-phase breakdown (absent when profiling is
+        // off or no step was sampled)
+        let ph = &self.phases;
+        if ph.sampled_steps > 0 {
+            push(
+                "profiled steps",
+                format!("{}/{} (every {})",
+                        ph.sampled_steps, ph.total_steps, ph.every),
+            );
+            push("phase coverage",
+                 format!("{:.1}%", 100.0 * ph.coverage()));
+            for p in PHASES {
+                push(
+                    &format!("phase {}", p.label()),
+                    format!(
+                        "{:.4} s ({:.1}%)",
+                        ph.per_phase_secs[p.idx()],
+                        100.0 * ph.phase_frac(p)
+                    ),
+                );
+            }
+            if !ph.lane_busy_secs.is_empty() {
+                let busy: f64 = ph.lane_busy_secs.iter().sum();
+                push("pool lane busy (sampled)",
+                     format!("{busy:.4} s across {} lanes",
+                             ph.lane_busy_secs.len()));
+            }
+        }
         push("mean batch occupancy",
              format!("{:.2}", self.mean_occupancy));
         push("max batch occupancy", format!("{}", self.max_occupancy));
@@ -250,21 +313,34 @@ impl ServeReport {
     /// perf-trajectory record tracked across PRs (tokens/sec,
     /// latency percentiles, footprint). `name` labels the config
     /// (e.g. "c8_b8_kv8"). Hand-rolled: no JSON dependency in-tree.
+    ///
+    /// Percentiles over an empty recorder are `NaN`, which is not
+    /// valid JSON — every float that can be non-finite goes through
+    /// [`json_num`] and lands as `null`
+    /// (`tests::empty_report_json_is_parseable` pins this down).
     pub fn to_json(&self, name: &str) -> String {
         let lat = self.latency.percentiles_ms(&[50.0, 95.0, 99.0]);
+        let itl = self.itl.percentiles_ms(&[50.0, 95.0, 99.0]);
+        let ph = &self.phases;
         format!(
             "{{\"name\":{},\"backend\":{},\"bits\":{},\"lora\":{},\
              \"kv_bits\":{},\"requests_submitted\":{},\
              \"requests_completed\":{},\"requests_rejected\":{},\
-             \"tokens_per_sec\":{:.3},\"p50_ms\":{:.4},\
-             \"p95_ms\":{:.4},\"p99_ms\":{:.4},\"ttft_p50_ms\":{:.4},\
+             \"tokens_per_sec\":{:.3},\"p50_ms\":{},\
+             \"p95_ms\":{},\"p99_ms\":{},\"ttft_p50_ms\":{},\
+             \"itl_p50_ms\":{},\"itl_p95_ms\":{},\"itl_p99_ms\":{},\
+             \"itl_mean_ms\":{},\
              \"mean_occupancy\":{:.4},\"generated_tokens\":{},\
              \"wall_secs\":{:.4},\"kv_sessions_capacity\":{},\
              \"kv_sessions_peak\":{},\"kv_host_slab_bytes\":{},\
              \"kv_modeled_budget_bytes\":{:.0},\
              \"weight_residency\":{},\"weight_resident_bytes\":{},\
              \"weight_modeled_native_bytes\":{:.0},\"threads\":{},\
-             \"scratch_grows\":{},\"scratch_reuses\":{}}}",
+             \"scratch_grows\":{},\"scratch_reuses\":{},\
+             \"profiled_steps\":{},\"phase_coverage\":{},\
+             \"phase_qkv_secs\":{},\"phase_attn_secs\":{},\
+             \"phase_mlp_secs\":{},\"phase_lora_secs\":{},\
+             \"phase_vocab_secs\":{}}}",
             json_str(name),
             json_str(self.backend),
             json_str(&self.bits_short),
@@ -274,10 +350,14 @@ impl ServeReport {
             self.completed,
             self.rejected,
             self.tokens_per_sec(),
-            lat[0],
-            lat[1],
-            lat[2],
-            self.ttft.percentile_ms(50.0),
+            json_num(lat[0]),
+            json_num(lat[1]),
+            json_num(lat[2]),
+            json_num(self.ttft.percentile_ms(50.0)),
+            json_num(itl[0]),
+            json_num(itl[1]),
+            json_num(itl[2]),
+            json_num(self.itl.mean_ms()),
             self.mean_occupancy,
             self.generated_tokens,
             self.wall_secs,
@@ -291,7 +371,24 @@ impl ServeReport {
             self.threads,
             self.scratch_grows,
             self.scratch_reuses,
+            ph.sampled_steps,
+            json_num(ph.coverage()),
+            json_num(ph.per_phase_secs[0]),
+            json_num(ph.per_phase_secs[1]),
+            json_num(ph.per_phase_secs[2]),
+            json_num(ph.per_phase_secs[3]),
+            json_num(ph.per_phase_secs[4]),
         )
+    }
+}
+
+/// Render a float as JSON: `null` when non-finite (an empty latency
+/// recorder's percentiles are `NaN` — a literal `NaN` is not JSON).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".to_string()
     }
 }
 
@@ -436,7 +533,15 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
     );
 
     let t_build = Instant::now();
-    let engine = builder.max_seq(opts.max_seq).build(rt)?;
+    // a trace request implies raw phase-event capture (the aggregate
+    // profiler runs regardless; events are the expensive part)
+    let want_trace =
+        opts.trace_out.is_some() || opts.events_out.is_some();
+    let mut builder = builder.max_seq(opts.max_seq);
+    if want_trace {
+        builder = builder.profile_events(true);
+    }
+    let engine = builder.build(rt)?;
     metrics.add_time("serve.build_engine",
                      t_build.elapsed().as_secs_f64());
     ensure!(
@@ -488,6 +593,9 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
     let admission = AdmissionPolicy::new(opts.max_queue, opts.max_seq);
     let mut sched =
         Scheduler::new(pool, admission, opts.max_batch, opts.ttl_steps);
+    if want_trace {
+        sched.set_tracer(Tracer::new(TRACE_SPAN_CAP));
+    }
 
     // closed-loop clients: one outstanding request each
     struct Client {
@@ -534,6 +642,21 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
 
         sched.step(&engine, rt, &mut workload_rng, opts.stall_prob)?;
 
+        if opts.stats_every > 0
+            && sched.step_no() % opts.stats_every == 0
+        {
+            eprintln!(
+                "[serve] step {:>6}  done {:>5}/{}  active {:>3}  \
+                 queue {:>3}  itl {}",
+                sched.step_no(),
+                sched.stats.completed,
+                opts.requests,
+                sched.active_len(),
+                sched.queue_len(),
+                sched.itl.summary(),
+            );
+        }
+
         // reap terminal sessions so clients can issue their next
         // request, and drop them from the table so a long run's memory
         // stays bounded by the live session count
@@ -563,6 +686,67 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
     metrics.set_counter("serve.scratch_grows", scratch_grows);
     metrics.set_counter("serve.scratch_reuses", scratch_reuses);
 
+    // phase breakdown from the sampled decode-step profiler, plus the
+    // pool's per-lane busy time over the same sampled steps
+    let phases = engine.phase_snapshot();
+
+    // trace exports: lifecycle spans + raw phase events
+    if want_trace {
+        let tracer = sched.take_tracer().expect("tracer installed");
+        let phase_events = engine.profiler().take_events();
+        if let Some(path) = &opts.trace_out {
+            let body =
+                trace_export::chrome_trace(&tracer, &phase_events);
+            std::fs::write(path, body).with_context(|| {
+                format!("writing trace to {}", path.display())
+            })?;
+        }
+        if let Some(path) = &opts.events_out {
+            let body =
+                trace_export::events_jsonl(&tracer, &phase_events);
+            std::fs::write(path, body).with_context(|| {
+                format!("writing event log to {}", path.display())
+            })?;
+        }
+    }
+
+    // bounded streaming-metrics snapshot (stable schema,
+    // `qpruner.serve.metrics.v1`)
+    if let Some(path) = &opts.metrics_out {
+        let mut reg = Registry::new();
+        reg.counter_add("serve.requests_submitted",
+                        sched.stats.submitted as u64);
+        reg.counter_add("serve.requests_completed",
+                        sched.stats.completed as u64);
+        reg.counter_add("serve.requests_rejected",
+                        sched.stats.rejected as u64);
+        reg.counter_add("serve.sessions_evicted",
+                        sched.stats.evicted as u64);
+        reg.counter_add("serve.prefill_tokens",
+                        sched.stats.prefill_tokens);
+        reg.counter_add("serve.generated_tokens",
+                        sched.stats.generated_tokens);
+        reg.counter_add("serve.scratch_grows", scratch_grows);
+        reg.counter_add("serve.scratch_reuses", scratch_reuses);
+        reg.gauge_set(
+            "serve.tokens_per_sec",
+            if wall > 0.0 {
+                sched.stats.generated_tokens as f64 / wall
+            } else {
+                0.0
+            },
+        );
+        reg.gauge_set("serve.mean_occupancy",
+                      sched.stats.mean_occupancy());
+        reg.gauge_set("serve.wall_secs", wall);
+        reg.hist_set("serve.latency_ms", sched.latency.clone());
+        reg.hist_set("serve.ttft_ms", sched.ttft.clone());
+        reg.hist_set("serve.itl_ms", sched.itl.clone());
+        std::fs::write(path, reg.snapshot_json()).with_context(|| {
+            format!("writing metrics snapshot to {}", path.display())
+        })?;
+    }
+
     // weights-side residency accounting, next to the KV footprint:
     // actual host bytes pinned by the engine's slabs, and the modeled
     // native residency at the paper arch
@@ -589,6 +773,8 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
         wall_secs: wall,
         latency: sched.latency.clone(),
         ttft: sched.ttft.clone(),
+        itl: sched.itl.clone(),
+        phases,
         mean_occupancy: st.mean_occupancy(),
         max_occupancy: st.max_occupancy,
         kv_capacity_sessions: sched.pool.capacity(),
@@ -665,8 +851,10 @@ mod tests {
             prefill_tokens: 60,
             generated_tokens: 70,
             wall_secs: 0.5,
-            latency: LatencyStats::new(),
-            ttft: LatencyStats::new(),
+            latency: Hist::new(),
+            ttft: Hist::new(),
+            itl: Hist::new(),
+            phases: PhaseSnapshot::default(),
             mean_occupancy: 2.5,
             max_occupancy: 4,
             kv_capacity_sessions: 4,
@@ -734,5 +922,61 @@ mod tests {
     fn json_str_escapes() {
         assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
         assert_eq!(json_str("x\ny"), "\"x\\ny\"");
+    }
+
+    /// Regression: a report whose latency recorders are empty (e.g.
+    /// every request rejected) used to serialize percentiles as the
+    /// literal `NaN`, which no JSON parser accepts. Empty recorders
+    /// must land as `null` and the whole object must parse.
+    #[test]
+    fn empty_report_json_is_parseable() {
+        use crate::obs::json::Json;
+        let r = ServeReport {
+            backend: "native-kv",
+            bits_short: "44".into(),
+            lora: "none",
+            kv_bits: 32,
+            submitted: 3,
+            completed: 0,
+            rejected: 3,
+            rejected_by: (3, 0, 0),
+            evicted: 0,
+            steps: 1,
+            busy_steps: 0,
+            prefill_tokens: 0,
+            generated_tokens: 0,
+            wall_secs: 0.01,
+            latency: Hist::new(),
+            ttft: Hist::new(),
+            itl: Hist::new(),
+            phases: PhaseSnapshot::default(),
+            mean_occupancy: 0.0,
+            max_occupancy: 0,
+            kv_capacity_sessions: 4,
+            kv_peak_sessions: 0,
+            kv_modeled_peak_bytes: 0.0,
+            kv_modeled_budget_bytes: 4e8,
+            kv_host_slab_bytes: 1_000_000,
+            weight_residency: "quantized",
+            weight_resident_bytes: 2_500_000,
+            weight_modeled_native_bytes: 3.5e9,
+            threads: 1,
+            scratch_grows: 0,
+            scratch_reuses: 0,
+        };
+        let j = r.to_json("all_rejected");
+        assert!(!j.contains("NaN"), "literal NaN leaked into: {j}");
+        assert!(j.contains("\"p50_ms\":null"));
+        assert!(j.contains("\"itl_p99_ms\":null"));
+        let doc = Json::parse(&j).expect("report JSON must parse");
+        assert!(doc.get("p50_ms").unwrap().is_null());
+        assert!(doc.get("phase_coverage").unwrap().is_null());
+        assert_eq!(
+            doc.get("requests_rejected").unwrap().as_f64(),
+            Some(3.0)
+        );
+        // the aggregate file stays parseable too
+        let arr = bench_json(&[("a".into(), &r)]);
+        assert!(Json::parse(&arr).is_ok());
     }
 }

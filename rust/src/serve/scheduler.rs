@@ -17,7 +17,8 @@
 //!   5. TTL-evicts stalled sessions whose slots have been idle too
 //!      long.
 
-use crate::metrics::LatencyStats;
+use crate::obs::hist::Hist;
+use crate::obs::span::{SpanOutcome, Tracer};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::serve::admission::{AdmissionPolicy, Decision, RejectReason};
@@ -76,8 +77,17 @@ pub struct Scheduler {
     pub ttl_steps: u64,
     step_no: u64,
     pub stats: SchedStats,
-    pub latency: LatencyStats,
-    pub ttft: LatencyStats,
+    /// end-to-end request latency (submit → last token), log2-bucket
+    /// histogram: O(1) record on the hot path, bounded memory
+    pub latency: Hist,
+    /// time-to-first-token (submit → first sampled token)
+    pub ttft: Hist,
+    /// inter-token latency: one sample per decoded token per session,
+    /// measured scheduler-side so batching waits are included
+    pub itl: Hist,
+    /// optional request-lifecycle tracer (installed by the workload
+    /// driver when `--trace-out` / `--events-out` is requested)
+    tracer: Option<Tracer>,
     /// reusable request buffer for the batched decode step (avoids a
     /// fresh Vec per step on the hot path)
     reqs_buf: Vec<BatchReq>,
@@ -98,10 +108,27 @@ impl Scheduler {
             ttl_steps,
             step_no: 0,
             stats: SchedStats::default(),
-            latency: LatencyStats::new(),
-            ttft: LatencyStats::new(),
+            latency: Hist::new(),
+            ttft: Hist::new(),
+            itl: Hist::new(),
+            tracer: None,
             reqs_buf: Vec::new(),
         }
+    }
+
+    /// Install a lifecycle tracer. Spans are recorded from the next
+    /// `submit` on; sessions already in flight are not traced.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = Some(tracer);
+    }
+
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
+    }
+
+    /// Remove and return the tracer (export time).
+    pub fn take_tracer(&mut self) -> Option<Tracer> {
+        self.tracer.take()
     }
 
     /// Submit one request. Returns the session id when admitted to the
@@ -129,6 +156,7 @@ impl Scheduler {
             }
             Decision::Admit => {
                 self.stats.admitted += 1;
+                let prompt_len = prompt.len();
                 let id = self.table.create(
                     client,
                     prompt,
@@ -139,6 +167,12 @@ impl Scheduler {
                     temperature,
                 );
                 self.queue.push_back(id);
+                // span uses the session's own submit instant so span
+                // deltas equal the recorded TTFT exactly
+                let t = self.table.get(id).submitted_at;
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.on_submit(id, client, prompt_len, t);
+                }
                 Some(id)
             }
         }
@@ -173,6 +207,9 @@ impl Scheduler {
             let Some(&front) = self.queue.front() else { break };
             let Some(slot) = self.pool.alloc() else { break };
             self.queue.pop_front();
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.on_admitted(front, Instant::now());
+            }
             let (prompt, temperature) = {
                 let s = self.table.get_mut(front);
                 s.state = SessionState::Active;
@@ -197,10 +234,14 @@ impl Scheduler {
             let tok = sample_token(&logits, temperature, &mut s.rng);
             s.generated.push(tok);
             s.first_token_at = Some(t_first);
+            s.last_token_at = Some(t_first);
             s.last_active_step = self.step_no;
             let ttft_ms =
                 t_first.duration_since(s.submitted_at).as_secs_f64() * 1e3;
             self.ttft.record_ms(ttft_ms);
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.on_first_token(front, t_first);
+            }
             self.stats.prefill_tokens += prompt.len() as u64;
             self.stats.generated_tokens += 1;
             if s.is_finished() {
@@ -311,6 +352,23 @@ impl Scheduler {
             }
         }
 
+        // record inter-token latency: every session still in `active`
+        // here decoded exactly one token this step (both backends).
+        // One shared timestamp per step keeps the hot-path cost at one
+        // clock read + occupancy O(1) histogram records.
+        if occupancy > 0 {
+            let t_tok = Instant::now();
+            for &id in &self.active {
+                let s = self.table.get_mut(id);
+                if let Some(prev) = s.last_token_at {
+                    self.itl.record_ms(
+                        t_tok.duration_since(prev).as_secs_f64() * 1e3,
+                    );
+                }
+                s.last_token_at = Some(t_tok);
+            }
+        }
+
         // 4. retire finished sessions
         let done: Vec<u64> = self
             .active
@@ -337,13 +395,7 @@ impl Scheduler {
                 continue;
             }
             self.stalled.swap_remove(i);
-            let s = self.table.get_mut(id);
-            s.state = SessionState::Evicted;
-            s.finished_at = Some(Instant::now());
-            if let Some(slot) = s.slot.take() {
-                self.pool.release(slot);
-            }
-            self.stats.evicted += 1;
+            self.evict_session(id);
         }
         Ok(())
     }
@@ -352,13 +404,24 @@ impl Scheduler {
     /// its slot and mark it Evicted so waiting clients unblock and the
     /// pool's capacity survives recoverable errors.
     fn fail_session(&mut self, id: u64) {
+        self.evict_session(id);
+    }
+
+    /// Shared Evicted exit (TTL expiry and engine failure): release
+    /// the slot, stamp the terminal instant, close the span.
+    fn evict_session(&mut self, id: u64) {
+        let now = Instant::now();
         let s = self.table.get_mut(id);
         s.state = SessionState::Evicted;
-        s.finished_at = Some(Instant::now());
+        s.finished_at = Some(now);
+        let tokens = s.generated.len() as u64;
         if let Some(slot) = s.slot.take() {
             self.pool.release(slot);
         }
         self.stats.evicted += 1;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_finish(id, now, tokens, SpanOutcome::Evicted);
+        }
     }
 
     fn finish(&mut self, id: u64) {
@@ -366,13 +429,17 @@ impl Scheduler {
         let s = self.table.get_mut(id);
         s.state = SessionState::Done;
         s.finished_at = Some(now);
+        let tokens = s.generated.len() as u64;
+        let e2e_ms =
+            now.duration_since(s.submitted_at).as_secs_f64() * 1e3;
         if let Some(slot) = s.slot.take() {
             self.pool.release(slot);
         }
-        self.latency.record_ms(
-            now.duration_since(s.submitted_at).as_secs_f64() * 1e3,
-        );
+        self.latency.record_ms(e2e_ms);
         self.stats.completed += 1;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_finish(id, now, tokens, SpanOutcome::Done);
+        }
     }
 }
 
@@ -494,6 +561,37 @@ mod tests {
         assert_eq!(sched.stats.evicted, 1);
         assert_eq!(sched.stats.completed, 1);
         assert_eq!(sched.pool.in_use(), 0, "evicted slot leaked");
+    }
+
+    #[test]
+    fn tracer_spans_and_itl_match_lifecycle() {
+        let (mut rt, engine, mut sched) = setup(2, 2, 8);
+        sched.set_tracer(Tracer::new(64));
+        sched.submit(0, vec![3, 4, 5], 4, 7, 0.8).unwrap();
+        sched.submit(1, vec![5, 6], 3, 7, 0.8).unwrap();
+        drain(&mut rt, &engine, &mut sched, 200);
+        let tracer = sched.take_tracer().expect("tracer installed");
+        assert_eq!(tracer.spans().len(), 2);
+        assert_eq!(tracer.live_len(), 0, "span left open");
+        assert_eq!(tracer.dropped(), 0);
+        for span in tracer.spans() {
+            assert_eq!(span.outcome, SpanOutcome::Done);
+            assert!(span.admitted.is_some());
+            assert!(span.ttft_ms().expect("first token") >= 0.0);
+            assert!(span.decode_ms().unwrap() >= 0.0);
+            assert!(span.mean_itl_ms().unwrap() >= 0.0);
+        }
+        let max_new: u64 = tracer.spans().iter().map(|s| s.tokens).sum();
+        assert_eq!(max_new, sched.stats.generated_tokens);
+        // each session records one ITL sample per token after its
+        // first: total = generated - completed
+        assert_eq!(
+            sched.itl.len() as u64,
+            sched.stats.generated_tokens - sched.stats.completed as u64,
+        );
+        // percentiles from the log2 histogram must be ordered
+        let p = sched.itl.percentiles_ms(&[50.0, 95.0, 99.0]);
+        assert!(p[0] <= p[1] && p[1] <= p[2]);
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub struct Session {
     pub state: SessionState,
     pub submitted_at: Instant,
     pub first_token_at: Option<Instant>,
+    /// instant of the most recent sampled token — the scheduler's
+    /// per-step inter-token-latency (ITL) recording measures each new
+    /// token against this and then advances it
+    pub last_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
     /// scheduler step of the last decode progress (drives TTL)
     pub last_active_step: u64,
@@ -98,6 +102,7 @@ impl SessionTable {
                 state,
                 submitted_at: Instant::now(),
                 first_token_at: None,
+                last_token_at: None,
                 finished_at: None,
                 last_active_step: step,
                 rng: Rng::new(seed ^ id.wrapping_mul(0x9E37_79B9)),

@@ -60,6 +60,12 @@ pub struct DecodeWorkspace {
     /// largest batch once, then reused — not counted in `grows`, which
     /// tracks the activation buffers)
     pub slot_ids: Vec<usize>,
+    /// profiler scratch for *sampled* decode steps: `obs::StepTimer`
+    /// takes both by value at step start and hands them back at
+    /// finish, so sampled-step accounting allocates once and is then
+    /// reused like every other buffer here (not counted in `grows`)
+    pub phase_acc: Vec<u64>,
+    pub phase_events: Vec<crate::obs::PhaseEvent>,
     grows: u64,
     reuses: u64,
 }
@@ -96,6 +102,8 @@ impl DecodeWorkspace {
             logits: Vec::new(),
             lora_tmp: Vec::new(),
             slot_ids: Vec::new(),
+            phase_acc: Vec::new(),
+            phase_events: Vec::new(),
             grows: 0,
             reuses: 0,
         }

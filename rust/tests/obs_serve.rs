@@ -1,0 +1,289 @@
+//! Serving-observability integration: request-lifecycle spans must
+//! agree exactly with the scheduler's latency recorders, traced runs
+//! must export a Perfetto-loadable trace + parseable JSONL event log
+//! + metrics snapshot, and the sampled phase profiler's lap tiling
+//! must cover the decode wall it measured. Runs entirely on the
+//! native decode backend — no AOT artifacts required.
+
+use qpruner::data::Language;
+use qpruner::metrics::Metrics;
+use qpruner::model::{ModelConfig, ParamStore};
+use qpruner::obs::json::Json;
+use qpruner::obs::span::{SpanOutcome, Tracer};
+use qpruner::obs::trace_export::validate_trace;
+use qpruner::quant::{BitConfig, QuantFormat};
+use qpruner::rng::Rng;
+use qpruner::runtime::Runtime;
+use qpruner::serve::admission::AdmissionPolicy;
+use qpruner::serve::engine::{Engine, EngineBuilder};
+use qpruner::serve::kv_cache::{KvCachePool, KvPrecision};
+use qpruner::serve::scheduler::Scheduler;
+use qpruner::serve::{run_workload, ServeOpts};
+use std::time::Duration;
+
+const MAX_SEQ: usize = 24;
+
+fn runtime() -> Runtime {
+    let dir = std::env::temp_dir().join("qpruner_obs_serve_t");
+    std::fs::create_dir_all(&dir).unwrap();
+    Runtime::new(&dir).unwrap()
+}
+
+fn setup(n_slots: usize, max_batch: usize)
+         -> (Runtime, Engine, Scheduler) {
+    let mut rt = runtime();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 21);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let engine = EngineBuilder::new()
+        .store(&store, &bits)
+        .max_seq(MAX_SEQ)
+        .build(&mut rt)
+        .unwrap();
+    let pool = KvCachePool::with_slots(
+        &cfg,
+        engine.attn_dim(),
+        n_slots,
+        MAX_SEQ,
+        KvPrecision::F32,
+        1e6,
+        n_slots as f64 * 1e6,
+    );
+    let sched = Scheduler::new(
+        pool,
+        AdmissionPolicy::new(16, MAX_SEQ),
+        max_batch,
+        8,
+    );
+    (rt, engine, sched)
+}
+
+fn drain(rt: &mut Runtime, engine: &Engine, sched: &mut Scheduler) {
+    let mut rng = Rng::new(99);
+    let mut guard = 0;
+    while !sched.idle() {
+        sched.step(engine, rt, &mut rng, 0.0).unwrap();
+        guard += 1;
+        assert!(guard < 500, "scheduler failed to drain");
+    }
+}
+
+/// Staggered two-session workload through one KV slot: the span the
+/// tracer records for each session must reproduce the TTFT the
+/// scheduler measured — same `Instant`s, so *exactly* equal, not
+/// approximately — and the queued session's span must show it waited
+/// for the first one's slot.
+#[test]
+fn staggered_sessions_ttft_equals_span_delta() {
+    let (mut rt, engine, mut sched) = setup(1, 1);
+    sched.set_tracer(Tracer::new(64));
+    let mut rng = Rng::new(9);
+    let a = sched.submit(0, vec![3, 4, 5], 6, 7, 0.8).unwrap();
+    sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+    let b = sched.submit(1, vec![4, 5], 4, 7, 0.8).unwrap();
+    // b now waits in queue: this stagger is queueing delay that must
+    // show up in b's TTFT
+    std::thread::sleep(Duration::from_millis(2));
+    drain(&mut rt, &engine, &mut sched);
+
+    let tracer = sched.take_tracer().expect("tracer installed");
+    assert_eq!(tracer.spans().len(), 2);
+    assert_eq!(tracer.live_len(), 0);
+    for span in tracer.spans() {
+        assert_eq!(span.outcome, SpanOutcome::Done);
+        let s = sched.table.get(span.id);
+        // span instants are the scheduler's own instants
+        let table_ttft = s
+            .first_token_at
+            .unwrap()
+            .duration_since(s.submitted_at)
+            .as_secs_f64()
+            * 1e3;
+        let span_ttft = span.ttft_ms().unwrap();
+        assert!(
+            (span_ttft - table_ttft).abs() < 1e-12,
+            "session {}: span ttft {span_ttft} != scheduler ttft \
+             {table_ttft}",
+            span.id
+        );
+        assert_eq!(span.tokens, s.generated.len() as u64);
+    }
+    // with one slot, b can only be admitted after a released it
+    let span_a = tracer.spans().iter().find(|s| s.id == a).unwrap();
+    let span_b = tracer.spans().iter().find(|s| s.id == b).unwrap();
+    assert!(
+        span_b.admitted.unwrap() >= span_a.finished,
+        "queued session was admitted before the slot was free"
+    );
+    // b's ttft includes a's whole decode plus the 2 ms stagger
+    assert!(span_b.ttft_ms().unwrap() >= 2.0);
+
+    // both TTFTs landed in the histogram; ITL has one sample per
+    // token after each session's first, and ordered percentiles
+    assert_eq!(sched.ttft.len(), 2);
+    assert_eq!(
+        sched.itl.len() as u64,
+        sched.stats.generated_tokens - sched.stats.completed as u64
+    );
+    let p = sched.itl.percentiles_ms(&[50.0, 95.0, 99.0]);
+    assert!(p.iter().all(|v| v.is_finite() && *v >= 0.0));
+    assert!(p[0] <= p[1] && p[1] <= p[2]);
+}
+
+/// TTL-evicted sessions close their span with the `Evicted` outcome
+/// instead of leaking an open span.
+#[test]
+fn evicted_sessions_close_their_spans() {
+    let (mut rt, engine, mut sched) = setup(1, 1);
+    sched.set_tracer(Tracer::new(64));
+    sched.submit(0, vec![3, 4], 8, 7, 0.0).unwrap();
+    sched.submit(1, vec![5, 6], 3, 7, 0.0).unwrap();
+    let mut rng = Rng::new(1);
+    // force-stall whoever is active, then run the TTL out
+    sched.step(&engine, &mut rt, &mut rng, 1.0).unwrap();
+    drain(&mut rt, &engine, &mut sched);
+    let tracer = sched.take_tracer().unwrap();
+    assert_eq!(tracer.live_len(), 0, "open span leaked");
+    assert_eq!(tracer.spans().len(), 2);
+    let evicted = tracer
+        .spans()
+        .iter()
+        .filter(|s| s.outcome == SpanOutcome::Evicted)
+        .count();
+    assert_eq!(evicted, sched.stats.evicted);
+    assert_eq!(sched.stats.evicted, 1);
+}
+
+/// Full traced workload: the Chrome trace parses and contains complete
+/// session spans and decode phase events, every JSONL event line
+/// parses, the metrics snapshot carries the serve.* histograms, and
+/// the sampled phase laps tile the decode wall they measured.
+#[test]
+fn traced_workload_exports_valid_artifacts() {
+    let dir = std::env::temp_dir().join("qpruner_obs_serve_export");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("trace.json");
+    let events_path = dir.join("events.jsonl");
+    let metrics_path = dir.join("metrics.json");
+
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 5);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let mut opts = ServeOpts::smoke();
+    opts.clients = 4;
+    opts.requests = 24;
+    opts.trace_out = Some(trace_path.clone());
+    opts.events_out = Some(events_path.clone());
+    opts.metrics_out = Some(metrics_path.clone());
+
+    let mut rt = runtime();
+    let lang = Language::new(cfg.vocab, 1);
+    let mut metrics = Metrics::new();
+    let builder = EngineBuilder::new()
+        .store(&store, &bits)
+        .profile_every(1);
+    let r = run_workload(&mut rt, builder, &lang, &opts, &mut metrics)
+        .expect("workload must drain");
+    assert_eq!(r.completed, opts.requests);
+
+    // ITL surfaced in the report: one sample per post-first token,
+    // finite ordered percentiles
+    assert_eq!(
+        r.itl.len() as u64,
+        r.generated_tokens - r.completed as u64
+    );
+    let p = r.itl.percentiles_ms(&[50.0, 95.0, 99.0]);
+    assert!(p.iter().all(|v| v.is_finite()));
+    assert!(p[0] <= p[1] && p[1] <= p[2]);
+
+    // phase profiler sampled every step; laps tile the sampled wall
+    assert!(r.phases.sampled_steps > 0);
+    assert_eq!(r.phases.total_steps, r.phases.sampled_steps);
+    let cov = r.phases.coverage();
+    assert!(
+        cov > 0.90 && cov < 1.01,
+        "phase sum must be within 10% of the sampled decode wall \
+         (coverage {cov})"
+    );
+    assert!(r.phases.phase_sum_secs() > 0.0);
+    // the report JSON carries the observability fields and parses
+    let j = r.to_json("traced_smoke");
+    let doc = Json::parse(&j).unwrap();
+    assert!(doc.get("itl_p50_ms").unwrap().as_f64().is_some());
+    assert!(doc.get("phase_coverage").unwrap().as_f64().is_some());
+
+    // Chrome trace: parseable, >= 1 complete session span, >= 1
+    // decode phase event (the CI gate runs the same validation via
+    // `qpruner trace-check`)
+    let body = std::fs::read_to_string(&trace_path).unwrap();
+    let summary = validate_trace(&body).expect("trace must validate");
+    assert!(summary.sessions >= opts.requests);
+    assert!(summary.complete_sessions >= opts.requests);
+    assert!(summary.phase_events >= 1, "no phase events in trace");
+
+    // JSONL event log: every line is one parseable JSON object, and
+    // the meta line declares the schema
+    let events = std::fs::read_to_string(&events_path).unwrap();
+    let mut lines = events.lines();
+    let meta = Json::parse(lines.next().unwrap()).unwrap();
+    assert_eq!(
+        meta.get("schema").and_then(|s| s.as_str()),
+        Some("qpruner.serve.events.v1")
+    );
+    let mut session_lines = 0usize;
+    for line in lines {
+        let ev = Json::parse(line).unwrap();
+        if ev.get("type").and_then(|t| t.as_str()) == Some("session") {
+            session_lines += 1;
+        }
+    }
+    assert!(session_lines >= opts.requests);
+
+    // metrics snapshot: stable schema, serve.* histograms populated
+    let m = std::fs::read_to_string(&metrics_path).unwrap();
+    let m = Json::parse(&m).unwrap();
+    assert_eq!(
+        m.get("schema").and_then(|s| s.as_str()),
+        Some("qpruner.serve.metrics.v1")
+    );
+    let hists = m.get("histograms").expect("histograms section");
+    let lat = hists.get("serve.latency_ms").expect("latency hist");
+    assert_eq!(
+        lat.get("count").unwrap().as_f64(),
+        Some(r.completed as f64)
+    );
+    assert!(hists.get("serve.itl_ms").is_some());
+    let counters = m.get("counters").expect("counters section");
+    assert_eq!(
+        counters.get("serve.generated_tokens").unwrap().as_f64(),
+        Some(r.generated_tokens as f64)
+    );
+}
+
+/// An untraced run must not pay for tracing: no trace files, no raw
+/// events retained, and the default sampled profiler still fills the
+/// report's phase table.
+#[test]
+fn untraced_run_keeps_default_profiling_cheap() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 6);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let mut opts = ServeOpts::smoke();
+    opts.clients = 2;
+    opts.requests = 8;
+    let mut rt = runtime();
+    let lang = Language::new(cfg.vocab, 1);
+    let mut metrics = Metrics::new();
+    let builder =
+        EngineBuilder::new().store(&store, &bits);
+    let r = run_workload(&mut rt, builder, &lang, &opts, &mut metrics)
+        .unwrap();
+    assert_eq!(r.completed, 8);
+    // default sampling (every 4th step) still produced a breakdown
+    assert!(r.phases.sampled_steps > 0);
+    assert!(r.phases.sampled_steps <= r.phases.total_steps);
+    assert!(r.phases.phase_sum_secs() > 0.0);
+    // sampled subset still tiles its own wall
+    let cov = r.phases.coverage();
+    assert!(cov > 0.90 && cov < 1.01, "coverage {cov}");
+}

@@ -363,6 +363,79 @@ fn decode_is_bit_identical_across_thread_counts() {
     }
 }
 
+/// Observability must not perturb the math: an engine profiling every
+/// decode step (with raw phase-event capture on) produces logits
+/// bit-identical to an unprofiled engine, at 1/2/8 pool lanes. The
+/// instrumentation only reads clocks between phases — it never touches
+/// the accumulation order the determinism contract depends on.
+#[test]
+fn profiling_does_not_perturb_logits() {
+    let batch = 3usize;
+    let run = |threads: usize, every: u32| -> Vec<Vec<f32>> {
+        let mut rt = parity_runtime();
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let store = ParamStore::init(&cfg, 1234);
+        let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+        let engine = EngineBuilder::new()
+            .store(&store, &bits)
+            .max_seq(MAX_SEQ)
+            .threads(threads)
+            .profile_every(every)
+            .profile_events(every != 0)
+            .build(&mut rt)
+            .unwrap();
+        let vocab = cfg.vocab;
+        let mut pool = pool_for(&engine, &cfg, batch,
+                                KvPrecision::F32);
+        let ids: Vec<usize> =
+            (0..batch).map(|_| pool.alloc().unwrap()).collect();
+        let mut all: Vec<Vec<f32>> = Vec::new();
+        for (s, &id) in ids.iter().enumerate() {
+            let prompt = prompt_for(s, vocab);
+            all.push(
+                engine
+                    .prefill(&mut rt, pool.slot_mut(id), &prompt)
+                    .unwrap(),
+            );
+        }
+        for step in 0..DECODE_STEPS {
+            let reqs: Vec<BatchReq> = ids
+                .iter()
+                .enumerate()
+                .map(|(s, &id)| BatchReq {
+                    slot: id,
+                    pos: prompt_for(s, vocab).len() + step,
+                    token: gen_token(s, step, vocab),
+                })
+                .collect();
+            let mut got: Vec<Vec<f32>> = vec![Vec::new(); batch];
+            engine
+                .step_batch(&mut pool, &reqs, |i, l| {
+                    got[i] = l.to_vec();
+                })
+                .unwrap();
+            all.extend(got);
+        }
+        if every == 1 {
+            // the profiled run must actually have profiled something
+            let snap = engine.phase_snapshot();
+            assert!(snap.sampled_steps > 0, "profiler sampled nothing");
+            assert!(snap.phase_sum_secs() > 0.0);
+        }
+        all
+    };
+    let baseline = run(1, 0);
+    for threads in [1usize, 2, 8] {
+        for every in [0u32, 1, 4] {
+            assert_eq!(
+                run(threads, every),
+                baseline,
+                "t{threads} profile_every={every} changed the logits"
+            );
+        }
+    }
+}
+
 #[test]
 fn batched_kv_state_matches_reference_after_steps() {
     // beyond logits: the cached KV lengths advance identically
