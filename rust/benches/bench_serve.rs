@@ -10,6 +10,7 @@
 //!   BENCH <name> iters=<n> mean=<ms> p50=<ms> p95=<ms>
 //!   SERVE <name> tokens_per_sec=<..> p50=<..>ms p99=<..>ms occ=<..>
 //!   SERVE decode_b<B> fused_...=<..> f32_gemm_...=<..> matvec_...
+//!   SERVE decode_paged_b<B> paged_...=<..> slab_...=<..>
 //!   SERVE kv_bits=<32|8> sessions=<..> host_slab_bytes=<..>
 //!
 //! Every config also lands in `results/BENCH_serve.json` — the
@@ -28,7 +29,7 @@ use qpruner::model::{ModelConfig, ParamStore};
 use qpruner::quant::{BitConfig, QuantFormat};
 use qpruner::runtime::Runtime;
 use qpruner::serve::engine::{BatchReq, Engine, EngineBuilder};
-use qpruner::serve::kv_cache::{KvCachePool, KvPrecision};
+use qpruner::serve::kv_cache::{KvCachePool, KvLayout, KvPrecision};
 use qpruner::serve::{bench_json, bench_json_append_obj, run_workload,
                      ServeOpts, ServeReport};
 use std::time::Instant;
@@ -56,6 +57,9 @@ fn decode_tokens_per_sec(
     for _ in 0..rounds {
         for &id in ids {
             pool.slot_mut(id).advance_to(0);
+            // map the prompt span up front (faults pages on the paged
+            // layout; a pure bounds check on the slab)
+            pool.ensure_capacity(id, prompt.len()).unwrap();
             if batched {
                 engine.prefill(rt, pool.slot_mut(id), prompt).unwrap();
             } else {
@@ -194,6 +198,68 @@ fn main() {
              \"threads\":{}}}",
             fused_eng.threads()
         ));
+    }
+
+    // 2a. paged-KV decode vs the slab baseline on the same fused
+    // engine and numerics: the per-row page indirection must not cost
+    // measurable decode throughput (logits are bit-identical either
+    // way — tests/parity_decode.rs pins that down; this line pins the
+    // perf trajectory so a paged regression shows up in CI's JSON)
+    {
+        let page_tokens = 8usize;
+        for &batch in &[1usize, 8] {
+            let n_pages = batch * max_seq.div_ceil(page_tokens);
+            let mut p = KvCachePool::with_slots_layout(
+                &dcfg,
+                fused_eng.attn_dim(),
+                batch,
+                max_seq,
+                KvPrecision::F32,
+                1.0,
+                batch as f64,
+                KvLayout::Paged,
+                page_tokens,
+                n_pages,
+            );
+            let ids: Vec<usize> =
+                (0..batch).map(|_| p.alloc().unwrap()).collect();
+            let paged = decode_tokens_per_sec(&fused_eng, &mut rt,
+                                              &mut p, &ids,
+                                              &short_prompt, steps, 8,
+                                              true);
+            let mut s = KvCachePool::with_slots(
+                &dcfg,
+                fused_eng.attn_dim(),
+                batch,
+                max_seq,
+                KvPrecision::F32,
+                1.0,
+                batch as f64,
+            );
+            let sids: Vec<usize> =
+                (0..batch).map(|_| s.alloc().unwrap()).collect();
+            let slab = decode_tokens_per_sec(&fused_eng, &mut rt,
+                                             &mut s, &sids,
+                                             &short_prompt, steps, 8,
+                                             true);
+            let ratio = paged / slab.max(1e-9);
+            println!(
+                "SERVE decode_paged_b{batch} \
+                 paged_tokens_per_sec={paged:.0} \
+                 slab_tokens_per_sec={slab:.0} \
+                 paged_vs_slab={ratio:.2}x page_tokens={page_tokens}"
+            );
+            decode_entries.push(format!(
+                "{{\"name\":\"decode_paged_b{batch}\",\
+                 \"weights\":\"nf4\",\"kv_layout\":\"paged\",\
+                 \"page_tokens\":{page_tokens},\
+                 \"paged_tokens_per_sec\":{paged:.1},\
+                 \"slab_tokens_per_sec\":{slab:.1},\
+                 \"paged_vs_slab\":{ratio:.3},\
+                 \"threads\":{}}}",
+                fused_eng.threads()
+            ));
+        }
     }
 
     // 2b. phase-profiler overhead: the same fused engine config with

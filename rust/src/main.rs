@@ -66,6 +66,16 @@ fn usage() -> ! {
            --bits STR                   per-layer precision, e.g. 8444\n\
            --kv-bits 32|8               KV-cache precision (int8 KV\n\
                                         admits ~3.8x the sessions)\n\
+           --kv-layout slab|paged       KV pool layout: whole-slab\n\
+                                        reservations, or fixed-size\n\
+                                        pages with copy-on-write\n\
+                                        prompt-prefix sharing\n\
+           --page-tokens N              page capacity in tokens\n\
+                                        (paged layout, default 64)\n\
+           --shared-prefix N            prepend N shared tokens to\n\
+                                        every prompt (synthetic system\n\
+                                        prompt; exercises the prefix\n\
+                                        cache, 0 = off)\n\
            --threads N                  decode thread-pool lanes\n\
                                         (default: all cores; results\n\
                                         are identical at any count)\n\
@@ -406,6 +416,17 @@ fn main() -> Result<()> {
             serve::check_memory_arch(&sopts.memory_arch)
                 .context("bad --memory-arch")?;
             sopts.max_seq = cfg.usize_or("max-seq", sopts.max_seq)?;
+            if let Some(v) = cfg.get("kv-layout") {
+                sopts.kv_layout = qpruner::serve::kv_cache::KvLayout
+                    ::parse(v)
+                    .with_context(|| format!(
+                        "bad --kv-layout {v:?} (expected slab|paged)"
+                    ))?;
+            }
+            sopts.page_tokens =
+                cfg.usize_or("page-tokens", sopts.page_tokens)?;
+            sopts.shared_prefix =
+                cfg.usize_or("shared-prefix", sopts.shared_prefix)?;
             let kv_precision = match cfg.get("kv-bits") {
                 None => KvPrecision::F32,
                 Some(v) => {
@@ -518,10 +539,10 @@ fn main() -> Result<()> {
             let budget =
                 serve::resolve_kv_budget_gb(&sopts, rate, &bits);
             println!(
-                "serving {} (rate {}%, bits {}, kv {}-bit) — kv \
-                 budget {:.2} GB on a {:.0} GB {} device",
+                "serving {} (rate {}%, bits {}, kv {}-bit, {} \
+                 layout) — kv budget {:.2} GB on a {:.0} GB {} device",
                 model_name, rate, bits.short(),
-                kv_precision.bits(), budget,
+                kv_precision.bits(), sopts.kv_layout.label(), budget,
                 sopts.device_gb, sopts.memory_arch
             );
             let report = serve::run_workload(&mut rt, builder, &lang,
@@ -549,9 +570,11 @@ fn main() -> Result<()> {
                     report.rejection_rate()
                 );
                 let cfg_name = format!(
-                    "c{}_b{}_kv{}_{}",
+                    "c{}_b{}_kv{}_{}{}",
                     sopts.clients, sopts.max_batch, report.kv_bits,
-                    report.lora
+                    report.lora,
+                    if report.kv_layout == "paged" { "_paged" }
+                    else { "" }
                 );
                 std::fs::create_dir_all(&out_dir)?;
                 let json_path = out_dir.join("BENCH_serve.json");

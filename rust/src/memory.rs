@@ -159,6 +159,29 @@ pub fn kv_bytes_per_session_at(cfg: &ModelConfig, rate_pct: u32,
     (cfg.n_layers * 2 * max_seq * attn_dim) as f64 * bytes_per_elem
 }
 
+/// Deployment bytes of one KV *page* (`--kv-layout paged`): per layer,
+/// K and V of `[page_tokens, attn_dim]` at `bytes_per_elem` — exactly
+/// [`kv_bytes_per_session_at`] with `page_tokens` in place of
+/// `max_seq`, so a page is `page_tokens / max_seq` of a worst-case
+/// session and the paged pool's budget math composes with the slab
+/// model instead of inventing a second one.
+pub fn kv_page_bytes(cfg: &ModelConfig, rate_pct: u32,
+                     page_tokens: usize, bytes_per_elem: f64) -> f64 {
+    kv_bytes_per_session_at(cfg, rate_pct, page_tokens, bytes_per_elem)
+}
+
+/// Page-granular KV bytes a session of `seq` tokens pins under the
+/// paged layout: whole pages (`ceil(seq / page_tokens)`), since a
+/// partially-filled tail page is still exclusively reserved. This is
+/// what replaces the worst-case `max_seq` reservation in admission
+/// accounting — short sessions stop paying for slack they never touch.
+pub fn kv_bytes_per_session_paged(cfg: &ModelConfig, rate_pct: u32,
+                                  seq: usize, page_tokens: usize,
+                                  bytes_per_elem: f64) -> f64 {
+    let pages = seq.div_ceil(page_tokens.max(1));
+    pages as f64 * kv_page_bytes(cfg, rate_pct, page_tokens, bytes_per_elem)
+}
+
 /// KV bytes per session at the default serving representation (f32
 /// host slabs, `KvPrecision::F32` — 4 bytes/element). Pass `--kv-bits
 /// 8` / `KvPrecision::Int8` through [`kv_bytes_per_session_at`] for the
@@ -407,6 +430,26 @@ mod tests {
         assert!(f32b / i8b >= 3.5, "int8 KV ratio {}", f32b / i8b);
         // the default accessor is the f32 figure
         assert_eq!(kv_bytes_per_session(&cfg, 20, 256), f32b);
+    }
+
+    #[test]
+    fn kv_page_bytes_compose_with_session_model() {
+        let cfg = ModelConfig::paper_7b();
+        // max_seq a whole number of pages: page accounting is exact
+        let per_session = kv_bytes_per_session_at(&cfg, 20, 64, 4.0);
+        let per_page = kv_page_bytes(&cfg, 20, 16, 4.0);
+        assert!((per_session - 4.0 * per_page).abs() < 1e-6);
+        // a short session pins only its pages, not the max_seq slab
+        let short = kv_bytes_per_session_paged(&cfg, 20, 10, 16, 4.0);
+        assert!((short - per_page).abs() < 1e-6, "10 tokens = 1 page");
+        assert!(short < per_session / 2.0,
+                "short paged session must undercut the slab by > 2x");
+        // partial tail pages round up to whole pages
+        let tail = kv_bytes_per_session_paged(&cfg, 20, 17, 16, 4.0);
+        assert!((tail - 2.0 * per_page).abs() < 1e-6);
+        // precision scaling carries through unchanged
+        let i8p = kv_page_bytes(&cfg, 20, 16, 1.0 + 4.0 / 64.0);
+        assert!(per_page / i8p >= 3.5);
     }
 
     #[test]

@@ -43,11 +43,29 @@ pub struct AdmissionPolicy {
     pub max_queue: usize,
     /// KV slot capacity in tokens (prompt + generated)
     pub max_seq: usize,
+    /// longest session the KV pool can physically hold — `max_seq` on
+    /// the slab layout, additionally clamped by the page budget on the
+    /// paged layout (`KvCachePool::session_token_capacity`), so a
+    /// request that could never be paged in is shed at the door rather
+    /// than admitted and preempted forever
+    pub token_capacity: usize,
 }
 
 impl AdmissionPolicy {
     pub fn new(max_queue: usize, max_seq: usize) -> AdmissionPolicy {
-        AdmissionPolicy { max_queue, max_seq }
+        Self::with_token_capacity(max_queue, max_seq, max_seq)
+    }
+
+    /// Policy with an explicit pool token capacity (paged layouts pass
+    /// `KvCachePool::session_token_capacity`).
+    pub fn with_token_capacity(max_queue: usize, max_seq: usize,
+                               token_capacity: usize)
+                               -> AdmissionPolicy {
+        AdmissionPolicy {
+            max_queue,
+            max_seq,
+            token_capacity: token_capacity.min(max_seq),
+        }
     }
 
     pub fn decide(&self, prompt_len: usize, max_new: usize,
@@ -57,7 +75,7 @@ impl AdmissionPolicy {
         }
         // the final sampled token is returned but never fed back, so a
         // session touches prompt_len + max_new - 1 cache positions
-        if prompt_len + max_new - 1 > self.max_seq {
+        if prompt_len + max_new - 1 > self.token_capacity {
             return Decision::Reject(RejectReason::TooLong);
         }
         if queue_len >= self.max_queue {
@@ -104,6 +122,21 @@ mod tests {
                    Decision::Reject(RejectReason::Malformed));
         assert_eq!(p.decide(8, 0, 0),
                    Decision::Reject(RejectReason::Malformed));
+    }
+
+    #[test]
+    fn token_capacity_tightens_too_long() {
+        // a paged pool with fewer total page-tokens than max_seq must
+        // shed sessions that could never be faulted in
+        let p = AdmissionPolicy::with_token_capacity(4, 32, 16);
+        assert_eq!(p.decide(10, 7, 0), Decision::Admit); // 16 positions
+        assert_eq!(p.decide(10, 8, 0),
+                   Decision::Reject(RejectReason::TooLong));
+        // capacity never exceeds max_seq (engine buffers bound it)
+        let q = AdmissionPolicy::with_token_capacity(4, 32, 1000);
+        assert_eq!(q.token_capacity, 32);
+        // the plain constructor keeps the old slab behavior
+        assert_eq!(AdmissionPolicy::new(4, 32).token_capacity, 32);
     }
 
     #[test]

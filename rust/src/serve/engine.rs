@@ -804,12 +804,20 @@ impl Engine {
                                         token)
     }
 
-    /// Feed the whole prompt into a fresh slot; returns the logits
-    /// after its last token (from which the first new token samples).
+    /// Feed the prompt into a slot; returns the logits after its last
+    /// token (from which the first new token samples). Resumable: a
+    /// slot whose first `len` positions already hold the prompt's KV
+    /// (prefix pages mapped by `KvCachePool::admit`) only computes the
+    /// tail `len..prompt.len()` — values written for the tail are the
+    /// same either way, so resumed prefill stays bit-identical to a
+    /// cold one (pinned by `tests/parity_decode.rs`).
     pub fn prefill(&self, rt: &mut Runtime, mut slot: &mut KvSlot,
                    prompt: &[i32]) -> Result<Vec<f32>> {
         ensure!(!prompt.is_empty(), "prefill with empty prompt");
-        ensure!(slot.len == 0, "prefill into a dirty slot");
+        ensure!(slot.len < prompt.len(),
+                "prefill into a dirty slot ({} cached >= {} prompt \
+                 tokens — at least the last position must be computed \
+                 to produce logits)", slot.len, prompt.len());
         match &self.backend {
             Backend::Native => {
                 // only the last position's logits are consumed, so the
@@ -820,7 +828,10 @@ impl Engine {
                 // whole prompt's phase profile
                 let mut timer = self.begin_step_timer(&mut ws);
                 let mut res = Ok(());
-                for (pos, &tok) in prompt.iter().enumerate() {
+                let skip = slot.len;
+                for (pos, &tok) in
+                    prompt.iter().enumerate().skip(skip)
+                {
                     // slot id is a placeholder: advance_batch pairs
                     // positionally and we pass the borrow directly
                     let req = [BatchReq { slot: 0, pos, token: tok }];
@@ -919,8 +930,11 @@ impl Engine {
     /// final logits projection now shares the same workspace), or the
     /// `RefCell` will panic at runtime. Sample/record and return.
     ///
-    /// All requests are validated before any cache mutation, so an
-    /// error leaves every slot untouched. Native backend only.
+    /// All requests are validated before any cache *value* mutation,
+    /// so an error leaves every slot's contents untouched (on the
+    /// paged layout, pages may have been faulted in or privatized for
+    /// the failed step — pure allocation, no KV values change, and the
+    /// mapping is reused when the step retries). Native backend only.
     pub fn step_batch(
         &self,
         pool: &mut KvCachePool,
@@ -935,6 +949,12 @@ impl Engine {
             "step_batch requires the native backend; drive the \
              artifact backend through Engine::decode per session"
         );
+        // paged layout: fault/privatize each session's write page
+        // before borrowing the batch (a no-op on slab). The scheduler
+        // pre-faults with preemption; this covers direct callers.
+        for r in reqs {
+            pool.ensure_capacity(r.slot, r.pos + 1)?;
+        }
         let mut ws = self.ws.borrow_mut();
         ws.slot_ids.clear();
         ws.slot_ids.extend(reqs.iter().map(|r| r.slot));
@@ -1210,9 +1230,11 @@ impl Engine {
     pub fn prefill_reference(&self, slot: &mut KvSlot,
                              prompt: &[i32]) -> Result<Vec<f32>> {
         ensure!(!prompt.is_empty(), "prefill with empty prompt");
-        ensure!(slot.len == 0, "prefill into a dirty slot");
+        ensure!(slot.len < prompt.len(),
+                "prefill into a dirty slot ({} cached >= {} prompt \
+                 tokens)", slot.len, prompt.len());
         let mut hidden = Vec::new();
-        for (pos, &tok) in prompt.iter().enumerate() {
+        for (pos, &tok) in prompt.iter().enumerate().skip(slot.len) {
             hidden = self.advance_hidden_ref(slot, pos, tok)?;
         }
         Ok(self.logits_from_hidden(&hidden))

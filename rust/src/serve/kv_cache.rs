@@ -1,17 +1,37 @@
-//! Slab-allocated KV-cache pool for the serving subsystem, with a
-//! selectable per-element precision.
+//! KV-cache pool for the serving subsystem: slab or paged layout, with
+//! a selectable per-element precision.
 //!
-//! All session KV storage is preallocated up front as fixed-size slots
-//! (one per concurrently-resident session), so the decode path never
-//! allocates or frees *KV storage* and cannot exceed its memory budget
-//! by construction (the engine's activation scratch lives in
-//! `serve/workspace.rs` and is likewise reused across tokens).
+//! Two layouts ([`KvLayout`], `--kv-layout` on the CLI):
+//!
+//! * **Slab** — one contiguous `[L, max_seq, A]` reservation per
+//!   concurrently-resident session, preallocated up front. The decode
+//!   path never allocates or frees KV storage and cannot exceed its
+//!   memory budget by construction. This is the original layout and
+//!   survives as the parity oracle and bench baseline.
+//! * **Paged** — fixed-size pages of `page_tokens` positions
+//!   (`[L, page_tokens, A]` for both K and V) handed out from a free
+//!   list, with a per-session page table mapping logical token
+//!   positions to pages. Pages are ref-counted (`Arc`), so sessions
+//!   sharing a prompt prefix share read-only pages: a **prefix index**
+//!   keyed by a rolling FNV-1a hash of the token prefix (verified
+//!   against the stored tokens, so hash collisions cannot alias) lets
+//!   [`KvCachePool::admit`] map already-computed pages into a new
+//!   session's table and skip prefill for the shared span.
+//!   Copy-on-write protects divergence: [`KvCachePool::ensure_capacity`]
+//!   faults unmapped pages in and privatizes (copies) any shared page
+//!   in the write range before [`KvSlot::write`] touches it, so a
+//!   session can never mutate a page another session (or the prefix
+//!   index) still references. Page storage is preallocated like the
+//!   slab layout — faults and CoW copies pop from the free list (and
+//!   under pressure evict least-recently-used single-referenced prefix
+//!   entries), never the allocator.
+//!
 //! Capacity derives from the precision-aware accounting in
-//! `memory.rs`: the number of slots is what the modeled deployment
-//! device could pin inside `serve_kv_budget_gb` (device headroom left
-//! after the active `BitConfig`'s inference footprint), capped by
-//! what the scheduler can actually keep resident (its batch cap plus
-//! a stall allowance) and a hard host-side slab limit.
+//! `memory.rs`: slab capacity is whole-session reservations inside
+//! `serve_kv_budget_gb`; paged capacity is the **page budget**
+//! (`memory::kv_page_bytes`), so short sessions no longer strand a
+//! worst-case `max_seq` slab and the same budget admits strictly more
+//! of them (see `paged_budget_admits_2x_short_sessions`).
 //!
 //! Two KV representations ([`KvPrecision`], `--kv-bits` on the CLI):
 //!
@@ -23,11 +43,21 @@
 //!   way QLoRA-style double quantization trades precision for serving
 //!   memory). ~3.8x smaller than f32, so `for_budget` admits
 //!   proportionally more concurrent sessions.
+//!
+//! Rows are written and read through the same `KvStore` helpers in
+//! both layouts (a page is just a short-`rows` store), so a paged
+//! session reproduces the slab session's values **bit-identically** —
+//! `tests/parity_decode.rs` pins paged-vs-slab logits with `==`, and
+//! `tests/fuzz_paged_kv.rs` hammers the allocator invariants
+//! (no double-assignment, refcounts match the tables,
+//! `free + used == total`, full reclamation at drain).
 
 use crate::memory;
 use crate::model::ModelConfig;
 use crate::quant::{self, BLOCK};
 use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Storage precision of the KV cache (`--kv-bits {32,8}`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,10 +104,53 @@ impl KvPrecision {
     }
 }
 
-/// Backing storage of one slot, laid out `[L, max_seq, A]` contiguously
-/// for both K and V.
+/// KV storage layout (`--kv-layout {slab,paged}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvLayout {
+    /// One contiguous max_seq reservation per session (the original
+    /// layout; parity oracle and bench baseline).
+    Slab,
+    /// Fixed-size token pages from a free list, per-session page
+    /// tables, ref-counted prefix sharing with copy-on-write.
+    Paged,
+}
+
+impl KvLayout {
+    pub fn parse(s: &str) -> Option<KvLayout> {
+        match s {
+            "slab" => Some(KvLayout::Slab),
+            "paged" => Some(KvLayout::Paged),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            KvLayout::Slab => "slab",
+            KvLayout::Paged => "paged",
+        }
+    }
+}
+
+/// Backing storage for `rows` token positions across `n_layers`
+/// layers, laid out `[L, rows, A]` contiguously for both K and V.
+/// A slab slot is one store with `rows == max_seq`; a page is one
+/// store with `rows == page_tokens`. Both layouts go through the same
+/// row read/write helpers, which is what makes paged decode
+/// bit-identical to slab decode.
 #[derive(Debug)]
-enum KvStore {
+struct KvStore {
+    data: KvData,
+    n_layers: usize,
+    rows: usize,
+    attn_dim: usize,
+    /// quantization blocks per KV row (Int8 only, also 1-based for F32
+    /// so offsets stay uniform)
+    blocks_per_row: usize,
+}
+
+#[derive(Debug)]
+enum KvData {
     F32 {
         k: Vec<f32>,
         v: Vec<f32>,
@@ -86,40 +159,25 @@ enum KvStore {
         k_codes: Vec<i8>,
         v_codes: Vec<i8>,
         /// per-(layer, position, block) absmax scales,
-        /// `[L, max_seq, blocks_per_row]`
+        /// `[L, rows, blocks_per_row]`
         k_scales: Vec<f32>,
         v_scales: Vec<f32>,
     },
 }
 
-/// Per-session KV storage: K and V stacks for every layer, position
-/// and attention channel, at the pool's [`KvPrecision`].
-#[derive(Debug)]
-pub struct KvSlot {
-    store: KvStore,
-    /// tokens currently cached (positions `0..len` are valid)
-    pub len: usize,
-    n_layers: usize,
-    max_seq: usize,
-    attn_dim: usize,
-    /// quantization blocks per KV row (Int8 only, 1-based even for F32
-    /// so offsets stay uniform)
-    blocks_per_row: usize,
-}
-
-impl KvSlot {
-    fn new(n_layers: usize, max_seq: usize, attn_dim: usize,
-           precision: KvPrecision) -> KvSlot {
-        let n = n_layers * max_seq * attn_dim;
+impl KvStore {
+    fn new(n_layers: usize, rows: usize, attn_dim: usize,
+           precision: KvPrecision) -> KvStore {
+        let n = n_layers * rows * attn_dim;
         let blocks_per_row = attn_dim.div_ceil(BLOCK);
-        let store = match precision {
-            KvPrecision::F32 => KvStore::F32 {
+        let data = match precision {
+            KvPrecision::F32 => KvData::F32 {
                 k: vec![0.0; n],
                 v: vec![0.0; n],
             },
             KvPrecision::Int8 => {
-                let ns = n_layers * max_seq * blocks_per_row;
-                KvStore::Int8 {
+                let ns = n_layers * rows * blocks_per_row;
+                KvData::Int8 {
                     k_codes: vec![0; n],
                     v_codes: vec![0; n],
                     k_scales: vec![0.0; ns],
@@ -127,52 +185,42 @@ impl KvSlot {
                 }
             }
         };
-        KvSlot {
-            store,
-            len: 0,
-            n_layers,
-            max_seq,
-            attn_dim,
-            blocks_per_row,
-        }
+        KvStore { data, n_layers, rows, attn_dim, blocks_per_row }
     }
 
-    pub fn precision(&self) -> KvPrecision {
-        match self.store {
-            KvStore::F32 { .. } => KvPrecision::F32,
-            KvStore::Int8 { .. } => KvPrecision::Int8,
+    fn precision(&self) -> KvPrecision {
+        match self.data {
+            KvData::F32 { .. } => KvPrecision::F32,
+            KvData::Int8 { .. } => KvPrecision::Int8,
         }
     }
 
     #[inline]
     fn off(&self, layer: usize, t: usize) -> usize {
-        debug_assert!(layer < self.n_layers && t < self.max_seq);
-        (layer * self.max_seq + t) * self.attn_dim
+        debug_assert!(layer < self.n_layers && t < self.rows);
+        (layer * self.rows + t) * self.attn_dim
     }
 
     #[inline]
     fn scale_off(&self, layer: usize, t: usize) -> usize {
-        (layer * self.max_seq + t) * self.blocks_per_row
+        (layer * self.rows + t) * self.blocks_per_row
     }
 
-    /// Write the K/V rows for position `t` of `layer` (quantizing when
-    /// the slot is Int8). The caller advances `len` once per token via
-    /// [`KvSlot::advance_to`].
-    pub fn write(&mut self, layer: usize, t: usize, k_row: &[f32],
+    fn write_row(&mut self, layer: usize, t: usize, k_row: &[f32],
                  v_row: &[f32]) {
-        assert!(t < self.max_seq, "kv overflow: pos {t} >= {}", self.max_seq);
+        assert!(t < self.rows, "kv overflow: row {t} >= {}", self.rows);
         assert_eq!(k_row.len(), self.attn_dim);
         assert_eq!(v_row.len(), self.attn_dim);
         let o = self.off(layer, t);
         let so = self.scale_off(layer, t);
         let a = self.attn_dim;
         let nb = self.blocks_per_row;
-        match &mut self.store {
-            KvStore::F32 { k, v } => {
+        match &mut self.data {
+            KvData::F32 { k, v } => {
                 k[o..o + a].copy_from_slice(k_row);
                 v[o..o + a].copy_from_slice(v_row);
             }
-            KvStore::Int8 { k_codes, v_codes, k_scales, v_scales } => {
+            KvData::Int8 { k_codes, v_codes, k_scales, v_scales } => {
                 quant::quantize_row_i8(k_row, &mut k_codes[o..o + a],
                                        &mut k_scales[so..so + nb]);
                 quant::quantize_row_i8(v_row, &mut v_codes[o..o + a],
@@ -181,23 +229,13 @@ impl KvSlot {
         }
     }
 
-    pub fn advance_to(&mut self, len: usize) {
-        debug_assert!(len <= self.max_seq);
-        self.len = len;
-    }
-
-    /// K row at (layer, t) as f32: a direct slice for F32 slots, a
-    /// dequantization into `scratch` for Int8 (scratch must hold at
-    /// least `attn_dim` values). The returned slice borrows whichever
-    /// storage backs it, so the engine's hot loop never copies on the
-    /// f32 path and never allocates on either.
-    pub fn k_row<'a>(&'a self, layer: usize, t: usize,
-                     scratch: &'a mut [f32]) -> &'a [f32] {
+    fn k_row<'a>(&'a self, layer: usize, t: usize,
+                 scratch: &'a mut [f32]) -> &'a [f32] {
         let o = self.off(layer, t);
         let a = self.attn_dim;
-        match &self.store {
-            KvStore::F32 { k, .. } => &k[o..o + a],
-            KvStore::Int8 { k_codes, k_scales, .. } => {
+        match &self.data {
+            KvData::F32 { k, .. } => &k[o..o + a],
+            KvData::Int8 { k_codes, k_scales, .. } => {
                 let so = self.scale_off(layer, t);
                 quant::dequantize_row_i8(
                     &k_codes[o..o + a],
@@ -209,14 +247,13 @@ impl KvSlot {
         }
     }
 
-    /// V row at (layer, t); see [`KvSlot::k_row`].
-    pub fn v_row<'a>(&'a self, layer: usize, t: usize,
-                     scratch: &'a mut [f32]) -> &'a [f32] {
+    fn v_row<'a>(&'a self, layer: usize, t: usize,
+                 scratch: &'a mut [f32]) -> &'a [f32] {
         let o = self.off(layer, t);
         let a = self.attn_dim;
-        match &self.store {
-            KvStore::F32 { v, .. } => &v[o..o + a],
-            KvStore::Int8 { v_codes, v_scales, .. } => {
+        match &self.data {
+            KvData::F32 { v, .. } => &v[o..o + a],
+            KvData::Int8 { v_codes, v_scales, .. } => {
                 let so = self.scale_off(layer, t);
                 quant::dequantize_row_i8(
                     &v_codes[o..o + a],
@@ -228,27 +265,217 @@ impl KvSlot {
         }
     }
 
-    /// Borrow the raw f32 K row (F32 slots only — Int8 rows have no
-    /// f32 representation to borrow; use [`KvSlot::k_row`]).
-    #[inline]
-    pub fn k_at(&self, layer: usize, t: usize) -> &[f32] {
+    fn k_at(&self, layer: usize, t: usize) -> &[f32] {
         let o = self.off(layer, t);
-        match &self.store {
-            KvStore::F32 { k, .. } => &k[o..o + self.attn_dim],
-            KvStore::Int8 { .. } => {
-                panic!("k_at on an int8 slot; use k_row with scratch")
+        match &self.data {
+            KvData::F32 { k, .. } => &k[o..o + self.attn_dim],
+            KvData::Int8 { .. } => {
+                panic!("k_at on an int8 store; use k_row with scratch")
             }
         }
     }
 
-    /// Borrow the raw f32 V row (F32 slots only); see [`KvSlot::k_at`].
+    fn v_at(&self, layer: usize, t: usize) -> &[f32] {
+        let o = self.off(layer, t);
+        match &self.data {
+            KvData::F32 { v, .. } => &v[o..o + self.attn_dim],
+            KvData::Int8 { .. } => {
+                panic!("v_at on an int8 store; use v_row with scratch")
+            }
+        }
+    }
+
+    /// Byte-for-byte copy of another store with identical shape (the
+    /// CoW privatization step — no requantization, so a privatized
+    /// page reads back bit-identically to the shared original).
+    fn copy_from(&mut self, src: &KvStore) {
+        match (&mut self.data, &src.data) {
+            (KvData::F32 { k, v }, KvData::F32 { k: sk, v: sv }) => {
+                k.copy_from_slice(sk);
+                v.copy_from_slice(sv);
+            }
+            (
+                KvData::Int8 { k_codes, v_codes, k_scales, v_scales },
+                KvData::Int8 {
+                    k_codes: skc,
+                    v_codes: svc,
+                    k_scales: sks,
+                    v_scales: svs,
+                },
+            ) => {
+                k_codes.copy_from_slice(skc);
+                v_codes.copy_from_slice(svc);
+                k_scales.copy_from_slice(sks);
+                v_scales.copy_from_slice(svs);
+            }
+            _ => panic!("KvStore::copy_from across precisions"),
+        }
+    }
+
+    /// Host bytes of this store's backing buffers.
+    fn host_bytes(&self) -> usize {
+        match &self.data {
+            KvData::F32 { k, v } => {
+                (k.len() + v.len()) * std::mem::size_of::<f32>()
+            }
+            KvData::Int8 { k_codes, v_codes, k_scales, v_scales } => {
+                k_codes.len() + v_codes.len()
+                    + (k_scales.len() + v_scales.len())
+                        * std::mem::size_of::<f32>()
+            }
+        }
+    }
+}
+
+/// One fixed-size KV page: `page_tokens` positions for every layer,
+/// K and V. Ref-counted via `Arc` — the strong count *is* the page's
+/// refcount (page tables and prefix-index entries each hold one
+/// clone), and `Arc::get_mut` is the write-privacy proof the paged
+/// [`KvSlot::write`] path relies on.
+#[derive(Debug)]
+pub struct KvPage {
+    id: u32,
+    store: KvStore,
+}
+
+impl KvPage {
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+}
+
+/// Backing storage of one session slot.
+#[derive(Debug)]
+enum KvBacking {
+    /// one contiguous `[L, max_seq, A]` store
+    Slab(KvStore),
+    /// page table: logical page `p` covers token positions
+    /// `p*page_tokens .. (p+1)*page_tokens`
+    Paged {
+        pages: Vec<Arc<KvPage>>,
+        page_tokens: usize,
+    },
+}
+
+/// Per-session KV storage: K and V stacks for every layer, position
+/// and attention channel, at the pool's [`KvPrecision`], backed by
+/// either a slab or a page table per the pool's [`KvLayout`].
+#[derive(Debug)]
+pub struct KvSlot {
+    backing: KvBacking,
+    /// tokens currently cached (positions `0..len` are valid)
+    pub len: usize,
+    max_seq: usize,
+    attn_dim: usize,
+    precision: KvPrecision,
+}
+
+impl KvSlot {
+    fn new_slab(n_layers: usize, max_seq: usize, attn_dim: usize,
+                precision: KvPrecision) -> KvSlot {
+        KvSlot {
+            backing: KvBacking::Slab(KvStore::new(
+                n_layers, max_seq, attn_dim, precision,
+            )),
+            len: 0,
+            max_seq,
+            attn_dim,
+            precision,
+        }
+    }
+
+    fn new_paged(max_seq: usize, attn_dim: usize,
+                 precision: KvPrecision, page_tokens: usize) -> KvSlot {
+        KvSlot {
+            backing: KvBacking::Paged { pages: Vec::new(), page_tokens },
+            len: 0,
+            max_seq,
+            attn_dim,
+            precision,
+        }
+    }
+
+    pub fn precision(&self) -> KvPrecision {
+        self.precision
+    }
+
+    /// Write the K/V rows for position `t` of `layer` (quantizing when
+    /// the slot is Int8). The caller advances `len` once per token via
+    /// [`KvSlot::advance_to`]. On a paged slot the target page must be
+    /// mapped *and private* — [`KvCachePool::ensure_capacity`]
+    /// establishes both (faulting and copy-on-write), so a write can
+    /// never reach a page another session or the prefix index still
+    /// references.
+    pub fn write(&mut self, layer: usize, t: usize, k_row: &[f32],
+                 v_row: &[f32]) {
+        assert!(t < self.max_seq, "kv overflow: pos {t} >= {}", self.max_seq);
+        match &mut self.backing {
+            KvBacking::Slab(store) => store.write_row(layer, t, k_row, v_row),
+            KvBacking::Paged { pages, page_tokens } => {
+                let (p, within) = (t / *page_tokens, t % *page_tokens);
+                assert!(p < pages.len(),
+                        "write to unmapped page {p} (pos {t}); call \
+                         KvCachePool::ensure_capacity first");
+                let page = Arc::get_mut(&mut pages[p]).expect(
+                    "write to a shared page — ensure_capacity must \
+                     copy-on-write before any write",
+                );
+                page.store.write_row(layer, within, k_row, v_row);
+            }
+        }
+    }
+
+    pub fn advance_to(&mut self, len: usize) {
+        debug_assert!(len <= self.max_seq);
+        self.len = len;
+    }
+
+    /// K row at (layer, t) as f32: a direct slice for F32 storage, a
+    /// dequantization into `scratch` for Int8 (scratch must hold at
+    /// least `attn_dim` values). The returned slice borrows whichever
+    /// storage backs it, so the engine's hot loop never copies on the
+    /// f32 path and never allocates on either; paged slots add one
+    /// divide/modulo for the page-table walk.
+    pub fn k_row<'a>(&'a self, layer: usize, t: usize,
+                     scratch: &'a mut [f32]) -> &'a [f32] {
+        match &self.backing {
+            KvBacking::Slab(store) => store.k_row(layer, t, scratch),
+            KvBacking::Paged { pages, page_tokens } => pages[t / *page_tokens]
+                .store
+                .k_row(layer, t % *page_tokens, scratch),
+        }
+    }
+
+    /// V row at (layer, t); see [`KvSlot::k_row`].
+    pub fn v_row<'a>(&'a self, layer: usize, t: usize,
+                     scratch: &'a mut [f32]) -> &'a [f32] {
+        match &self.backing {
+            KvBacking::Slab(store) => store.v_row(layer, t, scratch),
+            KvBacking::Paged { pages, page_tokens } => pages[t / *page_tokens]
+                .store
+                .v_row(layer, t % *page_tokens, scratch),
+        }
+    }
+
+    /// Borrow the raw f32 K row (F32 storage only — Int8 rows have no
+    /// f32 representation to borrow; use [`KvSlot::k_row`]).
+    #[inline]
+    pub fn k_at(&self, layer: usize, t: usize) -> &[f32] {
+        match &self.backing {
+            KvBacking::Slab(store) => store.k_at(layer, t),
+            KvBacking::Paged { pages, page_tokens } => {
+                pages[t / *page_tokens].store.k_at(layer, t % *page_tokens)
+            }
+        }
+    }
+
+    /// Borrow the raw f32 V row (F32 storage only); see [`KvSlot::k_at`].
     #[inline]
     pub fn v_at(&self, layer: usize, t: usize) -> &[f32] {
-        let o = self.off(layer, t);
-        match &self.store {
-            KvStore::F32 { v, .. } => &v[o..o + self.attn_dim],
-            KvStore::Int8 { .. } => {
-                panic!("v_at on an int8 slot; use v_row with scratch")
+        match &self.backing {
+            KvBacking::Slab(store) => store.v_at(layer, t),
+            KvBacking::Paged { pages, page_tokens } => {
+                pages[t / *page_tokens].store.v_at(layer, t % *page_tokens)
             }
         }
     }
@@ -265,36 +492,158 @@ impl KvSlot {
         self.len = 0; // stale K/V rows are overwritten before reads
     }
 
-    /// Host bytes of this slot's backing storage.
+    /// Number of pages currently mapped (0 for slab slots).
+    pub fn pages_mapped(&self) -> usize {
+        match &self.backing {
+            KvBacking::Slab(_) => 0,
+            KvBacking::Paged { pages, .. } => pages.len(),
+        }
+    }
+
+    /// Host bytes of this slot's backing storage. Paged slots report
+    /// the storage their table references; shared pages are counted in
+    /// every referencing slot (the pool-level
+    /// [`KvCachePool::host_slab_bytes`] counts each page once).
     pub fn host_bytes(&self) -> usize {
-        match &self.store {
-            KvStore::F32 { k, v } => {
-                (k.len() + v.len()) * std::mem::size_of::<f32>()
-            }
-            KvStore::Int8 { k_codes, v_codes, k_scales, v_scales } => {
-                k_codes.len() + v_codes.len()
-                    + (k_scales.len() + v_scales.len())
-                        * std::mem::size_of::<f32>()
+        match &self.backing {
+            KvBacking::Slab(store) => store.host_bytes(),
+            KvBacking::Paged { pages, .. } => {
+                pages.iter().map(|p| p.store.host_bytes()).sum()
             }
         }
     }
 }
 
-/// Fixed-capacity pool of [`KvSlot`]s with a free list.
+/// What [`KvCachePool::admit`] grants: the session's slot plus the
+/// number of leading prompt tokens whose KV was mapped from the prefix
+/// index (prefill resumes at `cached_tokens`; 0 on the slab layout or
+/// a prefix miss).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmitInfo {
+    pub slot: usize,
+    pub cached_tokens: usize,
+}
+
+/// Counters for the paged allocator (all zero on the slab layout).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PagedStats {
+    /// admissions that mapped >= 1 page from the prefix index
+    pub prefix_hits: u64,
+    /// admissions that looked for a prefix and found none
+    pub prefix_misses: u64,
+    /// prompt tokens whose prefill was skipped via mapped pages
+    pub prefix_tokens_reused: u64,
+    /// shared pages privatized before a write
+    pub cow_copies: u64,
+    /// pages popped from the free list for new capacity
+    pub page_faults: u64,
+    /// prefix-index entries evicted under page pressure / cap
+    pub prefix_evictions: u64,
+}
+
+/// A published prefix: the page holding KV for `tokens`
+/// (`tokens.len() == (depth+1) * page_tokens`), verified on lookup so
+/// an FNV collision can never alias two different prefixes.
+struct PrefixEntry {
+    page: Arc<KvPage>,
+    tokens: Vec<i32>,
+    last_used: u64,
+}
+
+/// Paged-layout state: the page free list, the prefix index, and the
+/// accounting the report/fuzz layers read.
+struct PagedState {
+    free: Vec<Arc<KvPage>>,
+    page_tokens: usize,
+    pages_total: usize,
+    pages_peak: usize,
+    /// rolling-hash -> published prefix page (chained: depth-q lookup
+    /// key is the hash of the first `q * page_tokens` tokens)
+    prefix: HashMap<u64, PrefixEntry>,
+    stats: PagedStats,
+    /// logical clock for prefix-index LRU
+    clock: u64,
+    /// modeled deployment bytes of one page (paper arch at the pool's
+    /// precision); feeds the bytes-saved line
+    modeled_page_bytes: f64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend a rolling FNV-1a hash over a token span.
+fn extend_hash(mut h: u64, tokens: &[i32]) -> u64 {
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Upper bound on retained prefix entries (beyond it, publishing
+/// evicts the least-recently-used evictable entry first).
+pub const PREFIX_INDEX_CAP: usize = 512;
+
+/// Drop a page reference, returning the page to the free list iff this
+/// was the last reference. Every page-table / prefix-index drop routes
+/// through here, which is what keeps `free + used == total` an
+/// invariant rather than a hope (a CoW-replaced or unmapped page whose
+/// Arc is still held elsewhere stays "used" and is reclaimed by
+/// whichever holder drops it last).
+fn retire(free: &mut Vec<Arc<KvPage>>, page: Arc<KvPage>) {
+    if Arc::strong_count(&page) == 1 {
+        free.push(page);
+    }
+}
+
+/// Pop a free page, evicting least-recently-used single-referenced
+/// prefix entries under pressure. `None` means genuinely out of pages
+/// (every page is mapped by a live session or a still-shared prefix).
+fn take_free_page(paged: &mut PagedState) -> Option<Arc<KvPage>> {
+    if let Some(p) = paged.free.pop() {
+        return Some(p);
+    }
+    let victim = paged
+        .prefix
+        .iter()
+        .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+        .min_by_key(|(k, e)| (e.last_used, **k))
+        .map(|(k, _)| *k)?;
+    let e = paged.prefix.remove(&victim).expect("victim key vanished");
+    paged.stats.prefix_evictions += 1;
+    Some(e.page)
+}
+
+/// Number of prefix entries whose page would be reclaimable if evicted
+/// (only the index references it).
+fn evictable_prefix_pages(paged: &PagedState) -> usize {
+    paged
+        .prefix
+        .values()
+        .filter(|e| Arc::strong_count(&e.page) == 1)
+        .count()
+}
+
+/// Fixed-capacity pool of [`KvSlot`]s with a free list; in the paged
+/// layout also the page allocator and prefix index.
 pub struct KvCachePool {
     slots: Vec<KvSlot>,
     free: Vec<usize>,
     precision: KvPrecision,
+    layout: KvLayout,
     /// reusable aliasing bitmap for `slots_mut_many` (cleared per
     /// call; kept here so the batched decode step allocates nothing
     /// for the check)
     seen: Vec<bool>,
-    /// modeled deployment bytes one session pins (paper arch, at the
-    /// pool's KV precision)
+    /// modeled deployment bytes one max-length session pins (paper
+    /// arch, at the pool's KV precision)
     modeled_bytes_per_session: f64,
     /// modeled deployment budget in bytes
     modeled_budget_bytes: f64,
     peak_in_use: usize,
+    paged: Option<PagedState>,
 }
 
 /// Hard host-side cap on preallocated slots, independent of how large
@@ -302,7 +651,7 @@ pub struct KvCachePool {
 pub const MAX_HOST_SLOTS: usize = 1024;
 
 impl KvCachePool {
-    /// Size the pool from the modeled deployment: `budget_gb` of KV
+    /// Size a slab pool from the modeled deployment: `budget_gb` of KV
     /// headroom on the target device (see `memory::serve_kv_budget_gb`)
     /// divided by the per-session KV bytes of the paper-scale
     /// architecture at this pruning rate *and KV precision* — int8 KV
@@ -310,7 +659,8 @@ impl KvCachePool {
     /// shaped by the *served* (simulator) model config and capped at
     /// `host_slot_cap` — the scheduler's reachable concurrency — so a
     /// huge modeled headroom doesn't preallocate megabytes of slab no
-    /// session can ever touch.
+    /// session can ever touch. (Layout-aware sizing lives in
+    /// [`KvCachePool::for_budget_layout`]; this is the slab shorthand.)
     #[allow(clippy::too_many_arguments)]
     pub fn for_budget(
         host_cfg: &ModelConfig,
@@ -322,6 +672,42 @@ impl KvCachePool {
         budget_gb: f64,
         host_slot_cap: usize,
     ) -> Result<KvCachePool> {
+        Self::for_budget_layout(
+            host_cfg,
+            host_attn_dim,
+            paper_cfg,
+            rate_pct,
+            max_seq,
+            precision,
+            budget_gb,
+            host_slot_cap,
+            KvLayout::Slab,
+            0,
+        )
+    }
+
+    /// Layout-aware budget sizing. Slab divides the budget into
+    /// worst-case `max_seq` reservations; **paged divides it into
+    /// pages** (`memory::kv_page_bytes`), so admission capacity is the
+    /// page budget and short sessions stop paying for slack they never
+    /// touch — the same budget that slabs 6 max-length sessions pages
+    /// out to `6 * max_seq / page_tokens` pages, each short session
+    /// takes only the pages its prompt needs, and strictly more of
+    /// them are admitted (asserted >= 2x in
+    /// `paged_budget_admits_2x_short_sessions`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn for_budget_layout(
+        host_cfg: &ModelConfig,
+        host_attn_dim: usize,
+        paper_cfg: &ModelConfig,
+        rate_pct: u32,
+        max_seq: usize,
+        precision: KvPrecision,
+        budget_gb: f64,
+        host_slot_cap: usize,
+        layout: KvLayout,
+        page_tokens: usize,
+    ) -> Result<KvCachePool> {
         let per_session = memory::kv_bytes_per_session_at(
             paper_cfg,
             rate_pct,
@@ -329,28 +715,75 @@ impl KvCachePool {
             precision.modeled_bytes_per_elem(),
         );
         let budget_bytes = budget_gb * 1e9;
-        let n = (budget_bytes / per_session).floor() as usize;
-        if n == 0 {
-            bail!(
-                "KV budget {budget_gb:.3} GB holds zero sessions \
-                 ({:.1} MB each at max_seq {max_seq}, {} KV) — raise \
-                 --kv-budget-gb, lower --max-seq, or drop --kv-bits",
-                per_session / 1e6,
-                precision.label()
-            );
+        match layout {
+            KvLayout::Slab => {
+                let n = (budget_bytes / per_session).floor() as usize;
+                if n == 0 {
+                    bail!(
+                        "KV budget {budget_gb:.3} GB holds zero sessions \
+                         ({:.1} MB each at max_seq {max_seq}, {} KV) — raise \
+                         --kv-budget-gb, lower --max-seq, or drop --kv-bits",
+                        per_session / 1e6,
+                        precision.label()
+                    );
+                }
+                Ok(Self::with_slots(
+                    host_cfg,
+                    host_attn_dim,
+                    n.min(MAX_HOST_SLOTS).min(host_slot_cap.max(1)),
+                    max_seq,
+                    precision,
+                    per_session,
+                    budget_bytes,
+                ))
+            }
+            KvLayout::Paged => {
+                let pt = page_tokens.clamp(1, max_seq.max(1));
+                let page_bytes = memory::kv_page_bytes(
+                    paper_cfg,
+                    rate_pct,
+                    pt,
+                    precision.modeled_bytes_per_elem(),
+                );
+                let total_pages =
+                    (budget_bytes / page_bytes).floor() as usize;
+                if total_pages == 0 {
+                    bail!(
+                        "KV budget {budget_gb:.3} GB holds zero pages \
+                         ({:.2} MB each at page_tokens {pt}, {} KV) — \
+                         raise --kv-budget-gb or lower --page-tokens",
+                        page_bytes / 1e6,
+                        precision.label()
+                    );
+                }
+                // a session needs >= 1 page, so the page budget bounds
+                // concurrency; host slots stay capped like slab
+                let n_slots = total_pages
+                    .min(MAX_HOST_SLOTS)
+                    .min(host_slot_cap.max(1));
+                // host pages: what resident sessions can actually
+                // touch plus one session of headroom so released
+                // prefixes can be retained rather than evicted
+                let pages_per_session = max_seq.div_ceil(pt);
+                let host_pages = total_pages
+                    .min(n_slots * pages_per_session + pages_per_session);
+                Ok(Self::with_slots_layout(
+                    host_cfg,
+                    host_attn_dim,
+                    n_slots,
+                    max_seq,
+                    precision,
+                    per_session,
+                    budget_bytes,
+                    KvLayout::Paged,
+                    pt,
+                    host_pages,
+                ))
+            }
         }
-        Ok(Self::with_slots(
-            host_cfg,
-            host_attn_dim,
-            n.min(MAX_HOST_SLOTS).min(host_slot_cap.max(1)),
-            max_seq,
-            precision,
-            per_session,
-            budget_bytes,
-        ))
     }
 
-    /// Direct construction with an explicit slot count (tests).
+    /// Direct slab construction with an explicit slot count (tests).
     pub fn with_slots(
         host_cfg: &ModelConfig,
         host_attn_dim: usize,
@@ -360,26 +793,110 @@ impl KvCachePool {
         modeled_bytes_per_session: f64,
         modeled_budget_bytes: f64,
     ) -> KvCachePool {
+        Self::with_slots_layout(
+            host_cfg,
+            host_attn_dim,
+            n_slots,
+            max_seq,
+            precision,
+            modeled_bytes_per_session,
+            modeled_budget_bytes,
+            KvLayout::Slab,
+            0,
+            0,
+        )
+    }
+
+    /// Direct construction with explicit slot / page counts.
+    /// `page_tokens` and `n_pages` are ignored for the slab layout;
+    /// the paged modeled page bytes derive from
+    /// `modeled_bytes_per_session` (a page is `page_tokens / max_seq`
+    /// of a session, exactly — both are linear in token count).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_slots_layout(
+        host_cfg: &ModelConfig,
+        host_attn_dim: usize,
+        n_slots: usize,
+        max_seq: usize,
+        precision: KvPrecision,
+        modeled_bytes_per_session: f64,
+        modeled_budget_bytes: f64,
+        layout: KvLayout,
+        page_tokens: usize,
+        n_pages: usize,
+    ) -> KvCachePool {
         assert!(n_slots > 0);
-        let slots = (0..n_slots)
-            .map(|_| {
-                KvSlot::new(host_cfg.n_layers, max_seq, host_attn_dim,
-                            precision)
-            })
-            .collect();
+        let (slots, paged) = match layout {
+            KvLayout::Slab => {
+                let slots: Vec<KvSlot> = (0..n_slots)
+                    .map(|_| {
+                        KvSlot::new_slab(host_cfg.n_layers, max_seq,
+                                         host_attn_dim, precision)
+                    })
+                    .collect();
+                (slots, None)
+            }
+            KvLayout::Paged => {
+                let pt = page_tokens.clamp(1, max_seq.max(1));
+                assert!(n_pages > 0, "paged layout needs >= 1 page");
+                let slots: Vec<KvSlot> = (0..n_slots)
+                    .map(|_| {
+                        KvSlot::new_paged(max_seq, host_attn_dim,
+                                          precision, pt)
+                    })
+                    .collect();
+                let free: Vec<Arc<KvPage>> = (0..n_pages)
+                    .rev()
+                    .map(|id| {
+                        Arc::new(KvPage {
+                            id: id as u32,
+                            store: KvStore::new(host_cfg.n_layers, pt,
+                                                host_attn_dim, precision),
+                        })
+                    })
+                    .collect();
+                let modeled_page_bytes = modeled_bytes_per_session
+                    * pt as f64
+                    / max_seq.max(1) as f64;
+                (
+                    slots,
+                    Some(PagedState {
+                        free,
+                        page_tokens: pt,
+                        pages_total: n_pages,
+                        pages_peak: 0,
+                        prefix: HashMap::new(),
+                        stats: PagedStats::default(),
+                        clock: 0,
+                        modeled_page_bytes,
+                    }),
+                )
+            }
+        };
         KvCachePool {
             slots,
             free: (0..n_slots).rev().collect(),
             precision,
+            layout,
             seen: vec![false; n_slots],
             modeled_bytes_per_session,
             modeled_budget_bytes,
             peak_in_use: 0,
+            paged,
         }
     }
 
     pub fn precision(&self) -> KvPrecision {
         self.precision
+    }
+
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    /// Tokens per page (0 on the slab layout).
+    pub fn page_tokens(&self) -> usize {
+        self.paged.as_ref().map_or(0, |p| p.page_tokens)
     }
 
     pub fn capacity(&self) -> usize {
@@ -394,22 +911,63 @@ impl KvCachePool {
         self.peak_in_use
     }
 
-    /// Modeled deployment bytes currently pinned / at peak.
+    /// Longest session this pool can hold: `max_seq`, additionally
+    /// clamped by total page capacity on the paged layout (admission
+    /// uses this so a request that could never be paged in is rejected
+    /// up front rather than admitted and preempted forever).
+    pub fn session_token_capacity(&self) -> usize {
+        let max_seq = self.slots[0].max_seq;
+        match &self.paged {
+            None => max_seq,
+            Some(p) => max_seq.min(p.pages_total * p.page_tokens),
+        }
+    }
+
+    /// Modeled deployment bytes currently pinned at peak: whole-slab
+    /// sessions for slab, actually-touched pages for paged (the point
+    /// of the layout — short sessions stop pinning `max_seq` slack).
     pub fn modeled_peak_bytes(&self) -> f64 {
-        self.peak_in_use as f64 * self.modeled_bytes_per_session
+        match &self.paged {
+            None => self.peak_in_use as f64 * self.modeled_bytes_per_session,
+            Some(p) => p.pages_peak as f64 * p.modeled_page_bytes,
+        }
     }
 
     pub fn modeled_budget_bytes(&self) -> f64 {
         self.modeled_budget_bytes
     }
 
-    /// Host bytes of the whole preallocated slab.
+    /// Host bytes of the whole preallocated KV arena (each page
+    /// counted once, shared or not).
     pub fn host_slab_bytes(&self) -> usize {
-        self.slots.iter().map(|s| s.host_bytes()).sum()
+        match &self.paged {
+            None => self.slots.iter().map(|s| s.host_bytes()).sum(),
+            Some(p) => {
+                let per_page = p
+                    .free
+                    .first()
+                    .map(|pg| pg.store.host_bytes())
+                    .unwrap_or_else(|| {
+                        // free list drained: measure via any mapped page
+                        self.slots
+                            .iter()
+                            .find_map(|s| match &s.backing {
+                                KvBacking::Paged { pages, .. } => {
+                                    pages.first().map(|pg| pg.store.host_bytes())
+                                }
+                                KvBacking::Slab(_) => None,
+                            })
+                            .unwrap_or(0)
+                    });
+                p.pages_total * per_page
+            }
+        }
     }
 
     /// Claim a free slot; `None` when the budget is exhausted (callers
-    /// queue or reject — see `admission.rs`).
+    /// queue or reject — see `admission.rs`). Prefer
+    /// [`KvCachePool::admit`] on the serving path — it also maps
+    /// shared prefix pages and gates on page availability.
     pub fn alloc(&mut self) -> Option<usize> {
         let id = self.free.pop()?;
         self.slots[id].reset();
@@ -417,9 +975,231 @@ impl KvCachePool {
         Some(id)
     }
 
-    /// Return a slot to the free list.
+    /// Admit a session for `prompt`: claim a slot, and on the paged
+    /// layout map any published prefix pages into its table (the
+    /// session's prefill then resumes at `cached_tokens`) and gate on
+    /// page availability for the rest of the prompt — `None` either
+    /// when no slot is free or when the prompt's remaining pages could
+    /// not possibly be faulted in (callers keep the session queued).
+    /// `use_prefix` should be false when the serving backend does not
+    /// populate the native KV cache (the PJRT artifact path), since
+    /// reusing pages it never wrote would skip real computation.
+    pub fn admit(&mut self, prompt: &[i32], use_prefix: bool)
+                 -> Option<AdmitInfo> {
+        if self.paged.is_none() {
+            return self
+                .alloc()
+                .map(|slot| AdmitInfo { slot, cached_tokens: 0 });
+        }
+        let id = self.free.pop()?;
+        self.slots[id].reset();
+        let paged = self.paged.as_mut().expect("paged state");
+        let pt = paged.page_tokens;
+        paged.clock += 1;
+        let clock = paged.clock;
+        let mut cached = 0usize;
+        if use_prefix && prompt.len() > 1 {
+            // deepest published chain q*pt <= len-1: prefill must still
+            // compute >= 1 token to produce the first logits
+            let max_q = (prompt.len() - 1) / pt;
+            let mut h = FNV_OFFSET;
+            let mut matched: Vec<Arc<KvPage>> = Vec::new();
+            for q in 1..=max_q {
+                h = extend_hash(h, &prompt[(q - 1) * pt..q * pt]);
+                match paged.prefix.get_mut(&h) {
+                    Some(e) if e.tokens[..] == prompt[..q * pt] => {
+                        e.last_used = clock;
+                        matched.push(Arc::clone(&e.page));
+                    }
+                    _ => break,
+                }
+            }
+            cached = matched.len() * pt;
+            if let KvBacking::Paged { pages, .. } =
+                &mut self.slots[id].backing
+            {
+                *pages = matched;
+            }
+            self.slots[id].len = cached;
+        }
+        // pages-available gate: the rest of the prompt must be
+        // faultable (free now, or reclaimable from retired prefixes)
+        let needed = prompt
+            .len()
+            .div_ceil(pt)
+            .saturating_sub(self.slots[id].pages_mapped());
+        if paged.free.len() + evictable_prefix_pages(paged) < needed {
+            // roll back: unmap, return the slot, let the caller queue
+            if let KvBacking::Paged { pages, .. } =
+                &mut self.slots[id].backing
+            {
+                for p in pages.drain(..) {
+                    retire(&mut paged.free, p);
+                }
+            }
+            self.slots[id].len = 0;
+            self.free.push(id);
+            return None;
+        }
+        if use_prefix {
+            if cached > 0 {
+                paged.stats.prefix_hits += 1;
+                paged.stats.prefix_tokens_reused += cached as u64;
+            } else {
+                paged.stats.prefix_misses += 1;
+            }
+        }
+        paged.pages_peak = paged
+            .pages_peak
+            .max(paged.pages_total - paged.free.len());
+        self.peak_in_use = self.peak_in_use.max(self.in_use());
+        Some(AdmitInfo { slot: id, cached_tokens: cached })
+    }
+
+    /// Make positions `0..need` of slot `id` writable: on the paged
+    /// layout, fault unmapped pages in from the free list and
+    /// copy-on-write any page in the write range (`len..need`) that is
+    /// still shared with another table or the prefix index. Errors
+    /// when the pool is out of pages (serving preempts the session) or
+    /// `need` exceeds `max_seq`. A no-op beyond the bounds check for
+    /// slab slots, whose reservation is always whole and private.
+    pub fn ensure_capacity(&mut self, id: usize, need: usize) -> Result<()> {
+        let max_seq = self.slots[id].max_seq;
+        ensure!(
+            need <= max_seq,
+            "session needs {need} tokens > max_seq {max_seq}"
+        );
+        let Some(paged) = self.paged.as_mut() else {
+            return Ok(());
+        };
+        if need == 0 {
+            return Ok(());
+        }
+        let pt = paged.page_tokens;
+        let slot = &mut self.slots[id];
+        let KvBacking::Paged { pages, .. } = &mut slot.backing else {
+            unreachable!("paged pool with slab slot");
+        };
+        // pages the upcoming writes (positions len..need) can touch;
+        // everything below stays read-only and may remain shared
+        let first_write_page = slot.len / pt;
+        let last_page = (need - 1) / pt;
+        for idx in 0..=last_page {
+            if idx >= pages.len() {
+                let Some(page) = take_free_page(paged) else {
+                    bail!(
+                        "out of KV pages: slot {id} needs page {idx} \
+                         ({} total, all referenced)",
+                        paged.pages_total
+                    );
+                };
+                pages.push(page);
+                paged.stats.page_faults += 1;
+            } else if idx >= first_write_page
+                && Arc::strong_count(&pages[idx]) > 1
+            {
+                // copy-on-write: privatize before the write reaches it
+                let Some(mut fresh) = take_free_page(paged) else {
+                    bail!(
+                        "out of KV pages: slot {id} cannot privatize \
+                         shared page {idx} ({} total, all referenced)",
+                        paged.pages_total
+                    );
+                };
+                Arc::get_mut(&mut fresh)
+                    .expect("free page has one reference")
+                    .store
+                    .copy_from(&pages[idx].store);
+                let old = std::mem::replace(&mut pages[idx], fresh);
+                retire(&mut paged.free, old);
+                paged.stats.cow_copies += 1;
+            }
+        }
+        paged.pages_peak = paged
+            .pages_peak
+            .max(paged.pages_total - paged.free.len());
+        Ok(())
+    }
+
+    /// Publish slot `id`'s fully-computed prompt pages into the prefix
+    /// index so later sessions sharing the prefix skip prefill for it.
+    /// Only *full* pages wholly inside the prompt are published — the
+    /// owner's decode writes start at `prompt.len()`, so a published
+    /// page is never rewritten by its owner, and copy-on-write covers
+    /// everyone else. A no-op on the slab layout or while the prompt is
+    /// not fully cached. Callers on non-native backends (which never
+    /// write the KV cache) must not publish.
+    pub fn publish_prefix(&mut self, id: usize, prompt: &[i32]) {
+        let Some(paged) = self.paged.as_mut() else { return };
+        let slot = &self.slots[id];
+        if slot.len < prompt.len() {
+            return;
+        }
+        let pt = paged.page_tokens;
+        let n_full = prompt.len() / pt;
+        paged.clock += 1;
+        let clock = paged.clock;
+        let mut h = FNV_OFFSET;
+        for idx in 0..n_full {
+            h = extend_hash(h, &prompt[idx * pt..(idx + 1) * pt]);
+            let KvBacking::Paged { pages, .. } = &slot.backing else {
+                unreachable!("paged pool with slab slot");
+            };
+            let page = &pages[idx];
+            if let Some(e) = paged.prefix.get_mut(&h) {
+                if e.tokens[..] == prompt[..(idx + 1) * pt] {
+                    e.last_used = clock;
+                }
+                // hash collision with a different prefix: keep the
+                // incumbent (verification makes collisions harmless)
+                continue;
+            }
+            if paged.prefix.len() >= PREFIX_INDEX_CAP {
+                let victim = paged
+                    .prefix
+                    .iter()
+                    .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+                    .min_by_key(|(k, e)| (e.last_used, **k))
+                    .map(|(k, _)| *k);
+                let Some(victim) = victim else { continue };
+                let e = paged.prefix.remove(&victim).expect("victim");
+                paged.stats.prefix_evictions += 1;
+                retire(&mut paged.free, e.page);
+            }
+            paged.prefix.insert(
+                h,
+                PrefixEntry {
+                    page: Arc::clone(page),
+                    tokens: prompt[..(idx + 1) * pt].to_vec(),
+                    last_used: clock,
+                },
+            );
+        }
+    }
+
+    /// Drop every prefix-index entry, reclaiming pages only the index
+    /// still references (drain / shutdown path; also the fuzz suite's
+    /// full-reclamation lever).
+    pub fn clear_prefix_index(&mut self) {
+        let Some(paged) = self.paged.as_mut() else { return };
+        for (_, e) in paged.prefix.drain() {
+            retire(&mut paged.free, e.page);
+        }
+    }
+
+    /// Return a slot to the free list. On the paged layout its page
+    /// table is unmapped — pages nobody else references go back to the
+    /// page free list; pages shared with other tables or the prefix
+    /// index stay resident for their remaining holders.
     pub fn release(&mut self, id: usize) {
         debug_assert!(!self.free.contains(&id), "double release of {id}");
+        if let (Some(paged), KvBacking::Paged { pages, .. }) =
+            (self.paged.as_mut(), &mut self.slots[id].backing)
+        {
+            for p in pages.drain(..) {
+                retire(&mut paged.free, p);
+            }
+        }
         self.slots[id].reset();
         self.free.push(id);
     }
@@ -430,6 +1210,78 @@ impl KvCachePool {
 
     pub fn slot_mut(&mut self, id: usize) -> &mut KvSlot {
         &mut self.slots[id]
+    }
+
+    // ---- paged introspection (report + fuzz/parity test surface) ----
+
+    /// Total preallocated pages (0 on slab).
+    pub fn pages_total(&self) -> usize {
+        self.paged.as_ref().map_or(0, |p| p.pages_total)
+    }
+
+    /// Pages currently on the free list (0 on slab).
+    pub fn pages_free(&self) -> usize {
+        self.paged.as_ref().map_or(0, |p| p.free.len())
+    }
+
+    /// Pages currently referenced by >= 1 page table or prefix entry.
+    pub fn pages_used(&self) -> usize {
+        self.paged
+            .as_ref()
+            .map_or(0, |p| p.pages_total - p.free.len())
+    }
+
+    /// High-water mark of `pages_used` (0 on slab).
+    pub fn pages_peak(&self) -> usize {
+        self.paged.as_ref().map_or(0, |p| p.pages_peak)
+    }
+
+    /// Prefix-cache / allocator counters (all zero on slab).
+    pub fn paged_stats(&self) -> PagedStats {
+        self.paged.as_ref().map_or_else(PagedStats::default, |p| p.stats)
+    }
+
+    /// Live prefix-index entries.
+    pub fn prefix_index_len(&self) -> usize {
+        self.paged.as_ref().map_or(0, |p| p.prefix.len())
+    }
+
+    /// Modeled deployment bytes saved by prefix reuse so far
+    /// (`prefix_tokens_reused` at the modeled per-token KV cost).
+    pub fn prefix_bytes_saved_modeled(&self) -> f64 {
+        self.paged.as_ref().map_or(0.0, |p| {
+            p.stats.prefix_tokens_reused as f64 * p.modeled_page_bytes
+                / p.page_tokens as f64
+        })
+    }
+
+    /// (page id, Arc strong count) for every page mapped by slot `id`,
+    /// in table order. Empty on slab.
+    pub fn slot_page_refs(&self, id: usize) -> Vec<(u32, usize)> {
+        match &self.slots[id].backing {
+            KvBacking::Slab(_) => Vec::new(),
+            KvBacking::Paged { pages, .. } => pages
+                .iter()
+                .map(|p| (p.id, Arc::strong_count(p)))
+                .collect(),
+        }
+    }
+
+    /// (page id, Arc strong count) for every prefix-index entry.
+    pub fn prefix_page_refs(&self) -> Vec<(u32, usize)> {
+        self.paged.as_ref().map_or_else(Vec::new, |pg| {
+            pg.prefix
+                .values()
+                .map(|e| (e.page.id, Arc::strong_count(&e.page)))
+                .collect()
+        })
+    }
+
+    /// Page ids on the free list.
+    pub fn free_page_ids(&self) -> Vec<u32> {
+        self.paged
+            .as_ref()
+            .map_or_else(Vec::new, |p| p.free.iter().map(|pg| pg.id).collect())
     }
 
     /// Mutably borrow several distinct slots at once — the batched
@@ -486,6 +1338,16 @@ mod tests {
         pool_p(n, KvPrecision::F32)
     }
 
+    /// Paged pool: `n` slots, page size 4, `n_pages` pages, max_seq 16.
+    fn paged_pool(n: usize, n_pages: usize,
+                  precision: KvPrecision) -> KvCachePool {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let a = cfg.pruned(0).attn_dim(&cfg);
+        KvCachePool::with_slots_layout(&cfg, a, n, 16, precision, 1e6,
+                                       n as f64 * 1e6, KvLayout::Paged,
+                                       4, n_pages)
+    }
+
     #[test]
     fn alloc_release_cycle() {
         let mut p = pool(2);
@@ -531,6 +1393,39 @@ mod tests {
         let mut scratch = vec![0.0f32; a];
         assert_eq!(p.slot(id).k_row(1, 3, &mut scratch), &k[..]);
         assert_eq!(p.slot(id).v_row(1, 3, &mut scratch), &v[..]);
+    }
+
+    #[test]
+    fn paged_rows_match_slab_rows_bitwise() {
+        // the layout only changes *where* a row lives, never its
+        // value: writes through a page table read back == a slab's
+        let mut ps = pool_p(1, KvPrecision::Int8);
+        let mut pp = paged_pool(1, 8, KvPrecision::Int8);
+        let slab = ps.alloc().unwrap();
+        let paged = pp.admit(&[1, 2, 3], true).unwrap().slot;
+        pp.ensure_capacity(paged, 11).unwrap();
+        let a = ps.slot(slab).attn_dim;
+        let mut rng = Rng::new(7);
+        let mut s1 = vec![0.0f32; a];
+        let mut s2 = vec![0.0f32; a];
+        for t in 0..11 {
+            // positions 0..11 straddle pages 0, 1 and 2 at pt=4
+            let k = Tensor::randn(&[1, a], 1.0, &mut rng);
+            let v = Tensor::randn(&[1, a], 1.0, &mut rng);
+            for l in 0..2 {
+                ps.slot_mut(slab).write(l, t, k.row(0), v.row(0));
+                pp.slot_mut(paged).write(l, t, k.row(0), v.row(0));
+            }
+        }
+        for t in 0..11 {
+            for l in 0..2 {
+                assert_eq!(ps.slot(slab).k_row(l, t, &mut s1),
+                           pp.slot(paged).k_row(l, t, &mut s2));
+                assert_eq!(ps.slot(slab).v_row(l, t, &mut s1),
+                           pp.slot(paged).v_row(l, t, &mut s2));
+            }
+        }
+        assert_eq!(pp.slot(paged).pages_mapped(), 3);
     }
 
     #[test]
@@ -605,6 +1500,154 @@ mod tests {
     }
 
     #[test]
+    fn paged_budget_admits_2x_short_sessions() {
+        // the --kv-layout acceptance criterion: slab sizing reserves a
+        // worst-case max_seq slab per session, so a budget holding 6
+        // max-length sessions admits exactly 6 no matter how short the
+        // prompts are. The same budget in pages admits one short
+        // session per page — >= 2x more (here 4x: 24 pages of 16
+        // tokens vs 6 slabs of 64).
+        let host = ModelConfig::preset("tiny").unwrap();
+        let a = host.pruned(0).attn_dim(&host);
+        let paper = ModelConfig::paper_7b();
+        let per_f32 = memory::kv_bytes_per_session(&paper, 20, 64);
+        let gb = 6.0 * per_f32 / 1e9 + 1e-12;
+        let slab = KvCachePool::for_budget(&host, a, &paper, 20, 64,
+                                           KvPrecision::F32, gb, 512)
+            .unwrap();
+        assert_eq!(slab.capacity(), 6);
+        let mut paged = KvCachePool::for_budget_layout(
+            &host, a, &paper, 20, 64, KvPrecision::F32, gb, 512,
+            KvLayout::Paged, 16,
+        )
+        .unwrap();
+        assert_eq!(paged.pages_total(), 24,
+                   "6 slabs x 64 tokens = 24 pages x 16 tokens");
+        // short prompts (one page each): every page admits a session
+        let short: Vec<i32> = (0..10).collect();
+        let mut admitted = 0;
+        while let Some(info) = paged.admit(&short, false) {
+            // map the prompt's pages like prefill would
+            paged.ensure_capacity(info.slot, short.len()).unwrap();
+            admitted += 1;
+            if admitted > 100 {
+                break;
+            }
+        }
+        assert!(
+            admitted >= 2 * slab.capacity(),
+            "paged admitted {admitted} short sessions vs slab {}",
+            slab.capacity()
+        );
+        // and the modeled accounting stays within budget
+        assert!(paged.modeled_peak_bytes() <= paged.modeled_budget_bytes());
+    }
+
+    #[test]
+    fn prefix_reuse_shares_pages_and_cow_privatizes() {
+        let mut p = paged_pool(3, 12, KvPrecision::F32);
+        let a = p.slot(0).attn_dim;
+        let prompt: Vec<i32> = (0..9).collect(); // 2 full pages + 1
+        // session A computes and publishes
+        let ia = p.admit(&prompt, true).unwrap();
+        assert_eq!(ia.cached_tokens, 0);
+        p.ensure_capacity(ia.slot, prompt.len()).unwrap();
+        for t in 0..prompt.len() {
+            for l in 0..2 {
+                p.slot_mut(ia.slot)
+                    .write(l, t, &vec![t as f32; a], &vec![t as f32; a]);
+            }
+        }
+        p.slot_mut(ia.slot).advance_to(prompt.len());
+        p.publish_prefix(ia.slot, &prompt);
+        assert_eq!(p.prefix_index_len(), 2, "two full pages published");
+        // session B shares the deepest full-page chain: 8 tokens
+        let ib = p.admit(&prompt, true).unwrap();
+        assert_eq!(ib.cached_tokens, 8);
+        assert_eq!(p.paged_stats().prefix_hits, 1);
+        assert_eq!(p.paged_stats().prefix_tokens_reused, 8);
+        let a_ids: Vec<u32> =
+            p.slot_page_refs(ia.slot).iter().map(|r| r.0).collect();
+        let b_ids: Vec<u32> =
+            p.slot_page_refs(ib.slot).iter().map(|r| r.0).collect();
+        assert_eq!(&a_ids[..2], &b_ids[..2], "B maps A's pages");
+        // B diverges: rolling back into the shared span and writing
+        // must privatize, never touch A's copy
+        p.slot_mut(ib.slot).advance_to(4);
+        p.ensure_capacity(ib.slot, 6).unwrap();
+        assert!(p.paged_stats().cow_copies >= 1);
+        for l in 0..2 {
+            p.slot_mut(ib.slot)
+                .write(l, 5, &vec![99.0; a], &vec![99.0; a]);
+        }
+        assert_eq!(p.slot(ia.slot).k_at(0, 5), &vec![5.0; a][..],
+                   "A's page must be untouched by B's divergence");
+        assert_eq!(p.slot(ib.slot).k_at(0, 5), &vec![99.0; a][..]);
+        let b_ids2: Vec<u32> =
+            p.slot_page_refs(ib.slot).iter().map(|r| r.0).collect();
+        assert_ne!(a_ids[1], b_ids2[1], "page 1 privatized");
+    }
+
+    #[test]
+    fn paged_release_reclaims_only_unreferenced_pages() {
+        let mut p = paged_pool(2, 8, KvPrecision::F32);
+        let prompt: Vec<i32> = (0..8).collect();
+        let ia = p.admit(&prompt, true).unwrap();
+        p.ensure_capacity(ia.slot, 8).unwrap();
+        p.slot_mut(ia.slot).advance_to(8);
+        p.publish_prefix(ia.slot, &prompt);
+        let used_before = p.pages_used();
+        assert_eq!(used_before, 2);
+        // release A: pages survive in the prefix index
+        p.release(ia.slot);
+        assert_eq!(p.pages_used(), 2, "prefix index retains the pages");
+        assert_eq!(p.prefix_index_len(), 2);
+        // clearing the index reclaims everything
+        p.clear_prefix_index();
+        assert_eq!(p.pages_used(), 0);
+        assert_eq!(p.pages_free(), p.pages_total());
+    }
+
+    #[test]
+    fn admit_gates_on_page_availability() {
+        // 1 slot's worth of pages: a prompt needing more pages than
+        // exist is rejected up front; one fitting is admitted
+        let mut p = paged_pool(4, 2, KvPrecision::F32);
+        assert_eq!(p.session_token_capacity(), 8); // 2 pages x 4
+        let long: Vec<i32> = (0..12).collect(); // needs 3 pages
+        assert!(p.admit(&long, true).is_none());
+        assert_eq!(p.in_use(), 0, "failed admit must roll back the slot");
+        let ok: Vec<i32> = (0..7).collect();
+        let i = p.admit(&ok, true).unwrap();
+        p.ensure_capacity(i.slot, 7).unwrap();
+        // both pages consumed: the next session cannot be admitted
+        assert!(p.admit(&ok, true).is_none());
+        p.release(i.slot);
+        assert!(p.admit(&ok, true).is_some());
+    }
+
+    #[test]
+    fn page_pressure_evicts_lru_prefixes() {
+        let mut p = paged_pool(2, 2, KvPrecision::F32);
+        let prompt: Vec<i32> = (100..108).collect();
+        let i = p.admit(&prompt, true).unwrap();
+        p.ensure_capacity(i.slot, 8).unwrap();
+        p.slot_mut(i.slot).advance_to(8);
+        p.publish_prefix(i.slot, &prompt);
+        p.release(i.slot);
+        assert_eq!(p.pages_free(), 0);
+        assert_eq!(p.prefix_index_len(), 2);
+        // a different prompt needs pages: the retained prefixes are
+        // the only source and must be evicted LRU-first
+        let other: Vec<i32> = (200..206).collect();
+        let j = p.admit(&other, true).unwrap();
+        assert_eq!(j.cached_tokens, 0);
+        p.ensure_capacity(j.slot, 6).unwrap();
+        assert_eq!(p.paged_stats().prefix_evictions, 2);
+        assert_eq!(p.prefix_index_len(), 0);
+    }
+
+    #[test]
     fn slots_mut_many_rejects_aliasing_and_oob() {
         let mut p = pool(3);
         {
@@ -649,6 +1692,19 @@ mod tests {
                                         KvPrecision::F32,
                                         per / 1e9 * 0.5, 64)
             .is_err());
+        // paged: the page budget matches kv_page_bytes exactly
+        let page = memory::kv_page_bytes(&paper, 20, 16, 4.0);
+        let pp = KvCachePool::for_budget_layout(
+            &host, a, &paper, 20, 64, KvPrecision::F32, gb, 64,
+            KvLayout::Paged, 16,
+        )
+        .unwrap();
+        assert_eq!(pp.pages_total(), (gb * 1e9 / page).floor() as usize);
+        assert!(KvCachePool::for_budget_layout(
+            &host, a, &paper, 20, 64, KvPrecision::F32,
+            page / 1e9 * 0.5, 64, KvLayout::Paged, 16,
+        )
+        .is_err());
     }
 
     #[test]

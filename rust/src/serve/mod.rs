@@ -5,9 +5,12 @@
 //! `artifact::ModelArtifact` with its LoRA deltas, fed through
 //! `engine::EngineBuilder` — becomes a serving process:
 //! continuous-batching scheduler
-//! (`scheduler.rs`), slab-allocated KV-cache pool sized from the
-//! precision-aware accounting in `memory.rs` with selectable f32/int8
-//! KV storage (`kv_cache.rs`), per-session state with TTL eviction
+//! (`scheduler.rs`), a KV-cache pool sized from the precision-aware
+//! accounting in `memory.rs` with selectable f32/int8 KV storage and
+//! selectable slab or paged layout — the paged layout allocates
+//! fixed-size token pages from a free list and shares ref-counted
+//! prompt-prefix pages across sessions (`kv_cache.rs`), per-session
+//! state with TTL eviction
 //! (`session.rs`), admission control (`admission.rs`), a forward
 //! engine that prefers the PJRT AOT artifacts and otherwise decodes
 //! the whole active batch through fused per-layer GEMMs (`engine.rs`),
@@ -42,7 +45,7 @@ use crate::runtime::Runtime;
 use admission::AdmissionPolicy;
 use anyhow::{bail, ensure, Context, Result};
 use engine::EngineBuilder;
-use kv_cache::KvCachePool;
+use kv_cache::{KvCachePool, KvLayout};
 use scheduler::Scheduler;
 use std::path::PathBuf;
 use std::time::Instant;
@@ -71,7 +74,17 @@ pub struct ServeOpts {
     pub memory_arch: String,
     /// KV slot capacity in tokens (prompt + generated)
     pub max_seq: usize,
-    /// sampled prompt length range [lo, hi]
+    /// KV pool layout: whole-slab reservations or fixed-size pages
+    /// with prefix sharing
+    pub kv_layout: KvLayout,
+    /// page capacity in tokens (paged layout only)
+    pub page_tokens: usize,
+    /// every request's prompt starts with this many shared tokens (a
+    /// synthetic "system prompt"; 0 disables) — the workload knob that
+    /// exercises the paged layout's prefix cache
+    pub shared_prefix: usize,
+    /// sampled prompt length range [lo, hi]; with `shared_prefix` the
+    /// effective prompt is `shared_prefix + sampled` tokens
     pub prompt_len: (usize, usize),
     /// sampled generation budget range [lo, hi]
     pub max_new: (usize, usize),
@@ -107,6 +120,9 @@ impl ServeOpts {
             device_gb: 24.0,
             memory_arch: "7b".into(),
             max_seq: 28,
+            kv_layout: KvLayout::Slab,
+            page_tokens: 64,
+            shared_prefix: 0,
             prompt_len: (4, 10),
             max_new: (3, 12),
             temperature: 0.8,
@@ -144,6 +160,22 @@ pub struct ServeReport {
     pub lora: &'static str,
     /// KV-cache storage precision in bits (32 = f32, 8 = int8)
     pub kv_bits: u32,
+    /// KV pool layout: "slab" | "paged"
+    pub kv_layout: &'static str,
+    /// page capacity in tokens (0 on the slab layout)
+    pub page_tokens: usize,
+    /// page pool size / high-water mark (0 on the slab layout)
+    pub kv_pages_total: usize,
+    pub kv_pages_peak: usize,
+    /// prefix-cache traffic (paged layout; all 0 on slab)
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    /// prompt tokens whose prefill was skipped via shared pages
+    pub prefix_tokens_reused: u64,
+    /// shared pages privatized before a write
+    pub kv_cow_copies: u64,
+    /// modeled bytes of prefill KV the prefix cache avoided recomputing
+    pub kv_prefix_bytes_saved: f64,
     pub submitted: usize,
     pub completed: usize,
     pub rejected: usize,
@@ -290,6 +322,22 @@ impl ServeReport {
         push("kv sessions (peak/capacity)",
              format!("{}/{}", self.kv_peak_sessions,
                      self.kv_capacity_sessions));
+        push("kv layout", self.kv_layout.to_string());
+        if self.kv_layout == "paged" {
+            push("kv page tokens", format!("{}", self.page_tokens));
+            push("kv pages (peak/total)",
+                 format!("{}/{}", self.kv_pages_peak,
+                         self.kv_pages_total));
+            push("prefix hits/misses",
+                 format!("{}/{}", self.prefix_hits,
+                         self.prefix_misses));
+            push("prefix tokens reused",
+                 format!("{}", self.prefix_tokens_reused));
+            push("kv cow copies", format!("{}", self.kv_cow_copies));
+            push("kv prefix bytes saved (modeled)",
+                 format!("{:.2} MB",
+                         self.kv_prefix_bytes_saved / 1e6));
+        }
         push("kv modeled peak",
              format!("{:.3} GB", self.kv_modeled_peak_bytes / 1e9));
         push("kv modeled budget",
@@ -324,7 +372,12 @@ impl ServeReport {
         let ph = &self.phases;
         format!(
             "{{\"name\":{},\"backend\":{},\"bits\":{},\"lora\":{},\
-             \"kv_bits\":{},\"requests_submitted\":{},\
+             \"kv_bits\":{},\"kv_layout\":{},\"page_tokens\":{},\
+             \"kv_pages_total\":{},\"kv_pages_peak\":{},\
+             \"prefix_hits\":{},\"prefix_misses\":{},\
+             \"prefix_tokens_reused\":{},\"kv_cow_copies\":{},\
+             \"kv_prefix_bytes_saved\":{:.0},\
+             \"requests_submitted\":{},\
              \"requests_completed\":{},\"requests_rejected\":{},\
              \"tokens_per_sec\":{:.3},\"p50_ms\":{},\
              \"p95_ms\":{},\"p99_ms\":{},\"ttft_p50_ms\":{},\
@@ -346,6 +399,15 @@ impl ServeReport {
             json_str(&self.bits_short),
             json_str(self.lora),
             self.kv_bits,
+            json_str(self.kv_layout),
+            self.page_tokens,
+            self.kv_pages_total,
+            self.kv_pages_peak,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_tokens_reused,
+            self.kv_cow_copies,
+            self.kv_prefix_bytes_saved,
             self.submitted,
             self.completed,
             self.rejected,
@@ -524,9 +586,12 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
     // whose larger length combinations exceed max_seq are legitimate —
     // those requests exercise the RejectReason::TooLong shedding path
     ensure!(
-        opts.prompt_len.0 + opts.max_new.0 - 1 <= opts.max_seq,
-        "even the smallest request (prompt {} + new {} tokens) exceeds \
-         max_seq {} — every request would be rejected",
+        opts.shared_prefix + opts.prompt_len.0 + opts.max_new.0 - 1
+            <= opts.max_seq,
+        "even the smallest request (shared prefix {} + prompt {} + new \
+         {} tokens) exceeds max_seq {} — every request would be \
+         rejected",
+        opts.shared_prefix,
         opts.prompt_len.0,
         opts.max_new.0,
         opts.max_seq
@@ -580,7 +645,7 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
     } else {
         0
     };
-    let pool = KvCachePool::for_budget(
+    let pool = KvCachePool::for_budget_layout(
         &host_cfg,
         engine.attn_dim(),
         &arch,
@@ -589,8 +654,16 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
         engine.kv_precision(),
         budget_gb,
         opts.max_batch + stall_allowance,
+        opts.kv_layout,
+        opts.page_tokens,
     )?;
-    let admission = AdmissionPolicy::new(opts.max_queue, opts.max_seq);
+    // the paged pool may hold fewer total page-tokens than max_seq;
+    // shed sessions that could never be faulted in at the door
+    let admission = AdmissionPolicy::with_token_capacity(
+        opts.max_queue,
+        opts.max_seq,
+        pool.session_token_capacity(),
+    );
     let mut sched =
         Scheduler::new(pool, admission, opts.max_batch, opts.ttl_steps);
     if want_trace {
@@ -613,6 +686,14 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
         })
         .collect();
     let mut workload_rng = Rng::new(opts.seed ^ 0x5E47E);
+    // one fixed "system prompt" every request starts with — the
+    // workload signal the paged layout's prefix cache keys on
+    let shared: Vec<i32> = if opts.shared_prefix > 0 {
+        let mut rng = Rng::new(opts.seed ^ 0x5F1_E0);
+        lang.sample(opts.shared_prefix, &mut rng)
+    } else {
+        Vec::new()
+    };
 
     let t0 = Instant::now();
     let max_steps: u64 = 50_000 + 200 * opts.requests as u64;
@@ -626,7 +707,8 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
                 + c.rng.below(opts.prompt_len.1 - opts.prompt_len.0 + 1);
             let mnew = opts.max_new.0
                 + c.rng.below(opts.max_new.1 - opts.max_new.0 + 1);
-            let prompt = lang.sample(plen, &mut c.rng);
+            let mut prompt = shared.clone();
+            prompt.extend(lang.sample(plen, &mut c.rng));
             c.remaining -= 1;
             c.outstanding = sched.submit(ci, prompt, mnew,
                                          opts.seed, opts.temperature);
@@ -728,6 +810,16 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
                         sched.stats.generated_tokens);
         reg.counter_add("serve.scratch_grows", scratch_grows);
         reg.counter_add("serve.scratch_reuses", scratch_reuses);
+        let pstats = sched.pool.paged_stats();
+        reg.counter_add("serve.prefix_hits", pstats.prefix_hits);
+        reg.counter_add("serve.prefix_misses", pstats.prefix_misses);
+        reg.counter_add("serve.prefix_tokens_reused",
+                        pstats.prefix_tokens_reused);
+        reg.counter_add("serve.kv_cow_copies", pstats.cow_copies);
+        reg.gauge_set("serve.kv_pages_total",
+                      sched.pool.pages_total() as f64);
+        reg.gauge_set("serve.kv_pages_peak",
+                      sched.pool.pages_peak() as f64);
         reg.gauge_set(
             "serve.tokens_per_sec",
             if wall > 0.0 {
@@ -755,11 +847,21 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
         memory::weight_bytes_at(&arch, rate, &stretched);
 
     let st = &sched.stats;
+    let pstats = sched.pool.paged_stats();
     Ok(ServeReport {
         backend: engine.backend_label(),
         bits_short: bits.short(),
         lora: engine.lora_label(),
         kv_bits: sched.pool.precision().bits(),
+        kv_layout: sched.pool.layout().label(),
+        page_tokens: sched.pool.page_tokens(),
+        kv_pages_total: sched.pool.pages_total(),
+        kv_pages_peak: sched.pool.pages_peak(),
+        prefix_hits: pstats.prefix_hits,
+        prefix_misses: pstats.prefix_misses,
+        prefix_tokens_reused: pstats.prefix_tokens_reused,
+        kv_cow_copies: pstats.cow_copies,
+        kv_prefix_bytes_saved: sched.pool.prefix_bytes_saved_modeled(),
         submitted: st.submitted,
         completed: st.completed,
         rejected: st.rejected,
@@ -841,6 +943,15 @@ mod tests {
             bits_short: "44".into(),
             lora: "merged",
             kv_bits: 8,
+            kv_layout: "paged",
+            page_tokens: 16,
+            kv_pages_total: 24,
+            kv_pages_peak: 20,
+            prefix_hits: 5,
+            prefix_misses: 3,
+            prefix_tokens_reused: 80,
+            kv_cow_copies: 2,
+            kv_prefix_bytes_saved: 3.2e7,
             submitted: 10,
             completed: 8,
             rejected: 2,
@@ -884,12 +995,22 @@ mod tests {
         assert!(md.contains("weight residency"));
         assert!(md.contains("quantized"));
         assert!(md.contains("decode threads"));
+        // paged-layout lines render alongside the slab accounting
+        assert!(md.contains("kv layout"));
+        assert!(md.contains("paged"));
+        assert!(md.contains("20/24"));
+        assert!(md.contains("prefix hits/misses"));
+        assert!(md.contains("5/3"));
         // machine-readable twin of the table
         let j = r.to_json("smoke_cfg");
         assert!(j.contains("\"name\":\"smoke_cfg\""));
         assert!(j.contains("\"tokens_per_sec\":140.000"));
         assert!(j.contains("\"lora\":\"merged\""));
         assert!(j.contains("\"kv_bits\":8"));
+        assert!(j.contains("\"kv_layout\":\"paged\""));
+        assert!(j.contains("\"prefix_hits\":5"));
+        assert!(j.contains("\"prefix_tokens_reused\":80"));
+        assert!(j.contains("\"kv_pages_peak\":20"));
         assert!(j.contains("\"weight_residency\":\"quantized\""));
         assert!(j.contains("\"weight_resident_bytes\":2500000"));
         assert!(j.contains("\"threads\":4"));
@@ -936,6 +1057,15 @@ mod tests {
             bits_short: "44".into(),
             lora: "none",
             kv_bits: 32,
+            kv_layout: "slab",
+            page_tokens: 0,
+            kv_pages_total: 0,
+            kv_pages_peak: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_tokens_reused: 0,
+            kv_cow_copies: 0,
+            kv_prefix_bytes_saved: 0.0,
             submitted: 3,
             completed: 0,
             rejected: 3,

@@ -202,20 +202,41 @@ impl Scheduler {
                 workload_rng: &mut Rng, stall_prob: f64) -> Result<()> {
         self.step_no += 1;
 
-        // 1. admit: fill free slots, up to the batch cap
+        // 1. admit: fill free slots, up to the batch cap. On the
+        // paged layout `KvCachePool::admit` also maps published prefix
+        // pages into the new session's table (prefill resumes past the
+        // shared span) and gates on page availability, so a session is
+        // only admitted when its whole prompt can be faulted in.
+        let native = engine.is_native();
         while self.active.len() < self.max_batch {
             let Some(&front) = self.queue.front() else { break };
-            let Some(slot) = self.pool.alloc() else { break };
+            let (prompt, temperature) = {
+                let s = self.table.get(front);
+                (s.prompt.clone(), s.temperature)
+            };
+            // prefix reuse requires a backend that actually writes the
+            // native KV cache; the artifact backend re-forwards
+            let Some(info) = self.pool.admit(&prompt, native) else {
+                break;
+            };
+            let slot = info.slot;
             self.queue.pop_front();
             if let Some(tr) = self.tracer.as_mut() {
                 tr.on_admitted(front, Instant::now());
             }
-            let (prompt, temperature) = {
+            {
                 let s = self.table.get_mut(front);
                 s.state = SessionState::Active;
                 s.slot = Some(slot);
-                (s.prompt.clone(), s.temperature)
-            };
+            }
+            // fault the non-cached prompt pages in (no-op on slab;
+            // `admit` just gated on availability, so an error here is
+            // an allocator invariant break, not load)
+            if let Err(e) = self.pool.ensure_capacity(slot, prompt.len())
+            {
+                self.fail_session(front);
+                return Err(e);
+            }
             let logits = match engine.prefill(
                 rt,
                 self.pool.slot_mut(slot),
@@ -229,6 +250,11 @@ impl Scheduler {
                     return Err(e);
                 }
             };
+            // share the freshly computed prompt pages with future
+            // sessions (no-op on slab / for partial pages)
+            if native {
+                self.pool.publish_prefix(slot, &prompt);
+            }
             let t_first = Instant::now();
             let s = self.table.get_mut(front);
             let tok = sample_token(&logits, temperature, &mut s.rng);
@@ -242,7 +268,10 @@ impl Scheduler {
             if let Some(tr) = self.tracer.as_mut() {
                 tr.on_first_token(front, t_first);
             }
-            self.stats.prefill_tokens += prompt.len() as u64;
+            // only the computed tail costs prefill work — the cached
+            // span was mapped, not recomputed
+            self.stats.prefill_tokens +=
+                (prompt.len() - info.cached_tokens) as u64;
             self.stats.generated_tokens += 1;
             if s.is_finished() {
                 self.finish(front);
@@ -279,6 +308,27 @@ impl Scheduler {
                 self.stats.max_occupancy.max(occupancy);
         }
         if occupancy > 0 && engine.is_native() {
+            // paged layout: fault each session's next write position in
+            // before the fused step (no-op on slab, where capacity was
+            // reserved whole at admit). A session that cannot grow —
+            // the page budget is exhausted and no prefix page is
+            // evictable — is preempted (evicted and counted) rather
+            // than failing the whole batch.
+            let mut i = 0;
+            while i < self.active.len() {
+                let id = self.active[i];
+                let (slot, need) = {
+                    let s = self.table.get(id);
+                    (s.slot.expect("active session without slot"),
+                     s.prompt.len() + s.generated.len())
+                };
+                if self.pool.ensure_capacity(slot, need).is_err() {
+                    self.active.swap_remove(i);
+                    self.evict_session(id);
+                } else {
+                    i += 1;
+                }
+            }
             self.reqs_buf.clear();
             for &id in &self.active {
                 let s = self.table.get(id);

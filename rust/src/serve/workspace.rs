@@ -16,6 +16,10 @@
 //! writing a disjoint region. The reference (oracle) logits path also
 //! borrows `normed`/`logits` here instead of allocating two fresh
 //! `Vec`s per sampled token.
+//!
+//! The buffers are KV-layout agnostic: attention gathers history
+//! through `KvSlot::{k_row,v_row}` into `kv_row`, so slab and paged
+//! slots feed the identical scratch and the identical GEMMs.
 
 /// Scratch buffers for one engine. All matrices are row-major with the
 /// batch as the leading axis; capacities are `batch_cap * dim`.

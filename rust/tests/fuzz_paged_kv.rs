@@ -1,0 +1,273 @@
+//! Seeded fuzz suite for the paged KV allocator: hundreds of random
+//! admit / write / decode-grow / release / index-clear events against
+//! a small page pool under real pressure (fewer pages than the slots
+//! could demand), with the allocator's conservation invariants checked
+//! after **every** event:
+//!
+//! 1. no page is mapped twice within one session's table;
+//! 2. every page's `Arc` strong count equals the number of page
+//!    tables plus prefix-index entries referencing it (the free list
+//!    holds the only reference to a free page);
+//! 3. free pages are disjoint from referenced pages, and
+//!    `free + distinct-referenced == pages_total` — pages are neither
+//!    leaked nor double-issued;
+//! 4. a session's cached length never exceeds its mapped pages.
+//!
+//! After the final drain (release every session, clear the prefix
+//! index) the pool must be fully reclaimed: zero used pages, empty
+//! prefix index, every page back on the free list.
+//!
+//! The event mix deliberately reuses a few canonical "system prompt"
+//! prefixes so the prefix index gets hits, copy-on-write triggers on
+//! decode divergence, and page-pressure eviction fires (`KvSlot::write`
+//! panics if copy-on-write ever under-privatizes, so that failure mode
+//! is caught here too).
+
+use qpruner::model::ModelConfig;
+use qpruner::rng::Rng;
+use qpruner::serve::kv_cache::{KvCachePool, KvLayout, KvPrecision};
+use std::collections::{HashMap, HashSet};
+
+const ATTN_DIM: usize = 8;
+const MAX_SEQ: usize = 16;
+const PAGE_TOKENS: usize = 4;
+const N_SLOTS: usize = 6;
+/// fewer pages than the slots could demand (6 * 4 = 24), so faulting
+/// hits the free-list-empty path and prefix eviction under pressure
+const N_PAGES: usize = 20;
+const EVENTS: usize = 650;
+
+fn paged_pool(precision: KvPrecision) -> (ModelConfig, KvCachePool) {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let pool = KvCachePool::with_slots_layout(
+        &cfg, ATTN_DIM, N_SLOTS, MAX_SEQ, precision, 1.0,
+        N_SLOTS as f64, KvLayout::Paged, PAGE_TOKENS, N_PAGES,
+    );
+    (cfg, pool)
+}
+
+/// A live fuzz session: its slot id and cached token count.
+struct Live {
+    id: usize,
+    len: usize,
+}
+
+/// Write one deterministic KV row per layer at position `t`.
+fn write_token(pool: &mut KvCachePool, n_layers: usize, id: usize,
+               t: usize) {
+    let k = vec![t as f32 + 1.0; ATTN_DIM];
+    let v = vec![-(t as f32) - 1.0; ATTN_DIM];
+    let slot = pool.slot_mut(id);
+    for layer in 0..n_layers {
+        slot.write(layer, t, &k, &v);
+    }
+    slot.advance_to(t + 1);
+}
+
+/// The allocator conservation invariants, checked after every event.
+fn check_invariants(pool: &KvCachePool, live: &[Live], ctx: &str) {
+    // how many holders reference each page id right now
+    let mut held: HashMap<u32, usize> = HashMap::new();
+    // (page id, strong count) observations to verify against `held`
+    let mut observed: Vec<(u32, usize)> = Vec::new();
+
+    for s in live {
+        let refs = pool.slot_page_refs(s.id);
+        // 1. no double-assignment within one table
+        let distinct: HashSet<u32> =
+            refs.iter().map(|&(id, _)| id).collect();
+        assert_eq!(distinct.len(), refs.len(),
+                   "{ctx}: slot {} maps a page twice: {refs:?}", s.id);
+        // 4. cached length is backed by mapped pages
+        assert!(refs.len() * PAGE_TOKENS >= s.len,
+                "{ctx}: slot {} caches {} tokens over {} pages",
+                s.id, s.len, refs.len());
+        for (id, strong) in refs {
+            *held.entry(id).or_insert(0) += 1;
+            observed.push((id, strong));
+        }
+    }
+    for (id, strong) in pool.prefix_page_refs() {
+        *held.entry(id).or_insert(0) += 1;
+        observed.push((id, strong));
+    }
+    // 2. strong counts equal the number of referencing holders
+    for (id, strong) in observed {
+        assert_eq!(
+            strong,
+            held[&id],
+            "{ctx}: page {id} has strong count {strong} but {} \
+             holders reference it",
+            held[&id]
+        );
+    }
+    // 3. free pages are unique, disjoint from referenced pages, and
+    // conservation holds: free + distinct-referenced == total
+    let free = pool.free_page_ids();
+    let free_set: HashSet<u32> = free.iter().copied().collect();
+    assert_eq!(free_set.len(), free.len(),
+               "{ctx}: duplicate page on the free list: {free:?}");
+    for id in held.keys() {
+        assert!(!free_set.contains(id),
+                "{ctx}: page {id} is both free and referenced");
+    }
+    assert_eq!(
+        free.len() + held.len(),
+        pool.pages_total(),
+        "{ctx}: page conservation broken (free {} + used {} != \
+         total {})",
+        free.len(),
+        held.len(),
+        pool.pages_total()
+    );
+    assert_eq!(pool.pages_free() + pool.pages_used(),
+               pool.pages_total(), "{ctx}: free/used accounting");
+    assert_eq!(pool.pages_used(), held.len(),
+               "{ctx}: pages_used() disagrees with the tables");
+}
+
+/// Canonical shared prefixes (2 full pages each) the workload reuses,
+/// plus per-event random tails — the mix that drives prefix hits,
+/// verified lookups, and CoW divergence.
+fn make_prompt(rng: &mut Rng) -> Vec<i32> {
+    let shared = rng.below(4) as i32;
+    let mut prompt: Vec<i32> = if shared < 3 {
+        (0..2 * PAGE_TOKENS as i32)
+            .map(|j| 100 * shared + j)
+            .collect()
+    } else {
+        // unshared prompt, random length >= 1
+        (0..1 + rng.below(4)).map(|j| 7_000 + j as i32).collect()
+    };
+    for j in 0..rng.below(MAX_SEQ - prompt.len() - 2) {
+        prompt.push(50_000 + rng.below(1_000) as i32 + j as i32);
+    }
+    prompt
+}
+
+fn run_fuzz(precision: KvPrecision, seed: u64) {
+    let (cfg, mut pool) = paged_pool(precision);
+    let n_layers = cfg.n_layers;
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<Live> = Vec::new();
+    let mut admitted = 0usize;
+    let mut grew = 0usize;
+
+    for ev in 0..EVENTS {
+        let ctx = format!("{precision:?} seed {seed} event {ev}");
+        match rng.below(10) {
+            // admit a session, prefill-write its non-cached span,
+            // publish its prompt pages
+            0..=3 => {
+                let prompt = make_prompt(&mut rng);
+                if let Some(info) = pool.admit(&prompt, true) {
+                    assert!(info.cached_tokens < prompt.len(),
+                            "{ctx}: reuse must leave >= 1 token to \
+                             compute");
+                    assert_eq!(info.cached_tokens % PAGE_TOKENS, 0,
+                               "{ctx}: reuse is page-granular");
+                    // the admit gate promised the prompt is mappable
+                    pool.ensure_capacity(info.slot, prompt.len())
+                        .unwrap_or_else(|e| panic!(
+                            "{ctx}: admit-gated fault failed: {e}"));
+                    for t in info.cached_tokens..prompt.len() {
+                        write_token(&mut pool, n_layers, info.slot, t);
+                    }
+                    pool.publish_prefix(info.slot, &prompt);
+                    live.push(Live { id: info.slot,
+                                     len: prompt.len() });
+                    admitted += 1;
+                }
+            }
+            // decode-grow a random session by one token (CoW fires
+            // when its next page is shared); preempt on page OOM
+            4..=6 => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    if live[i].len < MAX_SEQ {
+                        let (id, len) = (live[i].id, live[i].len);
+                        if pool.ensure_capacity(id, len + 1).is_ok() {
+                            write_token(&mut pool, n_layers, id, len);
+                            live[i].len += 1;
+                            grew += 1;
+                        } else {
+                            pool.release(id);
+                            live.swap_remove(i);
+                        }
+                    }
+                }
+            }
+            // finish a random session
+            7 => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    pool.release(live[i].id);
+                    live.swap_remove(i);
+                }
+            }
+            // rewind & rewrite: re-derive a suffix of the cache (the
+            // bench's slot-reuse pattern; also how a speculative
+            // rollback would look). The write range now overlaps
+            // published pages, so this is the event that forces
+            // copy-on-write — `KvSlot::write` panics if
+            // `ensure_capacity` under-privatizes
+            8 => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let (id, len) = (live[i].id, live[i].len);
+                    let cut = rng.below(len);
+                    pool.slot_mut(id).advance_to(cut);
+                    if pool.ensure_capacity(id, len).is_ok() {
+                        for t in cut..len {
+                            write_token(&mut pool, n_layers, id, t);
+                        }
+                    } else {
+                        // page OOM privatizing: preempt like serving
+                        pool.release(id);
+                        live.swap_remove(i);
+                    }
+                }
+            }
+            // rare: drop the whole prefix index mid-run
+            _ => {
+                if rng.below(8) == 0 {
+                    pool.clear_prefix_index();
+                }
+            }
+        }
+        check_invariants(&pool, &live, &ctx);
+    }
+
+    // the mix must actually have exercised the interesting paths
+    assert!(admitted > 30, "only {admitted} admissions — dead mix");
+    assert!(grew > 30, "only {grew} decode growths — dead mix");
+    let stats = pool.paged_stats();
+    assert!(stats.prefix_hits > 0, "prefix cache never hit");
+    assert!(stats.cow_copies > 0, "copy-on-write never fired");
+    assert!(stats.page_faults > 0, "no page was ever faulted");
+
+    // final drain: everything must come back
+    for s in live.drain(..) {
+        pool.release(s.id);
+    }
+    pool.clear_prefix_index();
+    check_invariants(&pool, &[], "post-drain");
+    assert_eq!(pool.pages_used(), 0, "pages leaked after drain");
+    assert_eq!(pool.pages_free(), pool.pages_total());
+    assert_eq!(pool.prefix_index_len(), 0);
+    assert_eq!(pool.in_use(), 0, "slots leaked after drain");
+}
+
+#[test]
+fn fuzz_paged_allocator_f32() {
+    for seed in [7u64, 1311] {
+        run_fuzz(KvPrecision::F32, seed);
+    }
+}
+
+#[test]
+fn fuzz_paged_allocator_int8() {
+    for seed in [23u64, 4242] {
+        run_fuzz(KvPrecision::Int8, seed);
+    }
+}

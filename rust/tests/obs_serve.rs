@@ -16,7 +16,7 @@ use qpruner::rng::Rng;
 use qpruner::runtime::Runtime;
 use qpruner::serve::admission::AdmissionPolicy;
 use qpruner::serve::engine::{Engine, EngineBuilder};
-use qpruner::serve::kv_cache::{KvCachePool, KvPrecision};
+use qpruner::serve::kv_cache::{KvCachePool, KvLayout, KvPrecision};
 use qpruner::serve::scheduler::Scheduler;
 use qpruner::serve::{run_workload, ServeOpts};
 use std::time::Duration;
@@ -258,6 +258,144 @@ fn traced_workload_exports_valid_artifacts() {
         counters.get("serve.generated_tokens").unwrap().as_f64(),
         Some(r.generated_tokens as f64)
     );
+}
+
+/// Prefix-cache accounting end-to-end through the scheduler: N
+/// sessions sharing one prompt produce exactly N-1 prefix hits (the
+/// first session publishes, every later one resumes), the reused-token
+/// count is page-granular, and the modeled bytes-saved line agrees
+/// with the `memory.rs` page model exactly.
+#[test]
+fn shared_prefix_accounting_matches_memory_model() {
+    const PAGE_TOKENS: usize = 4;
+    const N: usize = 4;
+    let mut rt = runtime();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 21);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let engine = EngineBuilder::new()
+        .store(&store, &bits)
+        .max_seq(MAX_SEQ)
+        .build(&mut rt)
+        .unwrap();
+    // modeled per-session bytes from the paper-arch accounting, so the
+    // pool's per-page model is the exact page fraction of it
+    let arch = ModelConfig::paper_7b();
+    let modeled_bps = qpruner::memory::kv_bytes_per_session_at(
+        &arch, 0, MAX_SEQ, 4.0);
+    let pool = KvCachePool::with_slots_layout(
+        &cfg, engine.attn_dim(), N, MAX_SEQ, KvPrecision::F32,
+        modeled_bps, N as f64 * modeled_bps, KvLayout::Paged,
+        PAGE_TOKENS, 12,
+    );
+    let mut sched = Scheduler::new(
+        pool, AdmissionPolicy::new(16, MAX_SEQ), N, 8);
+
+    // one shared 9-token prompt: 2 full pages published, prefill
+    // resumes at token 8 for every follower
+    let prompt: Vec<i32> = (0..9).collect();
+    for c in 0..N {
+        sched.submit(c, prompt.clone(), 3, 7, 0.8).unwrap();
+    }
+    drain(&mut rt, &engine, &mut sched);
+    assert_eq!(sched.stats.completed, N);
+
+    let stats = sched.pool.paged_stats();
+    assert_eq!(stats.prefix_misses, 1, "first session must miss");
+    assert_eq!(stats.prefix_hits, (N - 1) as u64,
+               "every follower must hit");
+    let reused_per_hit = 2 * PAGE_TOKENS as u64; // both full pages
+    assert_eq!(stats.prefix_tokens_reused,
+               (N - 1) as u64 * reused_per_hit);
+    // the first session prefilled all 9 tokens; followers computed
+    // only the single non-cached position
+    assert_eq!(sched.stats.prefill_tokens,
+               prompt.len() as u64 + (N - 1) as u64);
+
+    // bytes-saved agrees with memory.rs's page model: reused tokens
+    // at the modeled per-page cost
+    let page_bytes =
+        qpruner::memory::kv_page_bytes(&arch, 0, PAGE_TOKENS, 4.0);
+    let want = (N - 1) as f64 * 2.0 * page_bytes;
+    let got = sched.pool.prefix_bytes_saved_modeled();
+    assert!(
+        ((got - want) / want).abs() < 1e-9,
+        "bytes saved {got} != modeled {want}"
+    );
+
+    // after the drain only the published pages stay resident, held by
+    // the prefix index for the next wave
+    assert_eq!(sched.pool.prefix_index_len(), 2);
+    assert_eq!(sched.pool.pages_used(), 2);
+}
+
+/// Copy-on-write divergence safety at the pool level: a session that
+/// rewrites positions covered by shared pages gets private copies, and
+/// neither the co-resident session nor the prefix index observes the
+/// new values.
+#[test]
+fn cow_divergence_never_mutates_shared_pages() {
+    const PAGE_TOKENS: usize = 4;
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let mut pool = KvCachePool::with_slots_layout(
+        &cfg, 8, 3, MAX_SEQ, KvPrecision::F32, 1.0, 3.0,
+        KvLayout::Paged, PAGE_TOKENS, 12,
+    );
+    let prompt: Vec<i32> = (100..109).collect();
+    let write = |pool: &mut KvCachePool, id: usize, t: usize,
+                 val: f32| {
+        let slot = pool.slot_mut(id);
+        let k = vec![val; 8];
+        let v = vec![-val; 8];
+        for layer in 0..cfg.n_layers {
+            slot.write(layer, t, &k, &v);
+        }
+        slot.advance_to(t + 1);
+    };
+
+    let a = pool.admit(&prompt, true).unwrap();
+    assert_eq!(a.cached_tokens, 0);
+    pool.ensure_capacity(a.slot, prompt.len()).unwrap();
+    for t in 0..prompt.len() {
+        write(&mut pool, a.slot, t, t as f32 + 1.0);
+    }
+    pool.publish_prefix(a.slot, &prompt);
+    assert_eq!(pool.prefix_index_len(), 2);
+
+    let b = pool.admit(&prompt, true).unwrap();
+    assert_eq!(b.cached_tokens, 2 * PAGE_TOKENS);
+    // B shares pages 0 and 1 with A and the index (strong count 3)
+    for (idx, &(_, strong)) in
+        pool.slot_page_refs(b.slot).iter().enumerate()
+    {
+        assert_eq!(strong, 3, "page {idx} should be 3-way shared");
+    }
+
+    // B diverges from token 4 on: page 1 must be privatized, page 0
+    // stays shared
+    pool.slot_mut(b.slot).advance_to(PAGE_TOKENS);
+    pool.ensure_capacity(b.slot, prompt.len()).unwrap();
+    for t in PAGE_TOKENS..prompt.len() {
+        write(&mut pool, b.slot, t, 1000.0 + t as f32);
+    }
+    assert!(pool.paged_stats().cow_copies >= 1, "CoW did not fire");
+    let b_refs = pool.slot_page_refs(b.slot);
+    assert_eq!(b_refs[0].1, 3, "page 0 must stay shared");
+    assert_eq!(b_refs[1].1, 1, "page 1 must be private after CoW");
+
+    // A's values (and therefore the published pages) are untouched;
+    // B reads its own divergent copy
+    for t in PAGE_TOKENS..2 * PAGE_TOKENS {
+        assert_eq!(pool.slot(a.slot).k_at(0, t)[0], t as f32 + 1.0,
+                   "shared page mutated under CoW");
+        assert_eq!(pool.slot(b.slot).k_at(0, t)[0], 1000.0 + t as f32);
+    }
+    // a third session still reuses the *original* prefix pages
+    let c = pool.admit(&prompt, true).unwrap();
+    assert_eq!(c.cached_tokens, 2 * PAGE_TOKENS);
+    for t in 0..2 * PAGE_TOKENS {
+        assert_eq!(pool.slot(c.slot).k_at(0, t)[0], t as f32 + 1.0);
+    }
 }
 
 /// An untraced run must not pay for tracing: no trace files, no raw

@@ -25,7 +25,7 @@ use qpruner::model::{ModelConfig, ParamStore};
 use qpruner::quant::{BitConfig, QuantFormat};
 use qpruner::runtime::Runtime;
 use qpruner::serve::engine::{BatchReq, Engine, EngineBuilder};
-use qpruner::serve::kv_cache::{KvCachePool, KvPrecision};
+use qpruner::serve::kv_cache::{KvCachePool, KvLayout, KvPrecision};
 
 const MAX_SEQ: usize = 24;
 const DECODE_STEPS: usize = 6;
@@ -100,6 +100,17 @@ fn pool_for(engine: &Engine, cfg: &ModelConfig, n: usize,
             precision: KvPrecision) -> KvCachePool {
     KvCachePool::with_slots(cfg, engine.attn_dim(), n, MAX_SEQ,
                             precision, 1.0, n as f64)
+}
+
+/// Paged pool with enough pages for `n` full-length sessions.
+fn paged_pool_for(engine: &Engine, cfg: &ModelConfig, n: usize,
+                  precision: KvPrecision, page_tokens: usize)
+                  -> KvCachePool {
+    let n_pages = n * MAX_SEQ.div_ceil(page_tokens);
+    KvCachePool::with_slots_layout(cfg, engine.attn_dim(), n, MAX_SEQ,
+                                   precision, 1.0, n as f64,
+                                   KvLayout::Paged, page_tokens,
+                                   n_pages)
 }
 
 /// Deterministic prompt / generated-token streams (parity feeds fixed
@@ -432,6 +443,136 @@ fn profiling_does_not_perturb_logits() {
                 baseline,
                 "t{threads} profile_every={every} changed the logits"
             );
+        }
+    }
+}
+
+/// Drive prefill + DECODE_STEPS fused steps on a prepared pool and
+/// collect every logit vector (prefill first, then step-major).
+fn run_layout(rt: &mut Runtime, engine: &Engine, vocab: usize,
+              batch: usize, pool: &mut KvCachePool) -> Vec<Vec<f32>> {
+    let ids: Vec<usize> =
+        (0..batch).map(|_| pool.alloc().unwrap()).collect();
+    let mut all: Vec<Vec<f32>> = Vec::new();
+    for (s, &id) in ids.iter().enumerate() {
+        let prompt = prompt_for(s, vocab);
+        // map the prompt's pages before writing (bounds-check no-op on
+        // the slab layout; the scheduler does the same before prefill)
+        pool.ensure_capacity(id, prompt.len()).unwrap();
+        all.push(
+            engine.prefill(rt, pool.slot_mut(id), &prompt).unwrap(),
+        );
+    }
+    for step in 0..DECODE_STEPS {
+        let reqs: Vec<BatchReq> = ids
+            .iter()
+            .enumerate()
+            .map(|(s, &id)| BatchReq {
+                slot: id,
+                pos: prompt_for(s, vocab).len() + step,
+                token: gen_token(s, step, vocab),
+            })
+            .collect();
+        let mut got: Vec<Vec<f32>> = vec![Vec::new(); batch];
+        engine
+            .step_batch(pool, &reqs, |i, l| {
+                got[i] = l.to_vec();
+            })
+            .unwrap();
+        all.extend(got);
+    }
+    all
+}
+
+/// The paged-KV acceptance matrix: the paged layout must produce
+/// **bit-identical** logits to the slab layout — not merely close —
+/// for batches 1/3/8 × f32/int8 KV × 1/2/8 pool lanes. `page_tokens`
+/// = 5 makes the staggered PROMPT_LENS straddle page boundaries
+/// (lengths 4/5/6 = page−1 / page / page+1), so row addressing across
+/// the page seam is exercised on every run. Bit-identity is structural
+/// (both layouts write/read through the same KvStore row kernels);
+/// this test pins it.
+#[test]
+fn paged_decode_is_bit_identical_to_slab() {
+    const PAGE_TOKENS: usize = 5;
+    for threads in [1usize, 2, 8] {
+        for precision in [KvPrecision::F32, KvPrecision::Int8] {
+            let (mut rt, engine, cfg) =
+                engine_for_t(QuantFormat::Nf4, Some(threads));
+            let vocab = cfg.vocab;
+            for batch in [1usize, 3, 8] {
+                let mut slab =
+                    pool_for(&engine, &cfg, batch, precision);
+                let want = run_layout(&mut rt, &engine, vocab, batch,
+                                      &mut slab);
+                let mut paged = paged_pool_for(&engine, &cfg, batch,
+                                               precision, PAGE_TOKENS);
+                let got = run_layout(&mut rt, &engine, vocab, batch,
+                                     &mut paged);
+                assert_eq!(
+                    got, want,
+                    "paged layout changed the logits (t{threads} \
+                     {precision:?} b{batch})"
+                );
+            }
+        }
+    }
+}
+
+/// Prefix reuse must not change the math either: a session admitted
+/// with cached prefix pages resumes prefill mid-prompt, and its
+/// prefill logits and every subsequent decode step are bit-identical
+/// to a cold session with the same prompt.
+#[test]
+fn prefix_reuse_resume_is_bit_identical_to_cold_prefill() {
+    const PAGE_TOKENS: usize = 4;
+    let (mut rt, engine, cfg) = engine_for(QuantFormat::Nf4);
+    let vocab = cfg.vocab;
+    // 9 tokens = 2 full pages + 1: reuse spans 8 tokens, prefill
+    // resumes at position 8
+    let prompt: Vec<i32> =
+        (0..9).map(|j| ((3 + j * 7) % vocab) as i32).collect();
+    for precision in [KvPrecision::F32, KvPrecision::Int8] {
+        let mut pool =
+            paged_pool_for(&engine, &cfg, 2, precision, PAGE_TOKENS);
+
+        let a = pool.admit(&prompt, true).unwrap();
+        assert_eq!(a.cached_tokens, 0, "cold admit found a prefix");
+        pool.ensure_capacity(a.slot, prompt.len()).unwrap();
+        let cold = engine
+            .prefill(&mut rt, pool.slot_mut(a.slot), &prompt)
+            .unwrap();
+        pool.publish_prefix(a.slot, &prompt);
+
+        let b = pool.admit(&prompt, true).unwrap();
+        assert_eq!(b.cached_tokens, 2 * PAGE_TOKENS,
+                   "second admit must map both published pages");
+        pool.ensure_capacity(b.slot, prompt.len()).unwrap();
+        let resumed = engine
+            .prefill(&mut rt, pool.slot_mut(b.slot), &prompt)
+            .unwrap();
+        assert_eq!(resumed, cold,
+                   "resumed prefill diverged ({precision:?})");
+
+        // decode both sessions in one fused batch; logits per step
+        // must match each other exactly (identical history)
+        for step in 0..DECODE_STEPS {
+            let tok = gen_token(0, step, vocab);
+            let reqs = [
+                BatchReq { slot: a.slot, pos: prompt.len() + step,
+                           token: tok },
+                BatchReq { slot: b.slot, pos: prompt.len() + step,
+                           token: tok },
+            ];
+            let mut got: Vec<Vec<f32>> = vec![Vec::new(); 2];
+            engine
+                .step_batch(&mut pool, &reqs, |i, l| {
+                    got[i] = l.to_vec();
+                })
+                .unwrap();
+            assert_eq!(got[0], got[1],
+                       "shared-prefix sessions diverged at step \
+                        {step} ({precision:?})");
         }
     }
 }
