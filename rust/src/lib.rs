@@ -39,3 +39,4 @@ pub mod eval;
 pub mod coordinator;
 pub mod experiments;
 pub mod serve;
+pub mod server;

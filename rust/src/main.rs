@@ -11,6 +11,10 @@
 //!   serve      synthetic multi-client serving run over a pruned +
 //!              quantized checkpoint or an exported --artifact
 //!              (continuous batching, KV pool)
+//!   serve-http std-only HTTP front-end over the same serving stack:
+//!              POST /v1/generate (SSE streaming), GET /metrics,
+//!              GET /traces, GET /healthz, POST /admin/reload
+//!              (artifact hot-swap); SIGTERM drains gracefully
 //!   bench-serve
 //!              closed-loop load generator: p50/p95/p99 latency,
 //!              tokens/sec, batch occupancy, rejection rate
@@ -33,8 +37,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: qpruner <cmd> [--key value ...]\n\
          cmds: pretrain | run | export | table1 | table2 | table3 |\n\
-               fig1 | fig3 | serve | bench-serve | trace-check |\n\
-               quantize | info\n\
+               fig1 | fig3 | serve | serve-http | bench-serve |\n\
+               trace-check | quantize | info\n\
          common flags:\n\
            --size tiny|small|base       model preset   (default small)\n\
            --style llama|vicuna         corpus dialect (default llama)\n\
@@ -91,8 +95,21 @@ fn usage() -> ! {
                                         steps (0 = off)\n\
            --profile-every N            sample every Nth decode step for\n\
                                         the phase profiler (0 = off)\n\
+         serve-http flags (plus all serve flags above):\n\
+           --addr HOST:PORT             bind address (default\n\
+                                        127.0.0.1:8080; port 0 picks\n\
+                                        an ephemeral port, printed to\n\
+                                        stderr as 'listening on ...')\n\
+           --max-conns N                concurrent-connection cap\n\
+                                        (default 64; excess gets 503)\n\
+           endpoints: POST /v1/generate (SSE streaming when\n\
+           \"stream\":true), GET /metrics, GET /traces, GET /healthz,\n\
+           POST /admin/reload; SIGTERM drains gracefully\n\
          trace-check flags:\n\
-           --trace PATH                 trace.json to validate\n\
+           --trace PATH|-               document to validate ('-'\n\
+                                        reads stdin)\n\
+           --format trace|events|auto   Chrome trace vs JSONL event\n\
+                                        log (default auto-detect)\n\
            --min-sessions N             require >= N complete session\n\
                                         spans (default 1)\n\
            --require-phases true|false  require >= 1 phase event\n\
@@ -144,6 +161,176 @@ fn parse_range(s: &str) -> Result<(usize, usize)> {
         bail!("bad range {s:?} (expected LO:HI with 1 <= LO <= HI)");
     }
     Ok((lo, hi))
+}
+
+/// Everything the serving subcommands (`serve`, `bench-serve`,
+/// `serve-http`) share: parsed workload/pool options, the deployment
+/// source folded into a pre-configured [`EngineBuilder`], and the
+/// engine template the HTTP server re-applies on `/admin/reload`.
+struct ServeSetup {
+    sopts: qpruner::serve::ServeOpts,
+    builder: qpruner::serve::engine::EngineBuilder,
+    template: qpruner::server::EngineTemplate,
+    model_name: String,
+    vocab: usize,
+    rate: u32,
+    bits: qpruner::quant::BitConfig,
+    kv_precision: qpruner::serve::kv_cache::KvPrecision,
+}
+
+fn serve_setup(cfg: &Config, ckpt_dir: &std::path::Path, size: &str,
+               style: &str, model_cfg: &ModelConfig)
+               -> Result<ServeSetup> {
+    use qpruner::artifact::{LoraMode, ModelArtifact};
+    use qpruner::model::ParamStore;
+    use qpruner::quant::BitConfig;
+    use qpruner::serve::engine::EngineBuilder;
+    use qpruner::serve::kv_cache::KvPrecision;
+    use qpruner::serve::{self, ServeOpts};
+    use qpruner::server::EngineTemplate;
+
+    let mut sopts =
+        cfg.scale_preset(ServeOpts::smoke, ServeOpts::paper);
+    sopts.clients = cfg.usize_or("clients", sopts.clients)?;
+    sopts.requests = cfg.usize_or("requests", sopts.requests)?;
+    sopts.max_batch = cfg.usize_or("max-batch", sopts.max_batch)?;
+    if let Some(v) = cfg.get("kv-budget-gb") {
+        sopts.kv_budget_gb =
+            Some(v.parse().context("bad --kv-budget-gb")?);
+    }
+    sopts.device_gb = cfg.f64_or("device-gb", sopts.device_gb)?;
+    sopts.memory_arch = cfg.str_or("memory-arch", &sopts.memory_arch);
+    serve::check_memory_arch(&sopts.memory_arch)
+        .context("bad --memory-arch")?;
+    sopts.max_seq = cfg.usize_or("max-seq", sopts.max_seq)?;
+    if let Some(v) = cfg.get("kv-layout") {
+        sopts.kv_layout = qpruner::serve::kv_cache::KvLayout::parse(v)
+            .with_context(|| format!(
+                "bad --kv-layout {v:?} (expected slab|paged)"
+            ))?;
+    }
+    sopts.page_tokens =
+        cfg.usize_or("page-tokens", sopts.page_tokens)?;
+    sopts.shared_prefix =
+        cfg.usize_or("shared-prefix", sopts.shared_prefix)?;
+    let kv_precision = match cfg.get("kv-bits") {
+        None => KvPrecision::F32,
+        Some(v) => {
+            let bits: u32 =
+                v.parse().context("bad --kv-bits (expected 32|8)")?;
+            KvPrecision::from_bits(bits).with_context(|| {
+                format!("bad --kv-bits {bits} (expected 32|8)")
+            })?
+        }
+    };
+    if let Some(v) = cfg.get("prompt-len") {
+        sopts.prompt_len =
+            parse_range(v).context("bad --prompt-len")?;
+    }
+    if let Some(v) = cfg.get("max-new") {
+        sopts.max_new = parse_range(v).context("bad --max-new")?;
+    }
+    sopts.max_queue = cfg.usize_or("max-queue", sopts.max_queue)?;
+    sopts.ttl_steps = cfg.u64_or("ttl-steps", sopts.ttl_steps)?;
+    sopts.stall_prob = cfg.f64_or("stall-prob", sopts.stall_prob)?;
+    sopts.temperature =
+        cfg.f64_or("temperature", sopts.temperature as f64)? as f32;
+    sopts.seed = cfg.u64_or("seed", sopts.seed)?;
+    sopts.stats_every =
+        cfg.u64_or("stats-every", sopts.stats_every)?;
+    sopts.trace_out = cfg.get("trace-out").map(PathBuf::from);
+    sopts.events_out = cfg.get("events-out").map(PathBuf::from);
+    sopts.metrics_out = cfg.get("metrics-out").map(PathBuf::from);
+
+    // deployment source: an exported artifact boots the pipeline's
+    // own pruned+quantized+LoRA deliverable; the checkpoint path
+    // quantizes a raw store per --bits/--quant
+    let mut template = EngineTemplate::default();
+    template.kv_precision = kv_precision;
+    let mut builder = EngineBuilder::new().kv_precision(kv_precision);
+    if let Some(v) = cfg.get("profile-every") {
+        let n: u32 =
+            v.parse().context("bad --profile-every (expected N)")?;
+        builder = builder.profile_every(n);
+        template.profile_every = Some(n);
+    }
+    if let Some(t) = cfg.get("threads") {
+        let n: usize =
+            t.parse().context("bad --threads (expected N)")?;
+        builder = builder.threads(n);
+        template.threads = Some(n);
+    }
+    if let Some(m) = cfg.get("lora") {
+        let mode = LoraMode::parse(m)
+            .context("bad --lora (expected merge|adjoin)")?;
+        builder = builder.lora(mode);
+        template.lora = Some(mode);
+    }
+    let (model_name, vocab, rate, bits);
+    if let Some(p) = cfg.get("artifact") {
+        let art = ModelArtifact::load(std::path::Path::new(p))?;
+        eprintln!("artifact : {}", art.summary());
+        model_name = art.cfg.name.clone();
+        vocab = art.cfg.vocab;
+        rate = art.ps.rate_pct;
+        bits = art.bits.clone();
+        builder = builder.artifact(art);
+    } else {
+        let path =
+            experiments::checkpoint_path(ckpt_dir, size, style);
+        let store = if path.exists() {
+            ParamStore::load(&path)?
+        } else {
+            eprintln!(
+                "no checkpoint at {path:?}; serving a random init \
+                 (run `qpruner pretrain` first for a trained model)"
+            );
+            ParamStore::init(model_cfg, sopts.seed)
+        };
+        let n_layers = store.cfg.n_layers;
+        bits = if let Some(s) = cfg.get("bits") {
+            let b = BitConfig::parse_short(s)
+                .context("bad --bits (expected e.g. 8444)")?;
+            if b.n_layers() != n_layers {
+                bail!("--bits has {} layers, model has {n_layers}",
+                      b.n_layers());
+            }
+            b
+        } else {
+            let fmt = QuantFormat::parse(&cfg.str_or("quant", "nf4"))
+                .context("bad --quant")?;
+            BitConfig::uniform(n_layers, fmt)
+        };
+        model_name = store.cfg.name.clone();
+        vocab = store.cfg.vocab;
+        rate = store.ps.rate_pct;
+        builder = builder.store(&store, &bits);
+    }
+    Ok(ServeSetup {
+        sopts,
+        builder,
+        template,
+        model_name,
+        vocab,
+        rate,
+        bits,
+        kv_precision,
+    })
+}
+
+/// The serving banner all three serving subcommands print to stderr —
+/// stdout stays clean for the report table / piped payloads.
+fn serve_banner(s: &ServeSetup) {
+    use qpruner::serve;
+    let budget =
+        serve::resolve_kv_budget_gb(&s.sopts, s.rate, &s.bits);
+    eprintln!(
+        "serving {} (rate {}%, bits {}, kv {}-bit, {} layout) — \
+         kv budget {:.2} GB on a {:.0} GB {} device",
+        s.model_name, s.rate, s.bits.short(),
+        s.kv_precision.bits(), s.sopts.kv_layout.label(), budget,
+        s.sopts.device_gb, s.sopts.memory_arch
+    );
 }
 
 fn main() -> Result<()> {
@@ -390,161 +577,19 @@ fn main() -> Result<()> {
                      data.n_evals);
         }
         "serve" | "bench-serve" => {
-            use qpruner::artifact::{LoraMode, ModelArtifact};
             use qpruner::data::Language;
             use qpruner::metrics::Metrics;
-            use qpruner::model::ParamStore;
-            use qpruner::quant::BitConfig;
-            use qpruner::serve::engine::EngineBuilder;
-            use qpruner::serve::kv_cache::KvPrecision;
-            use qpruner::serve::{self, ServeOpts};
+            use qpruner::serve;
 
-            let mut sopts =
-                cfg.scale_preset(ServeOpts::smoke, ServeOpts::paper);
-            sopts.clients = cfg.usize_or("clients", sopts.clients)?;
-            sopts.requests = cfg.usize_or("requests", sopts.requests)?;
-            sopts.max_batch =
-                cfg.usize_or("max-batch", sopts.max_batch)?;
-            if let Some(v) = cfg.get("kv-budget-gb") {
-                sopts.kv_budget_gb = Some(
-                    v.parse().context("bad --kv-budget-gb")?,
-                );
-            }
-            sopts.device_gb = cfg.f64_or("device-gb", sopts.device_gb)?;
-            sopts.memory_arch =
-                cfg.str_or("memory-arch", &sopts.memory_arch);
-            serve::check_memory_arch(&sopts.memory_arch)
-                .context("bad --memory-arch")?;
-            sopts.max_seq = cfg.usize_or("max-seq", sopts.max_seq)?;
-            if let Some(v) = cfg.get("kv-layout") {
-                sopts.kv_layout = qpruner::serve::kv_cache::KvLayout
-                    ::parse(v)
-                    .with_context(|| format!(
-                        "bad --kv-layout {v:?} (expected slab|paged)"
-                    ))?;
-            }
-            sopts.page_tokens =
-                cfg.usize_or("page-tokens", sopts.page_tokens)?;
-            sopts.shared_prefix =
-                cfg.usize_or("shared-prefix", sopts.shared_prefix)?;
-            let kv_precision = match cfg.get("kv-bits") {
-                None => KvPrecision::F32,
-                Some(v) => {
-                    let bits: u32 = v
-                        .parse()
-                        .context("bad --kv-bits (expected 32|8)")?;
-                    KvPrecision::from_bits(bits).with_context(|| {
-                        format!("bad --kv-bits {bits} (expected 32|8)")
-                    })?
-                }
-            };
-            if let Some(v) = cfg.get("prompt-len") {
-                sopts.prompt_len =
-                    parse_range(v).context("bad --prompt-len")?;
-            }
-            if let Some(v) = cfg.get("max-new") {
-                sopts.max_new =
-                    parse_range(v).context("bad --max-new")?;
-            }
-            sopts.max_queue =
-                cfg.usize_or("max-queue", sopts.max_queue)?;
-            sopts.ttl_steps = cfg.u64_or("ttl-steps", sopts.ttl_steps)?;
-            sopts.stall_prob =
-                cfg.f64_or("stall-prob", sopts.stall_prob)?;
-            sopts.temperature =
-                cfg.f64_or("temperature", sopts.temperature as f64)?
-                    as f32;
-            sopts.seed = cfg.u64_or("seed", sopts.seed)?;
-            sopts.stats_every =
-                cfg.u64_or("stats-every", sopts.stats_every)?;
-            sopts.trace_out =
-                cfg.get("trace-out").map(PathBuf::from);
-            sopts.events_out =
-                cfg.get("events-out").map(PathBuf::from);
-            sopts.metrics_out =
-                cfg.get("metrics-out").map(PathBuf::from);
-
-            // deployment source: an exported artifact boots the
-            // pipeline's own pruned+quantized+LoRA deliverable; the
-            // checkpoint path quantizes a raw store per --bits/--quant
-            let mut builder =
-                EngineBuilder::new().kv_precision(kv_precision);
-            if let Some(v) = cfg.get("profile-every") {
-                let n: u32 = v
-                    .parse()
-                    .context("bad --profile-every (expected N)")?;
-                builder = builder.profile_every(n);
-            }
-            if let Some(t) = cfg.get("threads") {
-                let n: usize =
-                    t.parse().context("bad --threads (expected N)")?;
-                builder = builder.threads(n);
-            }
-            if let Some(m) = cfg.get("lora") {
-                builder = builder.lora(
-                    LoraMode::parse(m)
-                        .context("bad --lora (expected merge|adjoin)")?,
-                );
-            }
-            let (model_name, vocab, rate, bits);
-            if let Some(p) = cfg.get("artifact") {
-                let art =
-                    ModelArtifact::load(std::path::Path::new(p))?;
-                println!("artifact : {}", art.summary());
-                model_name = art.cfg.name.clone();
-                vocab = art.cfg.vocab;
-                rate = art.ps.rate_pct;
-                bits = art.bits.clone();
-                builder = builder.artifact(art);
-            } else {
-                let path = experiments::checkpoint_path(
-                    &ckpt_dir, &size, &style,
-                );
-                let store = if path.exists() {
-                    ParamStore::load(&path)?
-                } else {
-                    eprintln!(
-                        "no checkpoint at {path:?}; serving a random \
-                         init (run `qpruner pretrain` first for a \
-                         trained model)"
-                    );
-                    ParamStore::init(&model_cfg, sopts.seed)
-                };
-                let n_layers = store.cfg.n_layers;
-                bits = if let Some(s) = cfg.get("bits") {
-                    let b = BitConfig::parse_short(s)
-                        .context("bad --bits (expected e.g. 8444)")?;
-                    if b.n_layers() != n_layers {
-                        bail!(
-                            "--bits has {} layers, model has {n_layers}",
-                            b.n_layers()
-                        );
-                    }
-                    b
-                } else {
-                    let fmt =
-                        QuantFormat::parse(&cfg.str_or("quant", "nf4"))
-                            .context("bad --quant")?;
-                    BitConfig::uniform(n_layers, fmt)
-                };
-                model_name = store.cfg.name.clone();
-                vocab = store.cfg.vocab;
-                rate = store.ps.rate_pct;
-                builder = builder.store(&store, &bits);
-            }
+            let setup =
+                serve_setup(&cfg, &ckpt_dir, &size, &style, &model_cfg)?;
+            serve_banner(&setup);
+            let ServeSetup { sopts, builder, model_name, vocab, .. } =
+                setup;
             let lang =
                 Language::new(vocab, experiments::style_seed(&style));
             let mut rt = qpruner::runtime::Runtime::open_default()?;
             let mut metrics = Metrics::new();
-            let budget =
-                serve::resolve_kv_budget_gb(&sopts, rate, &bits);
-            println!(
-                "serving {} (rate {}%, bits {}, kv {}-bit, {} \
-                 layout) — kv budget {:.2} GB on a {:.0} GB {} device",
-                model_name, rate, bits.short(),
-                kv_precision.bits(), sopts.kv_layout.label(), budget,
-                sopts.device_gb, sopts.memory_arch
-            );
             let report = serve::run_workload(&mut rt, builder, &lang,
                                              &sopts, &mut metrics)?;
             let title = format!(
@@ -587,29 +632,98 @@ fn main() -> Result<()> {
                 println!("wrote {:?}", out_dir.join("bench_serve.md"));
                 println!("wrote {json_path:?}");
             }
+            // diagnostics go to stderr: piping serve stdout must
+            // yield only the report payload
             for (what, path) in [
                 ("trace", &sopts.trace_out),
                 ("event log", &sopts.events_out),
                 ("metrics snapshot", &sopts.metrics_out),
             ] {
                 if let Some(p) = path {
-                    println!("wrote {what} {p:?}");
+                    eprintln!("wrote {what} {p:?}");
                 }
             }
-            println!("-- stage timings --\n{}", metrics.report());
+            eprintln!("-- stage timings --\n{}", metrics.report());
+        }
+        "serve-http" => {
+            use qpruner::server::{drain, Server, ServerOpts};
+            use std::sync::atomic::AtomicBool;
+            use std::sync::Arc;
+
+            let setup =
+                serve_setup(&cfg, &ckpt_dir, &size, &style, &model_cfg)?;
+            serve_banner(&setup);
+            let mut srv = ServerOpts::new(setup.sopts.clone());
+            srv.addr = cfg.str_or("addr", &srv.addr);
+            srv.max_conns =
+                cfg.usize_or("max-conns", srv.max_conns)?;
+            srv.template = setup.template;
+            let mut rt = qpruner::runtime::Runtime::open_default()?;
+            let server = Server::bind(&srv.addr)?;
+            // scripted clients (CI smoke) poll stderr for this line
+            // to learn the resolved ephemeral port
+            eprintln!("listening on http://{}", server.local_addr());
+            drain::install_signal_handlers();
+            let shutdown = Arc::new(AtomicBool::new(false));
+            let report =
+                server.run(&mut rt, setup.builder, &srv, shutdown)?;
+            eprintln!("drained: {}", report.summary());
+            for (what, path) in [
+                ("trace", &srv.serve.trace_out),
+                ("event log", &srv.serve.events_out),
+                ("metrics snapshot", &srv.serve.metrics_out),
+            ] {
+                if let Some(p) = path {
+                    eprintln!("wrote {what} {p:?}");
+                }
+            }
+            if !report.clean() {
+                bail!("unclean drain: {}", report.summary());
+            }
         }
         "trace-check" => {
             // CI gate: the trace a `serve --trace-out` run produced
-            // must parse as Chrome Trace Event JSON and contain real
-            // lifecycle + phase content, not just metadata
-            use qpruner::obs::trace_export::validate_trace;
-            let path = cfg
+            // (or the event log `serve-http`'s GET /traces streams)
+            // must strict-parse and contain real lifecycle + phase
+            // content, not just metadata
+            use qpruner::obs::trace_export::{validate_events,
+                                             validate_trace};
+            let arg = cfg
                 .get("trace")
-                .context("trace-check needs --trace PATH")?;
-            let body = std::fs::read_to_string(path)
-                .with_context(|| format!("reading {path}"))?;
-            let summary = validate_trace(&body)
-                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                .context("trace-check needs --trace PATH|-")?;
+            let (path, body) = if arg == "-" {
+                let mut s = String::new();
+                std::io::Read::read_to_string(
+                    &mut std::io::stdin(),
+                    &mut s,
+                )
+                .context("reading stdin")?;
+                ("<stdin>".to_string(), s)
+            } else {
+                let b = std::fs::read_to_string(arg)
+                    .with_context(|| format!("reading {arg}"))?;
+                (arg.to_string(), b)
+            };
+            let format = cfg.str_or("format", "auto");
+            let is_events = match format.as_str() {
+                "events" => true,
+                "trace" => false,
+                // an events log is JSONL whose first record is the
+                // meta line; a Chrome trace is one JSON object
+                "auto" => body
+                    .trim_start()
+                    .starts_with("{\"type\":\"meta\""),
+                other => bail!(
+                    "bad --format {other:?} (expected \
+                     trace|events|auto)"
+                ),
+            };
+            let summary = if is_events {
+                validate_events(&body)
+            } else {
+                validate_trace(&body)
+            }
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
             let min_sessions = cfg.usize_or("min-sessions", 1)?;
             let require_phases = cfg.bool_or("require-phases", true)?;
             println!(

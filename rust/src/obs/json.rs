@@ -76,6 +76,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -297,6 +304,14 @@ mod tests {
         assert_eq!(a[2].as_f64(), Some(-300.0));
         assert!(v.get("b").unwrap().get("c").unwrap().is_null());
         assert_eq!(v.get("s").unwrap().as_str(), Some("x\ny"));
+    }
+
+    #[test]
+    fn as_bool_is_strict() {
+        let v = Json::parse(r#"{"t":true,"f":false,"n":1}"#).unwrap();
+        assert_eq!(v.get("t").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("f").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("n").unwrap().as_bool(), None);
     }
 
     #[test]

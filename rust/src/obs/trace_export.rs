@@ -231,6 +231,73 @@ pub fn validate_trace(body: &str) -> Result<TraceSummary, String> {
     Ok(sum)
 }
 
+/// Strict-parse a `qpruner.serve.events.v1` JSONL event log (the
+/// `--events-out` file and the HTTP server's `GET /traces` body).
+/// Every line must parse; the first non-empty line must be the meta
+/// record carrying the schema tag, and its declared session count
+/// must match the session lines actually present — the exact
+/// invariant that catches a truncated export or a dropped span.
+pub fn validate_events(body: &str) -> Result<TraceSummary, String> {
+    let mut lines = body.lines().enumerate().filter(|(_, l)| {
+        !l.trim().is_empty()
+    });
+    let (_, meta_line) =
+        lines.next().ok_or("empty event log")?;
+    let meta = Json::parse(meta_line)
+        .map_err(|e| format!("meta line: {e}"))?;
+    if meta.get("type").and_then(|t| t.as_str()) != Some("meta") {
+        return Err("first line is not a meta record".into());
+    }
+    let schema = meta
+        .get("schema")
+        .and_then(|s| s.as_str())
+        .ok_or("meta line has no schema")?;
+    if schema != "qpruner.serve.events.v1" {
+        return Err(format!("unknown schema {schema:?}"));
+    }
+    let declared = meta
+        .get("sessions")
+        .and_then(|s| s.as_f64())
+        .ok_or("meta line has no session count")? as usize;
+    let mut sum = TraceSummary { total_events: 1, ..Default::default() };
+    for (no, line) in lines {
+        let v = Json::parse(line)
+            .map_err(|e| format!("line {}: {e}", no + 1))?;
+        sum.total_events += 1;
+        match v.get("type").and_then(|t| t.as_str()) {
+            Some("session") => {
+                sum.sessions += 1;
+                // terminal sessions always carry a finish timestamp
+                v.get("finished_us")
+                    .and_then(|f| f.as_f64())
+                    .ok_or_else(|| {
+                        format!("line {}: session has no finished_us",
+                                no + 1)
+                    })?;
+                if v.get("outcome").and_then(|o| o.as_str())
+                    == Some("done")
+                {
+                    sum.complete_sessions += 1;
+                }
+            }
+            Some("phase") => sum.phase_events += 1,
+            Some("meta") => {
+                return Err(format!("line {}: duplicate meta", no + 1))
+            }
+            _ => {
+                return Err(format!("line {}: unknown type", no + 1))
+            }
+        }
+    }
+    if sum.sessions != declared {
+        return Err(format!(
+            "meta declares {declared} sessions, found {}",
+            sum.sessions
+        ));
+    }
+    Ok(sum)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,6 +379,46 @@ mod tests {
         assert_eq!(kinds.get("meta"), Some(&1));
         assert_eq!(kinds.get("session"), Some(&3));
         assert_eq!(kinds.get("phase"), Some(&2));
+    }
+
+    #[test]
+    fn validate_events_accepts_real_logs() {
+        let tr = tracer_with_sessions();
+        let log = events_jsonl(&tr, &phase_events(&tr));
+        let sum = validate_events(&log).unwrap();
+        assert_eq!(sum.sessions, 3);
+        assert_eq!(sum.complete_sessions, 2);
+        assert_eq!(sum.phase_events, 2);
+        assert_eq!(sum.total_events, 6);
+        // phase-free logs (server /traces between steps) also pass
+        let bare = events_jsonl(&tr, &[]);
+        assert_eq!(validate_events(&bare).unwrap().phase_events, 0);
+    }
+
+    #[test]
+    fn validate_events_rejects_malformed_logs() {
+        assert!(validate_events("").is_err());
+        assert!(validate_events("{\"type\":\"session\"}").is_err());
+        // wrong schema
+        assert!(validate_events(
+            "{\"type\":\"meta\",\"schema\":\"other.v9\",\
+             \"sessions\":0}"
+        )
+        .is_err());
+        // declared/found session count mismatch (truncated log)
+        let tr = tracer_with_sessions();
+        let log = events_jsonl(&tr, &[]);
+        let truncated: Vec<&str> =
+            log.lines().take(3).collect();
+        assert!(validate_events(&truncated.join("\n")).is_err());
+        // garbage mid-log names the line
+        let err = validate_events(
+            "{\"type\":\"meta\",\
+             \"schema\":\"qpruner.serve.events.v1\",\"sessions\":0}\n\
+             not json",
+        )
+        .unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
     }
 
     #[test]

@@ -68,6 +68,16 @@ impl AdmissionPolicy {
         }
     }
 
+    /// Deterministic `Retry-After` hint (seconds) for a shed request:
+    /// scales with queue occupancy — an empty queue means capacity is
+    /// about to free (retry in 1 s), a full one means real backlog
+    /// (up to 5 s). Pure arithmetic so the HTTP layer's 429/503
+    /// responses are reproducible in tests.
+    pub fn retry_after_secs(&self, queue_len: usize) -> u64 {
+        let cap = self.max_queue.max(1);
+        (1 + (4 * queue_len.min(cap)) / cap) as u64
+    }
+
     pub fn decide(&self, prompt_len: usize, max_new: usize,
                   queue_len: usize) -> Decision {
         if prompt_len == 0 || max_new == 0 {
@@ -137,6 +147,19 @@ mod tests {
         assert_eq!(q.token_capacity, 32);
         // the plain constructor keeps the old slab behavior
         assert_eq!(AdmissionPolicy::new(4, 32).token_capacity, 32);
+    }
+
+    #[test]
+    fn retry_after_scales_with_queue_occupancy() {
+        let p = AdmissionPolicy::new(8, 32);
+        assert_eq!(p.retry_after_secs(0), 1);
+        assert_eq!(p.retry_after_secs(4), 3);
+        assert_eq!(p.retry_after_secs(8), 5);
+        // beyond-capacity occupancy clamps instead of overflowing
+        assert_eq!(p.retry_after_secs(1000), 5);
+        // degenerate zero-length queue still yields a sane hint
+        let z = AdmissionPolicy::new(0, 32);
+        assert_eq!(z.retry_after_secs(0), 1);
     }
 
     #[test]

@@ -722,6 +722,21 @@ impl Engine {
         self.ps.attn_dim(&self.cfg)
     }
 
+    /// The shape contract between this engine and a live KV pool:
+    /// (layers, attn head dim, KV precision bits, vocab). Hot-swapping
+    /// an engine under a pool that outlives it (`POST /admin/reload`)
+    /// is only sound when the replacement's key matches — in-flight
+    /// sessions keep their cached KV pages and the new weights decode
+    /// against them.
+    pub fn kv_shape_key(&self) -> (usize, usize, u32, usize) {
+        (
+            self.cfg.n_layers,
+            self.attn_dim(),
+            self.kv_precision.bits(),
+            self.cfg.vocab,
+        )
+    }
+
     pub fn backend_label(&self) -> &'static str {
         match self.backend {
             Backend::Native => "native-kv",

@@ -548,6 +548,9 @@ struct PrefixEntry {
     page: Arc<KvPage>,
     tokens: Vec<i32>,
     last_used: u64,
+    /// admissions that mapped this entry — an entry still at 0 is
+    /// published-but-never-reused, i.e. pinned bytes GC could reclaim
+    hits: u64,
 }
 
 /// Paged-layout state: the page free list, the prefix index, and the
@@ -1009,6 +1012,7 @@ impl KvCachePool {
                 match paged.prefix.get_mut(&h) {
                     Some(e) if e.tokens[..] == prompt[..q * pt] => {
                         e.last_used = clock;
+                        e.hits += 1;
                         matched.push(Arc::clone(&e.page));
                     }
                     _ => break,
@@ -1172,6 +1176,7 @@ impl KvCachePool {
                     page: Arc::clone(page),
                     tokens: prompt[..(idx + 1) * pt].to_vec(),
                     last_used: clock,
+                    hits: 0,
                 },
             );
         }
@@ -1244,6 +1249,28 @@ impl KvCachePool {
     /// Live prefix-index entries.
     pub fn prefix_index_len(&self) -> usize {
         self.paged.as_ref().map_or(0, |p| p.prefix.len())
+    }
+
+    /// Prefix-index entries published but never re-hit by a later
+    /// admission — the GC candidates: they pin a page each without
+    /// having saved any prefill yet (0 on slab).
+    pub fn prefix_idle_entries(&self) -> usize {
+        self.paged.as_ref().map_or(0, |p| {
+            p.prefix.values().filter(|e| e.hits == 0).count()
+        })
+    }
+
+    /// Host bytes pinned by never-re-hit prefix entries (each idle
+    /// entry holds one page; 0 on slab). The `kv.prefix_idle_bytes`
+    /// gauge in the metrics snapshot.
+    pub fn prefix_idle_bytes(&self) -> usize {
+        self.paged.as_ref().map_or(0, |p| {
+            p.prefix
+                .values()
+                .filter(|e| e.hits == 0)
+                .map(|e| e.page.store.host_bytes())
+                .sum()
+        })
     }
 
     /// Modeled deployment bytes saved by prefix reuse so far
@@ -1606,6 +1633,38 @@ mod tests {
         p.clear_prefix_index();
         assert_eq!(p.pages_used(), 0);
         assert_eq!(p.pages_free(), p.pages_total());
+    }
+
+    #[test]
+    fn idle_prefix_stats_track_never_rehit_entries() {
+        let mut p = paged_pool(4, 16, KvPrecision::F32);
+        let prompt: Vec<i32> = (0..9).collect(); // 2 full pages + 1
+        let ia = p.admit(&prompt, true).unwrap();
+        p.ensure_capacity(ia.slot, 9).unwrap();
+        p.slot_mut(ia.slot).advance_to(9);
+        p.publish_prefix(ia.slot, &prompt);
+        // freshly published, never re-hit: both entries are idle and
+        // the pinned bytes equal two pages' host storage
+        assert_eq!(p.prefix_idle_entries(), 2);
+        let page_bytes = p.prefix_idle_bytes() / 2;
+        assert!(page_bytes > 0);
+        // a second session re-maps the chain: both entries got hit
+        let ib = p.admit(&prompt, true).unwrap();
+        assert_eq!(ib.cached_tokens, 8);
+        assert_eq!(p.prefix_idle_entries(), 0);
+        assert_eq!(p.prefix_idle_bytes(), 0);
+        // a divergent publish adds fresh idle entries on top
+        let other: Vec<i32> = (50..59).collect();
+        let ic = p.admit(&other, true).unwrap();
+        p.ensure_capacity(ic.slot, 9).unwrap();
+        p.slot_mut(ic.slot).advance_to(9);
+        p.publish_prefix(ic.slot, &other);
+        assert_eq!(p.prefix_idle_entries(), 2);
+        assert_eq!(p.prefix_idle_bytes(), 2 * page_bytes);
+        // slab pools report zeros
+        let slab = pool(2);
+        assert_eq!(slab.prefix_idle_entries(), 0);
+        assert_eq!(slab.prefix_idle_bytes(), 0);
     }
 
     #[test]

@@ -52,8 +52,9 @@ use std::time::Instant;
 
 /// Completed-span cap for the lifecycle tracer: bounds trace memory on
 /// long runs (dropped spans are counted in the export, not lost
-/// silently).
-const TRACE_SPAN_CAP: usize = 65_536;
+/// silently). Shared with the HTTP server (`crate::server`), which
+/// keeps a tracer installed for its whole lifetime.
+pub const TRACE_SPAN_CAP: usize = 65_536;
 
 /// Workload + server knobs for one serving run.
 #[derive(Clone, Debug)]
@@ -176,6 +177,10 @@ pub struct ServeReport {
     pub kv_cow_copies: u64,
     /// modeled bytes of prefill KV the prefix cache avoided recomputing
     pub kv_prefix_bytes_saved: f64,
+    /// prefix-index entries published but never re-hit (GC candidates)
+    pub prefix_idle_entries: usize,
+    /// host bytes those idle entries pin
+    pub prefix_idle_bytes: usize,
     pub submitted: usize,
     pub completed: usize,
     pub rejected: usize,
@@ -337,6 +342,11 @@ impl ServeReport {
             push("kv prefix bytes saved (modeled)",
                  format!("{:.2} MB",
                          self.kv_prefix_bytes_saved / 1e6));
+            push("prefix idle entries (never re-hit)",
+                 format!("{}", self.prefix_idle_entries));
+            push("prefix idle bytes pinned",
+                 format!("{:.2} MB",
+                         self.prefix_idle_bytes as f64 / 1e6));
         }
         push("kv modeled peak",
              format!("{:.3} GB", self.kv_modeled_peak_bytes / 1e9));
@@ -377,6 +387,7 @@ impl ServeReport {
              \"prefix_hits\":{},\"prefix_misses\":{},\
              \"prefix_tokens_reused\":{},\"kv_cow_copies\":{},\
              \"kv_prefix_bytes_saved\":{:.0},\
+             \"prefix_idle_entries\":{},\"prefix_idle_bytes\":{},\
              \"requests_submitted\":{},\
              \"requests_completed\":{},\"requests_rejected\":{},\
              \"tokens_per_sec\":{:.3},\"p50_ms\":{},\
@@ -408,6 +419,8 @@ impl ServeReport {
             self.prefix_tokens_reused,
             self.kv_cow_copies,
             self.kv_prefix_bytes_saved,
+            self.prefix_idle_entries,
+            self.prefix_idle_bytes,
             self.submitted,
             self.completed,
             self.rejected,
@@ -566,56 +579,23 @@ pub fn resolve_kv_budget_gb(opts: &ServeOpts, rate_pct: u32,
     }
 }
 
-/// Run a closed-loop synthetic multi-client workload to completion.
-///
-/// The deployment comes in as a *pre-configured* [`EngineBuilder`]
-/// (weight source + KV precision + LoRA mode); this function stamps
-/// the workload's `max_seq` onto it, builds the engine, sizes the KV
-/// pool from the engine's own bit config and KV precision, and drives
-/// the scheduler until the workload drains.
-pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
-                    lang: &Language, opts: &ServeOpts,
-                    metrics: &mut Metrics) -> Result<ServeReport> {
-    ensure!(opts.clients > 0 && opts.requests > 0, "empty workload");
-    ensure!(opts.prompt_len.0 >= 1
-            && opts.prompt_len.0 <= opts.prompt_len.1,
-            "bad prompt_len range");
-    ensure!(opts.max_new.0 >= 1 && opts.max_new.0 <= opts.max_new.1,
-            "bad max_new range");
-    // only bail when *every* request would be oversized; workloads
-    // whose larger length combinations exceed max_seq are legitimate —
-    // those requests exercise the RejectReason::TooLong shedding path
-    ensure!(
-        opts.shared_prefix + opts.prompt_len.0 + opts.max_new.0 - 1
-            <= opts.max_seq,
-        "even the smallest request (shared prefix {} + prompt {} + new \
-         {} tokens) exceeds max_seq {} — every request would be \
-         rejected",
-        opts.shared_prefix,
-        opts.prompt_len.0,
-        opts.max_new.0,
-        opts.max_seq
-    );
-
-    let t_build = Instant::now();
-    // a trace request implies raw phase-event capture (the aggregate
-    // profiler runs regardless; events are the expensive part)
-    let want_trace =
-        opts.trace_out.is_some() || opts.events_out.is_some();
+/// Build the full serving stack from a pre-configured
+/// [`EngineBuilder`] and the pool/scheduler knobs in `opts`: stamp
+/// `max_seq` onto the builder, build the engine, size the KV pool
+/// from the engine's own bit config and KV precision against the
+/// modeled device budget, wire admission to the pool's real token
+/// capacity, and (when `want_trace`) install a lifecycle tracer.
+/// Shared by the synthetic workload driver and the HTTP server —
+/// both front-ends serve through the identical stack, which is what
+/// makes their token streams bit-comparable.
+pub fn build_stack(rt: &mut Runtime, builder: EngineBuilder,
+                   opts: &ServeOpts, want_trace: bool)
+                   -> Result<(engine::Engine, Scheduler)> {
     let mut builder = builder.max_seq(opts.max_seq);
     if want_trace {
         builder = builder.profile_events(true);
     }
     let engine = builder.build(rt)?;
-    metrics.add_time("serve.build_engine",
-                     t_build.elapsed().as_secs_f64());
-    ensure!(
-        engine.cfg().vocab == lang.vocab,
-        "language vocab {} != model vocab {}",
-        lang.vocab,
-        engine.cfg().vocab
-    );
-
     let rate = engine.pruned_shapes().rate_pct;
     let bits = engine.bits().clone();
     let host_cfg = engine.cfg().clone();
@@ -669,6 +649,112 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
     if want_trace {
         sched.set_tracer(Tracer::new(TRACE_SPAN_CAP));
     }
+    Ok((engine, sched))
+}
+
+/// Assemble the live metrics-registry snapshot
+/// (`qpruner.serve.metrics.v1`) from the scheduler's current state —
+/// the single source for both the `--metrics-out` file and the HTTP
+/// server's `GET /metrics`, so the two never drift schema.
+pub fn metrics_registry(sched: &Scheduler, scratch_grows: u64,
+                        scratch_reuses: u64, wall: f64) -> Registry {
+    let mut reg = Registry::new();
+    reg.counter_add("serve.requests_submitted",
+                    sched.stats.submitted as u64);
+    reg.counter_add("serve.requests_completed",
+                    sched.stats.completed as u64);
+    reg.counter_add("serve.requests_rejected",
+                    sched.stats.rejected as u64);
+    reg.counter_add("serve.sessions_evicted",
+                    sched.stats.evicted as u64);
+    reg.counter_add("serve.prefill_tokens",
+                    sched.stats.prefill_tokens);
+    reg.counter_add("serve.generated_tokens",
+                    sched.stats.generated_tokens);
+    reg.counter_add("serve.scratch_grows", scratch_grows);
+    reg.counter_add("serve.scratch_reuses", scratch_reuses);
+    let pstats = sched.pool.paged_stats();
+    reg.counter_add("serve.prefix_hits", pstats.prefix_hits);
+    reg.counter_add("serve.prefix_misses", pstats.prefix_misses);
+    reg.counter_add("serve.prefix_tokens_reused",
+                    pstats.prefix_tokens_reused);
+    reg.counter_add("serve.kv_cow_copies", pstats.cow_copies);
+    reg.gauge_set("serve.kv_pages_total",
+                  sched.pool.pages_total() as f64);
+    reg.gauge_set("serve.kv_pages_peak",
+                  sched.pool.pages_peak() as f64);
+    // idle-prefix GC stats: published entries never re-hit and the
+    // host bytes they pin (reclaimable without losing any reuse)
+    reg.gauge_set("kv.prefix_idle_entries",
+                  sched.pool.prefix_idle_entries() as f64);
+    reg.gauge_set("kv.prefix_idle_bytes",
+                  sched.pool.prefix_idle_bytes() as f64);
+    reg.gauge_set(
+        "serve.tokens_per_sec",
+        if wall > 0.0 {
+            sched.stats.generated_tokens as f64 / wall
+        } else {
+            0.0
+        },
+    );
+    reg.gauge_set("serve.mean_occupancy",
+                  sched.stats.mean_occupancy());
+    reg.gauge_set("serve.wall_secs", wall);
+    reg.hist_set("serve.latency_ms", sched.latency.clone());
+    reg.hist_set("serve.ttft_ms", sched.ttft.clone());
+    reg.hist_set("serve.itl_ms", sched.itl.clone());
+    reg
+}
+
+/// Run a closed-loop synthetic multi-client workload to completion.
+///
+/// The deployment comes in as a *pre-configured* [`EngineBuilder`]
+/// (weight source + KV precision + LoRA mode); this function stamps
+/// the workload's `max_seq` onto it, builds the engine, sizes the KV
+/// pool from the engine's own bit config and KV precision, and drives
+/// the scheduler until the workload drains.
+pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
+                    lang: &Language, opts: &ServeOpts,
+                    metrics: &mut Metrics) -> Result<ServeReport> {
+    ensure!(opts.clients > 0 && opts.requests > 0, "empty workload");
+    ensure!(opts.prompt_len.0 >= 1
+            && opts.prompt_len.0 <= opts.prompt_len.1,
+            "bad prompt_len range");
+    ensure!(opts.max_new.0 >= 1 && opts.max_new.0 <= opts.max_new.1,
+            "bad max_new range");
+    // only bail when *every* request would be oversized; workloads
+    // whose larger length combinations exceed max_seq are legitimate —
+    // those requests exercise the RejectReason::TooLong shedding path
+    ensure!(
+        opts.shared_prefix + opts.prompt_len.0 + opts.max_new.0 - 1
+            <= opts.max_seq,
+        "even the smallest request (shared prefix {} + prompt {} + new \
+         {} tokens) exceeds max_seq {} — every request would be \
+         rejected",
+        opts.shared_prefix,
+        opts.prompt_len.0,
+        opts.max_new.0,
+        opts.max_seq
+    );
+
+    let t_build = Instant::now();
+    // a trace request implies raw phase-event capture (the aggregate
+    // profiler runs regardless; events are the expensive part)
+    let want_trace =
+        opts.trace_out.is_some() || opts.events_out.is_some();
+    let (engine, mut sched) = build_stack(rt, builder, opts,
+                                          want_trace)?;
+    metrics.add_time("serve.build_engine",
+                     t_build.elapsed().as_secs_f64());
+    ensure!(
+        engine.cfg().vocab == lang.vocab,
+        "language vocab {} != model vocab {}",
+        lang.vocab,
+        engine.cfg().vocab
+    );
+    let rate = engine.pruned_shapes().rate_pct;
+    let bits = engine.bits().clone();
+    let arch = paper_arch(&opts.memory_arch);
 
     // closed-loop clients: one outstanding request each
     struct Client {
@@ -793,47 +879,11 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
     }
 
     // bounded streaming-metrics snapshot (stable schema,
-    // `qpruner.serve.metrics.v1`)
+    // `qpruner.serve.metrics.v1` — same assembly `GET /metrics`
+    // serves live)
     if let Some(path) = &opts.metrics_out {
-        let mut reg = Registry::new();
-        reg.counter_add("serve.requests_submitted",
-                        sched.stats.submitted as u64);
-        reg.counter_add("serve.requests_completed",
-                        sched.stats.completed as u64);
-        reg.counter_add("serve.requests_rejected",
-                        sched.stats.rejected as u64);
-        reg.counter_add("serve.sessions_evicted",
-                        sched.stats.evicted as u64);
-        reg.counter_add("serve.prefill_tokens",
-                        sched.stats.prefill_tokens);
-        reg.counter_add("serve.generated_tokens",
-                        sched.stats.generated_tokens);
-        reg.counter_add("serve.scratch_grows", scratch_grows);
-        reg.counter_add("serve.scratch_reuses", scratch_reuses);
-        let pstats = sched.pool.paged_stats();
-        reg.counter_add("serve.prefix_hits", pstats.prefix_hits);
-        reg.counter_add("serve.prefix_misses", pstats.prefix_misses);
-        reg.counter_add("serve.prefix_tokens_reused",
-                        pstats.prefix_tokens_reused);
-        reg.counter_add("serve.kv_cow_copies", pstats.cow_copies);
-        reg.gauge_set("serve.kv_pages_total",
-                      sched.pool.pages_total() as f64);
-        reg.gauge_set("serve.kv_pages_peak",
-                      sched.pool.pages_peak() as f64);
-        reg.gauge_set(
-            "serve.tokens_per_sec",
-            if wall > 0.0 {
-                sched.stats.generated_tokens as f64 / wall
-            } else {
-                0.0
-            },
-        );
-        reg.gauge_set("serve.mean_occupancy",
-                      sched.stats.mean_occupancy());
-        reg.gauge_set("serve.wall_secs", wall);
-        reg.hist_set("serve.latency_ms", sched.latency.clone());
-        reg.hist_set("serve.ttft_ms", sched.ttft.clone());
-        reg.hist_set("serve.itl_ms", sched.itl.clone());
+        let reg = metrics_registry(&sched, scratch_grows,
+                                   scratch_reuses, wall);
         std::fs::write(path, reg.snapshot_json()).with_context(|| {
             format!("writing metrics snapshot to {}", path.display())
         })?;
@@ -862,6 +912,8 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
         prefix_tokens_reused: pstats.prefix_tokens_reused,
         kv_cow_copies: pstats.cow_copies,
         kv_prefix_bytes_saved: sched.pool.prefix_bytes_saved_modeled(),
+        prefix_idle_entries: sched.pool.prefix_idle_entries(),
+        prefix_idle_bytes: sched.pool.prefix_idle_bytes(),
         submitted: st.submitted,
         completed: st.completed,
         rejected: st.rejected,
@@ -952,6 +1004,8 @@ mod tests {
             prefix_tokens_reused: 80,
             kv_cow_copies: 2,
             kv_prefix_bytes_saved: 3.2e7,
+            prefix_idle_entries: 3,
+            prefix_idle_bytes: 1_500_000,
             submitted: 10,
             completed: 8,
             rejected: 2,
@@ -1010,6 +1064,9 @@ mod tests {
         assert!(j.contains("\"kv_layout\":\"paged\""));
         assert!(j.contains("\"prefix_hits\":5"));
         assert!(j.contains("\"prefix_tokens_reused\":80"));
+        assert!(j.contains("\"prefix_idle_entries\":3"));
+        assert!(j.contains("\"prefix_idle_bytes\":1500000"));
+        assert!(md.contains("prefix idle entries"));
         assert!(j.contains("\"kv_pages_peak\":20"));
         assert!(j.contains("\"weight_residency\":\"quantized\""));
         assert!(j.contains("\"weight_resident_bytes\":2500000"));
@@ -1066,6 +1123,8 @@ mod tests {
             prefix_tokens_reused: 0,
             kv_cow_copies: 0,
             kv_prefix_bytes_saved: 0.0,
+            prefix_idle_entries: 0,
+            prefix_idle_bytes: 0,
             submitted: 3,
             completed: 0,
             rejected: 3,

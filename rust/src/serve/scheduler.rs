@@ -178,6 +178,23 @@ impl Scheduler {
         }
     }
 
+    /// Cancel a live session (client disconnected mid-stream): remove
+    /// it from whichever list holds it and take the Evicted exit, so
+    /// its KV slot frees immediately and its span closes. Returns
+    /// false for unknown or already-terminal sessions (idempotent —
+    /// the server calls this on any sink error, racing completion).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if !self.table.contains(id) || self.table.get(id).is_terminal()
+        {
+            return false;
+        }
+        self.queue.retain(|&x| x != id);
+        self.active.retain(|&x| x != id);
+        self.stalled.retain(|&x| x != id);
+        self.evict_session(id);
+        true
+    }
+
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
@@ -642,6 +659,33 @@ mod tests {
         // percentiles from the log2 histogram must be ordered
         let p = sched.itl.percentiles_ms(&[50.0, 95.0, 99.0]);
         assert!(p[0] <= p[1] && p[1] <= p[2]);
+    }
+
+    #[test]
+    fn cancel_frees_slots_from_any_list_and_is_idempotent() {
+        let (mut rt, engine, mut sched) = setup(2, 2, 8);
+        let mut rng = Rng::new(5);
+        // queued cancel: three submits, two slots
+        let a = sched.submit(0, vec![3, 4], 8, 7, 0.0).unwrap();
+        let b = sched.submit(1, vec![3, 4], 8, 7, 0.0).unwrap();
+        let c = sched.submit(2, vec![3, 4], 8, 7, 0.0).unwrap();
+        sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+        assert_eq!(sched.queue_len(), 1, "c still waits");
+        assert!(sched.cancel(c), "queued session cancels");
+        assert_eq!(sched.queue_len(), 0);
+        // active cancel releases the slot for reuse
+        assert!(sched.cancel(a));
+        assert_eq!(sched.table.get(a).state, SessionState::Evicted);
+        assert_eq!(sched.pool.in_use(), 1, "a's slot reclaimed");
+        // double-cancel and cancel-after-finish are no-ops
+        assert!(!sched.cancel(a));
+        drain(&mut rt, &engine, &mut sched, 100);
+        assert_eq!(sched.table.get(b).state, SessionState::Done);
+        assert!(!sched.cancel(b));
+        assert!(!sched.cancel(999_999), "unknown id is a no-op");
+        assert_eq!(sched.stats.evicted, 2);
+        assert_eq!(sched.stats.completed, 1);
+        assert_eq!(sched.pool.in_use(), 0);
     }
 
     #[test]

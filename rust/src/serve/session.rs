@@ -116,6 +116,10 @@ impl SessionTable {
         &self.map[&id]
     }
 
+    pub fn contains(&self, id: u64) -> bool {
+        self.map.contains_key(&id)
+    }
+
     pub fn get_mut(&mut self, id: u64) -> &mut Session {
         self.map.get_mut(&id).expect("unknown session id")
     }

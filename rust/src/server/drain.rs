@@ -1,0 +1,64 @@
+//! SIGTERM/SIGINT handling for graceful drain, with no libc crate:
+//! the handler is installed through the C runtime's `signal` symbol
+//! directly and does nothing but flip one atomic flag — the only
+//! async-signal-safe action a handler can take here. The server's
+//! core loop polls [`signaled`] and runs its ordinary drain path, so
+//! a `kill -TERM` and a test calling `request_shutdown` exercise the
+//! exact same code.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sys {
+    pub const SIGINT: i32 = 2;
+    pub const SIGTERM: i32 = 15;
+    // sighandler_t is pointer-sized on every unix Rust targets; the
+    // return value (the previous handler) is ignored.
+    extern "C" {
+        pub fn signal(signum: i32,
+                      handler: extern "C" fn(i32)) -> usize;
+    }
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(_sig: i32) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Install the drain handler for SIGINT and SIGTERM. Idempotent; a
+/// no-op on non-unix targets (ctrl-c then terminates the process,
+/// which is still a correct, if abrupt, outcome).
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    unsafe {
+        sys::signal(sys::SIGINT, on_signal);
+        sys::signal(sys::SIGTERM, on_signal);
+    }
+}
+
+/// Has a drain been requested (by signal or [`request_shutdown`])?
+pub fn signaled() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Programmatic equivalent of receiving SIGTERM. The flag is
+/// process-global and sticky — meant for the CLI path and for smoke
+/// scripts, not for tests that share a process (those pass their own
+/// shutdown flag to `Server::run`).
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_is_idempotent() {
+        // must not panic or alter behavior when called repeatedly
+        install_signal_handlers();
+        install_signal_handlers();
+    }
+}

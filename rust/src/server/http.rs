@@ -1,0 +1,260 @@
+//! Minimal HTTP/1.1 request parsing and response writing over any
+//! `Read`/`Write` pair — std-only, like the rest of the serving stack.
+//!
+//! Scope is deliberately small: one request per connection
+//! (`Connection: close` on every response), request heads capped at
+//! 16 KB and bodies at 1 MB, no chunked transfer encoding, no
+//! keep-alive. That is all the serving front-end needs, and every
+//! byte of it is testable against an in-memory `Cursor`.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+/// Request-head cap (request line + headers). A head that exceeds
+/// this is a malformed or hostile client; the connection is dropped
+/// with a 400 before any allocation proportional to its input.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Body cap. The largest legitimate body is a `/v1/generate` prompt
+/// of `max_seq` token ids, which is orders of magnitude below this.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed HTTP/1.1 request. Header names are lowercased at parse
+/// time so lookups are case-insensitive, per RFC 9110.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// path with any query string stripped
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read and parse one request. Errors on oversized heads/bodies,
+/// truncated streams, and malformed request lines — the caller maps
+/// any error to a 400 and closes.
+pub fn read_request<R: Read>(r: &mut R) -> Result<Request> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        ensure!(buf.len() <= MAX_HEAD_BYTES,
+                "request head exceeds {MAX_HEAD_BYTES} bytes");
+        let n = r.read(&mut tmp).context("reading request head")?;
+        ensure!(n > 0, "connection closed mid-request");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .context("request head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .context("empty request line")?
+        .to_string();
+    let target = parts.next().context("request line has no target")?;
+    let version = parts.next().context("request line has no version")?;
+    ensure!(version.starts_with("HTTP/1."),
+            "unsupported protocol {version:?}");
+    let path = target
+        .split('?')
+        .next()
+        .unwrap_or(target)
+        .to_string();
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .with_context(|| format!("malformed header {line:?}"))?;
+        headers.push((
+            k.trim().to_ascii_lowercase(),
+            v.trim().to_string(),
+        ));
+    }
+    let content_len: usize = match headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+    {
+        None => 0,
+        Some((_, v)) => v
+            .parse()
+            .with_context(|| format!("bad Content-Length {v:?}"))?,
+    };
+    ensure!(content_len <= MAX_BODY_BYTES,
+            "body of {content_len} bytes exceeds {MAX_BODY_BYTES}");
+    let mut body = buf[head_end + 4..].to_vec();
+    if body.len() > content_len {
+        bail!("body longer than Content-Length");
+    }
+    while body.len() < content_len {
+        let want = (content_len - body.len()).min(tmp.len());
+        let n = r.read(&mut tmp[..want]).context("reading body")?;
+        ensure!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&tmp[..n]);
+    }
+    Ok(Request { method, path, headers, body })
+}
+
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        422 => "Unprocessable Content",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete response (status + headers + body) and flush.
+/// Every response carries `Content-Length` and `Connection: close`.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, reason_phrase(status))?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    write!(w, "Connection: close\r\n")?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// JSON-body convenience wrapper over [`write_response`].
+pub fn write_json<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, String)],
+    body: &str,
+) -> std::io::Result<()> {
+    write_response(w, status, "application/json", extra_headers,
+                   body.as_bytes())
+}
+
+/// Error-body convenience: `{"error":"..."}` with proper escaping.
+pub fn write_error<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, String)],
+    msg: &str,
+) -> std::io::Result<()> {
+    let body =
+        format!("{{\"error\":\"{}\"}}", crate::obs::json::escape(msg));
+    write_json(w, status, extra_headers, &body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Request> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_get_with_query_and_headers() {
+        let r = parse(
+            "GET /metrics?x=1 HTTP/1.1\r\nHost: a\r\n\
+             X-Thing:  padded \r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/metrics");
+        assert_eq!(r.header("x-thing"), Some("padded"));
+        assert_eq!(r.header("X-THING"), Some("padded"));
+        assert_eq!(r.header("absent"), None);
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let r = parse(
+            "POST /v1/generate HTTP/1.1\r\nContent-Length: 11\r\n\r\n\
+             {\"a\":[1,2]}",
+        )
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(std::str::from_utf8(&r.body).unwrap(),
+                   "{\"a\":[1,2]}");
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized() {
+        assert!(parse("garbage\r\n\r\n").is_err());
+        assert!(parse("GET /x HTTP/2\r\n\r\n").is_err());
+        assert!(parse("GET /x HTTP/1.1\r\nnocolon\r\n\r\n").is_err());
+        assert!(parse("GET / HTTP/1.1\r\nContent-Length: z\r\n\r\n")
+            .is_err());
+        // truncated body
+        assert!(parse(
+            "POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort"
+        )
+        .is_err());
+        // oversized head: never terminates within the cap
+        let huge = format!("GET / HTTP/1.1\r\nX: {}\r\n\r\n",
+                           "a".repeat(MAX_HEAD_BYTES + 10));
+        assert!(parse(&huge).is_err());
+        // declared body above the cap is refused before reading it
+        let big = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert!(parse(&big).is_err());
+    }
+
+    #[test]
+    fn response_writer_emits_complete_http() {
+        let mut out = Vec::new();
+        write_json(&mut out, 429,
+                   &[("Retry-After", "3".to_string())],
+                   "{\"error\":\"queue-full\"}")
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(s.contains("Content-Type: application/json\r\n"));
+        assert!(s.contains("Content-Length: 22\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.contains("Retry-After: 3\r\n"));
+        assert!(s.ends_with("{\"error\":\"queue-full\"}"));
+    }
+
+    #[test]
+    fn error_writer_escapes_messages() {
+        let mut out = Vec::new();
+        write_error(&mut out, 400, &[], "bad \"prompt\"\nline").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("{\"error\":\"bad \\\"prompt\\\"\\nline\"}"));
+    }
+}

@@ -1,0 +1,969 @@
+//! Network serving front-end: a dependency-free TCP/HTTP-1.1 server
+//! that turns the continuous-batching scheduler (`crate::serve`) into
+//! an online service.
+//!
+//! Architecture: the thread that calls [`Server::run`] owns the
+//! engine, the scheduler, and the runtime — none of them ever cross a
+//! thread boundary, so the decode path is byte-identical to the
+//! offline workload driver's. A listener thread accepts connections
+//! (bounded by `max_conns`; excess connections get an immediate 503)
+//! and hands each one to a short-lived worker thread. Workers parse
+//! the request and talk to the core loop over one bounded command
+//! channel; the core drains commands between scheduler steps, so
+//! admission decisions always see a consistent queue. Token streaming
+//! runs the other way: each admitted session gets a bounded
+//! per-session channel the core pushes freshly sampled tokens into
+//! after every step, and the worker frames them as SSE events (or
+//! collects them for a single JSON response). A send failure means
+//! the client is gone — the core cancels the session so its KV slot
+//! frees immediately instead of decoding into the void.
+//!
+//! Shutdown (SIGTERM/SIGINT via [`drain`], or a test flipping the
+//! shared flag) stops the accept loop, sheds new submissions with
+//! 503s, finishes or TTL-evicts everything in flight, flushes the
+//! configured trace/metrics exports, and returns a [`DrainReport`]
+//! whose leak counters the CLI turns into the process exit code.
+
+pub mod drain;
+pub mod http;
+pub mod router;
+pub mod sse;
+
+use crate::artifact::{LoraMode, ModelArtifact};
+use crate::obs::trace_export;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::serve::engine::{Engine, EngineBuilder};
+use crate::serve::kv_cache::KvPrecision;
+use crate::serve::scheduler::Scheduler;
+use crate::serve::{self, ServeOpts};
+use anyhow::{Context, Result};
+use router::{GenerateDefaults, GenerateRequest, Route};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender,
+                      TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Hard bound on scheduler steps spent draining after shutdown — far
+/// above any legitimate in-flight work (a session generates at most
+/// `max_seq` tokens); hitting it force-cancels whatever remains so
+/// the process always exits.
+const MAX_DRAIN_STEPS: u64 = 100_000;
+
+/// Engine knobs the server must be able to re-apply when it rebuilds
+/// an engine for `/admin/reload` — the builder itself is consumed by
+/// `build`, so the template is what survives.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineTemplate {
+    pub kv_precision: KvPrecision,
+    pub lora: Option<LoraMode>,
+    pub threads: Option<usize>,
+    pub profile_every: Option<u32>,
+}
+
+impl Default for EngineTemplate {
+    fn default() -> EngineTemplate {
+        EngineTemplate {
+            kv_precision: KvPrecision::F32,
+            lora: None,
+            threads: None,
+            profile_every: None,
+        }
+    }
+}
+
+impl EngineTemplate {
+    /// Stamp every configured knob onto a fresh builder.
+    pub fn apply(&self, mut b: EngineBuilder) -> EngineBuilder {
+        b = b.kv_precision(self.kv_precision);
+        if let Some(m) = self.lora {
+            b = b.lora(m);
+        }
+        if let Some(n) = self.threads {
+            b = b.threads(n);
+        }
+        if let Some(n) = self.profile_every {
+            b = b.profile_every(n);
+        }
+        b
+    }
+}
+
+/// Front-end knobs wrapping the shared serving options.
+#[derive(Clone, Debug)]
+pub struct ServerOpts {
+    /// bind address; port 0 picks an ephemeral port (tests, CI)
+    pub addr: String,
+    /// concurrent-connection cap; excess connections get 503
+    pub max_conns: usize,
+    /// scheduler / pool / workload knobs shared with `serve`
+    pub serve: ServeOpts,
+    /// engine knobs re-applied on artifact reload
+    pub template: EngineTemplate,
+}
+
+impl ServerOpts {
+    pub fn new(serve: ServeOpts) -> ServerOpts {
+        ServerOpts {
+            addr: "127.0.0.1:8080".to_string(),
+            max_conns: 64,
+            serve,
+            template: EngineTemplate::default(),
+        }
+    }
+}
+
+/// What the core loop pushes into a session's stream channel.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokenEvent {
+    Token(i32),
+    Done {
+        /// terminal outcome label: "done" | "evicted"
+        outcome: &'static str,
+        tokens: usize,
+    },
+}
+
+/// Core-loop answer to a `/v1/generate` submission.
+pub enum SubmitResult {
+    Admitted { id: u64, rx: Receiver<TokenEvent> },
+    Rejected { reason: &'static str, retry_after: u64 },
+    /// server is shutting down; shed with 503
+    Draining,
+}
+
+enum ReloadResult {
+    Swapped(String),
+    Incompatible(String),
+    Failed(String),
+}
+
+/// Worker → core commands. One bounded channel carries all of them,
+/// so `/metrics` and `/traces` can never be starved behind an
+/// unbounded submit flood — the flood saturates the same bound.
+enum Cmd {
+    Submit {
+        req: GenerateRequest,
+        resp: SyncSender<SubmitResult>,
+    },
+    Metrics {
+        resp: SyncSender<String>,
+    },
+    Traces {
+        resp: SyncSender<String>,
+    },
+    Reload {
+        path: PathBuf,
+        resp: SyncSender<ReloadResult>,
+    },
+}
+
+/// End-of-life accounting for one server run. `clean()` gates the
+/// CLI's exit code and the integration tests' drain assertions.
+#[derive(Clone, Debug)]
+pub struct DrainReport {
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub evicted: usize,
+    pub generated_tokens: u64,
+    pub steps: u64,
+    pub reloads: u64,
+    pub wall_secs: f64,
+    /// KV slots still held after drain — must be 0
+    pub leaked_slots: usize,
+    /// KV pages still held after drain (prefix index cleared) — 0
+    pub leaked_pages: usize,
+    /// spans left open in the tracer — must be 0
+    pub live_spans: usize,
+    pub dropped_spans: u64,
+}
+
+impl DrainReport {
+    pub fn clean(&self) -> bool {
+        self.leaked_slots == 0 && self.leaked_pages == 0
+            && self.live_spans == 0
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted {} completed {} rejected {} evicted {} \
+             tokens {} steps {} reloads {} leaked_slots {} \
+             leaked_pages {} live_spans {} dropped_spans {}",
+            self.submitted, self.completed, self.rejected,
+            self.evicted, self.generated_tokens, self.steps,
+            self.reloads, self.leaked_slots, self.leaked_pages,
+            self.live_spans, self.dropped_spans
+        )
+    }
+}
+
+/// Per-session stream state held by the core loop.
+struct Sink {
+    tx: SyncSender<TokenEvent>,
+    /// tokens already pushed (index into `Session::generated`)
+    cursor: usize,
+}
+
+/// Read-only context each connection worker gets.
+#[derive(Clone)]
+struct ConnCtx {
+    cmd_tx: SyncSender<Cmd>,
+    shutdown: Arc<AtomicBool>,
+    vocab: usize,
+    defaults: GenerateDefaults,
+}
+
+impl ConnCtx {
+    fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed) || drain::signaled()
+    }
+}
+
+/// A bound-but-not-yet-running server. Splitting bind from run lets
+/// callers learn the ephemeral port before the core loop takes over
+/// the thread.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+impl Server {
+    pub fn bind(addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        Ok(Server { listener, addr })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve until `shutdown` (or a process signal) requests a drain,
+    /// then drain and report. Consumes the server; the calling thread
+    /// becomes the core loop.
+    pub fn run(
+        self,
+        rt: &mut Runtime,
+        builder: EngineBuilder,
+        opts: &ServerOpts,
+        shutdown: Arc<AtomicBool>,
+    ) -> Result<DrainReport> {
+        // the tracer is always installed: it feeds GET /traces and
+        // the drain-time exports
+        let (mut engine, mut sched) =
+            serve::build_stack(rt, builder, &opts.serve, true)?;
+
+        let (cmd_tx, cmd_rx) =
+            sync_channel::<Cmd>(opts.serve.max_queue.max(1) + 16);
+        let ctx = ConnCtx {
+            cmd_tx,
+            shutdown: shutdown.clone(),
+            vocab: engine.cfg().vocab,
+            defaults: GenerateDefaults {
+                max_new: opts.serve.max_new.1,
+                temperature: opts.serve.temperature,
+                seed: opts.serve.seed,
+            },
+        };
+
+        let listener = self.listener;
+        listener
+            .set_nonblocking(true)
+            .context("listener nonblocking")?;
+        let max_conns = opts.max_conns.max(1);
+        // the accept loop takes the only long-lived sender; channel
+        // disconnect then means "listener exited and every worker
+        // finished"
+        let accept_handle = std::thread::spawn(move || {
+            accept_loop(listener, ctx, max_conns);
+        });
+
+        let mut sinks: HashMap<u64, Sink> = HashMap::new();
+        let mut workload_rng = Rng::new(opts.serve.seed ^ 0x5E47E);
+        let t0 = Instant::now();
+        let mut reloads = 0u64;
+        let mut next_client = 0usize;
+        let mut drain_steps = 0u64;
+
+        loop {
+            let draining =
+                shutdown.load(Ordering::Relaxed) || drain::signaled();
+
+            let mut cmds: Vec<Cmd> = Vec::new();
+            loop {
+                match cmd_rx.try_recv() {
+                    Ok(c) => cmds.push(c),
+                    Err(TryRecvError::Empty)
+                    | Err(TryRecvError::Disconnected) => break,
+                }
+            }
+            if cmds.is_empty() && sched.idle() {
+                if draining {
+                    break;
+                }
+                // idle: block briefly for the next command instead of
+                // spinning
+                match cmd_rx
+                    .recv_timeout(Duration::from_millis(2))
+                {
+                    Ok(c) => cmds.push(c),
+                    Err(e) => {
+                        if matches!(
+                            e,
+                            std::sync::mpsc::RecvTimeoutError::Disconnected
+                        ) {
+                            // accept loop died with nothing in flight
+                            break;
+                        }
+                    }
+                }
+            }
+
+            for cmd in cmds {
+                match cmd {
+                    Cmd::Submit { req, resp } => {
+                        if draining {
+                            let _ = resp.send(SubmitResult::Draining);
+                            continue;
+                        }
+                        let qlen = sched.queue_len();
+                        let decision = sched.admission.decide(
+                            req.prompt.len(),
+                            req.max_new,
+                            qlen,
+                        );
+                        let client = next_client;
+                        next_client += 1;
+                        match sched.submit(
+                            client,
+                            req.prompt,
+                            req.max_new,
+                            req.seed,
+                            req.temperature,
+                        ) {
+                            Some(id) => {
+                                let (tx, rx) =
+                                    sync_channel(req.max_new + 2);
+                                if resp
+                                    .send(SubmitResult::Admitted {
+                                        id,
+                                        rx,
+                                    })
+                                    .is_ok()
+                                {
+                                    sinks.insert(
+                                        id,
+                                        Sink { tx, cursor: 0 },
+                                    );
+                                } else {
+                                    // worker died before hearing the
+                                    // verdict: don't decode for a
+                                    // ghost
+                                    sched.cancel(id);
+                                    sched.table.remove(id);
+                                }
+                            }
+                            None => {
+                                use crate::serve::admission::Decision;
+                                let reason = match decision {
+                                    Decision::Reject(r) => r.label(),
+                                    Decision::Admit => "rejected",
+                                };
+                                let _ = resp.send(
+                                    SubmitResult::Rejected {
+                                        reason,
+                                        retry_after: sched
+                                            .admission
+                                            .retry_after_secs(qlen),
+                                    },
+                                );
+                            }
+                        }
+                    }
+                    Cmd::Metrics { resp } => {
+                        let (g, r) = engine.scratch_stats();
+                        let reg = serve::metrics_registry(
+                            &sched,
+                            g,
+                            r,
+                            t0.elapsed().as_secs_f64(),
+                        );
+                        let _ = resp.send(reg.snapshot_json());
+                    }
+                    Cmd::Traces { resp } => {
+                        let body = match sched.tracer() {
+                            Some(tr) => {
+                                trace_export::events_jsonl(tr, &[])
+                            }
+                            None => String::new(),
+                        };
+                        let _ = resp.send(body);
+                    }
+                    Cmd::Reload { path, resp } => {
+                        let result = reload_engine(
+                            rt, &path, opts, &engine,
+                        );
+                        let _ = resp.send(match result {
+                            Ok(new_engine) => {
+                                let label = format!(
+                                    "{} ({} layers, vocab {})",
+                                    path.display(),
+                                    new_engine.cfg().n_layers,
+                                    new_engine.cfg().vocab,
+                                );
+                                engine = new_engine;
+                                reloads += 1;
+                                ReloadResult::Swapped(label)
+                            }
+                            Err(ReloadError::Incompatible(m)) => {
+                                ReloadResult::Incompatible(m)
+                            }
+                            Err(ReloadError::Failed(m)) => {
+                                ReloadResult::Failed(m)
+                            }
+                        });
+                    }
+                }
+            }
+
+            if !sched.idle() {
+                if let Err(e) = sched.step(
+                    &engine,
+                    rt,
+                    &mut workload_rng,
+                    opts.serve.stall_prob,
+                ) {
+                    // the scheduler already evicted the failing
+                    // sessions; their sinks see Done{evicted} on the
+                    // next pump
+                    eprintln!("[serve-http] step error: {e:#}");
+                }
+                pump_sinks(&mut sched, &mut sinks);
+                if opts.serve.stats_every > 0
+                    && sched.step_no() % opts.serve.stats_every == 0
+                {
+                    eprintln!(
+                        "[serve-http] step {:>6}  done {:>5}  \
+                         active {:>3}  queue {:>3}  streams {:>3}",
+                        sched.step_no(),
+                        sched.stats.completed,
+                        sched.active_len(),
+                        sched.queue_len(),
+                        sinks.len(),
+                    );
+                }
+                if draining {
+                    drain_steps += 1;
+                    if drain_steps > MAX_DRAIN_STEPS {
+                        eprintln!(
+                            "[serve-http] drain guard tripped; \
+                             cancelling {} live sessions",
+                            sinks.len()
+                        );
+                        let ids: Vec<u64> =
+                            sinks.keys().copied().collect();
+                        for id in ids {
+                            sched.cancel(id);
+                        }
+                        pump_sinks(&mut sched, &mut sinks);
+                        break;
+                    }
+                }
+            }
+        }
+
+        // notify any stream that survived the loop (drain guard or
+        // listener death), then flush exports and account for leaks
+        let ids: Vec<u64> = sinks.keys().copied().collect();
+        for id in ids {
+            sched.cancel(id);
+        }
+        pump_sinks(&mut sched, &mut sinks);
+        let _ = accept_handle.join();
+
+        let wall = t0.elapsed().as_secs_f64();
+        let (scratch_grows, scratch_reuses) = engine.scratch_stats();
+        let tracer =
+            sched.take_tracer().expect("server tracer installed");
+        let phase_events = engine.profiler().take_events();
+        if let Some(path) = &opts.serve.trace_out {
+            let body =
+                trace_export::chrome_trace(&tracer, &phase_events);
+            std::fs::write(path, body).with_context(|| {
+                format!("writing trace to {}", path.display())
+            })?;
+        }
+        if let Some(path) = &opts.serve.events_out {
+            let body =
+                trace_export::events_jsonl(&tracer, &phase_events);
+            std::fs::write(path, body).with_context(|| {
+                format!("writing event log to {}", path.display())
+            })?;
+        }
+        if let Some(path) = &opts.serve.metrics_out {
+            let reg = serve::metrics_registry(
+                &sched,
+                scratch_grows,
+                scratch_reuses,
+                wall,
+            );
+            std::fs::write(path, reg.snapshot_json()).with_context(
+                || {
+                    format!(
+                        "writing metrics snapshot to {}",
+                        path.display()
+                    )
+                },
+            )?;
+        }
+        // prefix pages are pinned by design while serving; a drain
+        // must hand every page back before the leak check
+        sched.pool.clear_prefix_index();
+
+        Ok(DrainReport {
+            submitted: sched.stats.submitted,
+            completed: sched.stats.completed,
+            rejected: sched.stats.rejected,
+            evicted: sched.stats.evicted,
+            generated_tokens: sched.stats.generated_tokens,
+            steps: sched.step_no(),
+            reloads,
+            wall_secs: wall,
+            leaked_slots: sched.pool.in_use(),
+            leaked_pages: sched.pool.pages_used(),
+            live_spans: tracer.live_len(),
+            dropped_spans: tracer.dropped(),
+        })
+    }
+}
+
+enum ReloadError {
+    Incompatible(String),
+    Failed(String),
+}
+
+/// Load + build a replacement engine for `/admin/reload`. The new
+/// engine must agree with the old one on the KV geometry
+/// (`kv_shape_key`) — the live pool's slots were sized for it and
+/// in-flight sessions keep decoding against their existing caches.
+fn reload_engine(
+    rt: &mut Runtime,
+    path: &std::path::Path,
+    opts: &ServerOpts,
+    current: &Engine,
+) -> std::result::Result<Engine, ReloadError> {
+    let art = ModelArtifact::load(path)
+        .map_err(|e| ReloadError::Failed(format!("{e:#}")))?;
+    let builder = opts
+        .template
+        .apply(EngineBuilder::new().artifact(art))
+        .max_seq(opts.serve.max_seq)
+        .profile_events(true);
+    let new_engine = builder
+        .build(rt)
+        .map_err(|e| ReloadError::Failed(format!("{e:#}")))?;
+    if new_engine.kv_shape_key() != current.kv_shape_key() {
+        return Err(ReloadError::Incompatible(format!(
+            "artifact KV geometry {:?} != serving geometry {:?}",
+            new_engine.kv_shape_key(),
+            current.kv_shape_key()
+        )));
+    }
+    Ok(new_engine)
+}
+
+/// Push newly sampled tokens to every stream, close finished ones,
+/// and cancel sessions whose client disappeared.
+fn pump_sinks(sched: &mut Scheduler, sinks: &mut HashMap<u64, Sink>) {
+    let mut done: Vec<u64> = Vec::new();
+    let mut dead: Vec<u64> = Vec::new();
+    for (&id, sink) in sinks.iter_mut() {
+        if !sched.table.contains(id) {
+            done.push(id);
+            continue;
+        }
+        let (fresh, terminal, outcome) = {
+            let s = sched.table.get(id);
+            (
+                s.generated[sink.cursor..].to_vec(),
+                s.is_terminal(),
+                match s.state {
+                    crate::serve::session::SessionState::Evicted => {
+                        "evicted"
+                    }
+                    _ => "done",
+                },
+            )
+        };
+        let mut client_gone = false;
+        for t in fresh {
+            if sink.tx.try_send(TokenEvent::Token(t)).is_err() {
+                client_gone = true;
+                break;
+            }
+            sink.cursor += 1;
+        }
+        if client_gone {
+            dead.push(id);
+        } else if terminal {
+            let _ = sink.tx.try_send(TokenEvent::Done {
+                outcome,
+                tokens: sink.cursor,
+            });
+            done.push(id);
+        }
+    }
+    for id in dead {
+        sched.cancel(id);
+        sched.table.remove(id);
+        sinks.remove(&id);
+    }
+    for id in done {
+        if sched.table.contains(id) {
+            sched.table.remove(id);
+        }
+        sinks.remove(&id);
+    }
+}
+
+fn accept_loop(listener: TcpListener, ctx: ConnCtx,
+               max_conns: usize) {
+    let active = Arc::new(AtomicUsize::new(0));
+    loop {
+        if ctx.draining() {
+            return;
+        }
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                let n = active.fetch_add(1, Ordering::SeqCst);
+                if n >= max_conns {
+                    active.fetch_sub(1, Ordering::SeqCst);
+                    let _ = http::write_error(
+                        &mut stream,
+                        503,
+                        &[("Retry-After", "1".to_string())],
+                        "connection limit reached",
+                    );
+                    continue;
+                }
+                let conn_ctx = ctx.clone();
+                let active = active.clone();
+                std::thread::spawn(move || {
+                    handle_conn(stream, conn_ctx);
+                    active.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_nodelay(true);
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = http::write_error(&mut stream, 400, &[],
+                                      &format!("{e:#}"));
+            return;
+        }
+    };
+    match router::route(&req.method, &req.path) {
+        Route::Healthz => {
+            let body = format!(
+                "{{\"ok\":true,\"draining\":{}}}",
+                ctx.draining()
+            );
+            let _ = http::write_json(&mut stream, 200, &[], &body);
+        }
+        Route::Metrics => {
+            match ask(&ctx, |resp| Cmd::Metrics { resp }) {
+                Some(body) => {
+                    let _ = http::write_json(&mut stream, 200, &[],
+                                             &body);
+                }
+                None => {
+                    let _ = busy(&mut stream);
+                }
+            }
+        }
+        Route::Traces => {
+            match ask(&ctx, |resp| Cmd::Traces { resp }) {
+                Some(body) => {
+                    let _ = http::write_response(
+                        &mut stream,
+                        200,
+                        "application/x-ndjson",
+                        &[],
+                        body.as_bytes(),
+                    );
+                }
+                None => {
+                    let _ = busy(&mut stream);
+                }
+            }
+        }
+        Route::Generate => handle_generate(stream, &req, &ctx),
+        Route::Reload => handle_reload(stream, &req, &ctx),
+        Route::NotFound => {
+            let _ = http::write_error(
+                &mut stream,
+                404,
+                &[],
+                &format!("no route {} {}", req.method, req.path),
+            );
+        }
+    }
+}
+
+/// One-shot request/response round trip with the core loop. `None`
+/// means the command channel was full or the core is gone.
+fn ask<T>(ctx: &ConnCtx,
+          make: impl FnOnce(SyncSender<T>) -> Cmd) -> Option<T> {
+    let (tx, rx) = sync_channel(1);
+    ctx.cmd_tx.try_send(make(tx)).ok()?;
+    rx.recv().ok()
+}
+
+fn busy(stream: &mut TcpStream) -> std::io::Result<()> {
+    http::write_error(
+        stream,
+        503,
+        &[("Retry-After", "1".to_string())],
+        "server busy",
+    )
+}
+
+fn handle_generate(mut stream: TcpStream, req: &http::Request,
+                   ctx: &ConnCtx) {
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(s) => s,
+        Err(_) => {
+            let _ = http::write_error(&mut stream, 400, &[],
+                                      "body is not UTF-8");
+            return;
+        }
+    };
+    let greq = match router::parse_generate(body, &ctx.defaults) {
+        Ok(g) => g,
+        Err(e) => {
+            let _ = http::write_error(&mut stream, 400, &[], &e);
+            return;
+        }
+    };
+    if let Some(&bad) = greq
+        .prompt
+        .iter()
+        .find(|&&t| t < 0 || t as usize >= ctx.vocab)
+    {
+        let _ = http::write_error(
+            &mut stream,
+            400,
+            &[],
+            &format!("token id {bad} outside vocab 0..{}", ctx.vocab),
+        );
+        return;
+    }
+    let stream_mode = greq.stream;
+    let (rtx, rrx) = sync_channel(1);
+    if ctx
+        .cmd_tx
+        .try_send(Cmd::Submit { req: greq, resp: rtx })
+        .is_err()
+    {
+        // submit queue full: the backpressure contract is a 429 with
+        // a deterministic retry hint
+        let _ = http::write_error(
+            &mut stream,
+            429,
+            &[("Retry-After", "1".to_string())],
+            "submit queue full",
+        );
+        return;
+    }
+    match rrx.recv() {
+        Err(_) => {
+            let _ = http::write_error(&mut stream, 500, &[],
+                                      "server loop unavailable");
+        }
+        Ok(SubmitResult::Draining) => {
+            let _ = http::write_error(
+                &mut stream,
+                503,
+                &[("Retry-After", "1".to_string())],
+                "draining",
+            );
+        }
+        Ok(SubmitResult::Rejected { reason, retry_after }) => {
+            if reason == "queue-full" {
+                let _ = http::write_error(
+                    &mut stream,
+                    429,
+                    &[("Retry-After", retry_after.to_string())],
+                    reason,
+                );
+            } else {
+                let _ =
+                    http::write_error(&mut stream, 400, &[], reason);
+            }
+        }
+        Ok(SubmitResult::Admitted { id, rx }) => {
+            if stream_mode {
+                stream_tokens(&mut stream, id, rx);
+            } else {
+                collect_tokens(&mut stream, id, rx);
+            }
+        }
+    }
+}
+
+fn handle_reload(mut stream: TcpStream, req: &http::Request,
+                 ctx: &ConnCtx) {
+    let body = std::str::from_utf8(&req.body).unwrap_or("");
+    let path = match crate::obs::json::Json::parse(body)
+        .ok()
+        .as_ref()
+        .and_then(|d| d.get("artifact"))
+        .and_then(|p| p.as_str())
+    {
+        Some(p) if !p.is_empty() => PathBuf::from(p),
+        _ => {
+            let _ = http::write_error(
+                &mut stream,
+                400,
+                &[],
+                "body must be {\"artifact\":\"path\"}",
+            );
+            return;
+        }
+    };
+    match ask(ctx, |resp| Cmd::Reload { path, resp }) {
+        None => {
+            let _ = busy(&mut stream);
+        }
+        Some(ReloadResult::Swapped(label)) => {
+            let body = format!(
+                "{{\"reloaded\":true,\"artifact\":\"{}\"}}",
+                crate::obs::json::escape(&label)
+            );
+            let _ = http::write_json(&mut stream, 200, &[], &body);
+        }
+        Some(ReloadResult::Incompatible(msg)) => {
+            let _ = http::write_error(&mut stream, 409, &[], &msg);
+        }
+        Some(ReloadResult::Failed(msg)) => {
+            let _ = http::write_error(&mut stream, 400, &[], &msg);
+        }
+    }
+}
+
+fn stream_tokens(stream: &mut TcpStream, id: u64,
+                 rx: Receiver<TokenEvent>) {
+    if sse::write_headers(stream).is_err() {
+        return; // dropping rx cancels the session at the next pump
+    }
+    if sse::write_event(stream, &format!("{{\"id\":{id}}}")).is_err()
+    {
+        return;
+    }
+    for ev in rx.iter() {
+        let frame = match ev {
+            TokenEvent::Token(t) => format!("{{\"token\":{t}}}"),
+            TokenEvent::Done { outcome, tokens } => {
+                let f = format!(
+                    "{{\"done\":true,\"outcome\":\"{outcome}\",\
+                     \"tokens\":{tokens}}}"
+                );
+                let _ = sse::write_event(stream, &f);
+                return;
+            }
+        };
+        if sse::write_event(stream, &frame).is_err() {
+            return;
+        }
+    }
+}
+
+fn collect_tokens(stream: &mut TcpStream, id: u64,
+                  rx: Receiver<TokenEvent>) {
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut outcome = "unknown";
+    for ev in rx.iter() {
+        match ev {
+            TokenEvent::Token(t) => tokens.push(t),
+            TokenEvent::Done { outcome: o, .. } => {
+                outcome = o;
+                break;
+            }
+        }
+    }
+    let toks: Vec<String> =
+        tokens.iter().map(|t| t.to_string()).collect();
+    let body = format!(
+        "{{\"id\":{id},\"outcome\":\"{outcome}\",\"tokens\":[{}]}}",
+        toks.join(",")
+    );
+    let _ = http::write_json(stream, 200, &[], &body);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_opts_defaults() {
+        let o = ServerOpts::new(ServeOpts::smoke());
+        assert_eq!(o.addr, "127.0.0.1:8080");
+        assert_eq!(o.max_conns, 64);
+        assert!(o.template.lora.is_none());
+        assert_eq!(o.template.kv_precision, KvPrecision::F32);
+    }
+
+    #[test]
+    fn drain_report_clean_gate() {
+        let mut r = DrainReport {
+            submitted: 4,
+            completed: 3,
+            rejected: 1,
+            evicted: 0,
+            generated_tokens: 12,
+            steps: 9,
+            reloads: 1,
+            wall_secs: 0.1,
+            leaked_slots: 0,
+            leaked_pages: 0,
+            live_spans: 0,
+            dropped_spans: 0,
+        };
+        assert!(r.clean());
+        let s = r.summary();
+        assert!(s.contains("completed 3"));
+        assert!(s.contains("reloads 1"));
+        r.leaked_pages = 2;
+        assert!(!r.clean());
+        r.leaked_pages = 0;
+        r.live_spans = 1;
+        assert!(!r.clean());
+    }
+
+    #[test]
+    fn bind_picks_ephemeral_port() {
+        let s = Server::bind("127.0.0.1:0").unwrap();
+        assert_ne!(s.local_addr().port(), 0);
+        // a second bind to the same explicit port fails loudly
+        let taken = format!("127.0.0.1:{}", s.local_addr().port());
+        assert!(Server::bind(&taken).is_err());
+    }
+}

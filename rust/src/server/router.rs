@@ -1,0 +1,196 @@
+//! Route table and typed request parsing for the serving front-end.
+//!
+//! Routing is a closed enum — the connection handler matches on
+//! [`Route`] so every endpoint the server exposes is visible in one
+//! place. Body parsing goes through the strict in-tree JSON parser
+//! (`obs::json`), so malformed requests fail with a message instead
+//! of panicking or silently defaulting.
+
+use crate::obs::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// `POST /v1/generate` — submit a prompt, stream or batch tokens
+    Generate,
+    /// `GET /metrics` — live `qpruner.serve.metrics.v1` snapshot
+    Metrics,
+    /// `GET /traces` — completed session spans as
+    /// `qpruner.serve.events.v1` JSONL
+    Traces,
+    /// `GET /healthz` — liveness probe
+    Healthz,
+    /// `POST /admin/reload` — hot-swap the model artifact
+    Reload,
+    NotFound,
+}
+
+pub fn route(method: &str, path: &str) -> Route {
+    match (method, path) {
+        ("POST", "/v1/generate") => Route::Generate,
+        ("GET", "/metrics") => Route::Metrics,
+        ("GET", "/traces") => Route::Traces,
+        ("GET", "/healthz") => Route::Healthz,
+        ("POST", "/admin/reload") => Route::Reload,
+        _ => Route::NotFound,
+    }
+}
+
+/// Server-side defaults for the optional `/v1/generate` fields,
+/// derived from the serve options the process booted with.
+#[derive(Clone, Copy, Debug)]
+pub struct GenerateDefaults {
+    pub max_new: usize,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+/// One typed generation request. `prompt` is raw token ids — the
+/// server speaks the same representation the offline workload driver
+/// does, which is what makes streams replayable bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub seed: u64,
+    pub stream: bool,
+}
+
+fn uint_field(doc: &Json, key: &str, max: f64)
+              -> Result<Option<u64>, String> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| format!("{key} must be a number"))?;
+            if f.fract() != 0.0 || f < 0.0 || f > max {
+                return Err(format!(
+                    "{key} must be an integer in [0, {max:.0}]"
+                ));
+            }
+            Ok(Some(f as u64))
+        }
+    }
+}
+
+/// Parse a `/v1/generate` body. Errors are client-facing strings
+/// (mapped to 400s); the prompt's vocabulary bound is checked by the
+/// caller, which knows the engine.
+pub fn parse_generate(body: &str, d: &GenerateDefaults)
+                      -> Result<GenerateRequest, String> {
+    let doc = Json::parse(body)
+        .map_err(|e| format!("invalid JSON: {e}"))?;
+    let arr = doc
+        .get("prompt")
+        .and_then(|p| p.as_arr())
+        .ok_or("missing \"prompt\" array of token ids")?;
+    if arr.is_empty() {
+        return Err("empty prompt".into());
+    }
+    let mut prompt = Vec::with_capacity(arr.len());
+    for v in arr {
+        let f = v
+            .as_f64()
+            .ok_or("prompt entries must be integer token ids")?;
+        if f.fract() != 0.0 || f < 0.0 || f > i32::MAX as f64 {
+            return Err(
+                "prompt entries must be non-negative integers".into()
+            );
+        }
+        prompt.push(f as i32);
+    }
+    let max_new = match uint_field(&doc, "max_new", 1e9)? {
+        None => d.max_new,
+        Some(0) => return Err("max_new must be >= 1".into()),
+        Some(n) => n as usize,
+    };
+    let temperature = match doc.get("temperature") {
+        None => d.temperature,
+        Some(v) => {
+            let t = v
+                .as_f64()
+                .ok_or("temperature must be a number")?;
+            if !t.is_finite() || t < 0.0 {
+                return Err("temperature must be finite and >= 0".into());
+            }
+            t as f32
+        }
+    };
+    let seed =
+        uint_field(&doc, "seed", u64::MAX as f64)?.unwrap_or(d.seed);
+    let stream = match doc.get("stream") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or("stream must be a boolean")?,
+    };
+    Ok(GenerateRequest { prompt, max_new, temperature, seed, stream })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: GenerateDefaults = GenerateDefaults {
+        max_new: 8,
+        temperature: 0.8,
+        seed: 42,
+    };
+
+    #[test]
+    fn routes_are_exact() {
+        assert_eq!(route("POST", "/v1/generate"), Route::Generate);
+        assert_eq!(route("GET", "/metrics"), Route::Metrics);
+        assert_eq!(route("GET", "/traces"), Route::Traces);
+        assert_eq!(route("GET", "/healthz"), Route::Healthz);
+        assert_eq!(route("POST", "/admin/reload"), Route::Reload);
+        // wrong method or unknown path both 404
+        assert_eq!(route("GET", "/v1/generate"), Route::NotFound);
+        assert_eq!(route("POST", "/metrics"), Route::NotFound);
+        assert_eq!(route("GET", "/nope"), Route::NotFound);
+    }
+
+    #[test]
+    fn parse_applies_defaults() {
+        let r = parse_generate("{\"prompt\":[1,2,3]}", &D).unwrap();
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new, 8);
+        assert_eq!(r.seed, 42);
+        assert!((r.temperature - 0.8).abs() < 1e-6);
+        assert!(!r.stream);
+    }
+
+    #[test]
+    fn parse_honors_explicit_fields() {
+        let r = parse_generate(
+            "{\"prompt\":[5],\"max_new\":3,\"temperature\":0,\
+             \"seed\":7,\"stream\":true}",
+            &D,
+        )
+        .unwrap();
+        assert_eq!(r.max_new, 3);
+        assert_eq!(r.seed, 7);
+        assert_eq!(r.temperature, 0.0);
+        assert!(r.stream);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_requests() {
+        for bad in [
+            "not json",
+            "{}",
+            "{\"prompt\":[]}",
+            "{\"prompt\":\"hi\"}",
+            "{\"prompt\":[1.5]}",
+            "{\"prompt\":[-2]}",
+            "{\"prompt\":[1],\"max_new\":0}",
+            "{\"prompt\":[1],\"max_new\":2.5}",
+            "{\"prompt\":[1],\"temperature\":-1}",
+            "{\"prompt\":[1],\"stream\":\"yes\"}",
+            "{\"prompt\":[1],\"seed\":-3}",
+        ] {
+            assert!(parse_generate(bad, &D).is_err(), "accepted {bad}");
+        }
+    }
+}

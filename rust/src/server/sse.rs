@@ -1,0 +1,74 @@
+//! Server-Sent Events framing for `/v1/generate` token streaming.
+//!
+//! Each event is one single-line JSON object framed as
+//! `data: {...}\n\n` and flushed immediately, so a client sees every
+//! token the moment the scheduler samples it. The stream rides a
+//! `Connection: close` response with no `Content-Length` — the
+//! connection closing is the end-of-stream signal, which keeps the
+//! protocol implementable without chunked encoding.
+
+use std::io::Write;
+
+/// Write the SSE response head. After this the connection speaks
+/// only `data:` frames until close.
+pub fn write_headers<W: Write>(w: &mut W) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\n\
+          Content-Type: text/event-stream\r\n\
+          Cache-Control: no-cache\r\n\
+          Connection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// Frame one event. `data` must be a single line (the serving layer
+/// only ever passes compact JSON objects); embedded newlines would
+/// split the frame, so they are rejected loudly in debug builds.
+pub fn write_event<W: Write>(w: &mut W, data: &str)
+                             -> std::io::Result<()> {
+    debug_assert!(!data.contains('\n'), "SSE data must be one line");
+    w.write_all(b"data: ")?;
+    w.write_all(data.as_bytes())?;
+    w.write_all(b"\n\n")?;
+    w.flush()
+}
+
+/// Client-side inverse of [`write_event`]: split a raw SSE body into
+/// its `data:` payloads. Shared by the integration tests and any
+/// scripted client; tolerant of the `\r\n` line endings some proxies
+/// introduce.
+pub fn parse_events(body: &str) -> Vec<String> {
+    body.lines()
+        .filter_map(|l| l.strip_prefix("data:"))
+        .map(|p| p.trim().to_string())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_round_trip() {
+        let mut out = Vec::new();
+        write_headers(&mut out).unwrap();
+        write_event(&mut out, "{\"id\":3}").unwrap();
+        write_event(&mut out, "{\"token\":17}").unwrap();
+        write_event(&mut out, "{\"done\":true}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Type: text/event-stream\r\n"));
+        let (_head, body) = s.split_once("\r\n\r\n").unwrap();
+        let ev = parse_events(body);
+        assert_eq!(ev, vec!["{\"id\":3}", "{\"token\":17}",
+                            "{\"done\":true}"]);
+    }
+
+    #[test]
+    fn parse_ignores_non_data_lines() {
+        let ev = parse_events(
+            ": comment\ndata: {\"a\":1}\n\nretry: 100\ndata: {\"b\":2}\n\n",
+        );
+        assert_eq!(ev, vec!["{\"a\":1}", "{\"b\":2}"]);
+    }
+}

@@ -401,6 +401,141 @@ fn scheduler_fuzz_is_deterministic_and_never_leaks_slots() {
     assert_ne!(ta, tc, "trace insensitive to the seed");
 }
 
+/// Satellite of the HTTP front-end: a burst of N simultaneous
+/// submissions against a 1-slot pool must make deterministic
+/// admission decisions (exactly `max_queue` admitted before any step
+/// runs), then drain with zero dropped spans and zero leaked slots —
+/// the scheduler-level contract the server's 429/drain behaviour sits
+/// on.
+#[test]
+fn simultaneous_burst_admits_deterministically_and_drains_clean() {
+    use qpruner::obs::span::Tracer;
+
+    let dir = std::env::temp_dir().join("qpruner_serve_burst");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 17);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let max_seq = 24;
+    let engine = EngineBuilder::new()
+        .store(&store, &bits)
+        .max_seq(max_seq)
+        .build(&mut rt)
+        .unwrap();
+    let mut run_burst = || {
+        let pool = KvCachePool::with_slots(
+            &cfg,
+            engine.attn_dim(),
+            1,
+            max_seq,
+            KvPrecision::F32,
+            1e6,
+            1e6,
+        );
+        let mut sched = Scheduler::new(
+            pool,
+            AdmissionPolicy::new(2, max_seq),
+            1,
+            8,
+        );
+        sched.set_tracer(Tracer::new(64));
+        // 8 submissions land before any scheduler step — the HTTP
+        // analogue of 8 connections hitting POST /v1/generate at once
+        let verdicts: Vec<bool> = (0..8)
+            .map(|c| {
+                sched
+                    .submit(c, vec![3, 4, 5, 6], 4, 7, 0.5)
+                    .is_some()
+            })
+            .collect();
+        assert_eq!(
+            verdicts,
+            [true, true, false, false, false, false, false, false],
+            "admission under burst must be deterministic"
+        );
+        assert_eq!(sched.stats.rejected, 6);
+        assert_eq!(
+            sched.admission.retry_after_secs(sched.queue_len()),
+            sched.admission.retry_after_secs(2),
+            "retry hint must derive from the live queue depth"
+        );
+        let mut rng = Rng::new(0);
+        let mut guard = 0;
+        while !sched.idle() {
+            sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+            guard += 1;
+            assert!(guard < 200, "burst failed to drain");
+        }
+        assert_eq!(sched.stats.completed, 2);
+        assert_eq!(sched.pool.in_use(), 0, "slots leaked");
+        let tracer = sched.take_tracer().unwrap();
+        assert_eq!(tracer.spans().len(), 2, "admitted spans missing");
+        assert_eq!(tracer.live_len(), 0, "span left open after drain");
+        assert_eq!(tracer.dropped(), 0, "spans dropped under burst");
+        (sched.stats.completed, sched.stats.generated_tokens)
+    };
+    assert_eq!(run_burst(), run_burst());
+}
+
+/// `build_stack` + `metrics_registry` are the exact components the
+/// HTTP server serves through: the stack must admit work, and the
+/// registry snapshot must strict-parse with the serve + idle-prefix
+/// gauges present.
+#[test]
+fn build_stack_and_metrics_registry_back_the_http_server() {
+    use qpruner::obs::json::Json;
+    use qpruner::serve::{build_stack, metrics_registry};
+
+    let store = tiny_store(13);
+    let bits = nf4(&store);
+    let mut rt = runtime();
+    let mut opts = ServeOpts::smoke();
+    opts.max_batch = 2;
+    let builder = EngineBuilder::new().store(&store, &bits);
+    let (engine, mut sched) =
+        build_stack(&mut rt, builder, &opts, true).unwrap();
+    assert!(sched.tracer().is_some(), "tracer must be installed");
+
+    for c in 0..3 {
+        assert!(
+            sched.submit(c, vec![4, 5, 6], 4, opts.seed, 0.5).is_some()
+        );
+    }
+    let mut rng = Rng::new(1);
+    let mut guard = 0;
+    while !sched.idle() {
+        sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+        guard += 1;
+        assert!(guard < 200);
+    }
+    let (g, r) = engine.scratch_stats();
+    let reg = metrics_registry(&sched, g, r, 0.5);
+    let doc = Json::parse(&reg.snapshot_json())
+        .expect("metrics snapshot must strict-parse");
+    assert_eq!(
+        doc.get("schema").and_then(|s| s.as_str()),
+        Some("qpruner.serve.metrics.v1")
+    );
+    let counters = doc.get("counters").unwrap();
+    assert_eq!(
+        counters.get("serve.requests_completed").and_then(|v| v.as_f64()),
+        Some(3.0)
+    );
+    let gauges = doc.get("gauges").unwrap();
+    for key in ["kv.prefix_idle_entries", "kv.prefix_idle_bytes",
+                "serve.kv_pages_total", "serve.mean_occupancy"] {
+        assert!(
+            gauges.get(key).and_then(|v| v.as_f64()).is_some(),
+            "gauge {key} missing from snapshot"
+        );
+    }
+    assert!(doc
+        .get("histograms")
+        .and_then(|h| h.get("serve.latency_ms"))
+        .is_some());
+}
+
 #[test]
 fn exported_artifact_serves_end_to_end_with_lora() {
     // the `export` -> `serve --artifact` path: a pipeline-style

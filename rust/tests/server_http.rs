@@ -1,0 +1,531 @@
+//! End-to-end tests for the HTTP serving front-end: real TCP
+//! loopback connections against `Server::run` on its own thread.
+//!
+//! The centrepiece is the acceptance criterion of the front-end: the
+//! tokens a client receives over SSE under concurrent load must be
+//! bit-identical to an offline run of the same scheduler stack with
+//! the same seed and options — the network layer may not perturb the
+//! decode path.
+
+use qpruner::artifact::{LoraMode, ModelArtifact, Provenance};
+use qpruner::model::{ModelConfig, ParamStore};
+use qpruner::obs::json::Json;
+use qpruner::obs::trace_export::validate_events;
+use qpruner::quant::{BitConfig, QuantFormat};
+use qpruner::rng::Rng;
+use qpruner::runtime::Runtime;
+use qpruner::serve::engine::EngineBuilder;
+use qpruner::serve::kv_cache::KvLayout;
+use qpruner::serve::{build_stack, ServeOpts};
+use qpruner::server::sse::parse_events;
+use qpruner::server::{DrainReport, Server, ServerOpts};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qpruner_http_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tiny_store(seed: u64) -> (ParamStore, BitConfig) {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, seed);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    (store, bits)
+}
+
+/// A server running on its own thread; the test thread plays client.
+struct TestServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<DrainReport>,
+}
+
+fn start_server(
+    tag: &str,
+    store: &ParamStore,
+    bits: &BitConfig,
+    tune: impl FnOnce(&mut ServerOpts),
+) -> TestServer {
+    let dir = temp_dir(tag);
+    let mut opts = ServerOpts::new(ServeOpts::smoke());
+    opts.addr = "127.0.0.1:0".to_string();
+    opts.serve.stall_prob = 0.0;
+    opts.serve.stats_every = 0;
+    tune(&mut opts);
+    let server = Server::bind(&opts.addr).unwrap();
+    let addr = server.local_addr();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = shutdown.clone();
+    // the builder owns cloned weights, so it moves into the thread
+    let builder = EngineBuilder::new().store(store, bits);
+    let handle = std::thread::spawn(move || {
+        let mut rt = Runtime::new(&dir).unwrap();
+        server.run(&mut rt, builder, &opts, flag).unwrap()
+    });
+    TestServer { addr, shutdown, handle }
+}
+
+impl TestServer {
+    fn stop(self) -> DrainReport {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.handle.join().unwrap()
+    }
+}
+
+/// One-shot raw HTTP/1.1 exchange: write the request, read to EOF
+/// (every server response is `Connection: close`), split head/body.
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str)
+           -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(raw.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let (head, payload) = resp
+        .split_once("\r\n\r\n")
+        .expect("response has no head/body separator");
+    let status: u16 = head
+        .lines()
+        .next()
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap();
+    (status, head.to_string(), payload.to_string())
+}
+
+fn gen_body(prompt: &[i32], max_new: usize, stream: bool) -> String {
+    let toks: Vec<String> =
+        prompt.iter().map(|t| t.to_string()).collect();
+    format!(
+        "{{\"prompt\":[{}],\"max_new\":{max_new},\"seed\":4242,\
+         \"temperature\":0.8,\"stream\":{stream}}}",
+        toks.join(",")
+    )
+}
+
+/// Run one streaming generation to completion and decode the SSE
+/// frames into (session id, tokens, terminal outcome).
+fn sse_generate(addr: SocketAddr, prompt: &[i32], max_new: usize)
+                -> (u64, Vec<i32>, String) {
+    let (status, head, payload) = request(
+        addr,
+        "POST",
+        "/v1/generate",
+        &gen_body(prompt, max_new, true),
+    );
+    assert_eq!(status, 200, "{payload}");
+    assert!(
+        head.contains("Content-Type: text/event-stream"),
+        "not an SSE response: {head}"
+    );
+    let events = parse_events(&payload);
+    assert!(events.len() >= 2, "stream too short: {payload}");
+    let first = Json::parse(&events[0]).unwrap();
+    let id = first.get("id").unwrap().as_f64().unwrap() as u64;
+    let mut tokens = Vec::new();
+    let mut outcome = String::new();
+    for ev in &events[1..] {
+        let v = Json::parse(ev).unwrap();
+        if let Some(t) = v.get("token").and_then(|t| t.as_f64()) {
+            tokens.push(t as i32);
+        } else if v.get("done").and_then(|d| d.as_bool())
+            == Some(true)
+        {
+            outcome = v
+                .get("outcome")
+                .and_then(|o| o.as_str())
+                .unwrap()
+                .to_string();
+            assert_eq!(
+                v.get("tokens").unwrap().as_f64().unwrap() as usize,
+                tokens.len(),
+                "done-frame token count disagrees with the stream"
+            );
+        }
+    }
+    (id, tokens, outcome)
+}
+
+/// Read from the socket until the accumulated bytes contain `needle`
+/// — used to hold a stream open mid-generation.
+fn read_until(s: &mut TcpStream, needle: &str, buf: &mut Vec<u8>) {
+    let mut tmp = [0u8; 1024];
+    while !String::from_utf8_lossy(buf).contains(needle) {
+        let n = s.read(&mut tmp).unwrap();
+        assert!(n > 0, "stream closed before {needle:?}");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// The acceptance criterion: 8 concurrent SSE clients — half sharing
+/// an 8-token prefix to exercise the paged pool's prefix cache —
+/// receive exactly the tokens an offline run of the same stack
+/// produces for the same (prompt, session id, seed) triples.
+#[test]
+fn concurrent_sse_streams_replay_bit_identically_offline() {
+    let (store, bits) = tiny_store(21);
+    let mut prompts: Vec<Vec<i32>> = Vec::new();
+    for i in 0..8i32 {
+        if i < 4 {
+            let mut p: Vec<i32> = (3..11).collect();
+            p.push(20 + i);
+            prompts.push(p);
+        } else {
+            prompts.push(vec![40 + i, 50 + i, 60 + i]);
+        }
+    }
+    let tune = |o: &mut ServerOpts| {
+        o.serve.kv_layout = KvLayout::Paged;
+        o.serve.page_tokens = 4;
+        o.serve.max_batch = 4;
+        o.serve.max_queue = 16;
+    };
+    let srv = start_server("identity", &store, &bits, tune);
+    let addr = srv.addr;
+    let mut results: Vec<(u64, Vec<i32>, Vec<i32>)> =
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = prompts
+                .iter()
+                .map(|p| {
+                    sc.spawn(move || {
+                        let (id, toks, outcome) =
+                            sse_generate(addr, p, 6);
+                        assert_eq!(outcome, "done");
+                        assert_eq!(toks.len(), 6);
+                        (id, p.clone(), toks)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+    results.sort_by_key(|(id, _, _)| *id);
+    let ids: Vec<u64> = results.iter().map(|r| r.0).collect();
+    assert_eq!(ids, (0..8).collect::<Vec<u64>>(),
+               "8 admissions must use session ids 0..8");
+    let report = srv.stop();
+    assert_eq!(report.submitted, 8);
+    assert_eq!(report.completed, 8);
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.dropped_spans, 0);
+    assert!(report.clean(), "unclean drain: {}", report.summary());
+
+    // offline replay: identical stack, prompts submitted in the
+    // server's session-id order so each gets the same id and
+    // therefore the same per-session RNG stream
+    let dir = temp_dir("identity_replay");
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut sopts = ServeOpts::smoke();
+    let mut wrapper = ServerOpts::new(sopts.clone());
+    tune(&mut wrapper);
+    sopts = wrapper.serve;
+    let builder = EngineBuilder::new().store(&store, &bits);
+    let (engine, mut sched) =
+        build_stack(&mut rt, builder, &sopts, false).unwrap();
+    for (i, (id, prompt, _)) in results.iter().enumerate() {
+        let oid = sched
+            .submit(i, prompt.clone(), 6, 4242, 0.8)
+            .expect("replay submission must admit");
+        assert_eq!(oid, *id, "replay assigned a different id");
+    }
+    let mut rng = Rng::new(0);
+    let mut guard = 0;
+    while !sched.idle() {
+        sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+        guard += 1;
+        assert!(guard < 500, "replay failed to drain");
+    }
+    for (id, _, server_tokens) in &results {
+        assert_eq!(
+            &sched.table.get(*id).generated,
+            server_tokens,
+            "session {id}: SSE stream diverged from offline decode"
+        );
+    }
+}
+
+/// With a zero-length wait queue every submission sheds: all 8
+/// concurrent posts get a 429 with the deterministic retry hint, and
+/// the drain report accounts for every attempt.
+#[test]
+fn full_queue_sheds_concurrent_posts_with_429() {
+    let (store, bits) = tiny_store(22);
+    let srv = start_server("burst", &store, &bits, |o| {
+        o.serve.max_queue = 0;
+    });
+    let addr = srv.addr;
+    std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                sc.spawn(move || {
+                    let (status, head, payload) = request(
+                        addr,
+                        "POST",
+                        "/v1/generate",
+                        &gen_body(&[4, 5, 6], 4, false),
+                    );
+                    assert_eq!(status, 429, "{payload}");
+                    assert!(head.contains("Retry-After: 1"),
+                            "{head}");
+                    assert!(payload.contains("queue-full"),
+                            "{payload}");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let report = srv.stop();
+    assert_eq!(report.submitted, 8);
+    assert_eq!(report.rejected, 8);
+    assert_eq!(report.completed, 0);
+    assert!(report.clean(), "{}", report.summary());
+}
+
+/// `/healthz`, `/metrics`, and `/traces` reflect live scheduler
+/// state, and their payloads strict-parse under the same validators
+/// the offline exports use. Unknown routes and malformed bodies fail
+/// with typed errors.
+#[test]
+fn observability_endpoints_serve_live_state() {
+    let (store, bits) = tiny_store(23);
+    let srv = start_server("obs", &store, &bits, |_| {});
+    let addr = srv.addr;
+
+    for _ in 0..2 {
+        let (status, _, payload) = request(
+            addr,
+            "POST",
+            "/v1/generate",
+            &gen_body(&[5, 6, 7], 5, false),
+        );
+        assert_eq!(status, 200, "{payload}");
+        let doc = Json::parse(&payload).unwrap();
+        assert_eq!(doc.get("outcome").unwrap().as_str(),
+                   Some("done"));
+        assert_eq!(
+            doc.get("tokens").unwrap().as_arr().unwrap().len(),
+            5
+        );
+    }
+
+    let (status, _, payload) = request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&payload).unwrap();
+    assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(doc.get("draining").unwrap().as_bool(), Some(false));
+
+    let (status, _, payload) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&payload)
+        .expect("metrics endpoint must strict-parse");
+    assert_eq!(
+        doc.get("schema").and_then(|s| s.as_str()),
+        Some("qpruner.serve.metrics.v1")
+    );
+    assert_eq!(
+        doc.get("counters")
+            .unwrap()
+            .get("serve.requests_completed")
+            .and_then(|v| v.as_f64()),
+        Some(2.0)
+    );
+
+    let (status, head, payload) =
+        request(addr, "GET", "/traces", "");
+    assert_eq!(status, 200);
+    assert!(head.contains("application/x-ndjson"), "{head}");
+    let summary =
+        validate_events(&payload).expect("traces must validate");
+    assert_eq!(summary.sessions, 2);
+    assert_eq!(summary.complete_sessions, 2);
+
+    let (status, _, _) = request(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+    let (status, _, _) = request(addr, "POST", "/metrics", "");
+    assert_eq!(status, 404);
+    let (status, _, payload) =
+        request(addr, "POST", "/v1/generate", "not json");
+    assert_eq!(status, 400);
+    assert!(payload.contains("error"), "{payload}");
+    let (status, _, payload) = request(
+        addr,
+        "POST",
+        "/v1/generate",
+        "{\"prompt\":[99999]}",
+    );
+    assert_eq!(status, 400);
+    assert!(payload.contains("vocab"), "{payload}");
+
+    let report = srv.stop();
+    assert_eq!(report.completed, 2);
+    assert!(report.clean(), "{}", report.summary());
+}
+
+/// `/admin/reload` hot-swaps the engine under a live stream: the
+/// in-flight session keeps its KV cache and finishes against the new
+/// engine; a missing artifact 400s and a geometry mismatch 409s
+/// without touching the serving engine.
+#[test]
+fn admin_reload_swaps_artifacts_mid_stream() {
+    let (store, bits) = tiny_store(24);
+    let dir = temp_dir("reload_artifacts");
+    let art = ModelArtifact::from_pipeline(
+        &store,
+        &bits,
+        None,
+        LoraMode::Merge,
+        Provenance::default(),
+    )
+    .unwrap();
+    let good = dir.join("swap.qpart");
+    art.save(&good).unwrap();
+    // a different vocab changes kv_shape_key -> must be refused
+    let mut cfg2 = ModelConfig::preset("tiny").unwrap();
+    cfg2.vocab += 16;
+    let store2 = ParamStore::init(&cfg2, 24);
+    let bits2 =
+        BitConfig::uniform(cfg2.n_layers, QuantFormat::Nf4);
+    let art2 = ModelArtifact::from_pipeline(
+        &store2,
+        &bits2,
+        None,
+        LoraMode::Merge,
+        Provenance::default(),
+    )
+    .unwrap();
+    let bad_shape = dir.join("bad_shape.qpart");
+    art2.save(&bad_shape).unwrap();
+
+    let srv = start_server("reload", &store, &bits, |_| {});
+    let addr = srv.addr;
+
+    // open a stream and hold it mid-generation
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let body = gen_body(&[3, 4, 5, 6], 16, true);
+    s.write_all(
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut buf = Vec::new();
+    read_until(&mut s, "{\"id\":", &mut buf);
+
+    // swap while that session is decoding
+    let (status, _, payload) = request(
+        addr,
+        "POST",
+        "/admin/reload",
+        &format!("{{\"artifact\":\"{}\"}}", good.display()),
+    );
+    assert_eq!(status, 200, "{payload}");
+    assert!(payload.contains("\"reloaded\":true"), "{payload}");
+
+    // the in-flight stream survives the swap and completes fully
+    let mut rest = String::new();
+    s.read_to_string(&mut rest).unwrap();
+    let full =
+        format!("{}{rest}", String::from_utf8_lossy(&buf));
+    let sse_body = full
+        .split_once("\r\n\r\n")
+        .expect("stream head missing")
+        .1;
+    let events = parse_events(sse_body);
+    let last = Json::parse(events.last().unwrap()).unwrap();
+    assert_eq!(last.get("done").and_then(|d| d.as_bool()),
+               Some(true));
+    assert_eq!(last.get("outcome").and_then(|o| o.as_str()),
+               Some("done"));
+    assert_eq!(last.get("tokens").and_then(|t| t.as_f64()),
+               Some(16.0));
+
+    let (status, _, _) = request(
+        addr,
+        "POST",
+        "/admin/reload",
+        "{\"artifact\":\"/nonexistent/x.qpart\"}",
+    );
+    assert_eq!(status, 400);
+    let (status, _, payload) = request(
+        addr,
+        "POST",
+        "/admin/reload",
+        &format!("{{\"artifact\":\"{}\"}}", bad_shape.display()),
+    );
+    assert_eq!(status, 409, "{payload}");
+    let (status, _, _) =
+        request(addr, "POST", "/admin/reload", "{}");
+    assert_eq!(status, 400);
+
+    let report = srv.stop();
+    assert_eq!(report.reloads, 1);
+    assert_eq!(report.completed, 1);
+    assert!(report.clean(), "{}", report.summary());
+    std::fs::remove_file(&good).ok();
+    std::fs::remove_file(&bad_shape).ok();
+}
+
+/// SIGTERM semantics via the shared flag: in-flight streams finish
+/// (not cut), the drain report leaks nothing, and the listener is
+/// gone afterwards.
+#[test]
+fn graceful_drain_finishes_in_flight_streams() {
+    let (store, bits) = tiny_store(25);
+    let srv = start_server("drain", &store, &bits, |_| {});
+    let addr = srv.addr;
+    let mut streams: Vec<TcpStream> = Vec::new();
+    for i in 0..2i32 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(60)))
+            .unwrap();
+        let body = gen_body(&[3 + i, 4 + i, 5 + i], 20, true);
+        s.write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: t\r\n\
+                 Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        read_until(&mut s, "{\"id\":", &mut buf);
+        streams.push(s);
+    }
+    // request shutdown while both sessions are streaming
+    srv.shutdown.store(true, Ordering::SeqCst);
+    for mut s in streams {
+        let mut rest = String::new();
+        s.read_to_string(&mut rest).unwrap();
+        assert!(rest.contains("\"done\":true"),
+                "stream cut off mid-drain: {rest}");
+        assert!(rest.contains("\"outcome\":\"done\""), "{rest}");
+    }
+    let report = srv.stop();
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.evicted, 0);
+    assert_eq!(report.live_spans, 0);
+    assert!(report.clean(), "{}", report.summary());
+    // drained means the listener is gone too
+    assert!(TcpStream::connect(addr).is_err());
+}
