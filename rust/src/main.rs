@@ -95,6 +95,20 @@ fn usage() -> ! {
                                         steps (0 = off)\n\
            --profile-every N            sample every Nth decode step for\n\
                                         the phase profiler (0 = off)\n\
+         serve robustness flags:\n\
+           --fault-plan SPEC            seeded fault injection, e.g.\n\
+                                        seed=42,decode_err=0.01,\n\
+                                        page_starve=0.05,client_drop=0.02,\n\
+                                        stall_ms=50@0.01,reload_corrupt\n\
+                                        (unset = zero overhead)\n\
+           --deadline-ms N              default per-request deadline\n\
+                                        from admission; expired sessions\n\
+                                        are cancelled with partial output\n\
+           --brownout true              enable brownout load shedding\n\
+                                        with default thresholds\n\
+           --brownout-queue-frac F --brownout-occ-frac F\n\
+           --brownout-clamp N --brownout-enter-steps N\n\
+           --brownout-exit-steps N      (any of these also enables it)\n\
          serve-http flags (plus all serve flags above):\n\
            --addr HOST:PORT             bind address (default\n\
                                         127.0.0.1:8080; port 0 picks\n\
@@ -102,6 +116,12 @@ fn usage() -> ! {
                                         stderr as 'listening on ...')\n\
            --max-conns N                concurrent-connection cap\n\
                                         (default 64; excess gets 503)\n\
+           --io-timeout-secs N          socket read/write timeout\n\
+                                        (default 10; 0 disables)\n\
+           --watchdog-ms N              core-loop heartbeat watchdog;\n\
+                                        a missed beat fails /healthz\n\
+                                        until beats resume (default\n\
+                                        1000; 0 disables)\n\
            endpoints: POST /v1/generate (SSE streaming when\n\
            \"stream\":true), GET /metrics, GET /traces, GET /healthz,\n\
            POST /admin/reload; SIGTERM drains gracefully\n\
@@ -241,6 +261,49 @@ fn serve_setup(cfg: &Config, ckpt_dir: &std::path::Path, size: &str,
     sopts.trace_out = cfg.get("trace-out").map(PathBuf::from);
     sopts.events_out = cfg.get("events-out").map(PathBuf::from);
     sopts.metrics_out = cfg.get("metrics-out").map(PathBuf::from);
+
+    // robustness knobs shared by serve / bench-serve / serve-http
+    sopts.fault_plan = cfg.get("fault-plan").map(str::to_string);
+    if let Some(v) = cfg.get("deadline-ms") {
+        let ms: u64 = v.parse().context("bad --deadline-ms")?;
+        if ms == 0 {
+            bail!("--deadline-ms must be >= 1");
+        }
+        sopts.deadline_ms = Some(ms);
+    }
+    // any brownout flag enables brownout with defaults for the rest
+    {
+        use qpruner::serve::admission::BrownoutConfig;
+        let enabled = cfg.bool_or("brownout", false)?
+            || [
+                "brownout-queue-frac",
+                "brownout-occ-frac",
+                "brownout-clamp",
+                "brownout-enter-steps",
+                "brownout-exit-steps",
+            ]
+            .iter()
+            .any(|k| cfg.get(k).is_some());
+        if enabled {
+            let mut b = BrownoutConfig::default();
+            b.queue_frac =
+                cfg.f64_or("brownout-queue-frac", b.queue_frac)?;
+            b.occ_frac =
+                cfg.f64_or("brownout-occ-frac", b.occ_frac)?;
+            b.clamp_max_new =
+                cfg.usize_or("brownout-clamp", b.clamp_max_new)?;
+            b.enter_steps =
+                cfg.u64_or("brownout-enter-steps", b.enter_steps)?;
+            b.exit_steps =
+                cfg.u64_or("brownout-exit-steps", b.exit_steps)?;
+            if !(0.0..=1.0).contains(&b.queue_frac)
+                || !(0.0..=1.0).contains(&b.occ_frac)
+            {
+                bail!("brownout fractions must be in [0, 1]");
+            }
+            sopts.brownout = Some(b);
+        }
+    }
 
     // deployment source: an exported artifact boots the pipeline's
     // own pruned+quantized+LoRA deliverable; the checkpoint path
@@ -657,6 +720,10 @@ fn main() -> Result<()> {
             srv.addr = cfg.str_or("addr", &srv.addr);
             srv.max_conns =
                 cfg.usize_or("max-conns", srv.max_conns)?;
+            srv.io_timeout_secs =
+                cfg.u64_or("io-timeout-secs", srv.io_timeout_secs)?;
+            srv.watchdog_ms =
+                cfg.u64_or("watchdog-ms", srv.watchdog_ms)?;
             srv.template = setup.template;
             let mut rt = qpruner::runtime::Runtime::open_default()?;
             let server = Server::bind(&srv.addr)?;

@@ -18,6 +18,13 @@ use std::time::Instant;
 pub enum SpanOutcome {
     Done,
     Evicted,
+    /// Per-request deadline expired; partial tokens were delivered.
+    DeadlineExceeded,
+    /// An engine step failed for this one session; it was evicted and
+    /// quarantined instead of poisoning the batch.
+    Quarantined,
+    /// The client went away mid-generation (socket drop / slow consumer).
+    Disconnected,
 }
 
 impl SpanOutcome {
@@ -25,7 +32,16 @@ impl SpanOutcome {
         match self {
             SpanOutcome::Done => "done",
             SpanOutcome::Evicted => "evicted",
+            SpanOutcome::DeadlineExceeded => "deadline",
+            SpanOutcome::Quarantined => "quarantined",
+            SpanOutcome::Disconnected => "disconnect",
         }
+    }
+
+    /// Everything except `Done` ends a session before its natural
+    /// completion; events/metrics consumers group on this.
+    pub fn is_failure(&self) -> bool {
+        !matches!(self, SpanOutcome::Done)
     }
 }
 

@@ -95,6 +95,119 @@ impl AdmissionPolicy {
     }
 }
 
+/// Brownout thresholds and hysteresis. All decisions are made in
+/// scheduler *step space* (never wall clock), so two runs with the same
+/// seed and workload enter and exit brownout at the same steps — the
+/// degradation is deterministic, which is what lets the chaos suite
+/// compare traces across runs.
+#[derive(Clone, Copy, Debug)]
+pub struct BrownoutConfig {
+    /// enter pressure when `queue_len >= queue_frac * max_queue`
+    pub queue_frac: f64,
+    /// ... or when slot/page occupancy reaches this fraction
+    pub occ_frac: f64,
+    /// consecutive over-threshold steps before brownout engages
+    pub enter_steps: u64,
+    /// consecutive under-threshold steps (at the *recovery* thresholds,
+    /// half the enter thresholds) before brownout releases
+    pub exit_steps: u64,
+    /// while active, admission clamps each request's `max_new` to this
+    pub clamp_max_new: usize,
+    /// while active, added to every `Retry-After` hint
+    pub retry_after_bump: u64,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> BrownoutConfig {
+        BrownoutConfig {
+            queue_frac: 0.75,
+            occ_frac: 0.95,
+            enter_steps: 3,
+            exit_steps: 8,
+            clamp_max_new: 8,
+            retry_after_bump: 2,
+        }
+    }
+}
+
+/// Brownout state machine. Disabled (`cfg: None`) it is a single
+/// always-false branch per step; enabled it tracks sustained pressure
+/// with enter/exit hysteresis so admission doesn't flap.
+#[derive(Clone, Debug, Default)]
+pub struct Brownout {
+    cfg: Option<BrownoutConfig>,
+    active: bool,
+    above: u64,
+    below: u64,
+    entries: u64,
+}
+
+impl Brownout {
+    pub fn new(cfg: Option<BrownoutConfig>) -> Brownout {
+        Brownout { cfg, ..Brownout::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.is_some()
+    }
+
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    /// Times brownout has engaged over the process lifetime.
+    pub fn entries(&self) -> u64 {
+        self.entries
+    }
+
+    /// Feed one scheduler step's pressure signals. `occ_frac` is the
+    /// KV pool's occupancy fraction (pages on paged, slots on slab).
+    pub fn observe(&mut self, queue_len: usize, max_queue: usize,
+                   occ_frac: f64) {
+        let Some(cfg) = self.cfg else { return };
+        let qcap = max_queue.max(1) as f64;
+        let qfrac = queue_len as f64 / qcap;
+        if !self.active {
+            let pressure = qfrac >= cfg.queue_frac
+                || occ_frac >= cfg.occ_frac;
+            self.above = if pressure { self.above + 1 } else { 0 };
+            if self.above >= cfg.enter_steps {
+                self.active = true;
+                self.entries += 1;
+                self.above = 0;
+                self.below = 0;
+            }
+        } else {
+            // recover only once pressure falls well clear of the enter
+            // thresholds (half), sustained — hysteresis against flap
+            let calm = qfrac < cfg.queue_frac * 0.5
+                && occ_frac < cfg.occ_frac * 0.5;
+            self.below = if calm { self.below + 1 } else { 0 };
+            if self.below >= cfg.exit_steps {
+                self.active = false;
+                self.above = 0;
+                self.below = 0;
+            }
+        }
+    }
+
+    /// Degraded generation budget while active (identity otherwise).
+    pub fn clamp_max_new(&self, max_new: usize) -> usize {
+        match self.cfg {
+            Some(cfg) if self.active => max_new.min(cfg.clamp_max_new.max(1)),
+            _ => max_new,
+        }
+    }
+
+    /// Extra seconds added to `Retry-After` hints while active.
+    pub fn retry_after_bump(&self) -> u64 {
+        match self.cfg {
+            Some(cfg) if self.active => cfg.retry_after_bump,
+            _ => 0,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +273,73 @@ mod tests {
         // degenerate zero-length queue still yields a sane hint
         let z = AdmissionPolicy::new(0, 32);
         assert_eq!(z.retry_after_secs(0), 1);
+    }
+
+    #[test]
+    fn brownout_disabled_is_inert() {
+        let mut b = Brownout::new(None);
+        for _ in 0..100 {
+            b.observe(1000, 1, 1.0);
+        }
+        assert!(!b.active());
+        assert_eq!(b.clamp_max_new(64), 64);
+        assert_eq!(b.retry_after_bump(), 0);
+        assert_eq!(b.entries(), 0);
+    }
+
+    #[test]
+    fn brownout_enters_after_sustained_pressure_only() {
+        let cfg = BrownoutConfig { enter_steps: 3, ..Default::default() };
+        let mut b = Brownout::new(Some(cfg));
+        // two hot steps then one calm step: the streak resets
+        b.observe(8, 8, 0.0);
+        b.observe(8, 8, 0.0);
+        b.observe(0, 8, 0.0);
+        assert!(!b.active());
+        for _ in 0..3 {
+            b.observe(8, 8, 0.0);
+        }
+        assert!(b.active());
+        assert_eq!(b.entries(), 1);
+        assert_eq!(b.clamp_max_new(64), cfg.clamp_max_new);
+        assert_eq!(b.clamp_max_new(2), 2, "clamp never raises");
+        assert_eq!(b.retry_after_bump(), cfg.retry_after_bump);
+    }
+
+    #[test]
+    fn brownout_occupancy_alone_triggers() {
+        let cfg = BrownoutConfig { enter_steps: 2, ..Default::default() };
+        let mut b = Brownout::new(Some(cfg));
+        b.observe(0, 8, 0.99);
+        b.observe(0, 8, 0.99);
+        assert!(b.active(), "page pressure with an empty queue counts");
+    }
+
+    #[test]
+    fn brownout_exit_has_hysteresis() {
+        let cfg = BrownoutConfig {
+            enter_steps: 1,
+            exit_steps: 4,
+            ..Default::default()
+        };
+        let mut b = Brownout::new(Some(cfg));
+        b.observe(8, 8, 0.0);
+        assert!(b.active());
+        // just-below-enter pressure is NOT calm enough to recover
+        for _ in 0..20 {
+            b.observe(5, 8, 0.0); // 0.625 >= 0.75*0.5
+        }
+        assert!(b.active(), "must recover at half thresholds, not enter");
+        for _ in 0..3 {
+            b.observe(0, 8, 0.0);
+        }
+        assert!(b.active(), "exit needs exit_steps consecutive calm");
+        b.observe(0, 8, 0.0);
+        assert!(!b.active());
+        // re-entry counts again
+        b.observe(8, 8, 0.0);
+        assert!(b.active());
+        assert_eq!(b.entries(), 2);
     }
 
     #[test]

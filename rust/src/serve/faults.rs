@@ -1,0 +1,334 @@
+//! Seeded, deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string
+//! (`--fault-plan "seed=42,decode_err=0.01,page_starve=0.05,client_drop=0.02,stall_ms=50@0.01,reload_corrupt"`)
+//! and threaded into the scheduler as an `Option<FaultPlan>`. Each named
+//! [`FaultPoint`] draws from its *own* xoshiro stream (forked from the plan
+//! seed), so enabling one fault class never perturbs the draw sequence of
+//! another — two runs with the same seed and plan fire the same faults at
+//! the same points, which is what makes the chaos suite differential.
+//!
+//! When no plan is configured the scheduler holds `None` and every
+//! injection site is a single `if let`/flag branch that folds to the
+//! untouched hot path: logits are bit-identical with faults disabled
+//! (pinned by `tests/parity_decode.rs`).
+
+use anyhow::{anyhow, bail, Result};
+use crate::rng::Rng;
+use std::time::Duration;
+
+/// Named injection sites in the serving stack. Each point owns an
+/// independent RNG stream and a fired/drawn counter pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Engine prefill returns an error for the session being admitted.
+    PrefillErr,
+    /// Engine decode step fails for one active session (quarantined).
+    DecodeErr,
+    /// Paged-KV allocation fails (admission or mid-decode growth).
+    PageStarve,
+    /// The client vanishes mid-generation (socket drop equivalent).
+    ClientDrop,
+    /// The core loop stalls for `stall_ms` (exercises the watchdog).
+    Stall,
+    /// An artifact reload reads back corrupt (server rejects the swap).
+    ReloadCorrupt,
+}
+
+pub const N_POINTS: usize = 6;
+
+impl FaultPoint {
+    pub const ALL: [FaultPoint; N_POINTS] = [
+        FaultPoint::PrefillErr,
+        FaultPoint::DecodeErr,
+        FaultPoint::PageStarve,
+        FaultPoint::ClientDrop,
+        FaultPoint::Stall,
+        FaultPoint::ReloadCorrupt,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultPoint::PrefillErr => "prefill_err",
+            FaultPoint::DecodeErr => "decode_err",
+            FaultPoint::PageStarve => "page_starve",
+            FaultPoint::ClientDrop => "client_drop",
+            FaultPoint::Stall => "stall",
+            FaultPoint::ReloadCorrupt => "reload_corrupt",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            FaultPoint::PrefillErr => 0,
+            FaultPoint::DecodeErr => 1,
+            FaultPoint::PageStarve => 2,
+            FaultPoint::ClientDrop => 3,
+            FaultPoint::Stall => 4,
+            FaultPoint::ReloadCorrupt => 5,
+        }
+    }
+
+    /// Stream salt: a fixed odd constant per point so `seed ^ salt`
+    /// derives well-separated xoshiro states.
+    fn salt(self) -> u64 {
+        0x9E37_79B9_7F4A_7C15u64.wrapping_mul(self.idx() as u64 + 1) | 1
+    }
+}
+
+/// A parsed, seeded fault schedule. One instance per scheduler; `fire`
+/// mutates the per-point stream and counters.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    probs: [f64; N_POINTS],
+    stall: Duration,
+    streams: [Rng; N_POINTS],
+    fired: [u64; N_POINTS],
+    drawn: [u64; N_POINTS],
+}
+
+impl FaultPlan {
+    /// Parse a spec like
+    /// `seed=42,decode_err=0.01,page_starve=0.05,client_drop=0.02,stall_ms=50@0.01,reload_corrupt`.
+    ///
+    /// Grammar: comma-separated items. `seed=N` seeds every stream
+    /// (default 0). `<point>=P` sets an injection probability in [0,1].
+    /// `stall_ms=M@P` stalls the core loop for `M` ms with probability
+    /// `P` per step. A bare point name (`reload_corrupt`) means
+    /// probability 1.0.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut probs = [0.0f64; N_POINTS];
+        let mut stall_ms = 0u64;
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (key, val) = match item.split_once('=') {
+                Some((k, v)) => (k.trim(), Some(v.trim())),
+                None => (item, None),
+            };
+            match key {
+                "seed" => {
+                    let Some(v) = val else {
+                        bail!("fault-plan: seed needs a value");
+                    };
+                    seed = v
+                        .parse::<u64>()
+                        .map_err(|_| anyhow!("fault-plan: bad seed '{v}'"))?;
+                }
+                "stall_ms" => {
+                    let Some(v) = val else {
+                        bail!("fault-plan: stall_ms needs 'MS@PROB'");
+                    };
+                    let (ms, p) = match v.split_once('@') {
+                        Some((ms, p)) => (ms.trim(), parse_prob(p.trim())?),
+                        None => (v, 1.0),
+                    };
+                    stall_ms = ms
+                        .parse::<u64>()
+                        .map_err(|_| anyhow!("fault-plan: bad stall_ms '{ms}'"))?;
+                    probs[FaultPoint::Stall.idx()] = p;
+                }
+                _ => {
+                    let Some(point) = FaultPoint::ALL
+                        .iter()
+                        .copied()
+                        .find(|p| p.label() == key && *p != FaultPoint::Stall)
+                    else {
+                        bail!("fault-plan: unknown key '{key}'");
+                    };
+                    let p = match val {
+                        Some(v) => parse_prob(v)?,
+                        None => 1.0,
+                    };
+                    probs[point.idx()] = p;
+                }
+            }
+        }
+        if probs[FaultPoint::Stall.idx()] > 0.0 && stall_ms == 0 {
+            bail!("fault-plan: stall probability set but stall_ms is 0");
+        }
+        Ok(FaultPlan::from_parts(seed, probs, Duration::from_millis(stall_ms)))
+    }
+
+    fn from_parts(seed: u64, probs: [f64; N_POINTS], stall: Duration) -> FaultPlan {
+        let streams = FaultPoint::ALL.map(|p| Rng::new(seed ^ p.salt()));
+        FaultPlan {
+            seed,
+            probs,
+            stall,
+            streams,
+            fired: [0; N_POINTS],
+            drawn: [0; N_POINTS],
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Configured stall duration for [`FaultPoint::Stall`] firings.
+    pub fn stall(&self) -> Duration {
+        self.stall
+    }
+
+    /// Probability configured for a point (0.0 = never fires).
+    pub fn prob(&self, point: FaultPoint) -> f64 {
+        self.probs[point.idx()]
+    }
+
+    /// Draw the point's stream and decide whether the fault fires here.
+    /// Zero-probability points never draw, so a plan that only enables
+    /// `decode_err` leaves every other stream untouched.
+    pub fn fire(&mut self, point: FaultPoint) -> bool {
+        let i = point.idx();
+        if self.probs[i] <= 0.0 {
+            return false;
+        }
+        self.drawn[i] += 1;
+        let hit = self.probs[i] >= 1.0 || self.streams[i].uniform() < self.probs[i];
+        if hit {
+            self.fired[i] += 1;
+        }
+        hit
+    }
+
+    /// Times `point` actually fired.
+    pub fn fired(&self, point: FaultPoint) -> u64 {
+        self.fired[point.idx()]
+    }
+
+    /// Times `point` was consulted (fired or not).
+    pub fn drawn(&self, point: FaultPoint) -> u64 {
+        self.drawn[point.idx()]
+    }
+
+    /// Total faults injected across every point.
+    pub fn total_fired(&self) -> u64 {
+        self.fired.iter().sum()
+    }
+
+    /// One-line human summary, e.g. for the drain log.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        for p in FaultPoint::ALL {
+            if self.probs[p.idx()] > 0.0 {
+                parts.push(format!("{}={}", p.label(), self.fired(p)));
+            }
+        }
+        format!("seed={} fired {} ({})", self.seed, self.total_fired(), parts.join(" "))
+    }
+}
+
+fn parse_prob(s: &str) -> Result<f64> {
+    let p = s
+        .parse::<f64>()
+        .map_err(|_| anyhow!("fault-plan: bad probability '{s}'"))?;
+    if !(0.0..=1.0).contains(&p) || !p.is_finite() {
+        bail!("fault-plan: probability '{s}' not in [0,1]");
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse(
+            "seed=42,decode_err=0.01,page_starve=0.05,client_drop=0.02,stall_ms=50@0.01,reload_corrupt",
+        )
+        .unwrap();
+        assert_eq!(p.seed(), 42);
+        assert_eq!(p.prob(FaultPoint::DecodeErr), 0.01);
+        assert_eq!(p.prob(FaultPoint::PageStarve), 0.05);
+        assert_eq!(p.prob(FaultPoint::ClientDrop), 0.02);
+        assert_eq!(p.prob(FaultPoint::Stall), 0.01);
+        assert_eq!(p.stall(), Duration::from_millis(50));
+        assert_eq!(p.prob(FaultPoint::ReloadCorrupt), 1.0);
+        assert_eq!(p.prob(FaultPoint::PrefillErr), 0.0);
+    }
+
+    #[test]
+    fn bare_point_means_certain() {
+        let mut p = FaultPlan::parse("seed=1,prefill_err").unwrap();
+        for _ in 0..10 {
+            assert!(p.fire(FaultPoint::PrefillErr));
+        }
+        assert_eq!(p.fired(FaultPoint::PrefillErr), 10);
+        assert_eq!(p.drawn(FaultPoint::PrefillErr), 10);
+    }
+
+    #[test]
+    fn zero_prob_never_draws() {
+        let mut p = FaultPlan::parse("seed=7,decode_err=0.5").unwrap();
+        for _ in 0..100 {
+            assert!(!p.fire(FaultPoint::ClientDrop));
+        }
+        assert_eq!(p.drawn(FaultPoint::ClientDrop), 0);
+        assert_eq!(p.total_fired(), 0);
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let spec = "seed=99,decode_err=0.3,client_drop=0.2,page_starve=0.1";
+        let mut a = FaultPlan::parse(spec).unwrap();
+        let mut b = FaultPlan::parse(spec).unwrap();
+        let mut trace_a = Vec::new();
+        let mut trace_b = Vec::new();
+        for i in 0..500 {
+            let pt = FaultPoint::ALL[i % 4];
+            trace_a.push(a.fire(pt));
+            trace_b.push(b.fire(pt));
+        }
+        assert_eq!(trace_a, trace_b);
+        assert!(a.total_fired() > 0, "0.3 prob over 500 draws should fire");
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        // Enabling an extra point must not change another point's draws.
+        let mut lone = FaultPlan::parse("seed=5,decode_err=0.5").unwrap();
+        let mut both = FaultPlan::parse("seed=5,decode_err=0.5,client_drop=0.5").unwrap();
+        for i in 0..200 {
+            if i % 3 == 0 {
+                both.fire(FaultPoint::ClientDrop);
+            }
+            assert_eq!(lone.fire(FaultPoint::DecodeErr), both.fire(FaultPoint::DecodeErr));
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(FaultPlan::parse("seed=abc").is_err());
+        assert!(FaultPlan::parse("bogus_point=0.5").is_err());
+        assert!(FaultPlan::parse("decode_err=1.5").is_err());
+        assert!(FaultPlan::parse("decode_err=-0.1").is_err());
+        assert!(FaultPlan::parse("stall_ms=0@0.5").is_err());
+        assert!(FaultPlan::parse("stall=0.5").is_err(), "stall only via stall_ms");
+        assert!(FaultPlan::parse("stall_ms=10@nan").is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_inert() {
+        let mut p = FaultPlan::parse("seed=3").unwrap();
+        for pt in FaultPoint::ALL {
+            assert!(!p.fire(pt));
+        }
+        assert_eq!(p.total_fired(), 0);
+        assert!(p.summary().contains("fired 0"));
+    }
+
+    #[test]
+    fn summary_names_active_points() {
+        let mut p = FaultPlan::parse("seed=1,reload_corrupt").unwrap();
+        p.fire(FaultPoint::ReloadCorrupt);
+        let s = p.summary();
+        assert!(s.contains("reload_corrupt=1"), "{s}");
+        assert!(!s.contains("decode_err"), "{s}");
+    }
+}

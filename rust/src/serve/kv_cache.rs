@@ -914,6 +914,19 @@ impl KvCachePool {
         self.peak_in_use
     }
 
+    /// Occupancy fraction in [0,1] of the scarce KV resource: pages on
+    /// the paged layout (prefix-shared pages count once), slots on the
+    /// slab layout. The brownout pressure signal.
+    pub fn occupancy_frac(&self) -> f64 {
+        match &self.paged {
+            Some(p) if p.pages_total > 0 => {
+                (p.pages_total - p.free.len()) as f64
+                    / p.pages_total as f64
+            }
+            _ => self.in_use() as f64 / self.slots.len().max(1) as f64,
+        }
+    }
+
     /// Longest session this pool can hold: `max_seq`, additionally
     /// clamped by total page capacity on the paged layout (admission
     /// uses this so a request that could never be paged in is rejected

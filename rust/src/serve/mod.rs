@@ -25,6 +25,7 @@
 
 pub mod admission;
 pub mod engine;
+pub mod faults;
 pub mod kv_cache;
 pub mod scheduler;
 pub mod session;
@@ -42,9 +43,10 @@ use crate::quant::BitConfig;
 use crate::report::Table;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
-use admission::AdmissionPolicy;
+use admission::{AdmissionPolicy, BrownoutConfig};
 use anyhow::{bail, ensure, Context, Result};
 use engine::EngineBuilder;
+use faults::{FaultPlan, FaultPoint};
 use kv_cache::{KvCachePool, KvLayout};
 use scheduler::Scheduler;
 use std::path::PathBuf;
@@ -108,6 +110,14 @@ pub struct ServeOpts {
     pub events_out: Option<PathBuf>,
     /// write the metrics-registry JSON snapshot here
     pub metrics_out: Option<PathBuf>,
+    /// seeded fault-injection spec (`faults::FaultPlan::parse`);
+    /// `None` keeps every injection site a dead branch
+    pub fault_plan: Option<String>,
+    /// default per-request deadline in ms (`None` = no deadline);
+    /// requests may override it individually
+    pub deadline_ms: Option<u64>,
+    /// brownout load-shedding thresholds (`None` disables)
+    pub brownout: Option<BrownoutConfig>,
 }
 
 impl ServeOpts {
@@ -135,6 +145,9 @@ impl ServeOpts {
             trace_out: None,
             events_out: None,
             metrics_out: None,
+            fault_plan: None,
+            deadline_ms: None,
+            brownout: None,
         }
     }
 
@@ -649,6 +662,16 @@ pub fn build_stack(rt: &mut Runtime, builder: EngineBuilder,
     if want_trace {
         sched.set_tracer(Tracer::new(TRACE_SPAN_CAP));
     }
+    // robustness wiring, shared by both front-ends: faults, deadlines,
+    // brownout all live scheduler-side so the offline driver and the
+    // HTTP server exercise identical containment paths
+    if let Some(spec) = &opts.fault_plan {
+        sched.set_faults(
+            FaultPlan::parse(spec).context("--fault-plan")?,
+        );
+    }
+    sched.set_default_deadline_ms(opts.deadline_ms);
+    sched.set_brownout(opts.brownout);
     Ok((engine, sched))
 }
 
@@ -667,6 +690,12 @@ pub fn metrics_registry(sched: &Scheduler, scratch_grows: u64,
                     sched.stats.rejected as u64);
     reg.counter_add("serve.sessions_evicted",
                     sched.stats.evicted as u64);
+    reg.counter_add("serve.deadline_exceeded",
+                    sched.stats.deadline_exceeded as u64);
+    reg.counter_add("serve.sessions_quarantined",
+                    sched.stats.quarantined as u64);
+    reg.counter_add("serve.client_disconnects",
+                    sched.stats.disconnects as u64);
     reg.counter_add("serve.prefill_tokens",
                     sched.stats.prefill_tokens);
     reg.counter_add("serve.generated_tokens",
@@ -703,6 +732,20 @@ pub fn metrics_registry(sched: &Scheduler, scratch_grows: u64,
     reg.hist_set("serve.latency_ms", sched.latency.clone());
     reg.hist_set("serve.ttft_ms", sched.ttft.clone());
     reg.hist_set("serve.itl_ms", sched.itl.clone());
+    // robustness: brownout state and fault-injection counters (the
+    // faults.* keys only appear when a plan is configured, so
+    // fault-free snapshots keep their exact historical shape)
+    reg.gauge_set("serve.brownout",
+                  if sched.brownout.active() { 1.0 } else { 0.0 });
+    reg.counter_add("serve.brownout_entries",
+                    sched.brownout.entries());
+    if let Some(fp) = sched.faults() {
+        reg.counter_add("faults.injected_total", fp.total_fired());
+        for p in FaultPoint::ALL {
+            reg.counter_add(&format!("faults.{}", p.label()),
+                            fp.fired(p));
+        }
+    }
     reg
 }
 

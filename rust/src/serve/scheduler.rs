@@ -21,11 +21,13 @@ use crate::obs::hist::Hist;
 use crate::obs::span::{SpanOutcome, Tracer};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
-use crate::serve::admission::{AdmissionPolicy, Decision, RejectReason};
+use crate::serve::admission::{AdmissionPolicy, Brownout, BrownoutConfig,
+                              Decision, RejectReason};
 use crate::serve::engine::{sample_token, BatchReq, Engine};
+use crate::serve::faults::{FaultPlan, FaultPoint};
 use crate::serve::kv_cache::KvCachePool;
 use crate::serve::session::{SessionState, SessionTable};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -40,7 +42,16 @@ pub struct SchedStats {
     pub rejected_too_long: usize,
     pub rejected_malformed: usize,
     pub completed: usize,
+    /// total abnormal exits (every non-`Done` terminal), of which the
+    /// three counters below are disjoint sub-buckets (plain TTL /
+    /// preemption evictions are `evicted` minus their sum)
     pub evicted: usize,
+    /// sessions cancelled because their per-request deadline expired
+    pub deadline_exceeded: usize,
+    /// sessions quarantined after a per-session engine-step failure
+    pub quarantined: usize,
+    /// sessions whose client went away mid-generation
+    pub disconnects: usize,
     /// decode steps that had at least one active session (total steps
     /// live on `Scheduler::step_no()` — not duplicated here)
     pub busy_steps: u64,
@@ -91,6 +102,16 @@ pub struct Scheduler {
     /// reusable request buffer for the batched decode step (avoids a
     /// fresh Vec per step on the hot path)
     reqs_buf: Vec<BatchReq>,
+    /// seeded fault injection (`--fault-plan`); `None` keeps every
+    /// injection site a single never-taken branch
+    faults: Option<FaultPlan>,
+    /// process-wide default deadline applied to submits that carry none
+    default_deadline_ms: Option<u64>,
+    /// at least one live-or-past session carried a deadline — gates the
+    /// per-step sweep so deadline-free serving pays nothing
+    has_deadlines: bool,
+    /// load-shedding degradation state machine (disabled by default)
+    pub brownout: Brownout,
 }
 
 impl Scheduler {
@@ -113,7 +134,48 @@ impl Scheduler {
             itl: Hist::new(),
             tracer: None,
             reqs_buf: Vec::new(),
+            faults: None,
+            default_deadline_ms: None,
+            has_deadlines: false,
+            brownout: Brownout::new(None),
         }
+    }
+
+    /// Install a parsed fault plan (`--fault-plan`). Injection starts
+    /// with the next `step`/`submit`.
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        self.faults = Some(plan);
+    }
+
+    pub fn faults(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
+    }
+
+    /// Consult the plan at one injection point (false when no plan).
+    /// Public so the server front-end can drive the points that live
+    /// outside the scheduler (artifact reload corruption).
+    pub fn fire_fault(&mut self, point: FaultPoint) -> bool {
+        match self.faults.as_mut() {
+            Some(f) => f.fire(point),
+            None => false,
+        }
+    }
+
+    /// Default per-request deadline for submits that don't carry one.
+    pub fn set_default_deadline_ms(&mut self, ms: Option<u64>) {
+        self.default_deadline_ms = ms;
+    }
+
+    /// Enable (or disable) brownout load shedding.
+    pub fn set_brownout(&mut self, cfg: Option<BrownoutConfig>) {
+        self.brownout = Brownout::new(cfg);
+    }
+
+    /// `Retry-After` hint for shed requests: the admission policy's
+    /// queue-occupancy hint plus the brownout penalty while degraded.
+    pub fn retry_after_secs(&self, queue_len: usize) -> u64 {
+        self.admission.retry_after_secs(queue_len)
+            + self.brownout.retry_after_bump()
     }
 
     /// Install a lifecycle tracer. Spans are recorded from the next
@@ -136,7 +198,21 @@ impl Scheduler {
     pub fn submit(&mut self, client: usize, prompt: Vec<i32>,
                   max_new: usize, seed: u64, temperature: f32)
                   -> Option<u64> {
+        self.submit_req(client, prompt, max_new, seed, temperature, None)
+    }
+
+    /// `submit` with a per-request deadline override (milliseconds from
+    /// now; `None` inherits the process default from `--deadline-ms`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_req(&mut self, client: usize, prompt: Vec<i32>,
+                      max_new: usize, seed: u64, temperature: f32,
+                      deadline_ms: Option<u64>)
+                      -> Option<u64> {
         self.stats.submitted += 1;
+        // brownout degradation: admit, but with a clamped generation
+        // budget (deterministic — brownout state advances in step space)
+        let max_new = self.brownout.clamp_max_new(max_new);
+        let deadline_ms = deadline_ms.or(self.default_deadline_ms);
         match self.admission.decide(prompt.len(), max_new,
                                     self.queue.len()) {
             Decision::Reject(reason) => {
@@ -165,7 +241,9 @@ impl Scheduler {
                     self.step_no,
                     seed,
                     temperature,
+                    deadline_ms,
                 );
+                self.has_deadlines |= deadline_ms.is_some();
                 self.queue.push_back(id);
                 // span uses the session's own submit instant so span
                 // deltas equal the recorded TTFT exactly
@@ -178,12 +256,18 @@ impl Scheduler {
         }
     }
 
-    /// Cancel a live session (client disconnected mid-stream): remove
-    /// it from whichever list holds it and take the Evicted exit, so
-    /// its KV slot frees immediately and its span closes. Returns
-    /// false for unknown or already-terminal sessions (idempotent —
-    /// the server calls this on any sink error, racing completion).
+    /// Cancel a live session: remove it from whichever list holds it
+    /// and take the Evicted exit, so its KV slot frees immediately and
+    /// its span closes. Returns false for unknown or already-terminal
+    /// sessions (idempotent — the server calls this on any sink error,
+    /// racing completion).
     pub fn cancel(&mut self, id: u64) -> bool {
+        self.cancel_as(id, SpanOutcome::Evicted)
+    }
+
+    /// `cancel` with an explicit exit reason (the server uses
+    /// `Disconnected` when a streaming socket goes away mid-SSE).
+    pub fn cancel_as(&mut self, id: u64, outcome: SpanOutcome) -> bool {
         if !self.table.contains(id) || self.table.get(id).is_terminal()
         {
             return false;
@@ -191,7 +275,7 @@ impl Scheduler {
         self.queue.retain(|&x| x != id);
         self.active.retain(|&x| x != id);
         self.stalled.retain(|&x| x != id);
-        self.evict_session(id);
+        self.terminate(id, outcome);
         true
     }
 
@@ -218,6 +302,19 @@ impl Scheduler {
     pub fn step(&mut self, engine: &Engine, rt: &mut Runtime,
                 workload_rng: &mut Rng, stall_prob: f64) -> Result<()> {
         self.step_no += 1;
+
+        // 0. injected core-loop stall (exercises the server watchdog)
+        if let Some(f) = self.faults.as_mut() {
+            if f.fire(FaultPoint::Stall) {
+                std::thread::sleep(f.stall());
+            }
+        }
+
+        // 0b. deadline sweep: expired sessions exit with their partial
+        // tokens before this step does any work on them
+        if self.has_deadlines {
+            self.sweep_deadlines();
+        }
 
         // 1. admit: fill free slots, up to the batch cap. On the
         // paged layout `KvCachePool::admit` also maps published prefix
@@ -246,6 +343,14 @@ impl Scheduler {
                 s.state = SessionState::Active;
                 s.slot = Some(slot);
             }
+            // injected allocation failure: the containment contract is
+            // the same as real mid-decode page exhaustion — preempt
+            // this session (slot + mapped pages released) and keep
+            // admitting others
+            if self.fire_fault(FaultPoint::PageStarve) {
+                self.evict_session(front);
+                continue;
+            }
             // fault the non-cached prompt pages in (no-op on slab;
             // `admit` just gated on availability, so an error here is
             // an allocator invariant break, not load)
@@ -254,17 +359,19 @@ impl Scheduler {
                 self.fail_session(front);
                 return Err(e);
             }
-            let logits = match engine.prefill(
-                rt,
-                self.pool.slot_mut(slot),
-                &prompt,
-            ) {
+            let logits = if self.fire_fault(FaultPoint::PrefillErr) {
+                Err(anyhow!("injected fault: prefill error"))
+            } else {
+                engine.prefill(rt, self.pool.slot_mut(slot), &prompt)
+            };
+            let logits = match logits {
                 Ok(l) => l,
-                Err(e) => {
-                    // don't leak the slot or strand the session on an
-                    // engine failure: evict, then surface the error
-                    self.fail_session(front);
-                    return Err(e);
+                Err(_) => {
+                    // quarantine: a prefill failure poisons only this
+                    // session — release its slot, close its span, and
+                    // keep the admit loop (and the core loop) alive
+                    self.terminate(front, SpanOutcome::Quarantined);
+                    continue;
                 }
             };
             // share the freshly computed prompt pages with future
@@ -311,6 +418,27 @@ impl Scheduler {
             }
         }
 
+        // 2b. injected per-session faults: clients that vanish
+        // mid-generation and single-session engine-step failures.
+        // Both are contained here — the faulted session exits with a
+        // typed reason and a released slot; the rest of the batch
+        // decodes normally this very step.
+        if self.faults.is_some() {
+            let mut i = 0;
+            while i < self.active.len() {
+                let id = self.active[i];
+                if self.fire_fault(FaultPoint::ClientDrop) {
+                    self.active.swap_remove(i);
+                    self.terminate(id, SpanOutcome::Disconnected);
+                } else if self.fire_fault(FaultPoint::DecodeErr) {
+                    self.active.swap_remove(i);
+                    self.terminate(id, SpanOutcome::Quarantined);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
         // 3. decode one token for every active session. On the native
         // backend this is a single fused step: the engine stacks every
         // session's hidden state into a [batch, hidden] matrix and
@@ -339,7 +467,10 @@ impl Scheduler {
                     (s.slot.expect("active session without slot"),
                      s.prompt.len() + s.generated.len())
                 };
-                if self.pool.ensure_capacity(slot, need).is_err() {
+                let starved = self.fire_fault(FaultPoint::PageStarve);
+                if starved
+                    || self.pool.ensure_capacity(slot, need).is_err()
+                {
                     self.active.swap_remove(i);
                     self.evict_session(id);
                 } else {
@@ -405,10 +536,13 @@ impl Scheduler {
                     &s.generated,
                 ) {
                     Ok(l) => l,
-                    Err(e) => {
+                    Err(_) => {
+                        // per-session forward, per-session blast
+                        // radius: quarantine this one and let the
+                        // remaining sessions decode their token
                         self.active.retain(|&x| x != id);
-                        self.fail_session(id);
-                        return Err(e);
+                        self.terminate(id, SpanOutcome::Quarantined);
+                        continue;
                     }
                 };
                 let s = self.table.get_mut(id);
@@ -464,6 +598,17 @@ impl Scheduler {
             self.stalled.swap_remove(i);
             self.evict_session(id);
         }
+
+        // 6. brownout pressure tracking (single branch when disabled).
+        // Runs on end-of-step state so two identically-seeded runs see
+        // identical pressure signals at identical steps.
+        if self.brownout.enabled() {
+            self.brownout.observe(
+                self.queue.len(),
+                self.admission.max_queue,
+                self.pool.occupancy_frac(),
+            );
+        }
         Ok(())
     }
 
@@ -474,20 +619,60 @@ impl Scheduler {
         self.evict_session(id);
     }
 
-    /// Shared Evicted exit (TTL expiry and engine failure): release
-    /// the slot, stamp the terminal instant, close the span.
+    /// Plain Evicted exit (TTL expiry, preemption, generic failure).
     fn evict_session(&mut self, id: u64) {
+        self.terminate(id, SpanOutcome::Evicted);
+    }
+
+    /// Shared abnormal terminal exit: release the slot, stamp the
+    /// instant and exit reason, bump the matching counter, close the
+    /// span. Every failure path funnels through here, which is what
+    /// keeps `DrainReport::clean` an invariant rather than a hope.
+    fn terminate(&mut self, id: u64, outcome: SpanOutcome) {
+        debug_assert!(outcome.is_failure(), "use finish() for Done");
         let now = Instant::now();
         let s = self.table.get_mut(id);
         s.state = SessionState::Evicted;
         s.finished_at = Some(now);
+        s.outcome = Some(outcome);
         let tokens = s.generated.len() as u64;
         if let Some(slot) = s.slot.take() {
             self.pool.release(slot);
         }
         self.stats.evicted += 1;
+        match outcome {
+            SpanOutcome::DeadlineExceeded => {
+                self.stats.deadline_exceeded += 1;
+            }
+            SpanOutcome::Quarantined => self.stats.quarantined += 1,
+            SpanOutcome::Disconnected => self.stats.disconnects += 1,
+            _ => {}
+        }
         if let Some(tr) = self.tracer.as_mut() {
-            tr.on_finish(id, now, tokens, SpanOutcome::Evicted);
+            tr.on_finish(id, now, tokens, outcome);
+        }
+    }
+
+    /// Cancel every live session whose deadline has passed, delivering
+    /// whatever partial tokens it generated. Gated on `has_deadlines`
+    /// by the caller, so deadline-free workloads never pay the scan.
+    fn sweep_deadlines(&mut self) {
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .queue
+            .iter()
+            .chain(self.active.iter())
+            .chain(self.stalled.iter())
+            .copied()
+            .filter(|&id| {
+                self.table.get(id).deadline.is_some_and(|d| now >= d)
+            })
+            .collect();
+        for id in expired {
+            self.queue.retain(|&x| x != id);
+            self.active.retain(|&x| x != id);
+            self.stalled.retain(|&x| x != id);
+            self.terminate(id, SpanOutcome::DeadlineExceeded);
         }
     }
 
@@ -496,6 +681,7 @@ impl Scheduler {
         let s = self.table.get_mut(id);
         s.state = SessionState::Done;
         s.finished_at = Some(now);
+        s.outcome = Some(SpanOutcome::Done);
         let tokens = s.generated.len() as u64;
         let e2e_ms =
             now.duration_since(s.submitted_at).as_secs_f64() * 1e3;
@@ -685,6 +871,157 @@ mod tests {
         assert!(!sched.cancel(999_999), "unknown id is a no-op");
         assert_eq!(sched.stats.evicted, 2);
         assert_eq!(sched.stats.completed, 1);
+        assert_eq!(sched.pool.in_use(), 0);
+    }
+
+    #[test]
+    fn deadline_cancels_with_partial_tokens() {
+        let (mut rt, engine, mut sched) = setup(2, 2, 8);
+        sched.set_tracer(Tracer::new(16));
+        let mut rng = Rng::new(1);
+        // a: already expired at submit; b: effectively unbounded
+        let a = sched
+            .submit_req(0, vec![3, 4], 8, 7, 0.0, Some(0))
+            .unwrap();
+        let b = sched
+            .submit_req(1, vec![3, 4], 3, 7, 0.0, Some(600_000))
+            .unwrap();
+        let mut guard = 0;
+        while !sched.idle() {
+            sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+            guard += 1;
+            assert!(guard < 100);
+        }
+        assert_eq!(sched.table.get(a).state, SessionState::Evicted);
+        assert_eq!(sched.table.get(a).outcome,
+                   Some(SpanOutcome::DeadlineExceeded));
+        assert_eq!(sched.table.get(b).state, SessionState::Done);
+        assert_eq!(sched.stats.deadline_exceeded, 1);
+        assert_eq!(sched.stats.evicted, 1);
+        assert_eq!(sched.stats.completed, 1);
+        assert_eq!(sched.pool.in_use(), 0, "deadline leak");
+        let tr = sched.take_tracer().unwrap();
+        assert_eq!(tr.live_len(), 0);
+        let span_a = tr.spans().iter().find(|s| s.id == a).unwrap();
+        assert_eq!(span_a.outcome, SpanOutcome::DeadlineExceeded);
+    }
+
+    #[test]
+    fn default_deadline_applies_to_plain_submits() {
+        let (mut rt, engine, mut sched) = setup(2, 2, 8);
+        sched.set_default_deadline_ms(Some(0));
+        let id = sched.submit(0, vec![3, 4], 8, 7, 0.0).unwrap();
+        let mut rng = Rng::new(1);
+        sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+        assert_eq!(sched.table.get(id).outcome,
+                   Some(SpanOutcome::DeadlineExceeded));
+        assert!(sched.idle());
+    }
+
+    #[test]
+    fn prefill_fault_quarantines_session_not_loop() {
+        let (mut rt, engine, mut sched) = setup(2, 2, 8);
+        sched.set_tracer(Tracer::new(16));
+        sched.set_faults(
+            crate::serve::faults::FaultPlan::parse("seed=1,prefill_err")
+                .unwrap(),
+        );
+        for i in 0..3 {
+            sched.submit(i, vec![3, 4], 4, 7, 0.0).unwrap();
+        }
+        let mut rng = Rng::new(1);
+        let mut guard = 0;
+        while !sched.idle() {
+            // the loop must survive every injected prefill failure
+            sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+            guard += 1;
+            assert!(guard < 100);
+        }
+        assert_eq!(sched.stats.quarantined, 3);
+        assert_eq!(sched.stats.completed, 0);
+        assert_eq!(sched.pool.in_use(), 0, "quarantine leak");
+        assert_eq!(sched.faults().unwrap().total_fired(), 3);
+        let tr = sched.take_tracer().unwrap();
+        assert_eq!(tr.live_len(), 0);
+        assert!(tr
+            .spans()
+            .iter()
+            .all(|s| s.outcome == SpanOutcome::Quarantined));
+    }
+
+    #[test]
+    fn injected_drops_and_decode_errs_are_contained() {
+        let (mut rt, engine, mut sched) = setup(4, 4, 32);
+        sched.set_faults(
+            crate::serve::faults::FaultPlan::parse(
+                "seed=9,client_drop=0.2,decode_err=0.2",
+            )
+            .unwrap(),
+        );
+        for i in 0..12 {
+            sched.submit(i, vec![3, 4, 5], 10, 7, 0.8).unwrap();
+        }
+        drain(&mut rt, &engine, &mut sched, 2000);
+        let st = &sched.stats;
+        assert!(st.disconnects + st.quarantined > 0,
+                "0.2+0.2 over 12 long sessions should fire");
+        assert_eq!(st.completed + st.evicted, 12);
+        assert_eq!(sched.pool.in_use(), 0);
+    }
+
+    #[test]
+    fn injected_page_starve_preempts_cleanly() {
+        let (mut rt, engine, mut sched) = setup(2, 2, 8);
+        sched.set_faults(
+            crate::serve::faults::FaultPlan::parse("seed=4,page_starve")
+                .unwrap(),
+        );
+        for i in 0..3 {
+            sched.submit(i, vec![3, 4], 4, 7, 0.0).unwrap();
+        }
+        drain(&mut rt, &engine, &mut sched, 200);
+        assert_eq!(sched.stats.evicted, 3);
+        assert_eq!(sched.stats.completed, 0);
+        assert_eq!(sched.pool.in_use(), 0, "starved admit leaked");
+    }
+
+    #[test]
+    fn cancel_as_records_disconnect_reason() {
+        let (mut rt, engine, mut sched) = setup(2, 2, 8);
+        let id = sched.submit(0, vec![3, 4], 8, 7, 0.0).unwrap();
+        let mut rng = Rng::new(1);
+        sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+        assert!(sched.cancel_as(id, SpanOutcome::Disconnected));
+        assert_eq!(sched.table.get(id).outcome,
+                   Some(SpanOutcome::Disconnected));
+        assert_eq!(sched.stats.disconnects, 1);
+        assert_eq!(sched.stats.evicted, 1);
+        assert_eq!(sched.pool.in_use(), 0);
+    }
+
+    #[test]
+    fn brownout_clamps_admission_and_bumps_retry_after() {
+        let (mut rt, engine, mut sched) = setup(1, 1, 4);
+        sched.set_brownout(Some(BrownoutConfig {
+            queue_frac: 0.5,
+            enter_steps: 1,
+            clamp_max_new: 2,
+            retry_after_bump: 3,
+            ..Default::default()
+        }));
+        let base = sched.retry_after_secs(0);
+        // queue 3 of 4 (> 0.5 frac) behind a single busy slot
+        for i in 0..4 {
+            sched.submit(i, vec![3, 4], 20, 7, 0.0).unwrap();
+        }
+        let mut rng = Rng::new(1);
+        sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+        assert!(sched.brownout.active(), "sustained queue pressure");
+        assert_eq!(sched.retry_after_secs(0), base + 3);
+        // submissions during brownout get the degraded budget
+        let id = sched.submit(9, vec![3, 4], 20, 7, 0.0).unwrap();
+        assert_eq!(sched.table.get(id).max_new, 2);
+        drain(&mut rt, &engine, &mut sched, 500);
         assert_eq!(sched.pool.in_use(), 0);
     }
 

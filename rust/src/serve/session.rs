@@ -2,14 +2,17 @@
 //!
 //! A session is one client request: a prompt, a generation budget, and
 //! (once admitted) a KV-cache slot. Sessions move
-//! `Queued -> Active -> Done`, with one failure exit: `Evicted` (TTL —
-//! the client stalled or disconnected mid-stream and its slot was
-//! reclaimed). Requests rejected by admission control never become
-//! sessions; they are counted at the door (`scheduler::SchedStats`).
+//! `Queued -> Active -> Done`, with one failure *state* (`Evicted`)
+//! covering several failure *reasons* — TTL/preemption, per-request
+//! deadline expiry, engine-step quarantine, client disconnect — which
+//! are distinguished by `Session::outcome` (a `SpanOutcome`). Requests
+//! rejected by admission control never become sessions; they are
+//! counted at the door (`scheduler::SchedStats`).
 
+use crate::obs::span::SpanOutcome;
 use crate::rng::Rng;
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SessionState {
@@ -46,6 +49,14 @@ pub struct Session {
     /// seed and session id)
     pub rng: Rng,
     pub temperature: f32,
+    /// wall-clock point after which the scheduler cancels this session
+    /// with its partial tokens (`SpanOutcome::DeadlineExceeded`)
+    pub deadline: Option<Instant>,
+    /// why the session reached a terminal state; `None` while live.
+    /// Distinguishes the failure exits (`Evicted` vs `Quarantined` vs
+    /// `Disconnected` vs `DeadlineExceeded`) that all park `state` at
+    /// `SessionState::Evicted`.
+    pub outcome: Option<SpanOutcome>,
 }
 
 impl Session {
@@ -85,11 +96,13 @@ impl SessionTable {
         step: u64,
         seed: u64,
         temperature: f32,
+        deadline_ms: Option<u64>,
     ) -> u64 {
         assert!(!prompt.is_empty(), "empty prompt");
         assert!(max_new > 0, "zero generation budget");
         let id = self.next_id;
         self.next_id += 1;
+        let now = Instant::now();
         self.map.insert(
             id,
             Session {
@@ -100,13 +113,16 @@ impl SessionTable {
                 max_new,
                 slot: None,
                 state,
-                submitted_at: Instant::now(),
+                submitted_at: now,
                 first_token_at: None,
                 last_token_at: None,
                 finished_at: None,
                 last_active_step: step,
                 rng: Rng::new(seed ^ id.wrapping_mul(0x9E37_79B9)),
                 temperature,
+                deadline: deadline_ms
+                    .map(|ms| now + Duration::from_millis(ms)),
+                outcome: None,
             },
         );
         id
@@ -163,7 +179,7 @@ mod tests {
     fn table_with_one(state: SessionState, step: u64)
                       -> (SessionTable, u64) {
         let mut t = SessionTable::new();
-        let id = t.create(0, vec![3, 4, 5], 4, state, step, 42, 0.0);
+        let id = t.create(0, vec![3, 4, 5], 4, state, step, 42, 0.0, None);
         (t, id)
     }
 
@@ -181,8 +197,8 @@ mod tests {
     #[test]
     fn ids_are_unique_and_rngs_distinct() {
         let mut t = SessionTable::new();
-        let a = t.create(0, vec![3], 2, SessionState::Queued, 0, 7, 0.8);
-        let b = t.create(1, vec![3], 2, SessionState::Queued, 0, 7, 0.8);
+        let a = t.create(0, vec![3], 2, SessionState::Queued, 0, 7, 0.8, None);
+        let b = t.create(1, vec![3], 2, SessionState::Queued, 0, 7, 0.8, None);
         assert_ne!(a, b);
         let ra = t.get_mut(a).rng.next_u64();
         let rb = t.get_mut(b).rng.next_u64();
@@ -192,13 +208,26 @@ mod tests {
     #[test]
     fn remove_reaps_terminal_sessions() {
         let mut t = SessionTable::new();
-        let id = t.create(0, vec![3], 2, SessionState::Queued, 0, 1, 0.0);
+        let id = t.create(0, vec![3], 2, SessionState::Queued, 0, 1, 0.0, None);
         t.get_mut(id).state = SessionState::Done;
         assert_eq!(t.len(), 1);
         let s = t.remove(id).expect("session existed");
         assert_eq!(s.id, id);
         assert_eq!(t.len(), 0);
         assert!(t.remove(id).is_none(), "double remove is a no-op");
+    }
+
+    #[test]
+    fn deadline_is_armed_from_submit_time() {
+        let mut t = SessionTable::new();
+        let a = t.create(0, vec![3], 2, SessionState::Queued, 0, 1, 0.0,
+                         Some(0));
+        let b = t.create(0, vec![3], 2, SessionState::Queued, 0, 1, 0.0,
+                         Some(60_000));
+        let now = Instant::now();
+        assert!(t.get(a).deadline.unwrap() <= now, "0ms expires at once");
+        assert!(t.get(b).deadline.unwrap() > now);
+        assert!(t.get(a).outcome.is_none());
     }
 
     #[test]

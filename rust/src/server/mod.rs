@@ -30,10 +30,12 @@ pub mod router;
 pub mod sse;
 
 use crate::artifact::{LoraMode, ModelArtifact};
+use crate::obs::span::SpanOutcome;
 use crate::obs::trace_export;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::serve::engine::{Engine, EngineBuilder};
+use crate::serve::faults::FaultPoint;
 use crate::serve::kv_cache::KvPrecision;
 use crate::serve::scheduler::Scheduler;
 use crate::serve::{self, ServeOpts};
@@ -42,7 +44,8 @@ use router::{GenerateDefaults, GenerateRequest, Route};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize,
+                        Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender,
                       TryRecvError};
 use std::sync::Arc;
@@ -104,6 +107,11 @@ pub struct ServerOpts {
     pub serve: ServeOpts,
     /// engine knobs re-applied on artifact reload
     pub template: EngineTemplate,
+    /// per-connection read AND write timeout; 0 disables both
+    pub io_timeout_secs: u64,
+    /// watchdog trips when the core loop misses heartbeats for this
+    /// long; 0 disables the watchdog thread
+    pub watchdog_ms: u64,
 }
 
 impl ServerOpts {
@@ -113,8 +121,154 @@ impl ServerOpts {
             max_conns: 64,
             serve,
             template: EngineTemplate::default(),
+            io_timeout_secs: 10,
+            watchdog_ms: 1000,
         }
     }
+}
+
+/// Shared liveness/readiness state: the core loop publishes, the
+/// watchdog thread and connection workers read. Everything is
+/// lock-free so a wedged core loop can still be observed.
+pub struct ServerHealth {
+    queue_len: AtomicUsize,
+    active: AtomicUsize,
+    step_no: AtomicU64,
+    brownout: AtomicBool,
+    tripped: AtomicBool,
+    trips: AtomicU64,
+    /// Retry-After hint workers attach to every shed response,
+    /// published by the core so it reflects admission + brownout state
+    retry_after: AtomicU64,
+    /// microseconds since `epoch` of the last core-loop heartbeat
+    last_beat_us: AtomicU64,
+    epoch: Instant,
+}
+
+impl ServerHealth {
+    fn new() -> ServerHealth {
+        ServerHealth {
+            queue_len: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            step_no: AtomicU64::new(0),
+            brownout: AtomicBool::new(false),
+            tripped: AtomicBool::new(false),
+            trips: AtomicU64::new(0),
+            retry_after: AtomicU64::new(1),
+            last_beat_us: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    fn us_now(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn beat(&self, queue_len: usize, active: usize, step_no: u64,
+            brownout: bool, retry_after: u64) {
+        self.queue_len.store(queue_len, Ordering::Relaxed);
+        self.active.store(active, Ordering::Relaxed);
+        self.step_no.store(step_no, Ordering::Relaxed);
+        self.brownout.store(brownout, Ordering::Relaxed);
+        self.retry_after.store(retry_after.max(1), Ordering::Relaxed);
+        self.last_beat_us.store(self.us_now(), Ordering::Relaxed);
+    }
+
+    fn retry_after(&self) -> u64 {
+        self.retry_after.load(Ordering::Relaxed)
+    }
+
+    pub fn brownout(&self) -> bool {
+        self.brownout.load(Ordering::Relaxed)
+    }
+
+    pub fn watchdog_tripped(&self) -> bool {
+        self.tripped.load(Ordering::Relaxed)
+    }
+
+    pub fn watchdog_trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// One-line diagnostic of the last published core-loop state,
+    /// logged when the watchdog trips.
+    fn snapshot(&self) -> String {
+        format!(
+            "step {} queue {} active {} brownout {}",
+            self.step_no.load(Ordering::Relaxed),
+            self.queue_len.load(Ordering::Relaxed),
+            self.active.load(Ordering::Relaxed),
+            self.brownout.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Watch the core loop's heartbeat from a side thread. A missed beat
+/// longer than `threshold_ms` trips the watchdog: the last published
+/// scheduler state is logged and `/healthz` turns not-ready until
+/// beats resume. The trip counter latches so a flap is still visible
+/// in the drain report after recovery.
+fn spawn_watchdog(
+    health: Arc<ServerHealth>,
+    stop: Arc<AtomicBool>,
+    threshold_ms: u64,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let poll = Duration::from_millis(
+            (threshold_ms / 4).clamp(1, 250),
+        );
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let stale_us = health.us_now().saturating_sub(
+                health.last_beat_us.load(Ordering::Relaxed),
+            );
+            let stale =
+                stale_us > threshold_ms.saturating_mul(1000);
+            let was = health.tripped.swap(stale, Ordering::Relaxed);
+            if stale && !was {
+                health.trips.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "[serve-http] watchdog: no heartbeat for \
+                     {} ms — {}",
+                    stale_us / 1000,
+                    health.snapshot(),
+                );
+            } else if !stale && was {
+                eprintln!(
+                    "[serve-http] watchdog: heartbeat recovered \
+                     — {}",
+                    health.snapshot(),
+                );
+            }
+            std::thread::sleep(poll);
+        }
+    })
+}
+
+/// Readiness contract for `GET /healthz`: 200 only while the server
+/// is able to take new work ("serving"). Draining, brownout, and a
+/// tripped watchdog all report 503 with a distinct `state` label so
+/// load balancers stop routing while the process stays observable.
+fn healthz_body(draining: bool,
+                health: &ServerHealth) -> (u16, String) {
+    let state = if draining {
+        "draining"
+    } else if health.watchdog_tripped() {
+        "watchdog"
+    } else if health.brownout() {
+        "brownout"
+    } else {
+        "serving"
+    };
+    let ready = state == "serving";
+    let status = if ready { 200 } else { 503 };
+    let body = format!(
+        "{{\"ok\":{ready},\"state\":\"{state}\",\
+         \"draining\":{draining}}}"
+    );
+    (status, body)
 }
 
 /// What the core loop pushes into a session's stream channel.
@@ -122,7 +276,8 @@ impl ServerOpts {
 pub enum TokenEvent {
     Token(i32),
     Done {
-        /// terminal outcome label: "done" | "evicted"
+        /// terminal outcome label: "done" | "evicted" |
+        /// "deadline" | "quarantined" | "disconnect"
         outcome: &'static str,
         tokens: usize,
     },
@@ -170,9 +325,16 @@ pub struct DrainReport {
     pub completed: usize,
     pub rejected: usize,
     pub evicted: usize,
+    /// sub-buckets of `evicted`, keyed by failure reason
+    pub deadline_exceeded: usize,
+    pub quarantined: usize,
+    pub disconnects: usize,
     pub generated_tokens: u64,
     pub steps: u64,
     pub reloads: u64,
+    pub watchdog_trips: u64,
+    /// faults the configured `--fault-plan` actually injected
+    pub faults_injected: u64,
     pub wall_secs: f64,
     /// KV slots still held after drain — must be 0
     pub leaked_slots: usize,
@@ -192,11 +354,15 @@ impl DrainReport {
     pub fn summary(&self) -> String {
         format!(
             "submitted {} completed {} rejected {} evicted {} \
-             tokens {} steps {} reloads {} leaked_slots {} \
+             deadline {} quarantined {} disconnects {} \
+             tokens {} steps {} reloads {} watchdog_trips {} \
+             faults_injected {} leaked_slots {} \
              leaked_pages {} live_spans {} dropped_spans {}",
             self.submitted, self.completed, self.rejected,
-            self.evicted, self.generated_tokens, self.steps,
-            self.reloads, self.leaked_slots, self.leaked_pages,
+            self.evicted, self.deadline_exceeded, self.quarantined,
+            self.disconnects, self.generated_tokens, self.steps,
+            self.reloads, self.watchdog_trips, self.faults_injected,
+            self.leaked_slots, self.leaked_pages,
             self.live_spans, self.dropped_spans
         )
     }
@@ -216,11 +382,20 @@ struct ConnCtx {
     shutdown: Arc<AtomicBool>,
     vocab: usize,
     defaults: GenerateDefaults,
+    health: Arc<ServerHealth>,
+    /// read AND write timeout applied to accepted sockets
+    io_timeout: Option<Duration>,
 }
 
 impl ConnCtx {
     fn draining(&self) -> bool {
         self.shutdown.load(Ordering::Relaxed) || drain::signaled()
+    }
+
+    /// Retry hint for shed responses (503/429 without a scheduler
+    /// verdict), as last published by the core loop.
+    fn retry_after(&self) -> u64 {
+        self.health.retry_after()
     }
 }
 
@@ -261,6 +436,8 @@ impl Server {
 
         let (cmd_tx, cmd_rx) =
             sync_channel::<Cmd>(opts.serve.max_queue.max(1) + 16);
+        let health = Arc::new(ServerHealth::new());
+        health.beat(0, 0, 0, false, 1);
         let ctx = ConnCtx {
             cmd_tx,
             shutdown: shutdown.clone(),
@@ -270,6 +447,21 @@ impl Server {
                 temperature: opts.serve.temperature,
                 seed: opts.serve.seed,
             },
+            health: health.clone(),
+            io_timeout: match opts.io_timeout_secs {
+                0 => None,
+                s => Some(Duration::from_secs(s)),
+            },
+        };
+        let watchdog_stop = Arc::new(AtomicBool::new(false));
+        let watchdog = if opts.watchdog_ms > 0 {
+            Some(spawn_watchdog(
+                health.clone(),
+                watchdog_stop.clone(),
+                opts.watchdog_ms,
+            ))
+        } else {
+            None
         };
 
         let listener = self.listener;
@@ -294,6 +486,13 @@ impl Server {
         loop {
             let draining =
                 shutdown.load(Ordering::Relaxed) || drain::signaled();
+            health.beat(
+                sched.queue_len(),
+                sched.active_len(),
+                sched.step_no(),
+                sched.brownout.active(),
+                sched.retry_after_secs(sched.queue_len()),
+            );
 
             let mut cmds: Vec<Cmd> = Vec::new();
             loop {
@@ -340,12 +539,13 @@ impl Server {
                         );
                         let client = next_client;
                         next_client += 1;
-                        match sched.submit(
+                        match sched.submit_req(
                             client,
                             req.prompt,
                             req.max_new,
                             req.seed,
                             req.temperature,
+                            req.deadline_ms,
                         ) {
                             Some(id) => {
                                 let (tx, rx) =
@@ -379,7 +579,6 @@ impl Server {
                                     SubmitResult::Rejected {
                                         reason,
                                         retry_after: sched
-                                            .admission
                                             .retry_after_secs(qlen),
                                     },
                                 );
@@ -388,11 +587,15 @@ impl Server {
                     }
                     Cmd::Metrics { resp } => {
                         let (g, r) = engine.scratch_stats();
-                        let reg = serve::metrics_registry(
+                        let mut reg = serve::metrics_registry(
                             &sched,
                             g,
                             r,
                             t0.elapsed().as_secs_f64(),
+                        );
+                        reg.counter_add(
+                            "serve.watchdog_trips",
+                            health.watchdog_trips(),
                         );
                         let _ = resp.send(reg.snapshot_json());
                     }
@@ -406,6 +609,17 @@ impl Server {
                         let _ = resp.send(body);
                     }
                     Cmd::Reload { path, resp } => {
+                        if sched.fire_fault(FaultPoint::ReloadCorrupt)
+                        {
+                            // simulated torn/corrupt artifact read:
+                            // the old engine must keep serving
+                            let _ = resp.send(ReloadResult::Failed(
+                                "injected fault: artifact \
+                                 corruption"
+                                    .to_string(),
+                            ));
+                            continue;
+                        }
                         let result = reload_engine(
                             rt, &path, opts, &engine,
                         );
@@ -485,6 +699,10 @@ impl Server {
             sched.cancel(id);
         }
         pump_sinks(&mut sched, &mut sinks);
+        watchdog_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = watchdog {
+            let _ = h.join();
+        }
         let _ = accept_handle.join();
 
         let wall = t0.elapsed().as_secs_f64();
@@ -507,11 +725,15 @@ impl Server {
             })?;
         }
         if let Some(path) = &opts.serve.metrics_out {
-            let reg = serve::metrics_registry(
+            let mut reg = serve::metrics_registry(
                 &sched,
                 scratch_grows,
                 scratch_reuses,
                 wall,
+            );
+            reg.counter_add(
+                "serve.watchdog_trips",
+                health.watchdog_trips(),
             );
             std::fs::write(path, reg.snapshot_json()).with_context(
                 || {
@@ -531,9 +753,17 @@ impl Server {
             completed: sched.stats.completed,
             rejected: sched.stats.rejected,
             evicted: sched.stats.evicted,
+            deadline_exceeded: sched.stats.deadline_exceeded,
+            quarantined: sched.stats.quarantined,
+            disconnects: sched.stats.disconnects,
             generated_tokens: sched.stats.generated_tokens,
             steps: sched.step_no(),
             reloads,
+            watchdog_trips: health.watchdog_trips(),
+            faults_injected: sched
+                .faults()
+                .map(|f| f.total_fired())
+                .unwrap_or(0),
             wall_secs: wall,
             leaked_slots: sched.pool.in_use(),
             leaked_pages: sched.pool.pages_used(),
@@ -593,12 +823,17 @@ fn pump_sinks(sched: &mut Scheduler, sinks: &mut HashMap<u64, Sink>) {
             (
                 s.generated[sink.cursor..].to_vec(),
                 s.is_terminal(),
-                match s.state {
-                    crate::serve::session::SessionState::Evicted => {
-                        "evicted"
-                    }
-                    _ => "done",
-                },
+                // the scheduler records the precise terminal reason
+                // ("done" | "evicted" | "deadline" | "quarantined"
+                // | "disconnect"); fall back for states that predate
+                // the outcome field
+                s.outcome.map(|o| o.label()).unwrap_or(
+                    match s.state {
+                        crate::serve::session::SessionState::Evicted
+                            => "evicted",
+                        _ => "done",
+                    },
+                ),
             )
         };
         let mut client_gone = false;
@@ -620,7 +855,7 @@ fn pump_sinks(sched: &mut Scheduler, sinks: &mut HashMap<u64, Sink>) {
         }
     }
     for id in dead {
-        sched.cancel(id);
+        sched.cancel_as(id, SpanOutcome::Disconnected);
         sched.table.remove(id);
         sinks.remove(&id);
     }
@@ -647,7 +882,10 @@ fn accept_loop(listener: TcpListener, ctx: ConnCtx,
                     let _ = http::write_error(
                         &mut stream,
                         503,
-                        &[("Retry-After", "1".to_string())],
+                        &[(
+                            "Retry-After",
+                            ctx.retry_after().to_string(),
+                        )],
                         "connection limit reached",
                     );
                     continue;
@@ -670,7 +908,11 @@ fn accept_loop(listener: TcpListener, ctx: ConnCtx,
 }
 
 fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    // both directions time out: a reader that never sends a request
+    // AND a consumer that stops reading its stream release the
+    // worker thread instead of pinning it forever
+    let _ = stream.set_read_timeout(ctx.io_timeout);
+    let _ = stream.set_write_timeout(ctx.io_timeout);
     let _ = stream.set_nodelay(true);
     let req = match http::read_request(&mut stream) {
         Ok(r) => r,
@@ -682,11 +924,10 @@ fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) {
     };
     match router::route(&req.method, &req.path) {
         Route::Healthz => {
-            let body = format!(
-                "{{\"ok\":true,\"draining\":{}}}",
-                ctx.draining()
-            );
-            let _ = http::write_json(&mut stream, 200, &[], &body);
+            let (status, body) =
+                healthz_body(ctx.draining(), &ctx.health);
+            let _ =
+                http::write_json(&mut stream, status, &[], &body);
         }
         Route::Metrics => {
             match ask(&ctx, |resp| Cmd::Metrics { resp }) {
@@ -695,7 +936,7 @@ fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) {
                                              &body);
                 }
                 None => {
-                    let _ = busy(&mut stream);
+                    let _ = busy(&mut stream, ctx.retry_after());
                 }
             }
         }
@@ -711,7 +952,7 @@ fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) {
                     );
                 }
                 None => {
-                    let _ = busy(&mut stream);
+                    let _ = busy(&mut stream, ctx.retry_after());
                 }
             }
         }
@@ -737,11 +978,12 @@ fn ask<T>(ctx: &ConnCtx,
     rx.recv().ok()
 }
 
-fn busy(stream: &mut TcpStream) -> std::io::Result<()> {
+fn busy(stream: &mut TcpStream,
+        retry_after: u64) -> std::io::Result<()> {
     http::write_error(
         stream,
         503,
-        &[("Retry-After", "1".to_string())],
+        &[("Retry-After", retry_after.to_string())],
         "server busy",
     )
 }
@@ -788,7 +1030,7 @@ fn handle_generate(mut stream: TcpStream, req: &http::Request,
         let _ = http::write_error(
             &mut stream,
             429,
-            &[("Retry-After", "1".to_string())],
+            &[("Retry-After", ctx.retry_after().to_string())],
             "submit queue full",
         );
         return;
@@ -802,7 +1044,7 @@ fn handle_generate(mut stream: TcpStream, req: &http::Request,
             let _ = http::write_error(
                 &mut stream,
                 503,
-                &[("Retry-After", "1".to_string())],
+                &[("Retry-After", ctx.retry_after().to_string())],
                 "draining",
             );
         }
@@ -851,7 +1093,7 @@ fn handle_reload(mut stream: TcpStream, req: &http::Request,
     };
     match ask(ctx, |resp| Cmd::Reload { path, resp }) {
         None => {
-            let _ = busy(&mut stream);
+            let _ = busy(&mut stream, ctx.retry_after());
         }
         Some(ReloadResult::Swapped(label)) => {
             let body = format!(
@@ -929,6 +1171,8 @@ mod tests {
         assert_eq!(o.max_conns, 64);
         assert!(o.template.lora.is_none());
         assert_eq!(o.template.kv_precision, KvPrecision::F32);
+        assert_eq!(o.io_timeout_secs, 10);
+        assert_eq!(o.watchdog_ms, 1000);
     }
 
     #[test]
@@ -938,9 +1182,14 @@ mod tests {
             completed: 3,
             rejected: 1,
             evicted: 0,
+            deadline_exceeded: 0,
+            quarantined: 0,
+            disconnects: 0,
             generated_tokens: 12,
             steps: 9,
             reloads: 1,
+            watchdog_trips: 0,
+            faults_injected: 0,
             wall_secs: 0.1,
             leaked_slots: 0,
             leaked_pages: 0,
@@ -951,11 +1200,88 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("completed 3"));
         assert!(s.contains("reloads 1"));
+        assert!(s.contains("watchdog_trips 0"));
         r.leaked_pages = 2;
         assert!(!r.clean());
         r.leaked_pages = 0;
         r.live_spans = 1;
         assert!(!r.clean());
+    }
+
+    #[test]
+    fn healthz_readiness_states() {
+        let h = ServerHealth::new();
+        let (code, body) = healthz_body(false, &h);
+        assert_eq!(code, 200);
+        assert!(body.contains("\"ok\":true"), "{body}");
+        assert!(body.contains("\"state\":\"serving\""), "{body}");
+        assert!(body.contains("\"draining\":false"), "{body}");
+
+        h.brownout.store(true, Ordering::Relaxed);
+        let (code, body) = healthz_body(false, &h);
+        assert_eq!(code, 503);
+        assert!(body.contains("\"state\":\"brownout\""), "{body}");
+
+        // a tripped watchdog outranks brownout
+        h.tripped.store(true, Ordering::Relaxed);
+        let (code, body) = healthz_body(false, &h);
+        assert_eq!(code, 503);
+        assert!(body.contains("\"state\":\"watchdog\""), "{body}");
+
+        // draining outranks everything
+        let (code, body) = healthz_body(true, &h);
+        assert_eq!(code, 503);
+        assert!(body.contains("\"state\":\"draining\""), "{body}");
+        assert!(body.contains("\"ok\":false"), "{body}");
+        assert!(body.contains("\"draining\":true"), "{body}");
+    }
+
+    #[test]
+    fn retry_hint_tracks_core_beats() {
+        let h = ServerHealth::new();
+        // before any beat the hint is the conservative floor
+        assert_eq!(h.retry_after(), 1);
+        h.beat(7, 3, 42, true, 5);
+        assert_eq!(h.retry_after(), 5);
+        assert!(h.brownout());
+        // a zero hint is clamped: Retry-After: 0 invites a stampede
+        h.beat(0, 0, 43, false, 0);
+        assert_eq!(h.retry_after(), 1);
+    }
+
+    #[test]
+    fn watchdog_trips_and_recovers_on_heartbeat() {
+        let h = Arc::new(ServerHealth::new());
+        h.beat(0, 0, 0, false, 1);
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = spawn_watchdog(h.clone(), stop.clone(), 5);
+        // stop beating: the 5 ms threshold must trip well within
+        // the generous wait even on a loaded machine
+        let mut tripped = false;
+        for _ in 0..200 {
+            std::thread::sleep(Duration::from_millis(5));
+            if h.watchdog_tripped() {
+                tripped = true;
+                break;
+            }
+        }
+        assert!(tripped, "watchdog never tripped");
+        assert!(h.watchdog_trips() >= 1);
+        // resume beating: the trip flag clears, the counter latches
+        let trips = h.watchdog_trips();
+        let mut recovered = false;
+        for _ in 0..200 {
+            h.beat(0, 0, 1, false, 1);
+            std::thread::sleep(Duration::from_millis(2));
+            if !h.watchdog_tripped() {
+                recovered = true;
+                break;
+            }
+        }
+        assert!(recovered, "watchdog never recovered");
+        assert!(h.watchdog_trips() >= trips);
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
     }
 
     #[test]

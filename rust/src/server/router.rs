@@ -17,7 +17,13 @@ pub enum Route {
     /// `GET /traces` — completed session spans as
     /// `qpruner.serve.events.v1` JSONL
     Traces,
-    /// `GET /healthz` — liveness probe
+    /// `GET /healthz` — combined liveness/readiness probe.
+    /// Contract: the endpoint always answers (liveness — the accept
+    /// loop and workers are alive even when the core loop wedges),
+    /// but the status code carries readiness: 200 only in the
+    /// `"serving"` state; 503 with `"state"` of `"draining"`,
+    /// `"watchdog"`, or `"brownout"` when new work should be routed
+    /// elsewhere. Precedence: draining > watchdog > brownout.
     Healthz,
     /// `POST /admin/reload` — hot-swap the model artifact
     Reload,
@@ -54,6 +60,9 @@ pub struct GenerateRequest {
     pub temperature: f32,
     pub seed: u64,
     pub stream: bool,
+    /// per-request deadline in milliseconds from admission; `None`
+    /// falls back to the server's `--deadline-ms` (if any)
+    pub deadline_ms: Option<u64>,
 }
 
 fn uint_field(doc: &Json, key: &str, max: f64)
@@ -125,7 +134,18 @@ pub fn parse_generate(body: &str, d: &GenerateDefaults)
             .as_bool()
             .ok_or("stream must be a boolean")?,
     };
-    Ok(GenerateRequest { prompt, max_new, temperature, seed, stream })
+    let deadline_ms = match uint_field(&doc, "deadline_ms", 1e12)? {
+        Some(0) => return Err("deadline_ms must be >= 1".into()),
+        other => other,
+    };
+    Ok(GenerateRequest {
+        prompt,
+        max_new,
+        temperature,
+        seed,
+        stream,
+        deadline_ms,
+    })
 }
 
 #[cfg(test)]
@@ -159,6 +179,17 @@ mod tests {
         assert_eq!(r.seed, 42);
         assert!((r.temperature - 0.8).abs() < 1e-6);
         assert!(!r.stream);
+        assert_eq!(r.deadline_ms, None);
+    }
+
+    #[test]
+    fn parse_accepts_deadline_ms() {
+        let r = parse_generate(
+            "{\"prompt\":[1],\"deadline_ms\":250}",
+            &D,
+        )
+        .unwrap();
+        assert_eq!(r.deadline_ms, Some(250));
     }
 
     #[test]
@@ -189,6 +220,8 @@ mod tests {
             "{\"prompt\":[1],\"temperature\":-1}",
             "{\"prompt\":[1],\"stream\":\"yes\"}",
             "{\"prompt\":[1],\"seed\":-3}",
+            "{\"prompt\":[1],\"deadline_ms\":0}",
+            "{\"prompt\":[1],\"deadline_ms\":1.5}",
         ] {
             assert!(parse_generate(bad, &D).is_err(), "accepted {bad}");
         }

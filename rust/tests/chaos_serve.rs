@@ -1,0 +1,502 @@
+//! Seeded differential chaos suite: hundreds of fault schedules
+//! against the offline scheduler plus in-process `serve-http` boots,
+//! asserting after every run that containment held — no slot or page
+//! leaks, no open spans, a terminal outcome for every admitted
+//! session — and that an identical seed + plan reproduces an
+//! identical event trace.
+
+use qpruner::model::{ModelConfig, ParamStore};
+use qpruner::obs::json::Json;
+use qpruner::obs::span::Tracer;
+use qpruner::quant::{BitConfig, QuantFormat};
+use qpruner::rng::Rng;
+use qpruner::runtime::Runtime;
+use qpruner::serve::admission::{AdmissionPolicy, BrownoutConfig};
+use qpruner::serve::engine::{Engine, EngineBuilder};
+use qpruner::serve::faults::FaultPlan;
+use qpruner::serve::kv_cache::{KvCachePool, KvLayout, KvPrecision};
+use qpruner::serve::scheduler::Scheduler;
+use qpruner::serve::ServeOpts;
+use qpruner::server::{DrainReport, Server, ServerOpts};
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const MAX_SEQ: usize = 24;
+
+fn fixture() -> (Runtime, Engine, ModelConfig) {
+    let dir = std::env::temp_dir().join("qpruner_chaos_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 41);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let engine = EngineBuilder::new()
+        .store(&store, &bits)
+        .max_seq(MAX_SEQ)
+        .build(&mut rt)
+        .unwrap();
+    (rt, engine, cfg)
+}
+
+/// Deterministic per-schedule fault plan. Probabilities come from
+/// fixed string tables (not float arithmetic) so the spec — and
+/// therefore the per-point RNG draws — is byte-stable.
+fn plan_spec(seed: u64) -> String {
+    const DECODE: [&str; 5] = ["0", "0.02", "0.05", "0.1", "0.25"];
+    const STARVE: [&str; 4] = ["0", "0.02", "0.05", "0.1"];
+    const DROP: [&str; 3] = ["0", "0.03", "0.08"];
+    const PREFILL: [&str; 3] = ["0", "0.05", "0.15"];
+    format!(
+        "seed={seed},decode_err={},page_starve={},client_drop={},\
+         prefill_err={}",
+        DECODE[(seed % 5) as usize],
+        STARVE[((seed / 5) % 4) as usize],
+        DROP[((seed / 20) % 3) as usize],
+        PREFILL[((seed / 60) % 3) as usize],
+    )
+}
+
+/// Aggregate failure accounting across one schedule, for the
+/// suite-level "chaos actually happened" assertions.
+#[derive(Default)]
+struct Totals {
+    completed: usize,
+    evicted: usize,
+    deadline: usize,
+    quarantined: usize,
+    disconnects: usize,
+    fired: u64,
+}
+
+/// Run one fault schedule to drain and return its event trace. The
+/// trace captures every step's accounting plus the final per-session
+/// outcomes — two runs of the same seed must produce identical
+/// strings.
+fn run_schedule(rt: &mut Runtime, engine: &Engine,
+                cfg: &ModelConfig, seed: u64,
+                totals: &mut Totals) -> String {
+    let paged = seed % 2 == 1;
+    let pool = if paged {
+        // page_tokens 8 with prompts <= 6 tokens: no full prompt
+        // page ever publishes, so the prefix index pins nothing and
+        // 16 pages can never legitimately starve 3 slots
+        KvCachePool::with_slots_layout(
+            cfg,
+            engine.attn_dim(),
+            3,
+            MAX_SEQ,
+            KvPrecision::F32,
+            1e6,
+            1e9,
+            KvLayout::Paged,
+            8,
+            16,
+        )
+    } else {
+        KvCachePool::with_slots(
+            cfg,
+            engine.attn_dim(),
+            3,
+            MAX_SEQ,
+            KvPrecision::F32,
+            1e6,
+            1e9,
+        )
+    };
+    let mut sched = Scheduler::new(
+        pool,
+        AdmissionPolicy::new(8, MAX_SEQ),
+        3,
+        6,
+    );
+    sched.set_tracer(Tracer::new(256));
+    sched.set_faults(FaultPlan::parse(&plan_spec(seed)).unwrap());
+    // an already-expired deadline is wall-clock independent: every
+    // admitted session deterministically exits with the deadline
+    // reason at the next sweep
+    if seed % 7 == 3 {
+        sched.set_default_deadline_ms(Some(0));
+    }
+    if seed % 5 == 2 {
+        sched.set_brownout(Some(BrownoutConfig {
+            queue_frac: 0.5,
+            occ_frac: 0.9,
+            enter_steps: 2,
+            exit_steps: 4,
+            clamp_max_new: 2,
+            retry_after_bump: 2,
+        }));
+    }
+
+    let mut rng = Rng::new(seed ^ 0xC4A05);
+    let mut trace = String::new();
+    let mut client = 0usize;
+    for ev in 0..30u32 {
+        for _ in 0..rng.below(3) {
+            let plen = 2 + rng.below(5);
+            let mnew = 1 + rng.below(8);
+            let prompt: Vec<i32> =
+                (0..plen).map(|j| (3 + j) as i32).collect();
+            let id = sched.submit(client, prompt, mnew, 7, 0.5);
+            client += 1;
+            writeln!(trace, "ev={ev} submit={id:?}").unwrap();
+        }
+        // periodic client-stall bursts exercise TTL eviction on top
+        // of the injected faults
+        let stall = if ev % 6 == 0 { 0.3 } else { 0.0 };
+        sched.step(engine, rt, &mut rng, stall).unwrap();
+        assert!(sched.pool.in_use() <= sched.pool.capacity());
+        writeln!(
+            trace,
+            "ev={ev} active={} queue={} in_use={} done={} \
+             evicted={} dl={} quar={} disc={} brownout={}",
+            sched.active_len(),
+            sched.queue_len(),
+            sched.pool.in_use(),
+            sched.stats.completed,
+            sched.stats.evicted,
+            sched.stats.deadline_exceeded,
+            sched.stats.quarantined,
+            sched.stats.disconnects,
+            sched.brownout.active(),
+        )
+        .unwrap();
+    }
+    let mut guard = 0;
+    while !sched.idle() {
+        sched.step(engine, rt, &mut Rng::new(0), 0.0).unwrap();
+        guard += 1;
+        assert!(guard < 2000, "schedule {seed} failed to drain");
+    }
+
+    // containment invariants: nothing leaked, everything accounted
+    assert_eq!(sched.pool.in_use(), 0,
+               "schedule {seed}: slots leaked");
+    sched.pool.clear_prefix_index();
+    assert_eq!(sched.pool.pages_used(), 0,
+               "schedule {seed}: pages leaked");
+    let st = &sched.stats;
+    assert_eq!(st.submitted, st.admitted + st.rejected,
+               "schedule {seed}: submissions lost");
+    assert_eq!(st.admitted, st.completed + st.evicted,
+               "schedule {seed}: admitted sessions lost");
+    assert!(
+        st.deadline_exceeded + st.quarantined + st.disconnects
+            <= st.evicted,
+        "schedule {seed}: failure buckets exceed evictions"
+    );
+    // every admitted session holds a terminal state AND a recorded
+    // exit reason
+    let mut finals: Vec<(u64, &'static str, usize)> = sched
+        .table
+        .iter()
+        .map(|s| {
+            assert!(s.is_terminal(),
+                    "schedule {seed}: session {} not terminal", s.id);
+            let label = s
+                .outcome
+                .expect("terminal session without an outcome")
+                .label();
+            (s.id, label, s.generated.len())
+        })
+        .collect();
+    finals.sort_unstable();
+    for (id, label, tokens) in &finals {
+        writeln!(trace, "final id={id} outcome={label} \
+                         tokens={tokens}")
+            .unwrap();
+    }
+    totals.completed += st.completed;
+    totals.evicted += st.evicted;
+    totals.deadline += st.deadline_exceeded;
+    totals.quarantined += st.quarantined;
+    totals.disconnects += st.disconnects;
+    totals.fired += sched.faults().unwrap().total_fired();
+
+    let tracer = sched.take_tracer().unwrap();
+    assert_eq!(tracer.live_len(), 0,
+               "schedule {seed}: span left open");
+    assert_eq!(tracer.dropped(), 0,
+               "schedule {seed}: spans dropped");
+    trace
+}
+
+/// The offline capstone: 200 seeded schedules across slab and paged
+/// pools, mixed fault plans, instant deadlines, and brownout — every
+/// one drains clean, and replaying a sample of seeds reproduces the
+/// event trace byte-for-byte.
+#[test]
+fn two_hundred_fault_schedules_drain_clean_and_replay() {
+    let (mut rt, engine, cfg) = fixture();
+    let mut totals = Totals::default();
+    let mut traces: Vec<String> = Vec::with_capacity(200);
+    for seed in 0..200u64 {
+        traces.push(
+            run_schedule(&mut rt, &engine, &cfg, seed, &mut totals),
+        );
+    }
+    // the suite exercised every containment path at least once
+    assert!(totals.completed > 0, "no schedule completed anything");
+    assert!(totals.evicted > 0, "no abnormal exits at all");
+    assert!(totals.deadline > 0, "deadline path never exercised");
+    assert!(totals.quarantined > 0, "quarantine never exercised");
+    assert!(totals.disconnects > 0, "drop injection never landed");
+    assert!(totals.fired > 0, "fault plans never fired");
+
+    // identical seed + plan => identical event trace
+    for &seed in &[0u64, 13, 77, 142, 199] {
+        let mut t2 = Totals::default();
+        let replay =
+            run_schedule(&mut rt, &engine, &cfg, seed, &mut t2);
+        assert_eq!(
+            traces[seed as usize], replay,
+            "schedule {seed} is not reproducible"
+        );
+    }
+    // and different seeds genuinely diverge
+    assert_ne!(traces[0], traces[1], "trace insensitive to seed");
+}
+
+// ---- in-process serve-http chaos ---------------------------------
+
+struct TestServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<DrainReport>,
+}
+
+fn start_server(tag: &str,
+                tune: impl FnOnce(&mut ServerOpts)) -> TestServer {
+    let dir =
+        std::env::temp_dir().join(format!("qpruner_chaos_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 51);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let mut opts = ServerOpts::new(ServeOpts::smoke());
+    opts.addr = "127.0.0.1:0".to_string();
+    opts.serve.stall_prob = 0.0;
+    opts.serve.stats_every = 0;
+    tune(&mut opts);
+    let server = Server::bind(&opts.addr).unwrap();
+    let addr = server.local_addr();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = shutdown.clone();
+    let builder = EngineBuilder::new().store(&store, &bits);
+    let handle = std::thread::spawn(move || {
+        let mut rt = Runtime::new(&dir).unwrap();
+        server.run(&mut rt, builder, &opts, flag).unwrap()
+    });
+    TestServer { addr, shutdown, handle }
+}
+
+impl TestServer {
+    fn stop(self) -> DrainReport {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.handle.join().unwrap()
+    }
+}
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str)
+           -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(raw.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let (head, payload) = resp
+        .split_once("\r\n\r\n")
+        .expect("response has no head/body separator");
+    let status: u16 = head
+        .lines()
+        .next()
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap();
+    (status, head.to_string(), payload.to_string())
+}
+
+/// Faulty decode under real HTTP traffic: every client still gets a
+/// terminal outcome, the fault counters surface in `/metrics`, and
+/// the drain is clean.
+#[test]
+fn http_chaos_every_client_gets_a_terminal_outcome() {
+    let srv = start_server("faulty", |o| {
+        o.serve.fault_plan = Some(
+            "seed=11,decode_err=0.15,client_drop=0.05,\
+             page_starve=0.05,prefill_err=0.05"
+                .to_string(),
+        );
+        o.serve.brownout = Some(BrownoutConfig::default());
+    });
+    let addr = srv.addr;
+    let known = ["done", "evicted", "deadline", "quarantined",
+                 "disconnect"];
+    let mut saw_failure = false;
+    for i in 0..24i32 {
+        let body = format!(
+            "{{\"prompt\":[{},{},{}],\"max_new\":6,\"seed\":7,\
+             \"temperature\":0.5,\"stream\":false}}",
+            3 + i % 5,
+            4 + i % 3,
+            5
+        );
+        let (status, _, payload) =
+            request(addr, "POST", "/v1/generate", &body);
+        assert_eq!(status, 200, "{payload}");
+        let doc = Json::parse(&payload).unwrap();
+        let outcome =
+            doc.get("outcome").and_then(|o| o.as_str()).unwrap();
+        assert!(known.contains(&outcome),
+                "unknown terminal outcome {outcome:?}");
+        saw_failure |= outcome != "done";
+    }
+    assert!(saw_failure,
+            "fault plan injected nothing visible in 24 requests");
+
+    let (status, _, payload) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&payload).unwrap();
+    let counters = doc.get("counters").unwrap();
+    let fired = counters
+        .get("faults.injected_total")
+        .and_then(|v| v.as_f64())
+        .expect("fault counters missing with a plan configured");
+    assert!(fired >= 1.0, "plan configured but nothing fired");
+    assert!(
+        doc.get("gauges")
+            .and_then(|g| g.get("serve.brownout"))
+            .is_some(),
+        "brownout gauge missing"
+    );
+
+    let report = srv.stop();
+    assert_eq!(report.submitted, 24);
+    assert_eq!(report.completed + report.evicted, 24);
+    assert!(report.faults_injected >= 1);
+    assert!(report.clean(), "unclean drain: {}", report.summary());
+}
+
+/// Injected artifact corruption on `/admin/reload` fails closed: the
+/// reload reports failure, the old engine keeps serving, nothing is
+/// swapped.
+#[test]
+fn injected_reload_corruption_fails_closed() {
+    use qpruner::artifact::{LoraMode, ModelArtifact, Provenance};
+    let dir = std::env::temp_dir().join("qpruner_chaos_reload");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 51);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let art = ModelArtifact::from_pipeline(
+        &store,
+        &bits,
+        None,
+        LoraMode::Merge,
+        Provenance::default(),
+    )
+    .unwrap();
+    let path = dir.join("swap.qpart");
+    art.save(&path).unwrap();
+
+    let srv = start_server("reload", |o| {
+        // bare point = probability 1.0: every reload attempt sees a
+        // corrupt artifact
+        o.serve.fault_plan =
+            Some("seed=3,reload_corrupt".to_string());
+    });
+    let addr = srv.addr;
+    let (status, _, payload) = request(
+        addr,
+        "POST",
+        "/admin/reload",
+        &format!("{{\"artifact\":\"{}\"}}", path.display()),
+    );
+    assert_eq!(status, 400, "{payload}");
+    assert!(payload.contains("injected fault"), "{payload}");
+
+    // the serving engine is untouched and still decodes
+    let (status, _, payload) = request(
+        addr,
+        "POST",
+        "/v1/generate",
+        "{\"prompt\":[3,4,5],\"max_new\":4,\"seed\":7,\
+         \"temperature\":0.5,\"stream\":false}",
+    );
+    assert_eq!(status, 200, "{payload}");
+    assert!(payload.contains("\"outcome\":\"done\""), "{payload}");
+
+    let report = srv.stop();
+    assert_eq!(report.reloads, 0, "corrupt reload must not swap");
+    assert!(report.faults_injected >= 1);
+    assert!(report.clean(), "{}", report.summary());
+    std::fs::remove_file(&path).ok();
+}
+
+/// A stalling core loop trips the watchdog: `/healthz` turns 503
+/// with the "watchdog" state while the loop is wedged, recovers when
+/// beats resume, and the trip latches in the drain report.
+#[test]
+fn stall_plan_trips_watchdog_and_healthz_reports_it() {
+    let srv = start_server("watchdog", |o| {
+        o.serve.fault_plan =
+            Some("seed=5,stall_ms=200".to_string());
+        o.watchdog_ms = 25;
+    });
+    let addr = srv.addr;
+    let body = "{\"prompt\":[3,4,5],\"max_new\":4,\"seed\":7,\
+                \"temperature\":0.5,\"stream\":false}";
+    let saw_watchdog = std::thread::scope(|sc| {
+        let gen = sc.spawn(move || {
+            let (status, _, payload) =
+                request(addr, "POST", "/v1/generate", body);
+            assert_eq!(status, 200, "{payload}");
+            assert!(payload.contains("\"outcome\":\"done\""),
+                    "{payload}");
+        });
+        // every scheduler step sleeps 200 ms against a 25 ms
+        // watchdog: polls during the generation must observe the
+        // tripped state
+        let mut seen = false;
+        for _ in 0..400 {
+            let (status, _, payload) =
+                request(addr, "GET", "/healthz", "");
+            if status == 503
+                && payload.contains("\"state\":\"watchdog\"")
+            {
+                seen = true;
+                break;
+            }
+            if gen.is_finished() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        gen.join().unwrap();
+        seen
+    });
+
+    let report = srv.stop();
+    assert!(
+        saw_watchdog || report.watchdog_trips >= 1,
+        "watchdog never tripped: {}",
+        report.summary()
+    );
+    assert!(report.watchdog_trips >= 1, "trip did not latch: {}",
+            report.summary());
+    assert_eq!(report.completed, 1);
+    assert!(report.clean(), "{}", report.summary());
+}

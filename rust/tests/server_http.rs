@@ -485,6 +485,108 @@ fn admin_reload_swaps_artifacts_mid_stream() {
     std::fs::remove_file(&bad_shape).ok();
 }
 
+/// A client that drops its socket mid-SSE is detected at the next
+/// sink pump: the session is cancelled with the "disconnect" exit
+/// reason, its slot is reclaimed, and the drain stays clean.
+#[test]
+fn client_disconnect_mid_sse_cancels_session() {
+    let (store, bits) = tiny_store(26);
+    let srv = start_server("disconnect", &store, &bits, |o| {
+        // a long generation so the session is guaranteed to still be
+        // decoding when the socket disappears
+        o.serve.max_seq = 600;
+    });
+    let addr = srv.addr;
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let body = gen_body(&[3, 4, 5], 500, true);
+        s.write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: t\r\n\
+                 Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        read_until(&mut s, "{\"token\":", &mut buf);
+        // socket dropped here, mid-generation
+    }
+    // the worker hits a write error, the core's next try_send fails,
+    // and the session is cancelled; poll the live counter until the
+    // cancellation lands
+    let mut seen = false;
+    for _ in 0..300 {
+        let (status, _, payload) =
+            request(addr, "GET", "/metrics", "");
+        assert_eq!(status, 200);
+        let doc = Json::parse(&payload).unwrap();
+        if doc
+            .get("counters")
+            .and_then(|c| c.get("serve.client_disconnects"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            >= 1.0
+        {
+            seen = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(seen, "disconnect never surfaced in /metrics");
+
+    // the span closed with the disconnect exit reason
+    let (status, _, payload) = request(addr, "GET", "/traces", "");
+    assert_eq!(status, 200);
+    assert!(
+        payload.contains("\"outcome\":\"disconnect\""),
+        "no disconnect span in traces: {payload}"
+    );
+
+    let report = srv.stop();
+    assert_eq!(report.submitted, 1);
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.evicted, 1);
+    assert_eq!(report.disconnects, 1);
+    assert!(report.clean(), "leak after disconnect: {}",
+            report.summary());
+}
+
+/// Per-request deadlines via the HTTP body: a 1 ms deadline on a long
+/// generation terminates the stream early with the "deadline"
+/// outcome and partial tokens, and the drain report buckets it.
+#[test]
+fn request_deadline_terminates_stream_with_partial_tokens() {
+    let (store, bits) = tiny_store(27);
+    let srv = start_server("deadline", &store, &bits, |o| {
+        o.serve.max_seq = 600;
+    });
+    let addr = srv.addr;
+    let body = "{\"prompt\":[3,4,5],\"max_new\":500,\"seed\":1,\
+                \"temperature\":0.5,\"stream\":true,\
+                \"deadline_ms\":1}";
+    let (status, head, payload) =
+        request(addr, "POST", "/v1/generate", body);
+    assert_eq!(status, 200, "{payload}");
+    assert!(head.contains("text/event-stream"), "{head}");
+    let events = parse_events(&payload);
+    let last = Json::parse(events.last().unwrap()).unwrap();
+    assert_eq!(last.get("done").and_then(|d| d.as_bool()),
+               Some(true));
+    assert_eq!(last.get("outcome").and_then(|o| o.as_str()),
+               Some("deadline"));
+    let tokens =
+        last.get("tokens").unwrap().as_f64().unwrap() as usize;
+    assert!(tokens < 500, "deadline never fired");
+
+    let report = srv.stop();
+    assert_eq!(report.deadline_exceeded, 1);
+    assert_eq!(report.evicted, 1);
+    assert!(report.clean(), "{}", report.summary());
+}
+
 /// SIGTERM semantics via the shared flag: in-flight streams finish
 /// (not cut), the drain report leaks nothing, and the listener is
 /// gone afterwards.
