@@ -262,6 +262,103 @@ fn main() {
         }
     }
 
+    // 2a-bis. page compaction under slot churn: batch 8 sessions
+    // decode to near max_seq, finish, and their slots are reused by
+    // fresh short requests — the classic fragmentation shape (dead
+    // trailing pages held by rewound slots). One run compacts after
+    // every churn cycle, one never does; the JSON line carries both
+    // throughputs (the compaction passes are inside the timed window,
+    // so their cost is visible) and the pages the compacting run
+    // handed back. CI asserts this entry exists in BENCH_serve.json.
+    {
+        let page_tokens = 8usize;
+        let batch = 8usize;
+        let n_pages = batch * max_seq.div_ceil(page_tokens);
+        let churn_prompt: Vec<i32> = (0..4).map(|i| 3 + i).collect();
+        let churn_steps = max_seq - churn_prompt.len() - 1;
+        let cycles = 6usize;
+        let mut run = |compact: bool| -> (f64, u64, u64) {
+            let mut p = KvCachePool::with_slots_layout(
+                &dcfg,
+                fused_eng.attn_dim(),
+                batch,
+                max_seq,
+                KvPrecision::F32,
+                1.0,
+                batch as f64,
+                KvLayout::Paged,
+                page_tokens,
+                n_pages,
+            );
+            let ids: Vec<usize> =
+                (0..batch).map(|_| p.alloc().unwrap()).collect();
+            for &id in &ids {
+                p.ensure_capacity(id, churn_prompt.len()).unwrap();
+                fused_eng
+                    .prefill(&mut rt, p.slot_mut(id), &churn_prompt)
+                    .unwrap();
+            }
+            let pairs: Vec<(usize, bool)> =
+                ids.iter().map(|&id| (id, false)).collect();
+            let t0 = Instant::now();
+            for _ in 0..cycles {
+                for step in 0..churn_steps {
+                    let reqs: Vec<BatchReq> = ids
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &id)| BatchReq {
+                            slot: id,
+                            pos: churn_prompt.len() + step,
+                            token: ((7 + i * 13 + step) % 200) as i32,
+                        })
+                        .collect();
+                    fused_eng
+                        .step_batch(&mut p, &reqs, |_, logits| {
+                            std::hint::black_box(logits);
+                        })
+                        .unwrap();
+                }
+                // churn: every slot is handed to a fresh request that
+                // starts over at the prompt — the decoded tail pages
+                // are dead weight until a compaction pass frees them
+                for &id in &ids {
+                    p.slot_mut(id).rewind(churn_prompt.len());
+                }
+                if compact {
+                    p.compact(&pairs);
+                }
+            }
+            let tps = (cycles * churn_steps * batch) as f64
+                / t0.elapsed().as_secs_f64();
+            let st = p.paged_stats();
+            (tps, st.pages_reclaimed, st.compactions)
+        };
+        let (on, reclaimed, passes) = run(true);
+        let (off, off_reclaimed, _) = run(false);
+        assert!(reclaimed > 0, "churn workload reclaimed nothing");
+        assert_eq!(off_reclaimed, 0);
+        assert_eq!(passes, cycles as u64);
+        let ratio = on / off.max(1e-9);
+        println!(
+            "SERVE decode_paged_compact_b{batch} \
+             compact_tokens_per_sec={on:.0} \
+             off_tokens_per_sec={off:.0} compact_vs_off={ratio:.2}x \
+             pages_reclaimed={reclaimed} page_tokens={page_tokens}"
+        );
+        decode_entries.push(format!(
+            "{{\"name\":\"decode_paged_compact_b{batch}\",\
+             \"weights\":\"nf4\",\"kv_layout\":\"paged\",\
+             \"page_tokens\":{page_tokens},\
+             \"compact_tokens_per_sec\":{on:.1},\
+             \"off_tokens_per_sec\":{off:.1},\
+             \"compact_vs_off\":{ratio:.3},\
+             \"pages_reclaimed\":{reclaimed},\
+             \"compactions\":{passes},\
+             \"threads\":{}}}",
+            fused_eng.threads()
+        ));
+    }
+
     // 2b. phase-profiler overhead: the same fused engine config with
     // the sampled step timer on *every* decode step (the worst case —
     // serving defaults to every 4th) vs. profiling off. The

@@ -80,6 +80,12 @@ fn usage() -> ! {
                                         every prompt (synthetic system\n\
                                         prompt; exercises the prefix\n\
                                         cache, 0 = off)\n\
+           --compact off|starve|thresh=P  page compaction policy: run\n\
+                                        on admit-time page starvation,\n\
+                                        or whenever the fragmentation\n\
+                                        fraction reaches P; any mode\n\
+                                        also enables sub-page prefix\n\
+                                        matching (default off)\n\
            --threads N                  decode thread-pool lanes\n\
                                         (default: all cores; results\n\
                                         are identical at any count)\n\
@@ -233,6 +239,13 @@ fn serve_setup(cfg: &Config, ckpt_dir: &std::path::Path, size: &str,
         cfg.usize_or("page-tokens", sopts.page_tokens)?;
     sopts.shared_prefix =
         cfg.usize_or("shared-prefix", sopts.shared_prefix)?;
+    if let Some(v) = cfg.get("compact") {
+        sopts.compact =
+            qpruner::serve::kv_cache::CompactMode::parse(v)
+                .with_context(|| format!(
+                    "bad --compact {v:?} (expected off|starve|thresh=P)"
+                ))?;
+    }
     let kv_precision = match cfg.get("kv-bits") {
         None => KvPrecision::F32,
         Some(v) => {

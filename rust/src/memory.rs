@@ -170,6 +170,17 @@ pub fn kv_page_bytes(cfg: &ModelConfig, rate_pct: u32,
     kv_bytes_per_session_at(cfg, rate_pct, page_tokens, bytes_per_elem)
 }
 
+/// Deployment bytes of one KV *token* row: per layer, K and V of
+/// `[1, attn_dim]` at `bytes_per_elem` — [`kv_bytes_per_session_at`]
+/// with a one-token sequence. This is the unit the sub-page prefix
+/// cache saves in: a sub-page hit of `m` tokens avoids recomputing
+/// `m * kv_token_bytes` of prefill KV, and
+/// `KvCachePool::prefix_bytes_saved_modeled` must agree with it.
+pub fn kv_token_bytes(cfg: &ModelConfig, rate_pct: u32,
+                      bytes_per_elem: f64) -> f64 {
+    kv_bytes_per_session_at(cfg, rate_pct, 1, bytes_per_elem)
+}
+
 /// Page-granular KV bytes a session of `seq` tokens pins under the
 /// paged layout: whole pages (`ceil(seq / page_tokens)`), since a
 /// partially-filled tail page is still exclusively reserved. This is
@@ -450,6 +461,11 @@ mod tests {
         // precision scaling carries through unchanged
         let i8p = kv_page_bytes(&cfg, 20, 16, 1.0 + 4.0 / 64.0);
         assert!(per_page / i8p >= 3.5);
+        // the token unit composes both ways: page_tokens of them make
+        // a page, max_seq of them make a session slab
+        let tok = kv_token_bytes(&cfg, 20, 4.0);
+        assert!((16.0 * tok - per_page).abs() < 1e-6);
+        assert!((64.0 * tok - per_session).abs() < 1e-6);
     }
 
     #[test]

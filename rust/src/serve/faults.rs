@@ -33,9 +33,12 @@ pub enum FaultPoint {
     Stall,
     /// An artifact reload reads back corrupt (server rejects the swap).
     ReloadCorrupt,
+    /// A KV page migration fails mid-compaction (the affected
+    /// session is quarantined; the pass rolls its table back).
+    CompactMove,
 }
 
-pub const N_POINTS: usize = 6;
+pub const N_POINTS: usize = 7;
 
 impl FaultPoint {
     pub const ALL: [FaultPoint; N_POINTS] = [
@@ -45,6 +48,7 @@ impl FaultPoint {
         FaultPoint::ClientDrop,
         FaultPoint::Stall,
         FaultPoint::ReloadCorrupt,
+        FaultPoint::CompactMove,
     ];
 
     pub fn label(self) -> &'static str {
@@ -55,6 +59,7 @@ impl FaultPoint {
             FaultPoint::ClientDrop => "client_drop",
             FaultPoint::Stall => "stall",
             FaultPoint::ReloadCorrupt => "reload_corrupt",
+            FaultPoint::CompactMove => "compact_move",
         }
     }
 
@@ -66,6 +71,7 @@ impl FaultPoint {
             FaultPoint::ClientDrop => 3,
             FaultPoint::Stall => 4,
             FaultPoint::ReloadCorrupt => 5,
+            FaultPoint::CompactMove => 6,
         }
     }
 
@@ -251,6 +257,13 @@ mod tests {
         assert_eq!(p.stall(), Duration::from_millis(50));
         assert_eq!(p.prob(FaultPoint::ReloadCorrupt), 1.0);
         assert_eq!(p.prob(FaultPoint::PrefillErr), 0.0);
+        assert_eq!(p.prob(FaultPoint::CompactMove), 0.0);
+    }
+
+    #[test]
+    fn parses_compact_move() {
+        let p = FaultPlan::parse("seed=9,compact_move=0.25").unwrap();
+        assert_eq!(p.prob(FaultPoint::CompactMove), 0.25);
     }
 
     #[test]

@@ -132,6 +132,67 @@ impl KvLayout {
     }
 }
 
+/// When the paged pool compacts (`--compact {off,starve,thresh=P}`).
+/// Any enabled mode also turns on sub-page prefix matching — the two
+/// ship together because sub-page publishing is what makes short
+/// shared prompts (< `page_tokens`) reusable, and compaction is what
+/// keeps the extra index-owned pages from stranding.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompactMode {
+    /// never compact (the pre-compaction behavior, bit-for-bit)
+    Off,
+    /// compact only when an admission starves for pages
+    Starve,
+    /// compact whenever the fragmentation fraction
+    /// ([`KvCachePool::frag_frac`]) reaches the threshold
+    Thresh(f64),
+}
+
+impl CompactMode {
+    /// Parse the CLI `--compact` value: `off`, `starve`, `thresh=P`.
+    pub fn parse(s: &str) -> Option<CompactMode> {
+        match s {
+            "off" => Some(CompactMode::Off),
+            "starve" => Some(CompactMode::Starve),
+            _ => {
+                let p = s.strip_prefix("thresh=")?;
+                let p: f64 = p.parse().ok()?;
+                if p.is_finite() && (0.0..=1.0).contains(&p) {
+                    Some(CompactMode::Thresh(p))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    pub fn enabled(self) -> bool {
+        !matches!(self, CompactMode::Off)
+    }
+
+    pub fn label(self) -> String {
+        match self {
+            CompactMode::Off => "off".into(),
+            CompactMode::Starve => "starve".into(),
+            CompactMode::Thresh(p) => format!("thresh={p}"),
+        }
+    }
+}
+
+/// What one [`KvCachePool::compact`] pass did.
+#[derive(Clone, Debug, Default)]
+pub struct CompactReport {
+    /// pages returned to the free list by this pass
+    pub pages_reclaimed: usize,
+    /// partial shared tail pages whose live rows were migrated into a
+    /// fresh private page (the shared original is never written)
+    pub migrated: usize,
+    /// slot ids whose migration drew an injected `compact_move` fault:
+    /// the copy aborted before any table change, so their live pages
+    /// and token payloads are intact (callers quarantine them)
+    pub failed: Vec<usize>,
+}
+
 /// Backing storage for `rows` token positions across `n_layers`
 /// layers, laid out `[L, rows, A]` contiguously for both K and V.
 /// A slab slot is one store with `rows == max_seq`; a page is one
@@ -312,6 +373,51 @@ impl KvStore {
         }
     }
 
+    /// Byte-for-byte copy of rows `0..n` from `src` across every layer
+    /// (same `attn_dim` / `n_layers`; row counts may differ). Used by
+    /// sub-page prefix mapping and compaction migration: codes and
+    /// scales move verbatim — no requantization — so the copied rows
+    /// read back bit-identically to the source page.
+    fn copy_rows_from(&mut self, src: &KvStore, n: usize) {
+        assert!(n <= self.rows && n <= src.rows,
+                "row-range copy {n} exceeds page rows");
+        assert_eq!(self.attn_dim, src.attn_dim);
+        assert_eq!(self.n_layers, src.n_layers);
+        let a = self.attn_dim;
+        let nb = self.blocks_per_row;
+        for layer in 0..self.n_layers {
+            let d = (layer * self.rows) * a;
+            let s = (layer * src.rows) * a;
+            let ds = (layer * self.rows) * nb;
+            let ss = (layer * src.rows) * nb;
+            match (&mut self.data, &src.data) {
+                (KvData::F32 { k, v }, KvData::F32 { k: sk, v: sv }) => {
+                    k[d..d + n * a].copy_from_slice(&sk[s..s + n * a]);
+                    v[d..d + n * a].copy_from_slice(&sv[s..s + n * a]);
+                }
+                (
+                    KvData::Int8 { k_codes, v_codes, k_scales, v_scales },
+                    KvData::Int8 {
+                        k_codes: skc,
+                        v_codes: svc,
+                        k_scales: sks,
+                        v_scales: svs,
+                    },
+                ) => {
+                    k_codes[d..d + n * a]
+                        .copy_from_slice(&skc[s..s + n * a]);
+                    v_codes[d..d + n * a]
+                        .copy_from_slice(&svc[s..s + n * a]);
+                    k_scales[ds..ds + n * nb]
+                        .copy_from_slice(&sks[ss..ss + n * nb]);
+                    v_scales[ds..ds + n * nb]
+                        .copy_from_slice(&svs[ss..ss + n * nb]);
+                }
+                _ => panic!("KvStore::copy_rows_from across precisions"),
+            }
+        }
+    }
+
     /// Host bytes of this store's backing buffers.
     fn host_bytes(&self) -> usize {
         match &self.data {
@@ -430,6 +536,15 @@ impl KvSlot {
         self.len = len;
     }
 
+    /// Roll the cached length back (speculative rollback / fuzz
+    /// rewind). Pages beyond the new tail stay mapped — the cheap fast
+    /// path when the session re-extends — and become the dead-page
+    /// fragmentation that [`KvCachePool::compact`] reclaims.
+    pub fn rewind(&mut self, len: usize) {
+        assert!(len <= self.len, "rewind {len} past live len {}", self.len);
+        self.len = len;
+    }
+
     /// K row at (layer, t) as f32: a direct slice for F32 storage, a
     /// dequantization into `scratch` for Int8 (scratch must hold at
     /// least `attn_dim` values). The returned slice borrows whichever
@@ -539,6 +654,18 @@ pub struct PagedStats {
     pub page_faults: u64,
     /// prefix-index entries evicted under page pressure / cap
     pub prefix_evictions: u64,
+    /// admissions that mapped a verified token span *below* page
+    /// granularity (the longest common prefix inside the first
+    /// differing page, copied into a private page)
+    pub prefix_subpage_hits: u64,
+    /// prompt tokens whose prefill was skipped via sub-page spans
+    /// (disjoint from `prefix_tokens_reused`, which counts whole
+    /// mapped pages)
+    pub prefix_subpage_tokens: u64,
+    /// compaction passes run ([`KvCachePool::compact`])
+    pub compactions: u64,
+    /// pages compaction returned to the free list
+    pub pages_reclaimed: u64,
 }
 
 /// A published prefix: the page holding KV for `tokens`
@@ -569,6 +696,16 @@ struct PagedState {
     /// modeled deployment bytes of one page (paper arch at the pool's
     /// precision); feeds the bytes-saved line
     modeled_page_bytes: f64,
+    /// compaction trigger policy (scheduler reads it; the pool itself
+    /// only compacts when told to)
+    compact: CompactMode,
+    /// sub-page prefix matching/publishing enabled (on whenever
+    /// `compact` is, or forced via `set_subpage_prefix`)
+    subpage: bool,
+    /// `clock` at the end of the previous compaction pass — the stale
+    /// sweep's grace window: a single-referenced prefix entry is only
+    /// evicted if it was not used since the last pass
+    last_compact_clock: u64,
 }
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -872,6 +1009,9 @@ impl KvCachePool {
                         stats: PagedStats::default(),
                         clock: 0,
                         modeled_page_bytes,
+                        compact: CompactMode::Off,
+                        subpage: false,
+                        last_compact_clock: 0,
                     }),
                 )
             }
@@ -1014,6 +1154,7 @@ impl KvCachePool {
         paged.clock += 1;
         let clock = paged.clock;
         let mut cached = 0usize;
+        let mut sub_tokens = 0usize;
         if use_prefix && prompt.len() > 1 {
             // deepest published chain q*pt <= len-1: prefill must still
             // compute >= 1 token to produce the first logits
@@ -1038,6 +1179,64 @@ impl KvCachePool {
                 *pages = matched;
             }
             self.slots[id].len = cached;
+            // the chain is exhausted at a page boundary — with
+            // sub-page matching on, look for the longest verified
+            // token span *inside* the first differing page and copy
+            // it into a private page so prefill resumes mid-page.
+            // Any qualifying entry with the same span length holds
+            // bit-identical rows (entries are token-verified and the
+            // engine is deterministic), so the key tie-break only
+            // pins the iteration-order-independent choice.
+            if paged.subpage && cached + 1 < prompt.len() {
+                let cap = prompt.len() - 1 - cached;
+                let mut best: Option<(u64, usize)> = None;
+                for (k, e) in paged.prefix.iter() {
+                    if e.tokens.len() <= cached
+                        || e.tokens.len() > cached + pt
+                        || e.tokens[..cached] != prompt[..cached]
+                    {
+                        continue; // entry's page doesn't start at `cached`
+                    }
+                    let m = e.tokens[cached..]
+                        .iter()
+                        .zip(&prompt[cached..])
+                        .take_while(|(a, b)| a == b)
+                        .count()
+                        .min(cap);
+                    if m == 0 {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some((bk, bm)) => m > bm || (m == bm && *k < bk),
+                    };
+                    if better {
+                        best = Some((*k, m));
+                    }
+                }
+                if let Some((key, m)) = best {
+                    if let Some(mut fresh) = take_free_page(paged) {
+                        let e = paged
+                            .prefix
+                            .get_mut(&key)
+                            .expect("sub-page key vanished");
+                        e.last_used = clock;
+                        e.hits += 1;
+                        Arc::get_mut(&mut fresh)
+                            .expect("free page has one reference")
+                            .store
+                            .copy_rows_from(&e.page.store, m);
+                        if let KvBacking::Paged { pages, .. } =
+                            &mut self.slots[id].backing
+                        {
+                            pages.push(fresh);
+                        }
+                        cached += m;
+                        sub_tokens = m;
+                        self.slots[id].len = cached;
+                    }
+                }
+            }
         }
         // pages-available gate: the rest of the prompt must be
         // faultable (free now, or reclaimable from retired prefixes)
@@ -1061,9 +1260,16 @@ impl KvCachePool {
         if use_prefix {
             if cached > 0 {
                 paged.stats.prefix_hits += 1;
-                paged.stats.prefix_tokens_reused += cached as u64;
+                paged.stats.prefix_tokens_reused +=
+                    (cached - sub_tokens) as u64;
             } else {
                 paged.stats.prefix_misses += 1;
+            }
+            if sub_tokens > 0 {
+                // the private sub-span copy popped a page
+                paged.stats.page_faults += 1;
+                paged.stats.prefix_subpage_hits += 1;
+                paged.stats.prefix_subpage_tokens += sub_tokens as u64;
             }
         }
         paged.pages_peak = paged
@@ -1193,6 +1399,57 @@ impl KvCachePool {
                 },
             );
         }
+        // sub-page tail: with matching enabled, publish the partial
+        // last prompt page too, so prompts sharing a prefix shorter
+        // than one page (or diverging mid-page) can still resume. The
+        // live tail page itself cannot be shared — its owner keeps
+        // writing decode rows into it — so the span is copied into an
+        // index-owned page (skipped under page exhaustion; compaction
+        // reclaims these once they go stale).
+        let tail = prompt.len() - n_full * pt;
+        if paged.subpage && tail > 0 {
+            let h_tail = extend_hash(h, &prompt[n_full * pt..]);
+            if let Some(e) = paged.prefix.get_mut(&h_tail) {
+                if e.tokens[..] == prompt[..] {
+                    e.last_used = clock;
+                }
+                // hash collision with a different span: keep the
+                // incumbent (verification makes collisions harmless)
+                return;
+            }
+            if paged.prefix.len() >= PREFIX_INDEX_CAP {
+                let victim = paged
+                    .prefix
+                    .iter()
+                    .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+                    .min_by_key(|(k, e)| (e.last_used, **k))
+                    .map(|(k, _)| *k);
+                let Some(victim) = victim else { return };
+                let e = paged.prefix.remove(&victim).expect("victim");
+                paged.stats.prefix_evictions += 1;
+                retire(&mut paged.free, e.page);
+            }
+            let Some(mut fresh) = take_free_page(paged) else { return };
+            let KvBacking::Paged { pages, .. } = &slot.backing else {
+                unreachable!("paged pool with slab slot");
+            };
+            Arc::get_mut(&mut fresh)
+                .expect("free page has one reference")
+                .store
+                .copy_rows_from(&pages[n_full].store, tail);
+            paged.pages_peak = paged
+                .pages_peak
+                .max(paged.pages_total - paged.free.len());
+            paged.prefix.insert(
+                h_tail,
+                PrefixEntry {
+                    page: fresh,
+                    tokens: prompt.to_vec(),
+                    last_used: clock,
+                    hits: 0,
+                },
+            );
+        }
     }
 
     /// Drop every prefix-index entry, reclaiming pages only the index
@@ -1203,6 +1460,181 @@ impl KvCachePool {
         for (_, e) in paged.prefix.drain() {
             retire(&mut paged.free, e.page);
         }
+    }
+
+    /// Enable compaction (also flips sub-page prefix matching on when
+    /// the mode is enabled — see [`CompactMode`]). No-op on slab.
+    pub fn set_compact_mode(&mut self, mode: CompactMode) {
+        if let Some(p) = self.paged.as_mut() {
+            p.compact = mode;
+            if mode.enabled() {
+                p.subpage = true;
+            }
+        }
+    }
+
+    /// The pool's compaction trigger policy (the scheduler reads this;
+    /// the pool itself only compacts when [`KvCachePool::compact`] is
+    /// called). `Off` on slab.
+    pub fn compact_mode(&self) -> CompactMode {
+        self.paged.as_ref().map_or(CompactMode::Off, |p| p.compact)
+    }
+
+    /// Force sub-page prefix matching independently of the compaction
+    /// mode (tests and the fuzz harness).
+    pub fn set_subpage_prefix(&mut self, on: bool) {
+        if let Some(p) = self.paged.as_mut() {
+            p.subpage = on;
+        }
+    }
+
+    /// Stranded token slots: unused tail capacity of partially-filled
+    /// *private* tail pages (a shared tail still serves its other
+    /// holders, so its slack is not this slot's to reclaim).
+    /// Recomputed from scratch on every call — the fuzz suite holds
+    /// this to an independent recount after every event.
+    pub fn frag_slots(&self) -> usize {
+        let Some(paged) = self.paged.as_ref() else { return 0 };
+        let pt = paged.page_tokens;
+        self.slots
+            .iter()
+            .map(|s| match &s.backing {
+                KvBacking::Paged { pages, .. } => {
+                    if s.len == 0 || s.len % pt == 0 {
+                        return 0;
+                    }
+                    match pages.get(s.len / pt) {
+                        Some(p) if Arc::strong_count(p) == 1 => {
+                            pt - s.len % pt
+                        }
+                        _ => 0,
+                    }
+                }
+                KvBacking::Slab(_) => 0,
+            })
+            .sum()
+    }
+
+    /// Dead pages: page-table entries wholly beyond their slot's live
+    /// length (rewind leftovers) plus pages held only by the LRU
+    /// prefix index.
+    pub fn frag_pages(&self) -> usize {
+        let Some(paged) = self.paged.as_ref() else { return 0 };
+        let pt = paged.page_tokens;
+        let stale: usize = self
+            .slots
+            .iter()
+            .map(|s| match &s.backing {
+                KvBacking::Paged { pages, .. } => {
+                    pages.len().saturating_sub(s.len.div_ceil(pt))
+                }
+                KvBacking::Slab(_) => 0,
+            })
+            .sum();
+        stale + evictable_prefix_pages(paged)
+    }
+
+    /// Fragmentation fraction of the page pool in [0,1]: dead pages
+    /// plus stranded tail slack (in page units) over total pages —
+    /// the `--compact thresh=P` trigger signal.
+    pub fn frag_frac(&self) -> f64 {
+        let Some(paged) = self.paged.as_ref() else { return 0.0 };
+        if paged.pages_total == 0 {
+            return 0.0;
+        }
+        (self.frag_pages() as f64
+            + self.frag_slots() as f64 / paged.page_tokens as f64)
+            / paged.pages_total as f64
+    }
+
+    /// One compaction pass. For each `(slot id, inject_fault)` pair:
+    ///
+    /// 1. unmap page-table entries wholly beyond the live length
+    ///    (rewind leftovers) — sole references return to the free
+    ///    list immediately;
+    /// 2. if the partial tail page is shared, migrate its live rows
+    ///    into a fresh private page via a byte-exact copy — the
+    ///    shared original is **never written in place** — so its
+    ///    remaining holders (typically just the prefix index) become
+    ///    the only ones and the stale sweep below can reclaim it.
+    ///
+    /// Then sweep the prefix index: single-referenced entries not
+    /// used since the previous pass (one grace window, so a freshly
+    /// published prefix always survives at least one pass) are
+    /// evicted and their pages retired.
+    ///
+    /// A `true` beside a slot id injects a `compact_move` fault: that
+    /// slot's migration aborts *before* any table change, the id is
+    /// reported in [`CompactReport::failed`], and the pass moves on —
+    /// callers quarantine the session while every other slot compacts
+    /// normally. Token payloads are never altered (migration copies
+    /// bytes verbatim), so decode stays bit-identical to the slab
+    /// oracle across any interleaving of passes and steps.
+    pub fn compact(&mut self, ids: &[(usize, bool)]) -> CompactReport {
+        let mut report = CompactReport::default();
+        let Some(paged) = self.paged.as_mut() else { return report };
+        let free_before = paged.free.len();
+        let pt = paged.page_tokens;
+        for &(id, fail_move) in ids {
+            let slot = &mut self.slots[id];
+            let KvBacking::Paged { pages, .. } = &mut slot.backing
+            else {
+                continue;
+            };
+            // 1. dead tables beyond the live tail
+            let live_pages = slot.len.div_ceil(pt);
+            while pages.len() > live_pages {
+                let p = pages.pop().expect("len checked");
+                retire(&mut paged.free, p);
+            }
+            // 2. shared partial tail -> private dense page
+            let within = slot.len % pt;
+            if within == 0 || live_pages == 0 {
+                continue;
+            }
+            let tail = live_pages - 1;
+            if tail >= pages.len()
+                || Arc::strong_count(&pages[tail]) == 1
+            {
+                continue;
+            }
+            if fail_move {
+                report.failed.push(id);
+                continue;
+            }
+            let Some(mut fresh) = take_free_page(paged) else {
+                continue; // out of pages: migration can't help now
+            };
+            Arc::get_mut(&mut fresh)
+                .expect("free page has one reference")
+                .store
+                .copy_rows_from(&pages[tail].store, within);
+            let old = std::mem::replace(&mut pages[tail], fresh);
+            retire(&mut paged.free, old);
+            report.migrated += 1;
+        }
+        // stale prefix sweep: evictable entries idle for one full
+        // compaction window
+        let cutoff = paged.last_compact_clock;
+        let stale: Vec<u64> = paged
+            .prefix
+            .iter()
+            .filter(|(_, e)| {
+                Arc::strong_count(&e.page) == 1 && e.last_used <= cutoff
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        for k in stale {
+            let e = paged.prefix.remove(&k).expect("stale key");
+            paged.stats.prefix_evictions += 1;
+            retire(&mut paged.free, e.page);
+        }
+        paged.last_compact_clock = paged.clock;
+        report.pages_reclaimed =
+            paged.free.len().saturating_sub(free_before);
+        paged.stats.compactions += 1;
+        paged.stats.pages_reclaimed += report.pages_reclaimed as u64;
+        report
     }
 
     /// Return a slot to the free list. On the paged layout its page
@@ -1286,11 +1718,15 @@ impl KvCachePool {
         })
     }
 
-    /// Modeled deployment bytes saved by prefix reuse so far
-    /// (`prefix_tokens_reused` at the modeled per-token KV cost).
+    /// Modeled deployment bytes saved by prefix reuse so far — whole
+    /// mapped pages plus sub-page spans, at the modeled per-token KV
+    /// cost (`modeled_page_bytes / page_tokens`, which equals
+    /// `memory::kv_token_bytes` at the pool's precision).
     pub fn prefix_bytes_saved_modeled(&self) -> f64 {
         self.paged.as_ref().map_or(0.0, |p| {
-            p.stats.prefix_tokens_reused as f64 * p.modeled_page_bytes
+            (p.stats.prefix_tokens_reused
+                + p.stats.prefix_subpage_tokens) as f64
+                * p.modeled_page_bytes
                 / p.page_tokens as f64
         })
     }
@@ -1777,6 +2213,336 @@ mod tests {
             page / 1e9 * 0.5, 64, KvLayout::Paged, 16,
         )
         .is_err());
+    }
+
+    #[test]
+    fn compact_mode_parses_and_labels() {
+        assert_eq!(CompactMode::parse("off"), Some(CompactMode::Off));
+        assert_eq!(CompactMode::parse("starve"),
+                   Some(CompactMode::Starve));
+        assert_eq!(CompactMode::parse("thresh=0.25"),
+                   Some(CompactMode::Thresh(0.25)));
+        assert_eq!(CompactMode::parse("thresh=0"),
+                   Some(CompactMode::Thresh(0.0)));
+        assert_eq!(CompactMode::parse("thresh=1"),
+                   Some(CompactMode::Thresh(1.0)));
+        for bad in ["", "on", "thresh", "thresh=", "thresh=1.5",
+                    "thresh=-0.1", "thresh=NaN", "starve=1"] {
+            assert_eq!(CompactMode::parse(bad), None, "accepted {bad}");
+        }
+        assert!(!CompactMode::Off.enabled());
+        assert!(CompactMode::Starve.enabled());
+        assert!(CompactMode::Thresh(0.5).enabled());
+        assert_eq!(CompactMode::Off.label(), "off");
+        assert_eq!(CompactMode::Starve.label(), "starve");
+        assert_eq!(CompactMode::Thresh(0.25).label(), "thresh=0.25");
+        // enabling any mode flips sub-page matching on; slab ignores
+        let mut p = paged_pool(1, 4, KvPrecision::F32);
+        assert_eq!(p.compact_mode(), CompactMode::Off);
+        p.set_compact_mode(CompactMode::Starve);
+        assert_eq!(p.compact_mode(), CompactMode::Starve);
+        let slab = pool(1);
+        assert_eq!(slab.compact_mode(), CompactMode::Off);
+    }
+
+    /// Seed one session with `prompt` into `p`: admit, map, write
+    /// deterministic rows (k = t, v = -t), advance, publish. Returns
+    /// the slot id.
+    fn seed_session(p: &mut KvCachePool, prompt: &[i32]) -> usize {
+        let a = p.slot(0).attn_dim;
+        let info = p.admit(prompt, true).unwrap();
+        p.ensure_capacity(info.slot, prompt.len()).unwrap();
+        for t in info.cached_tokens..prompt.len() {
+            for l in 0..2 {
+                p.slot_mut(info.slot).write(
+                    l, t, &vec![t as f32; a], &vec![-(t as f32); a]);
+            }
+        }
+        p.slot_mut(info.slot).advance_to(prompt.len());
+        p.publish_prefix(info.slot, prompt);
+        info.slot
+    }
+
+    #[test]
+    fn subpage_match_resumes_mid_page_bit_identically() {
+        let mut p = paged_pool(3, 12, KvPrecision::F32);
+        p.set_subpage_prefix(true);
+        let a = p.slot(0).attn_dim;
+        // A: 6 tokens = 1 full page + a 2-token tail; publishing adds
+        // the full-page entry AND an index-owned copy of the tail span
+        let pa: Vec<i32> = (0..6).collect();
+        seed_session(&mut p, &pa);
+        assert_eq!(p.prefix_index_len(), 2, "full page + sub-page tail");
+        // B shares 6 tokens, diverges mid-page-1: full-page chain maps
+        // page 0 (4 tokens), the sub-page scan extends it to 6
+        let pb: Vec<i32> = vec![0, 1, 2, 3, 4, 5, 90, 91];
+        let ib = p.admit(&pb, true).unwrap();
+        assert_eq!(ib.cached_tokens, 6, "4 whole-page + 2 sub-page");
+        let st = p.paged_stats();
+        assert_eq!(st.prefix_hits, 1);
+        assert_eq!(st.prefix_tokens_reused, 4, "whole pages only");
+        assert_eq!(st.prefix_subpage_hits, 1);
+        assert_eq!(st.prefix_subpage_tokens, 2);
+        // the copied rows read back bit-identical to A's computation
+        for t in 4..6 {
+            assert_eq!(p.slot(ib.slot).k_at(0, t), &vec![t as f32; a][..]);
+            assert_eq!(p.slot(ib.slot).v_at(1, t),
+                       &vec![-(t as f32); a][..]);
+        }
+        // B's sub-span page is private: a write needs no CoW and can
+        // never reach the index-owned original
+        let cow_before = p.paged_stats().cow_copies;
+        p.ensure_capacity(ib.slot, 7).unwrap();
+        assert_eq!(p.paged_stats().cow_copies, cow_before);
+        for l in 0..2 {
+            p.slot_mut(ib.slot).write(l, 6, &vec![66.0; a],
+                                      &vec![66.0; a]);
+        }
+        p.slot_mut(ib.slot).advance_to(7);
+        // C shares only 2 tokens — below one page. The full-page chain
+        // finds nothing; the sub-page scan still maps the verified span
+        let pc: Vec<i32> = vec![0, 1, 77, 78];
+        let ic = p.admit(&pc, true).unwrap();
+        assert_eq!(ic.cached_tokens, 2, "sub-page reuse under one page");
+        assert_eq!(p.paged_stats().prefix_subpage_hits, 2);
+        assert_eq!(p.paged_stats().prefix_subpage_tokens, 4);
+        for t in 0..2 {
+            assert_eq!(p.slot(ic.slot).k_at(0, t), &vec![t as f32; a][..]);
+        }
+        // bytes-saved models whole-page + sub-page tokens uniformly
+        let st = p.paged_stats();
+        // modeled_bytes_per_session (1e6) spread over max_seq (16)
+        let per_tok = 1e6 / 16.0;
+        let want = (st.prefix_tokens_reused
+            + st.prefix_subpage_tokens) as f64 * per_tok;
+        assert!((p.prefix_bytes_saved_modeled() - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn subpage_matching_stays_off_by_default() {
+        let mut p = paged_pool(2, 12, KvPrecision::F32);
+        let pa: Vec<i32> = (0..6).collect();
+        seed_session(&mut p, &pa);
+        assert_eq!(p.prefix_index_len(), 1, "no tail entry published");
+        let pb: Vec<i32> = vec![0, 1, 2, 3, 4, 5, 90, 91];
+        let ib = p.admit(&pb, true).unwrap();
+        assert_eq!(ib.cached_tokens, 4, "whole pages only");
+        assert_eq!(p.paged_stats().prefix_subpage_hits, 0);
+    }
+
+    #[test]
+    fn frag_gauges_track_rewind_and_idle_index() {
+        let mut p = paged_pool(2, 8, KvPrecision::F32);
+        let a = p.slot(0).attn_dim;
+        let i = p.admit(&[1, 2, 3], true).unwrap();
+        p.ensure_capacity(i.slot, 11).unwrap(); // 3 pages
+        for t in 0..11 {
+            for l in 0..2 {
+                p.slot_mut(i.slot).write(l, t, &vec![t as f32; a],
+                                         &vec![t as f32; a]);
+            }
+        }
+        p.slot_mut(i.slot).advance_to(11);
+        // 11 live tokens: private partial tail strands 1 slot
+        assert_eq!(p.frag_slots(), 1);
+        assert_eq!(p.frag_pages(), 0);
+        // rewind to 2: pages 1 and 2 are dead, tail slack is 2
+        p.slot_mut(i.slot).rewind(2);
+        assert_eq!(p.slot(i.slot).pages_mapped(), 3, "rewind keeps maps");
+        assert_eq!(p.frag_slots(), 2);
+        assert_eq!(p.frag_pages(), 2);
+        let want = (2.0 + 2.0 / 4.0) / 8.0;
+        assert!((p.frag_frac() - want).abs() < 1e-12);
+        // a compaction pass reclaims exactly the dead pages
+        let rep = p.compact(&[(i.slot, false)]);
+        assert_eq!(rep.pages_reclaimed, 2);
+        assert_eq!(rep.migrated, 0, "private tail needs no migration");
+        assert!(rep.failed.is_empty());
+        assert_eq!(p.slot(i.slot).pages_mapped(), 1);
+        assert_eq!(p.frag_pages(), 0);
+        assert_eq!(p.paged_stats().compactions, 1);
+        assert_eq!(p.paged_stats().pages_reclaimed, 2);
+        // re-extension after compaction faults fresh pages and works
+        p.ensure_capacity(i.slot, 6).unwrap();
+        for t in 2..6 {
+            for l in 0..2 {
+                p.slot_mut(i.slot).write(l, t, &vec![9.0; a],
+                                         &vec![9.0; a]);
+            }
+        }
+        p.slot_mut(i.slot).advance_to(6);
+        // rows below the rewind point were never touched
+        assert_eq!(p.slot(i.slot).k_at(0, 1), &vec![1.0; a][..]);
+        // slab pools report zero everywhere
+        let slab = pool(1);
+        assert_eq!(slab.frag_slots(), 0);
+        assert_eq!(slab.frag_pages(), 0);
+        assert_eq!(slab.frag_frac(), 0.0);
+    }
+
+    #[test]
+    fn compact_migrates_shared_tail_and_fault_aborts_cleanly() {
+        let mut p = paged_pool(3, 12, KvPrecision::F32);
+        let a = p.slot(0).attn_dim;
+        // A computes 8 tokens (2 full pages, both published)
+        let pa: Vec<i32> = (0..8).collect();
+        let sa = seed_session(&mut p, &pa);
+        // B maps both shared pages and extends to 10
+        let pb: Vec<i32> = (0..10).collect();
+        let ib = p.admit(&pb, true).unwrap();
+        assert_eq!(ib.cached_tokens, 8);
+        p.ensure_capacity(ib.slot, 10).unwrap();
+        for t in 8..10 {
+            for l in 0..2 {
+                p.slot_mut(ib.slot).write(l, t, &vec![t as f32; a],
+                                          &vec![t as f32; a]);
+            }
+        }
+        p.slot_mut(ib.slot).advance_to(10);
+        // B rolls back mid-page-1: its partial tail is A's page too
+        p.slot_mut(ib.slot).rewind(6);
+        let before = p.slot_page_refs(ib.slot);
+        // injected fault: abort before any table change, report the id
+        let rep = p.compact(&[(ib.slot, true)]);
+        assert_eq!(rep.failed, vec![ib.slot]);
+        assert_eq!(rep.migrated, 0);
+        assert_eq!(p.slot_page_refs(ib.slot)[..2], before[..2],
+                   "failed migration must not touch live pages");
+        // clean pass: page 2 (dead) reclaimed, shared tail migrated
+        let rep = p.compact(&[(ib.slot, false)]);
+        assert_eq!(rep.migrated, 1);
+        assert!(rep.failed.is_empty());
+        assert_eq!(p.slot(ib.slot).pages_mapped(), 2);
+        // B's tail is now private; A's copy was never written
+        let refs = p.slot_page_refs(ib.slot);
+        assert_eq!(refs[1].1, 1, "migrated tail page is private");
+        assert_ne!(refs[1].0, p.slot_page_refs(sa)[1].0);
+        for t in 4..6 {
+            assert_eq!(p.slot(ib.slot).k_at(0, t),
+                       &vec![t as f32; a][..], "migration is byte-exact");
+            assert_eq!(p.slot(sa).k_at(0, t), &vec![t as f32; a][..]);
+        }
+        // B can diverge in place now — no CoW needed, A unaffected
+        p.ensure_capacity(ib.slot, 7).unwrap();
+        for l in 0..2 {
+            p.slot_mut(ib.slot).write(l, 6, &vec![55.0; a],
+                                      &vec![55.0; a]);
+        }
+        assert_eq!(p.slot(sa).k_at(0, 6), &vec![6.0; a][..]);
+    }
+
+    #[test]
+    fn compact_stale_sweep_has_one_grace_window() {
+        let mut p = paged_pool(2, 8, KvPrecision::F32);
+        let pa: Vec<i32> = (0..8).collect();
+        let sa = seed_session(&mut p, &pa);
+        p.release(sa);
+        assert_eq!(p.prefix_index_len(), 2);
+        // first pass: freshly published entries survive (grace window)
+        let rep = p.compact(&[]);
+        assert_eq!(rep.pages_reclaimed, 0);
+        assert_eq!(p.prefix_index_len(), 2);
+        // untouched since: second pass sweeps them and frees the pages
+        let rep = p.compact(&[]);
+        assert_eq!(rep.pages_reclaimed, 2);
+        assert_eq!(p.prefix_index_len(), 0);
+        assert_eq!(p.pages_free(), p.pages_total());
+        // a re-hit entry keeps resetting its window
+        let sb = seed_session(&mut p, &pa);
+        p.release(sb);
+        p.compact(&[]); // grace
+        // a longer prompt walks the whole chain: both entries re-hit
+        let pa10: Vec<i32> = (0..10).collect();
+        let ic = p.admit(&pa10, true).unwrap();
+        assert_eq!(ic.cached_tokens, 8);
+        p.release(ic.slot);
+        let rep = p.compact(&[]);
+        assert_eq!(rep.pages_reclaimed, 0, "recently-used entries stay");
+        assert_eq!(p.prefix_index_len(), 2);
+    }
+
+    /// The churn acceptance criterion: an admit/finish mix with
+    /// rewinds and sub-page shared prefixes, run twice at the same
+    /// page budget. With compaction the pool reclaims >= 20% of its
+    /// pages; with `--compact off` nothing is reclaimed; sub-page
+    /// sharing (prefix shorter than one page) fires either way.
+    fn churn(compact_on: bool) -> KvCachePool {
+        let mut p = paged_pool(2, 16, KvPrecision::F32);
+        p.set_subpage_prefix(true);
+        if compact_on {
+            p.set_compact_mode(CompactMode::Starve);
+        }
+        let a = p.slot(0).attn_dim;
+        for round in 0..6i32 {
+            let base = round * 1000;
+            let mut live: Vec<usize> = Vec::new();
+            for s in 0..2i32 {
+                // 3 shared tokens (below one page), divergent after
+                let mut prompt = vec![base, base + 1, base + 2];
+                prompt.extend((0..3).map(|j| base + 10 + 20 * s + j));
+                let Some(info) = p.admit(&prompt, true) else {
+                    continue;
+                };
+                p.ensure_capacity(info.slot, prompt.len()).unwrap();
+                for t in info.cached_tokens..prompt.len() {
+                    for l in 0..2 {
+                        p.slot_mut(info.slot).write(
+                            l, t, &vec![t as f32; a],
+                            &vec![-(t as f32); a]);
+                    }
+                }
+                p.slot_mut(info.slot).advance_to(prompt.len());
+                p.publish_prefix(info.slot, &prompt);
+                // decode extends to a full 16 tokens...
+                p.ensure_capacity(info.slot, 16).unwrap();
+                for t in prompt.len()..16 {
+                    for l in 0..2 {
+                        p.slot_mut(info.slot).write(
+                            l, t, &vec![t as f32; a],
+                            &vec![-(t as f32); a]);
+                    }
+                }
+                p.slot_mut(info.slot).advance_to(16);
+                // ...then a speculative rollback strands the tail
+                p.slot_mut(info.slot).rewind(2);
+                live.push(info.slot);
+            }
+            if compact_on {
+                let ids: Vec<(usize, bool)> =
+                    live.iter().map(|&s| (s, false)).collect();
+                p.compact(&ids);
+            }
+            for s in live {
+                p.release(s);
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn churn_compaction_reclaims_20pct_of_pages() {
+        let on = churn(true);
+        let off = churn(false);
+        let total = on.pages_total() as u64;
+        assert_eq!(off.pages_total() as u64, total, "equal budget");
+        let reclaimed = on.paged_stats().pages_reclaimed;
+        assert!(
+            reclaimed * 5 >= total,
+            "compaction reclaimed {reclaimed} of {total} pages (< 20%)"
+        );
+        assert_eq!(off.paged_stats().pages_reclaimed, 0);
+        assert_eq!(off.paged_stats().compactions, 0);
+        // sub-page prefixes (3 shared tokens < page_tokens 4) fired
+        assert!(on.paged_stats().prefix_subpage_hits > 0);
+        assert!(on.paged_stats().prefix_subpage_tokens > 0);
+        // and the compacted pool ends the run less fragmented
+        assert!(on.frag_frac() <= off.frag_frac());
+        // both drain clean: full reclamation after the index clears
+        for mut p in [on, off] {
+            p.clear_prefix_index();
+            assert_eq!(p.pages_used(), 0);
+            assert_eq!(p.pages_free(), p.pages_total());
+        }
     }
 
     #[test]

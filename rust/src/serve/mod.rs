@@ -47,7 +47,7 @@ use admission::{AdmissionPolicy, BrownoutConfig};
 use anyhow::{bail, ensure, Context, Result};
 use engine::EngineBuilder;
 use faults::{FaultPlan, FaultPoint};
-use kv_cache::{KvCachePool, KvLayout};
+use kv_cache::{CompactMode, KvCachePool, KvLayout};
 use scheduler::Scheduler;
 use std::path::PathBuf;
 use std::time::Instant;
@@ -86,6 +86,9 @@ pub struct ServeOpts {
     /// synthetic "system prompt"; 0 disables) — the workload knob that
     /// exercises the paged layout's prefix cache
     pub shared_prefix: usize,
+    /// page compaction + sub-page prefix matching trigger
+    /// (`--compact {off,starve,thresh=P}`; paged layout only)
+    pub compact: CompactMode,
     /// sampled prompt length range [lo, hi]; with `shared_prefix` the
     /// effective prompt is `shared_prefix + sampled` tokens
     pub prompt_len: (usize, usize),
@@ -134,6 +137,7 @@ impl ServeOpts {
             kv_layout: KvLayout::Slab,
             page_tokens: 64,
             shared_prefix: 0,
+            compact: CompactMode::Off,
             prompt_len: (4, 10),
             max_new: (3, 12),
             temperature: 0.8,
@@ -194,6 +198,21 @@ pub struct ServeReport {
     pub prefix_idle_entries: usize,
     /// host bytes those idle entries pin
     pub prefix_idle_bytes: usize,
+    /// admissions that mapped a verified token span below page
+    /// granularity (sub-page prefix matching; 0 with `--compact off`)
+    pub prefix_subpage_hits: u64,
+    /// prompt tokens whose prefill was skipped via sub-page spans
+    pub prefix_subpage_tokens: u64,
+    /// compaction trigger policy label ("off" | "starve" | "thresh=P")
+    pub compact_mode: String,
+    /// compaction passes run / pages they returned to the free list
+    pub kv_compactions: u64,
+    pub kv_pages_reclaimed: u64,
+    /// end-of-run fragmentation gauges: stranded tail token slots in
+    /// partial private pages, and dead pages (rewind leftovers +
+    /// index-only holds)
+    pub kv_frag_slots: usize,
+    pub kv_frag_pages: usize,
     pub submitted: usize,
     pub completed: usize,
     pub rejected: usize,
@@ -360,6 +379,17 @@ impl ServeReport {
             push("prefix idle bytes pinned",
                  format!("{:.2} MB",
                          self.prefix_idle_bytes as f64 / 1e6));
+            push("compact mode", self.compact_mode.clone());
+            push("prefix subpage hits",
+                 format!("{}", self.prefix_subpage_hits));
+            push("prefix subpage tokens",
+                 format!("{}", self.prefix_subpage_tokens));
+            push("kv compactions", format!("{}", self.kv_compactions));
+            push("kv pages reclaimed",
+                 format!("{}", self.kv_pages_reclaimed));
+            push("kv frag (slots/pages)",
+                 format!("{}/{}", self.kv_frag_slots,
+                         self.kv_frag_pages));
         }
         push("kv modeled peak",
              format!("{:.3} GB", self.kv_modeled_peak_bytes / 1e9));
@@ -401,6 +431,10 @@ impl ServeReport {
              \"prefix_tokens_reused\":{},\"kv_cow_copies\":{},\
              \"kv_prefix_bytes_saved\":{:.0},\
              \"prefix_idle_entries\":{},\"prefix_idle_bytes\":{},\
+             \"prefix_subpage_hits\":{},\"prefix_subpage_tokens\":{},\
+             \"compact_mode\":{},\"kv_compactions\":{},\
+             \"kv_pages_reclaimed\":{},\"kv_frag_slots\":{},\
+             \"kv_frag_pages\":{},\
              \"requests_submitted\":{},\
              \"requests_completed\":{},\"requests_rejected\":{},\
              \"tokens_per_sec\":{:.3},\"p50_ms\":{},\
@@ -434,6 +468,13 @@ impl ServeReport {
             self.kv_prefix_bytes_saved,
             self.prefix_idle_entries,
             self.prefix_idle_bytes,
+            self.prefix_subpage_hits,
+            self.prefix_subpage_tokens,
+            json_str(&self.compact_mode),
+            self.kv_compactions,
+            self.kv_pages_reclaimed,
+            self.kv_frag_slots,
+            self.kv_frag_pages,
             self.submitted,
             self.completed,
             self.rejected,
@@ -638,7 +679,7 @@ pub fn build_stack(rt: &mut Runtime, builder: EngineBuilder,
     } else {
         0
     };
-    let pool = KvCachePool::for_budget_layout(
+    let mut pool = KvCachePool::for_budget_layout(
         &host_cfg,
         engine.attn_dim(),
         &arch,
@@ -650,6 +691,9 @@ pub fn build_stack(rt: &mut Runtime, builder: EngineBuilder,
         opts.kv_layout,
         opts.page_tokens,
     )?;
+    // page compaction + sub-page prefix matching (`--compact`): a
+    // no-op knob on the slab layout
+    pool.set_compact_mode(opts.compact);
     // the paged pool may hold fewer total page-tokens than max_seq;
     // shed sessions that could never be faulted in at the door
     let admission = AdmissionPolicy::with_token_capacity(
@@ -708,6 +752,16 @@ pub fn metrics_registry(sched: &Scheduler, scratch_grows: u64,
     reg.counter_add("serve.prefix_tokens_reused",
                     pstats.prefix_tokens_reused);
     reg.counter_add("serve.kv_cow_copies", pstats.cow_copies);
+    // sub-page prefix matching + compaction (all zero with
+    // `--compact off` / on slab)
+    reg.counter_add("kv.prefix_subpage_hits",
+                    pstats.prefix_subpage_hits);
+    reg.counter_add("kv.prefix_subpage_tokens",
+                    pstats.prefix_subpage_tokens);
+    reg.counter_add("kv.compactions", pstats.compactions);
+    reg.counter_add("kv.pages_reclaimed", pstats.pages_reclaimed);
+    reg.gauge_set("kv.frag_slots", sched.pool.frag_slots() as f64);
+    reg.gauge_set("kv.frag_pages", sched.pool.frag_pages() as f64);
     reg.gauge_set("serve.kv_pages_total",
                   sched.pool.pages_total() as f64);
     reg.gauge_set("serve.kv_pages_peak",
@@ -957,6 +1011,13 @@ pub fn run_workload(rt: &mut Runtime, builder: EngineBuilder,
         kv_prefix_bytes_saved: sched.pool.prefix_bytes_saved_modeled(),
         prefix_idle_entries: sched.pool.prefix_idle_entries(),
         prefix_idle_bytes: sched.pool.prefix_idle_bytes(),
+        prefix_subpage_hits: pstats.prefix_subpage_hits,
+        prefix_subpage_tokens: pstats.prefix_subpage_tokens,
+        compact_mode: opts.compact.label(),
+        kv_compactions: pstats.compactions,
+        kv_pages_reclaimed: pstats.pages_reclaimed,
+        kv_frag_slots: sched.pool.frag_slots(),
+        kv_frag_pages: sched.pool.frag_pages(),
         submitted: st.submitted,
         completed: st.completed,
         rejected: st.rejected,
@@ -1049,6 +1110,13 @@ mod tests {
             kv_prefix_bytes_saved: 3.2e7,
             prefix_idle_entries: 3,
             prefix_idle_bytes: 1_500_000,
+            prefix_subpage_hits: 2,
+            prefix_subpage_tokens: 5,
+            compact_mode: "thresh=0.25".into(),
+            kv_compactions: 4,
+            kv_pages_reclaimed: 6,
+            kv_frag_slots: 7,
+            kv_frag_pages: 1,
             submitted: 10,
             completed: 8,
             rejected: 2,
@@ -1110,6 +1178,19 @@ mod tests {
         assert!(j.contains("\"prefix_idle_entries\":3"));
         assert!(j.contains("\"prefix_idle_bytes\":1500000"));
         assert!(md.contains("prefix idle entries"));
+        // compaction + sub-page prefix accounting
+        assert!(j.contains("\"prefix_subpage_hits\":2"));
+        assert!(j.contains("\"prefix_subpage_tokens\":5"));
+        assert!(j.contains("\"compact_mode\":\"thresh=0.25\""));
+        assert!(j.contains("\"kv_compactions\":4"));
+        assert!(j.contains("\"kv_pages_reclaimed\":6"));
+        assert!(j.contains("\"kv_frag_slots\":7"));
+        assert!(j.contains("\"kv_frag_pages\":1"));
+        assert!(md.contains("compact mode"));
+        assert!(md.contains("thresh=0.25"));
+        assert!(md.contains("kv compactions"));
+        assert!(md.contains("kv pages reclaimed"));
+        assert!(md.contains("7/1"));
         assert!(j.contains("\"kv_pages_peak\":20"));
         assert!(j.contains("\"weight_residency\":\"quantized\""));
         assert!(j.contains("\"weight_resident_bytes\":2500000"));
@@ -1168,6 +1249,13 @@ mod tests {
             kv_prefix_bytes_saved: 0.0,
             prefix_idle_entries: 0,
             prefix_idle_bytes: 0,
+            prefix_subpage_hits: 0,
+            prefix_subpage_tokens: 0,
+            compact_mode: "off".into(),
+            kv_compactions: 0,
+            kv_pages_reclaimed: 0,
+            kv_frag_slots: 0,
+            kv_frag_pages: 0,
             submitted: 3,
             completed: 0,
             rejected: 3,

@@ -25,7 +25,7 @@ use crate::serve::admission::{AdmissionPolicy, Brownout, BrownoutConfig,
                               Decision, RejectReason};
 use crate::serve::engine::{sample_token, BatchReq, Engine};
 use crate::serve::faults::{FaultPlan, FaultPoint};
-use crate::serve::kv_cache::KvCachePool;
+use crate::serve::kv_cache::{CompactMode, CompactReport, KvCachePool};
 use crate::serve::session::{SessionState, SessionTable};
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
@@ -316,12 +316,25 @@ impl Scheduler {
             self.sweep_deadlines();
         }
 
+        // 0c. threshold-triggered compaction: when fragmentation (dead
+        // pages + stranded tail slack) crosses the configured
+        // fraction, migrate and sweep before admitting. Compaction
+        // moves bytes verbatim and never touches live token payloads,
+        // so interleaving it with decode steps keeps logits
+        // bit-identical to the slab oracle.
+        if let CompactMode::Thresh(p) = self.pool.compact_mode() {
+            if self.pool.frag_frac() >= p {
+                self.run_compaction();
+            }
+        }
+
         // 1. admit: fill free slots, up to the batch cap. On the
         // paged layout `KvCachePool::admit` also maps published prefix
         // pages into the new session's table (prefill resumes past the
         // shared span) and gates on page availability, so a session is
         // only admitted when its whole prompt can be faulted in.
         let native = engine.is_native();
+        let mut compacted_on_starve = false;
         while self.active.len() < self.max_batch {
             let Some(&front) = self.queue.front() else { break };
             let (prompt, temperature) = {
@@ -330,7 +343,19 @@ impl Scheduler {
             };
             // prefix reuse requires a backend that actually writes the
             // native KV cache; the artifact backend re-forwards
-            let Some(info) = self.pool.admit(&prompt, native) else {
+            let mut admitted = self.pool.admit(&prompt, native);
+            if admitted.is_none()
+                && self.pool.compact_mode().enabled()
+                && !compacted_on_starve
+                && self.pool.in_use() < self.pool.capacity()
+            {
+                // admit-time page starvation: one compaction pass may
+                // free dead pages — retry once per step
+                compacted_on_starve = true;
+                self.run_compaction();
+                admitted = self.pool.admit(&prompt, native);
+            }
+            let Some(info) = admitted else {
                 break;
             };
             let slot = info.slot;
@@ -610,6 +635,40 @@ impl Scheduler {
             );
         }
         Ok(())
+    }
+
+    /// One compaction pass over every resident session (active and
+    /// stalled), with a per-session `compact_move` fault draw.
+    /// A session whose migration drew an injected failure is
+    /// quarantined — the pool left its page table untouched
+    /// (rollback), so its release through `terminate` reclaims
+    /// everything and no other session is disturbed.
+    pub fn run_compaction(&mut self) -> CompactReport {
+        if !self.pool.compact_mode().enabled() {
+            return CompactReport::default();
+        }
+        let mut ids: Vec<(u64, usize, bool)> = self
+            .active
+            .iter()
+            .chain(self.stalled.iter())
+            .filter_map(|&id| {
+                self.table.get(id).slot.map(|s| (id, s, false))
+            })
+            .collect();
+        for e in ids.iter_mut() {
+            e.2 = self.fire_fault(FaultPoint::CompactMove);
+        }
+        let slot_ids: Vec<(usize, bool)> =
+            ids.iter().map(|&(_, s, f)| (s, f)).collect();
+        let report = self.pool.compact(&slot_ids);
+        for &(id, slot, _) in &ids {
+            if report.failed.contains(&slot) {
+                self.active.retain(|&x| x != id);
+                self.stalled.retain(|&x| x != id);
+                self.terminate(id, SpanOutcome::Quarantined);
+            }
+        }
+        report
     }
 
     /// Terminal exit for a session whose engine step failed: release

@@ -315,6 +315,11 @@ enum Cmd {
         path: PathBuf,
         resp: SyncSender<ReloadResult>,
     },
+    /// run one KV page-compaction pass; `Err` = compaction disabled
+    /// (`--compact off`), mapped to a 409 at the HTTP layer
+    Compact {
+        resp: SyncSender<Result<String, String>>,
+    },
 }
 
 /// End-of-life accounting for one server run. `clean()` gates the
@@ -643,6 +648,28 @@ impl Server {
                             }
                         });
                     }
+                    Cmd::Compact { resp } => {
+                        let msg = if !sched
+                            .pool
+                            .compact_mode()
+                            .enabled()
+                        {
+                            Err("compaction disabled (--compact off)"
+                                .to_string())
+                        } else {
+                            let rep = sched.run_compaction();
+                            Ok(format!(
+                                "{{\"compactions\":1,\
+                                 \"pages_reclaimed\":{},\
+                                 \"migrated\":{},\
+                                 \"quarantined\":{}}}",
+                                rep.pages_reclaimed,
+                                rep.migrated,
+                                rep.failed.len(),
+                            ))
+                        };
+                        let _ = resp.send(msg);
+                    }
                 }
             }
 
@@ -724,6 +751,12 @@ impl Server {
                 format!("writing event log to {}", path.display())
             })?;
         }
+        // prefix pages are pinned by design while serving; a drain
+        // must hand every page back before the leak check — and the
+        // clear has to land BEFORE the final snapshot so the
+        // `kv.prefix_idle_{entries,bytes}` gauges report the drained
+        // state instead of a stale pre-clear reading
+        sched.pool.clear_prefix_index();
         if let Some(path) = &opts.serve.metrics_out {
             let mut reg = serve::metrics_registry(
                 &sched,
@@ -744,9 +777,6 @@ impl Server {
                 },
             )?;
         }
-        // prefix pages are pinned by design while serving; a drain
-        // must hand every page back before the leak check
-        sched.pool.clear_prefix_index();
 
         Ok(DrainReport {
             submitted: sched.stats.submitted,
@@ -958,6 +988,21 @@ fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) {
         }
         Route::Generate => handle_generate(stream, &req, &ctx),
         Route::Reload => handle_reload(stream, &req, &ctx),
+        Route::Compact => {
+            match ask(&ctx, |resp| Cmd::Compact { resp }) {
+                Some(Ok(body)) => {
+                    let _ = http::write_json(&mut stream, 200, &[],
+                                             &body);
+                }
+                Some(Err(e)) => {
+                    let _ =
+                        http::write_error(&mut stream, 409, &[], &e);
+                }
+                None => {
+                    let _ = busy(&mut stream, ctx.retry_after());
+                }
+            }
+        }
         Route::NotFound => {
             let _ = http::write_error(
                 &mut stream,

@@ -27,6 +27,9 @@ pub enum Route {
     Healthz,
     /// `POST /admin/reload` — hot-swap the model artifact
     Reload,
+    /// `POST /admin/compact` — run one KV page-compaction pass now
+    /// (requires a `--compact` mode other than `off`)
+    Compact,
     NotFound,
 }
 
@@ -37,6 +40,7 @@ pub fn route(method: &str, path: &str) -> Route {
         ("GET", "/traces") => Route::Traces,
         ("GET", "/healthz") => Route::Healthz,
         ("POST", "/admin/reload") => Route::Reload,
+        ("POST", "/admin/compact") => Route::Compact,
         _ => Route::NotFound,
     }
 }
@@ -165,8 +169,10 @@ mod tests {
         assert_eq!(route("GET", "/traces"), Route::Traces);
         assert_eq!(route("GET", "/healthz"), Route::Healthz);
         assert_eq!(route("POST", "/admin/reload"), Route::Reload);
+        assert_eq!(route("POST", "/admin/compact"), Route::Compact);
         // wrong method or unknown path both 404
         assert_eq!(route("GET", "/v1/generate"), Route::NotFound);
+        assert_eq!(route("GET", "/admin/compact"), Route::NotFound);
         assert_eq!(route("POST", "/metrics"), Route::NotFound);
         assert_eq!(route("GET", "/nope"), Route::NotFound);
     }

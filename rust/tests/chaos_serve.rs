@@ -14,7 +14,9 @@ use qpruner::runtime::Runtime;
 use qpruner::serve::admission::{AdmissionPolicy, BrownoutConfig};
 use qpruner::serve::engine::{Engine, EngineBuilder};
 use qpruner::serve::faults::FaultPlan;
-use qpruner::serve::kv_cache::{KvCachePool, KvLayout, KvPrecision};
+use qpruner::serve::kv_cache::{
+    CompactMode, KvCachePool, KvLayout, KvPrecision,
+};
 use qpruner::serve::scheduler::Scheduler;
 use qpruner::serve::ServeOpts;
 use qpruner::server::{DrainReport, Server, ServerOpts};
@@ -50,13 +52,15 @@ fn plan_spec(seed: u64) -> String {
     const STARVE: [&str; 4] = ["0", "0.02", "0.05", "0.1"];
     const DROP: [&str; 3] = ["0", "0.03", "0.08"];
     const PREFILL: [&str; 3] = ["0", "0.05", "0.15"];
+    const COMPACT: [&str; 3] = ["0", "0.25", "1"];
     format!(
         "seed={seed},decode_err={},page_starve={},client_drop={},\
-         prefill_err={}",
+         prefill_err={},compact_move={}",
         DECODE[(seed % 5) as usize],
         STARVE[((seed / 5) % 4) as usize],
         DROP[((seed / 20) % 3) as usize],
         PREFILL[((seed / 60) % 3) as usize],
+        COMPACT[((seed / 7) % 3) as usize],
     )
 }
 
@@ -70,6 +74,8 @@ struct Totals {
     quarantined: usize,
     disconnects: usize,
     fired: u64,
+    compactions: u64,
+    pages_reclaimed: u64,
 }
 
 /// Run one fault schedule to drain and return its event trace. The
@@ -81,9 +87,12 @@ fn run_schedule(rt: &mut Runtime, engine: &Engine,
                 totals: &mut Totals) -> String {
     let paged = seed % 2 == 1;
     let pool = if paged {
-        // page_tokens 8 with prompts <= 6 tokens: no full prompt
-        // page ever publishes, so the prefix index pins nothing and
-        // 16 pages can never legitimately starve 3 slots
+        // page_tokens 8 with prompts <= 6 tokens: no *full* prompt
+        // page ever publishes. Compaction (below) flips sub-page
+        // matching on, so the index pins at most one copied sub-tail
+        // page per distinct prompt (5 here) — 3 slots * 3 pages + 5
+        // pinned = 14 <= 16, and pinned entries are evictable under
+        // pressure, so 16 pages can never legitimately starve 3 slots
         KvCachePool::with_slots_layout(
             cfg,
             engine.attn_dim(),
@@ -115,6 +124,18 @@ fn run_schedule(rt: &mut Runtime, engine: &Engine,
     );
     sched.set_tracer(Tracer::new(256));
     sched.set_faults(FaultPlan::parse(&plan_spec(seed)).unwrap());
+    if paged {
+        // threshold compaction + sub-page prefix matching run live
+        // under the fault schedules: a single pinned sub-tail page
+        // already puts frag_frac at 1/16 > 0.05, so the 0c trigger
+        // fires on most steps and every pass draws the per-session
+        // `compact_move` fault. Session tails here are always
+        // private (sub-tail publish copies into an index-owned
+        // page), so injected move failures can never hit — the sweep
+        // proves conservation with compaction interleaved, while the
+        // dedicated test below exercises the quarantine path
+        sched.pool.set_compact_mode(CompactMode::Thresh(0.05));
+    }
     // an already-expired deadline is wall-clock independent: every
     // admitted session deterministically exits with the deadline
     // reason at the next sweep
@@ -216,6 +237,9 @@ fn run_schedule(rt: &mut Runtime, engine: &Engine,
     totals.quarantined += st.quarantined;
     totals.disconnects += st.disconnects;
     totals.fired += sched.faults().unwrap().total_fired();
+    let kv = sched.pool.paged_stats();
+    totals.compactions += kv.compactions;
+    totals.pages_reclaimed += kv.pages_reclaimed;
 
     let tracer = sched.take_tracer().unwrap();
     assert_eq!(tracer.live_len(), 0,
@@ -246,6 +270,14 @@ fn two_hundred_fault_schedules_drain_clean_and_replay() {
     assert!(totals.quarantined > 0, "quarantine never exercised");
     assert!(totals.disconnects > 0, "drop injection never landed");
     assert!(totals.fired > 0, "fault plans never fired");
+    // compaction ran live inside the fault schedules (paged seeds
+    // enable Thresh(0.05)) and actually returned pages — the
+    // conservation asserts above therefore held *with* compaction
+    // interleaved between decode steps
+    assert!(totals.compactions > 0,
+            "threshold compaction never triggered in the sweep");
+    assert!(totals.pages_reclaimed > 0,
+            "compaction never reclaimed a page in the sweep");
 
     // identical seed + plan => identical event trace
     for &seed in &[0u64, 13, 77, 142, 199] {
@@ -259,6 +291,92 @@ fn two_hundred_fault_schedules_drain_clean_and_replay() {
     }
     // and different seeds genuinely diverge
     assert_ne!(traces[0], traces[1], "trace insensitive to seed");
+}
+
+/// An injected `compact_move` failure during a real migration
+/// quarantines exactly the session whose tail was being moved — the
+/// pool rolls the move back, the other residents keep decoding, and
+/// the drain still conserves every slot and page. Scheduler-driven
+/// sessions never naturally hold a *shared* partial tail (publishes
+/// share full pages; sub-page matches copy), so the migration is set
+/// up explicitly by rewinding a session into its published page.
+#[test]
+fn compact_move_fault_quarantines_only_the_affected_session() {
+    let (mut rt, engine, cfg) = fixture();
+    let pool = KvCachePool::with_slots_layout(
+        &cfg,
+        engine.attn_dim(),
+        3,
+        MAX_SEQ,
+        KvPrecision::F32,
+        1e6,
+        1e9,
+        KvLayout::Paged,
+        4,
+        16,
+    );
+    let mut sched = Scheduler::new(
+        pool,
+        AdmissionPolicy::new(8, MAX_SEQ),
+        3,
+        6,
+    );
+    // bare point = probability 1.0: every migration attempt fails.
+    // Starve mode keeps compaction enabled without the Thresh(..)
+    // step-loop trigger, so the only pass is the explicit one below
+    sched.set_faults(FaultPlan::parse("seed=1,compact_move").unwrap());
+    sched.pool.set_compact_mode(CompactMode::Starve);
+
+    let mut rng = Rng::new(9);
+    let a = sched
+        .submit(0, vec![3, 4, 5, 6, 7, 8], 6, 7, 0.5)
+        .unwrap();
+    sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+    let b = sched
+        .submit(1, vec![10, 11, 12, 13, 14], 4, 7, 0.5)
+        .unwrap();
+    let c = sched
+        .submit(2, vec![20, 21, 22, 23, 24], 4, 7, 0.5)
+        .unwrap();
+    sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+    assert_eq!(sched.active_len(), 3);
+
+    // rewind A into its published (shared) first page: len 2 leaves a
+    // partial tail on a page the prefix index also holds, which is
+    // exactly the shape compaction must migrate
+    let slot_a = sched.table.get(a).slot.expect("A holds a slot");
+    sched.pool.slot_mut(slot_a).rewind(2);
+
+    let rep = sched.run_compaction();
+    // the injected failure names A's slot and nothing else; A's dead
+    // trailing page was still reclaimed before the move was attempted
+    assert_eq!(rep.failed, vec![slot_a]);
+    assert_eq!(rep.migrated, 0, "B/C tails are private — no moves");
+    assert!(rep.pages_reclaimed >= 1, "A's dead page not reclaimed");
+
+    // containment: A quarantined, B and C untouched and still live
+    let sa = sched.table.get(a);
+    assert!(sa.is_terminal(), "failed migration must quarantine");
+    assert_eq!(sa.outcome.unwrap().label(), "quarantined");
+    assert!(!sched.table.get(b).is_terminal());
+    assert!(!sched.table.get(c).is_terminal());
+    assert_eq!(sched.stats.quarantined, 1);
+    assert_eq!(sched.active_len(), 2);
+    // one draw per resident session, all with probability 1.0
+    assert!(sched.faults().unwrap().total_fired() >= 3);
+
+    // B and C drain to completion; nothing leaked
+    let mut guard = 0;
+    while !sched.idle() {
+        sched.step(&engine, &mut rt, &mut Rng::new(0), 0.0).unwrap();
+        guard += 1;
+        assert!(guard < 2000, "quarantine schedule failed to drain");
+    }
+    assert_eq!(sched.stats.completed, 2);
+    assert_eq!(sched.stats.evicted, 1);
+    assert_eq!(sched.pool.in_use(), 0);
+    sched.pool.clear_prefix_index();
+    assert_eq!(sched.pool.pages_used(), 0, "pages leaked");
 }
 
 // ---- in-process serve-http chaos ---------------------------------

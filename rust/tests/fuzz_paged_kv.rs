@@ -1,8 +1,8 @@
 //! Seeded fuzz suite for the paged KV allocator: hundreds of random
-//! admit / write / decode-grow / release / index-clear events against
-//! a small page pool under real pressure (fewer pages than the slots
-//! could demand), with the allocator's conservation invariants checked
-//! after **every** event:
+//! admit / write / decode-grow / release / rewind / compact /
+//! index-clear events against a small page pool under real pressure
+//! (fewer pages than the slots could demand), with the allocator's
+//! conservation invariants checked after **every** event:
 //!
 //! 1. no page is mapped twice within one session's table;
 //! 2. every page's `Arc` strong count equals the number of page
@@ -11,7 +11,13 @@
 //! 3. free pages are disjoint from referenced pages, and
 //!    `free + distinct-referenced == pages_total` — pages are neither
 //!    leaked nor double-issued;
-//! 4. a session's cached length never exceeds its mapped pages.
+//! 4. a session's cached length never exceeds its mapped pages;
+//! 5. the fragmentation gauges (`frag_slots` / `frag_pages`) equal an
+//!    independent recount from the raw page-table observables;
+//! 6. every cached row reads back bit-identical to a per-position
+//!    oracle — an in-place write to a shared page, a botched tail
+//!    migration, or a mis-copied sub-page span is caught at the byte
+//!    level on the very next event.
 //!
 //! After the final drain (release every session, clear the prefix
 //! index) the pool must be fully reclaimed: zero used pages, empty
@@ -21,7 +27,14 @@
 //! prefixes so the prefix index gets hits, copy-on-write triggers on
 //! decode divergence, and page-pressure eviction fires (`KvSlot::write`
 //! panics if copy-on-write ever under-privatizes, so that failure mode
-//! is caught here too).
+//! is caught here too). Sub-page prefix matching is enabled for the
+//! whole run: truncated canonical prompts miss the page-granular
+//! chain and resume through the sub-page scan, and prompts with
+//! partial tails publish index-owned sub-page entries. Compaction
+//! passes (with occasional injected `compact_move` faults) interleave
+//! with decode: dead pages reclaim, shared tails migrate into private
+//! dense pages — never in place — and a faulted slot's table must
+//! come through untouched.
 
 use qpruner::model::ModelConfig;
 use qpruner::rng::Rng;
@@ -64,8 +77,65 @@ fn write_token(pool: &mut KvCachePool, n_layers: usize, id: usize,
     slot.advance_to(t + 1);
 }
 
+/// Per-position row payloads as the engine reads them back (exact
+/// for f32, the deterministic quantization round-trip for int8),
+/// captured once from a scratch pool. Every write at position `t`
+/// stores the same row, so any cached row must compare bit-equal to
+/// this oracle no matter how many CoW copies, sub-page span copies,
+/// or tail migrations it has been through.
+struct Expected {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+fn expected_rows(precision: KvPrecision, n_layers: usize) -> Expected {
+    let (_, mut pool) = paged_pool(precision);
+    let prompt: Vec<i32> = (0..MAX_SEQ as i32).collect();
+    let info = pool.admit(&prompt, true).expect("oracle admit");
+    pool.ensure_capacity(info.slot, MAX_SEQ).expect("oracle pages");
+    for t in 0..MAX_SEQ {
+        write_token(&mut pool, n_layers, info.slot, t);
+    }
+    let mut scratch = vec![0.0f32; ATTN_DIM];
+    let slot = pool.slot(info.slot);
+    let k = (0..MAX_SEQ)
+        .map(|t| slot.k_row(0, t, &mut scratch).to_vec())
+        .collect();
+    let v = (0..MAX_SEQ)
+        .map(|t| slot.v_row(0, t, &mut scratch).to_vec())
+        .collect();
+    Expected { k, v }
+}
+
+/// Independent recount of the fragmentation gauges from the raw
+/// page-table observables: stranded slack in private partial tails,
+/// plus dead table entries past the live length, plus pages held only
+/// by the prefix index.
+fn recount_frag(pool: &KvCachePool, live: &[Live]) -> (usize, usize) {
+    let mut slots = 0usize;
+    let mut pages = 0usize;
+    for s in live {
+        let refs = pool.slot_page_refs(s.id);
+        pages += refs.len().saturating_sub(s.len.div_ceil(PAGE_TOKENS));
+        if s.len % PAGE_TOKENS != 0 {
+            if let Some(&(_, strong)) = refs.get(s.len / PAGE_TOKENS) {
+                if strong == 1 {
+                    slots += PAGE_TOKENS - s.len % PAGE_TOKENS;
+                }
+            }
+        }
+    }
+    pages += pool
+        .prefix_page_refs()
+        .iter()
+        .filter(|&&(_, strong)| strong == 1)
+        .count();
+    (slots, pages)
+}
+
 /// The allocator conservation invariants, checked after every event.
-fn check_invariants(pool: &KvCachePool, live: &[Live], ctx: &str) {
+fn check_invariants(pool: &KvCachePool, live: &[Live], exp: &Expected,
+                    n_layers: usize, ctx: &str) {
     // how many holders reference each page id right now
     let mut held: HashMap<u32, usize> = HashMap::new();
     // (page id, strong count) observations to verify against `held`
@@ -124,6 +194,29 @@ fn check_invariants(pool: &KvCachePool, live: &[Live], ctx: &str) {
                pool.pages_total(), "{ctx}: free/used accounting");
     assert_eq!(pool.pages_used(), held.len(),
                "{ctx}: pages_used() disagrees with the tables");
+    // 5. the fragmentation gauges match an independent recount
+    let (fs, fp) = recount_frag(pool, live);
+    assert_eq!(pool.frag_slots(), fs,
+               "{ctx}: frag_slots gauge drifted from recount");
+    assert_eq!(pool.frag_pages(), fp,
+               "{ctx}: frag_pages gauge drifted from recount");
+    // 6. every cached row is byte-identical to the position oracle
+    let mut scratch = vec![0.0f32; ATTN_DIM];
+    for s in live {
+        let slot = pool.slot(s.id);
+        for layer in 0..n_layers {
+            for t in 0..s.len {
+                assert_eq!(slot.k_row(layer, t, &mut scratch),
+                           &exp.k[t][..],
+                           "{ctx}: slot {} K row {t} layer {layer} \
+                            corrupted", s.id);
+                assert_eq!(slot.v_row(layer, t, &mut scratch),
+                           &exp.v[t][..],
+                           "{ctx}: slot {} V row {t} layer {layer} \
+                            corrupted", s.id);
+            }
+        }
+    }
 }
 
 /// Canonical shared prefixes (2 full pages each) the workload reuses,
@@ -132,9 +225,15 @@ fn check_invariants(pool: &KvCachePool, live: &[Live], ctx: &str) {
 fn make_prompt(rng: &mut Rng) -> Vec<i32> {
     let shared = rng.below(4) as i32;
     let mut prompt: Vec<i32> = if shared < 3 {
-        (0..2 * PAGE_TOKENS as i32)
-            .map(|j| 100 * shared + j)
-            .collect()
+        // 1-in-3 canonical admissions truncate below the full two
+        // pages: the page-granular chain misses, so only the
+        // sub-page scan can map the common span
+        let keep = if rng.below(3) == 0 {
+            1 + rng.below(2 * PAGE_TOKENS - 1)
+        } else {
+            2 * PAGE_TOKENS
+        };
+        (0..keep as i32).map(|j| 100 * shared + j).collect()
     } else {
         // unshared prompt, random length >= 1
         (0..1 + rng.below(4)).map(|j| 7_000 + j as i32).collect()
@@ -148,14 +247,49 @@ fn make_prompt(rng: &mut Rng) -> Vec<i32> {
 fn run_fuzz(precision: KvPrecision, seed: u64) {
     let (cfg, mut pool) = paged_pool(precision);
     let n_layers = cfg.n_layers;
+    let exp = expected_rows(precision, n_layers);
+    pool.set_subpage_prefix(true);
     let mut rng = Rng::new(seed);
     let mut live: Vec<Live> = Vec::new();
     let mut admitted = 0usize;
     let mut grew = 0usize;
 
+    // Deterministic warm-up before the random schedule: prove the
+    // sub-page scan and the compaction grace window end-to-end, so
+    // the end-of-run stats assertions can't be starved by an unlucky
+    // event mix. Publish two full canonical pages, then admit a
+    // 4-token prompt sharing only 3 tokens — below one page, so only
+    // the sub-page scan can resume it.
+    let full: Vec<i32> = (0..2 * PAGE_TOKENS as i32).collect();
+    let a = pool.admit(&full, true).expect("warm-up admit");
+    pool.ensure_capacity(a.slot, full.len()).expect("warm-up pages");
+    for t in 0..full.len() {
+        write_token(&mut pool, n_layers, a.slot, t);
+    }
+    pool.publish_prefix(a.slot, &full);
+    let part: Vec<i32> = vec![0, 1, 2, 9_999];
+    let b = pool.admit(&part, true).expect("warm-up sub admit");
+    assert_eq!(b.cached_tokens, 3,
+               "sub-page scan must map the 3-token span inside the \
+                first differing page");
+    pool.ensure_capacity(b.slot, part.len()).expect("warm-up sub page");
+    for t in b.cached_tokens..part.len() {
+        write_token(&mut pool, n_layers, b.slot, t);
+    }
+    pool.release(a.slot);
+    pool.release(b.slot);
+    // grace window: the first pass only arms the sweep, the second
+    // reclaims the now-idle published pages
+    assert_eq!(pool.compact(&[]).pages_reclaimed, 0,
+               "freshly published entries must survive one pass");
+    let swept = pool.compact(&[]).pages_reclaimed;
+    assert!(swept >= 2, "stale sweep reclaimed only {swept} pages");
+    let mut compact_passes = 2u64;
+    check_invariants(&pool, &live, &exp, n_layers, "warm-up");
+
     for ev in 0..EVENTS {
         let ctx = format!("{precision:?} seed {seed} event {ev}");
-        match rng.below(10) {
+        match rng.below(13) {
             // admit a session, prefill-write its non-cached span,
             // publish its prompt pages
             0..=3 => {
@@ -164,8 +298,10 @@ fn run_fuzz(precision: KvPrecision, seed: u64) {
                     assert!(info.cached_tokens < prompt.len(),
                             "{ctx}: reuse must leave >= 1 token to \
                              compute");
-                    assert_eq!(info.cached_tokens % PAGE_TOKENS, 0,
-                               "{ctx}: reuse is page-granular");
+                    // with sub-page matching on, reuse is
+                    // token-granular: a non-multiple of PAGE_TOKENS
+                    // means the sub-page scan mapped a span inside
+                    // the first differing page
                     // the admit gate promised the prompt is mappable
                     pool.ensure_capacity(info.slot, prompt.len())
                         .unwrap_or_else(|e| panic!(
@@ -215,7 +351,9 @@ fn run_fuzz(precision: KvPrecision, seed: u64) {
                 if !live.is_empty() {
                     let i = rng.below(live.len());
                     let (id, len) = (live[i].id, live[i].len);
-                    let cut = rng.below(len);
+                    // a rewind event may have left len == 0; the
+                    // rewrite then degenerates to a harmless no-op
+                    let cut = if len > 0 { rng.below(len) } else { 0 };
                     pool.slot_mut(id).advance_to(cut);
                     if pool.ensure_capacity(id, len).is_ok() {
                         for t in cut..len {
@@ -229,29 +367,117 @@ fn run_fuzz(precision: KvPrecision, seed: u64) {
                 }
             }
             // rare: drop the whole prefix index mid-run
-            _ => {
+            9 => {
                 if rng.below(8) == 0 {
                     pool.clear_prefix_index();
                 }
             }
+            // compact every live session, occasionally injecting a
+            // `compact_move` fault. Direct checks on top of the
+            // global invariants: only the partial tail page may be
+            // replaced (shared pages are never migrated in place —
+            // a migrated tail is a fresh private page), slots can
+            // only fail with an injected fault, and a faulted
+            // slot's live pages come through untouched
+            10..=11 => {
+                let before: Vec<(usize, usize, Vec<u32>)> = live
+                    .iter()
+                    .map(|s| (s.id, s.len,
+                              pool.slot_page_refs(s.id)
+                                  .into_iter()
+                                  .map(|(pid, _)| pid)
+                                  .collect()))
+                    .collect();
+                let ids: Vec<(usize, bool)> = live
+                    .iter()
+                    .map(|s| (s.id, rng.below(8) == 0))
+                    .collect();
+                let injected: HashSet<usize> = ids
+                    .iter()
+                    .filter(|&&(_, f)| f)
+                    .map(|&(id, _)| id)
+                    .collect();
+                let rep = pool.compact(&ids);
+                compact_passes += 1;
+                for id in &rep.failed {
+                    assert!(injected.contains(id),
+                            "{ctx}: slot {id} failed without an \
+                             injected fault");
+                }
+                for (id, len, old) in before {
+                    let now = pool.slot_page_refs(id);
+                    assert_eq!(now.len(),
+                               len.div_ceil(PAGE_TOKENS),
+                               "{ctx}: slot {id} not compacted to \
+                                its live pages");
+                    let tail = if len % PAGE_TOKENS != 0 {
+                        Some(len / PAGE_TOKENS)
+                    } else {
+                        None
+                    };
+                    for (i, &(pid, strong)) in now.iter().enumerate()
+                    {
+                        if Some(i) == tail {
+                            if pid != old[i] {
+                                assert_eq!(
+                                    strong, 1,
+                                    "{ctx}: slot {id} migrated tail \
+                                     page is shared"
+                                );
+                                assert!(
+                                    !rep.failed.contains(&id),
+                                    "{ctx}: faulted slot {id} still \
+                                     migrated its tail"
+                                );
+                            }
+                        } else {
+                            assert_eq!(pid, old[i],
+                                       "{ctx}: slot {id} full page \
+                                        {i} was replaced");
+                        }
+                    }
+                }
+            }
+            // rewind only (speculative rollback without rewrite):
+            // pages past the new tail stay mapped as dead-page
+            // fragmentation until a compact pass or a re-extension —
+            // the frag recount keeps the gauges honest meanwhile
+            _ => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let cut = rng.below(live[i].len + 1);
+                    pool.slot_mut(live[i].id).rewind(cut);
+                    live[i].len = cut;
+                }
+            }
         }
-        check_invariants(&pool, &live, &ctx);
+        check_invariants(&pool, &live, &exp, n_layers, &ctx);
     }
 
     // the mix must actually have exercised the interesting paths
     assert!(admitted > 30, "only {admitted} admissions — dead mix");
     assert!(grew > 30, "only {grew} decode growths — dead mix");
+    assert!(compact_passes > 20,
+            "only {compact_passes} compaction passes — dead mix");
     let stats = pool.paged_stats();
     assert!(stats.prefix_hits > 0, "prefix cache never hit");
     assert!(stats.cow_copies > 0, "copy-on-write never fired");
     assert!(stats.page_faults > 0, "no page was ever faulted");
+    assert_eq!(stats.compactions, compact_passes,
+               "every compaction pass is counted exactly once");
+    assert!(stats.prefix_subpage_hits >= 1,
+            "the sub-page scan never matched");
+    assert!(stats.prefix_subpage_tokens >= 3,
+            "sub-page reuse tokens were not accounted");
+    assert!(stats.pages_reclaimed >= 2,
+            "compaction never reclaimed a page");
 
     // final drain: everything must come back
     for s in live.drain(..) {
         pool.release(s.id);
     }
     pool.clear_prefix_index();
-    check_invariants(&pool, &[], "post-drain");
+    check_invariants(&pool, &[], &exp, n_layers, "post-drain");
     assert_eq!(pool.pages_used(), 0, "pages leaked after drain");
     assert_eq!(pool.pages_free(), pool.pages_total());
     assert_eq!(pool.prefix_index_len(), 0);

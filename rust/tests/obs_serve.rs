@@ -18,7 +18,7 @@ use qpruner::serve::admission::AdmissionPolicy;
 use qpruner::serve::engine::{Engine, EngineBuilder};
 use qpruner::serve::kv_cache::{KvCachePool, KvLayout, KvPrecision};
 use qpruner::serve::scheduler::Scheduler;
-use qpruner::serve::{run_workload, ServeOpts};
+use qpruner::serve::{metrics_registry, run_workload, ServeOpts};
 use std::time::Duration;
 
 const MAX_SEQ: usize = 24;
@@ -327,6 +327,143 @@ fn shared_prefix_accounting_matches_memory_model() {
     // the prefix index for the next wave
     assert_eq!(sched.pool.prefix_index_len(), 2);
     assert_eq!(sched.pool.pages_used(), 2);
+}
+
+/// Sub-page prefix accounting end-to-end through the scheduler: N
+/// sessions share only a 3-token prefix — *below* page granularity —
+/// so every follower's resume is a sub-page hit, the reused-token
+/// count is token-granular (not rounded to pages), and the modeled
+/// bytes-saved line agrees with `memory::kv_token_bytes` exactly.
+#[test]
+fn subpage_shared_prefix_accounting_matches_memory_model() {
+    const PAGE_TOKENS: usize = 4;
+    const N: usize = 4;
+    let mut rt = runtime();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 21);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let engine = EngineBuilder::new()
+        .store(&store, &bits)
+        .max_seq(MAX_SEQ)
+        .build(&mut rt)
+        .unwrap();
+    let arch = ModelConfig::paper_7b();
+    let modeled_bps = qpruner::memory::kv_bytes_per_session_at(
+        &arch, 0, MAX_SEQ, 4.0);
+    let mut pool = KvCachePool::with_slots_layout(
+        &cfg, engine.attn_dim(), N, MAX_SEQ, KvPrecision::F32,
+        modeled_bps, N as f64 * modeled_bps, KvLayout::Paged,
+        PAGE_TOKENS, 12,
+    );
+    pool.set_subpage_prefix(true);
+    let mut sched = Scheduler::new(
+        pool, AdmissionPolicy::new(16, MAX_SEQ), N, 8);
+
+    // the leader's whole 3-token prompt fits inside one page: its
+    // publish stores a copied sub-tail entry, never a full page
+    let seed_prompt: Vec<i32> = vec![0, 1, 2];
+    sched.submit(0, seed_prompt.clone(), 3, 7, 0.8).unwrap();
+    let mut rng = Rng::new(3);
+    sched.step(&engine, &mut rt, &mut rng, 0.0).unwrap();
+    // followers share the 3-token prefix, then diverge immediately
+    for c in 1..N {
+        let mut p = seed_prompt.clone();
+        p.push(10 + c as i32);
+        sched.submit(c, p, 3, 7, 0.8).unwrap();
+    }
+    drain(&mut rt, &engine, &mut sched);
+    assert_eq!(sched.stats.completed, N);
+
+    let stats = sched.pool.paged_stats();
+    assert_eq!(stats.prefix_misses, 1, "leader must miss");
+    assert_eq!(stats.prefix_hits, (N - 1) as u64,
+               "every follower must hit below page granularity");
+    assert_eq!(stats.prefix_subpage_hits, (N - 1) as u64);
+    assert_eq!(stats.prefix_subpage_tokens, 3 * (N - 1) as u64,
+               "each follower resumes past the 3 shared tokens");
+    assert_eq!(stats.prefix_tokens_reused, 0,
+               "no whole page was ever reusable");
+    // the leader prefilled its 3 tokens; each follower computed only
+    // its single divergent position
+    assert_eq!(sched.stats.prefill_tokens,
+               seed_prompt.len() as u64 + (N - 1) as u64);
+
+    // bytes-saved agrees with memory.rs's *token* model: sub-page
+    // spans save per-token KV, not per-page
+    let tok_bytes = qpruner::memory::kv_token_bytes(&arch, 0, 4.0);
+    let want = 3.0 * (N - 1) as f64 * tok_bytes;
+    let got = sched.pool.prefix_bytes_saved_modeled();
+    assert!(
+        ((got - want) / want).abs() < 1e-9,
+        "bytes saved {got} != modeled {want}"
+    );
+}
+
+/// The drained-state gauge contract behind the server's shutdown
+/// ordering: `kv.prefix_idle_*` and `kv.frag_pages` are recomputed
+/// from live pool state at snapshot time, so a snapshot taken after
+/// `clear_prefix_index` reports the drained pool (and a snapshot
+/// taken before would not) — the server clears *then* snapshots.
+#[test]
+fn metrics_snapshot_after_prefix_clear_reports_drained_gauges() {
+    const PAGE_TOKENS: usize = 4;
+    let mut rt = runtime();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let store = ParamStore::init(&cfg, 21);
+    let bits = BitConfig::uniform(cfg.n_layers, QuantFormat::Nf4);
+    let engine = EngineBuilder::new()
+        .store(&store, &bits)
+        .max_seq(MAX_SEQ)
+        .build(&mut rt)
+        .unwrap();
+    let pool = KvCachePool::with_slots_layout(
+        &cfg, engine.attn_dim(), 2, MAX_SEQ, KvPrecision::F32,
+        1e6, 2e6, KvLayout::Paged, PAGE_TOKENS, 12,
+    );
+    let mut sched = Scheduler::new(
+        pool, AdmissionPolicy::new(16, MAX_SEQ), 2, 8);
+    // one 9-token session publishes two full prefix pages that are
+    // never re-hit: after the drain they are exactly the idle set
+    let prompt: Vec<i32> = (0..9).collect();
+    sched.submit(0, prompt, 2, 7, 0.8).unwrap();
+    drain(&mut rt, &engine, &mut sched);
+    assert_eq!(sched.stats.completed, 1);
+    assert_eq!(sched.pool.prefix_index_len(), 2);
+
+    let gauge = |snap: &str, name: &str| -> f64 {
+        Json::parse(snap)
+            .unwrap()
+            .get("gauges")
+            .and_then(|g| g.get(name))
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("gauge {name} missing"))
+    };
+    let before =
+        metrics_registry(&sched, 0, 0, 1.0).snapshot_json();
+    assert_eq!(gauge(&before, "kv.prefix_idle_entries"), 2.0);
+    assert!(gauge(&before, "kv.prefix_idle_bytes") > 0.0);
+    assert_eq!(gauge(&before, "kv.frag_pages"), 2.0,
+               "idle index pages are the only fragmentation left");
+
+    sched.pool.clear_prefix_index();
+    assert_eq!(sched.pool.pages_used(), 0);
+    let after =
+        metrics_registry(&sched, 0, 0, 1.0).snapshot_json();
+    assert_eq!(gauge(&after, "kv.prefix_idle_entries"), 0.0);
+    assert_eq!(gauge(&after, "kv.prefix_idle_bytes"), 0.0);
+    assert_eq!(gauge(&after, "kv.frag_pages"), 0.0,
+               "post-clear snapshot must republish drained gauges");
+    // counters are cumulative and must survive the clear untouched
+    let counter = |snap: &str, name: &str| -> f64 {
+        Json::parse(snap)
+            .unwrap()
+            .get("counters")
+            .and_then(|c| c.get(name))
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("counter {name} missing"))
+    };
+    assert_eq!(counter(&after, "serve.prefix_misses"),
+               counter(&before, "serve.prefix_misses"));
 }
 
 /// Copy-on-write divergence safety at the pool level: a session that

@@ -577,6 +577,202 @@ fn prefix_reuse_resume_is_bit_identical_to_cold_prefill() {
     }
 }
 
+/// Paged twin of `run_layout` that stresses compaction mid-flight.
+/// Prompts are published into the prefix index; the longest session
+/// is then rewound *into* its published (shared) page, leaving a
+/// shared partial tail plus a dead page. A compact pass must migrate
+/// the tail into a private dense page (never writing the shared
+/// original) and reclaim the dead page; prefill then re-derives the
+/// rolled-back span from the migrated rows. One more compact pass
+/// runs between every decode step. The collected logits (same order
+/// as `run_layout`: prefill per session, then step-major) must be
+/// bit-identical to the slab run.
+fn run_layout_compacting(rt: &mut Runtime, engine: &Engine,
+                         vocab: usize, batch: usize,
+                         pool: &mut KvCachePool, page_tokens: usize)
+                         -> Vec<Vec<f32>> {
+    let ids: Vec<usize> =
+        (0..batch).map(|_| pool.alloc().unwrap()).collect();
+    let mut all: Vec<Vec<f32>> = Vec::new();
+    for (s, &id) in ids.iter().enumerate() {
+        let prompt = prompt_for(s, vocab);
+        pool.ensure_capacity(id, prompt.len()).unwrap();
+        all.push(
+            engine.prefill(rt, pool.slot_mut(id), &prompt).unwrap(),
+        );
+        pool.publish_prefix(id, &prompt);
+    }
+    // roll the longest session back into its first (published, hence
+    // shared) page: its tail becomes a shared partial page and its
+    // later pages go dead
+    let vs = (0..batch)
+        .max_by_key(|&s| prompt_for(s, vocab).len())
+        .expect("non-empty batch");
+    let vid = ids[vs];
+    let vprompt = prompt_for(vs, vocab);
+    assert!(vprompt.len() > page_tokens,
+            "victim prompt must span more than one page");
+    pool.slot_mut(vid).rewind(page_tokens - 1);
+    let pairs: Vec<(usize, bool)> =
+        ids.iter().map(|&id| (id, false)).collect();
+    let rep = pool.compact(&pairs);
+    assert!(rep.migrated >= 1,
+            "rewound shared tail was not migrated");
+    assert!(rep.pages_reclaimed >= 1, "dead page was not reclaimed");
+    // resume-prefill re-derives the rolled-back span on top of the
+    // migrated rows; the full-prompt logits must come out unchanged
+    pool.ensure_capacity(vid, vprompt.len()).unwrap();
+    let again = engine
+        .prefill(rt, pool.slot_mut(vid), &vprompt)
+        .unwrap();
+    assert_eq!(again, all[vs],
+               "prefill diverged after tail migration");
+    for step in 0..DECODE_STEPS {
+        let reqs: Vec<BatchReq> = ids
+            .iter()
+            .enumerate()
+            .map(|(s, &id)| BatchReq {
+                slot: id,
+                pos: prompt_for(s, vocab).len() + step,
+                token: gen_token(s, step, vocab),
+            })
+            .collect();
+        let mut got: Vec<Vec<f32>> = vec![Vec::new(); batch];
+        engine
+            .step_batch(pool, &reqs, |i, l| {
+                got[i] = l.to_vec();
+            })
+            .unwrap();
+        all.extend(got);
+        pool.compact(&pairs);
+    }
+    all
+}
+
+/// The compaction axis of the paged acceptance matrix: with a compact
+/// pass forced between every decode step — including one real tail
+/// migration and a dead-page reclaim before decode begins — the paged
+/// layout stays **bit-identical** to the slab oracle, for f32/int8 KV
+/// × 1/8 pool lanes, with the staggered PROMPT_LENS straddling page
+/// seams (page_tokens = 5 puts lengths 3/5/8 at page−2 / page /
+/// page+3).
+#[test]
+fn paged_compaction_between_steps_is_bit_identical_to_slab() {
+    const PAGE_TOKENS: usize = 5;
+    let batch = 3usize;
+    for threads in [1usize, 8] {
+        for precision in [KvPrecision::F32, KvPrecision::Int8] {
+            let (mut rt, engine, cfg) =
+                engine_for_t(QuantFormat::Nf4, Some(threads));
+            let vocab = cfg.vocab;
+            let mut slab = pool_for(&engine, &cfg, batch, precision);
+            let want =
+                run_layout(&mut rt, &engine, vocab, batch, &mut slab);
+            let mut paged = paged_pool_for(&engine, &cfg, batch,
+                                           precision, PAGE_TOKENS);
+            let got = run_layout_compacting(&mut rt, &engine, vocab,
+                                            batch, &mut paged,
+                                            PAGE_TOKENS);
+            assert_eq!(
+                got, want,
+                "compaction changed the logits (t{threads} \
+                 {precision:?})"
+            );
+            let stats = paged.paged_stats();
+            assert_eq!(stats.compactions, DECODE_STEPS as u64 + 1,
+                       "one pass after the rewind plus one per step");
+            assert!(stats.pages_reclaimed >= 1);
+        }
+    }
+}
+
+/// Sub-page prefix matching must not change the math: a session whose
+/// admit maps a verified token span *inside* the first differing page
+/// (a shared prefix below one page, and one ending mid-page) resumes
+/// prefill from that offset with logits — and every subsequent decode
+/// step — bit-identical to a cold prefill of the same prompt.
+#[test]
+fn subpage_prefix_resume_is_bit_identical_to_cold_prefill() {
+    const PAGE_TOKENS: usize = 4;
+    let (mut rt, engine, cfg) = engine_for(QuantFormat::Nf4);
+    let vocab = cfg.vocab;
+    // 6 tokens = 1 full page + a 2-token tail: publishing adds a
+    // full-page entry and an index-owned sub-page tail copy
+    let seed: Vec<i32> =
+        (0..6).map(|j| ((3 + j * 7) % vocab) as i32).collect();
+    // diverges at token 2: shares a 2-token span below one page
+    let mut below: Vec<i32> = seed[..2].to_vec();
+    below.extend((2..5).map(|j| (seed[j] + 1 + j as i32)
+                            % vocab as i32));
+    // shares all 6 seed tokens: the match ends mid-page at offset 2
+    // of the second page
+    let mut mid: Vec<i32> = seed.clone();
+    mid.extend((0..3).map(|j| ((40 + j * 9) % vocab) as i32));
+    for precision in [KvPrecision::F32, KvPrecision::Int8] {
+        let mut pool =
+            paged_pool_for(&engine, &cfg, 3, precision, PAGE_TOKENS);
+        pool.set_subpage_prefix(true);
+
+        let a = pool.admit(&seed, true).unwrap();
+        assert_eq!(a.cached_tokens, 0, "seed admit found a prefix");
+        pool.ensure_capacity(a.slot, seed.len()).unwrap();
+        engine
+            .prefill(&mut rt, pool.slot_mut(a.slot), &seed)
+            .unwrap();
+        pool.publish_prefix(a.slot, &seed);
+
+        for (prompt, want_cached) in
+            [(&below, 2usize), (&mid, 6usize)]
+        {
+            let cold = pool.admit(prompt, false).unwrap();
+            assert_eq!(cold.cached_tokens, 0);
+            pool.ensure_capacity(cold.slot, prompt.len()).unwrap();
+            let want = engine
+                .prefill(&mut rt, pool.slot_mut(cold.slot), prompt)
+                .unwrap();
+            let warm = pool.admit(prompt, true).unwrap();
+            assert_eq!(warm.cached_tokens, want_cached,
+                       "sub-page scan mapped the wrong span \
+                        ({precision:?})");
+            pool.ensure_capacity(warm.slot, prompt.len()).unwrap();
+            let got = engine
+                .prefill(&mut rt, pool.slot_mut(warm.slot), prompt)
+                .unwrap();
+            assert_eq!(got, want,
+                       "sub-page resume diverged from cold prefill \
+                        at {want_cached} cached tokens \
+                        ({precision:?})");
+            // identical history ⇒ identical logits on every fused
+            // decode step
+            for step in 0..DECODE_STEPS {
+                let tok = gen_token(0, step, vocab);
+                let reqs = [
+                    BatchReq { slot: cold.slot,
+                               pos: prompt.len() + step, token: tok },
+                    BatchReq { slot: warm.slot,
+                               pos: prompt.len() + step, token: tok },
+                ];
+                let mut got: Vec<Vec<f32>> = vec![Vec::new(); 2];
+                engine
+                    .step_batch(&mut pool, &reqs, |i, l| {
+                        got[i] = l.to_vec();
+                    })
+                    .unwrap();
+                assert_eq!(got[0], got[1],
+                           "cold/warm sessions diverged at step \
+                            {step} ({precision:?})");
+            }
+            pool.release(cold.slot);
+            pool.release(warm.slot);
+        }
+        let stats = pool.paged_stats();
+        assert_eq!(stats.prefix_subpage_hits, 2,
+                   "both warm admits must hit the sub-page scan");
+        assert_eq!(stats.prefix_subpage_tokens, 4,
+                   "2 + 2 sub-page tokens must be accounted");
+    }
+}
+
 #[test]
 fn batched_kv_state_matches_reference_after_steps() {
     // beyond logits: the cached KV lengths advance identically
